@@ -1,0 +1,70 @@
+//! Choosing k with proper quality criteria — the paper's Table 4 scenario
+//! ("the 'best' clustering can be chosen by a heuristic such as the
+//! 'Elbow' method, or any of the better alternatives [19]") done right:
+//! sweep k with the Hybrid algorithm over one amortized cover tree, then
+//! pick k by Calinski-Harabasz, simplified silhouette, and BIC.
+//!
+//!     cargo run --release --example choose_k [scale]
+
+use covermeans::data::synth;
+use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::metrics::quality::{
+    bic, calinski_harabasz, simplified_silhouette,
+};
+use covermeans::metrics::DistCounter;
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.01);
+    // Ground truth: the MNIST analog has 10 generative classes.
+    let data = synth::mnist(20, scale, 9);
+    println!(
+        "mnist-20d analog: n={} d={} (10 generative classes)",
+        data.rows(),
+        data.cols()
+    );
+
+    let params = KMeansParams::with_algorithm(Algorithm::Hybrid);
+    let mut ws = Workspace::new(); // one cover tree for the whole sweep
+    let sweep = std::time::Instant::now();
+
+    println!(
+        "\n{:>4} {:>12} {:>12} {:>12} {:>12}",
+        "k", "sse", "CH", "silhouette", "BIC"
+    );
+    let mut best = (0usize, f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY);
+    for k in [2usize, 4, 6, 8, 10, 13, 16, 20, 30] {
+        let mut dc = DistCounter::new();
+        let init = kmeans::init::kmeans_plus_plus(&data, k, 17, &mut dc);
+        let r = kmeans::run(&data, &init, &params, &mut ws);
+        let ch = calinski_harabasz(&data, &r.labels, &r.centers);
+        let sil = simplified_silhouette(&data, &r.labels, &r.centers);
+        let b = bic(&data, &r.labels, &r.centers);
+        println!(
+            "{k:>4} {:>12.4e} {:>12.2} {:>12.4} {:>12.1}",
+            r.sse(&data),
+            ch,
+            sil,
+            b
+        );
+        if ch > best.1 {
+            best.0 = k;
+            best.1 = ch;
+        }
+        if sil > best.3 {
+            best.2 = k;
+            best.3 = sil;
+        }
+        if b > best.5 {
+            best.4 = k;
+            best.5 = b;
+        }
+    }
+    println!(
+        "\nchosen k:  CH -> {}   silhouette -> {}   BIC -> {}   (truth: 10)",
+        best.0, best.2, best.4
+    );
+    println!("sweep time: {:.2?} (tree built once, Hybrid runs)", sweep.elapsed());
+}

@@ -1,0 +1,73 @@
+//! Near-duplicate-heavy clustering — the paper's Traffic scenario: 2-d
+//! accident locations where thousands of records share an intersection.
+//! Cover-tree nodes collapse the duplicates (radius ~ 0) and assign them
+//! en bloc; the stored-bounds algorithms must still touch every point.
+//!
+//! This is the regime where the paper reports tree methods at ~0.000-0.001
+//! of the Standard algorithm's distance computations (Table 2, Traffic).
+//!
+//!     cargo run --release --example dedup_traffic [scale]
+
+use covermeans::data::synth;
+use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::metrics::DistCounter;
+use covermeans::tree::{CoverTree, CoverTreeParams};
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.002); // ~12k points; pass 1.0 for the paper's 6.2M
+    let data = synth::traffic(scale, 3);
+    let k = 100.min(data.rows() / 10);
+    println!(
+        "traffic analog: n={} d=2, k={k} (scale {scale} of 6.2M)",
+        data.rows()
+    );
+
+    // Show how hard the duplicates compress in the tree.
+    let tree = CoverTree::build(&data, CoverTreeParams::default());
+    println!(
+        "cover tree: {} nodes, {} singleton slots, depth {}, {:.1} points/node",
+        tree.node_count,
+        tree.singleton_count,
+        tree.root.depth(),
+        data.rows() as f64 / tree.node_count as f64
+    );
+
+    let mut init_counter = DistCounter::new();
+    let init = kmeans::init::kmeans_plus_plus(&data, k, 11, &mut init_counter);
+
+    let mut standard = 0u64;
+    println!(
+        "\n{:<12} {:>12} {:>8} {:>10}",
+        "algorithm", "distances", "rel", "time ms"
+    );
+    for alg in [
+        Algorithm::Standard,
+        Algorithm::Hamerly,
+        Algorithm::Shallot,
+        Algorithm::Kanungo,
+        Algorithm::CoverMeans,
+        Algorithm::Hybrid,
+    ] {
+        let params = KMeansParams { algorithm: alg, ..KMeansParams::default() };
+        let mut ws = Workspace::new();
+        let r = kmeans::run(&data, &init, &params, &mut ws);
+        if alg == Algorithm::Standard {
+            standard = r.distances;
+        }
+        println!(
+            "{:<12} {:>12} {:>8.4} {:>10.2}",
+            alg.name(),
+            r.distances,
+            r.distances as f64 / standard as f64,
+            (r.time + r.build_time).as_secs_f64() * 1e3,
+        );
+    }
+    println!(
+        "\n(`distances` excludes tree construction; the `rel` column is the\n\
+         paper's Table 2 metric — expect the tree rows to collapse toward 0\n\
+         as scale grows and duplicates multiply.)"
+    );
+}

@@ -1,0 +1,109 @@
+//! End-to-end driver across all three layers (the repo's E2E validation):
+//!
+//!   L3 (Rust)   — this driver + the native algorithm suite,
+//!   runtime     — PJRT CPU client executing the AOT artifacts,
+//!   L2/L1       — the JAX assign-step graph wrapping the Pallas kernel
+//!                 (compiled once by `make artifacts`, Python not running
+//!                 here).
+//!
+//! It clusters a realistic workload twice — native f64 Lloyd and
+//! XLA-backed Lloyd — verifies they agree, then runs the paper's headline
+//! algorithms on the same data and reports relative cost and throughput.
+//!
+//!     make artifacts && cargo run --release --example end_to_end
+
+use covermeans::data::synth;
+use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::metrics::DistCounter;
+use covermeans::runtime::{lloyd_xla, AssignExecutor};
+
+fn main() -> anyhow::Result<()> {
+    let data = synth::mnist(30, 0.05, 5); // 3500 x 30 embedding vectors
+    let k = 64;
+    println!(
+        "workload: mnist-autoencoder analog, n={} d={} k={k}",
+        data.rows(),
+        data.cols()
+    );
+
+    let mut init_counter = DistCounter::new();
+    let init = kmeans::init::kmeans_plus_plus(&data, k, 3, &mut init_counter);
+    let params = KMeansParams::default();
+
+    // --- Layer check: native vs XLA assign path.
+    let mut exec = AssignExecutor::load_default()?;
+    println!("PJRT platform: {}", exec.platform());
+    let entry = exec.manifest().pick(30, 64).expect("artifact");
+    println!(
+        "artifact: {} (VMEM est {:.0} KiB, MXU FLOP fraction {:.3})",
+        entry.file,
+        entry.vmem_bytes as f64 / 1024.0,
+        entry.mxu_fraction
+    );
+
+    let t0 = std::time::Instant::now();
+    let native = kmeans::lloyd::run(&data, &init, &params);
+    let t_native = t0.elapsed();
+
+    let t0 = std::time::Instant::now();
+    let xla = lloyd_xla(&data, &init, &params, &mut exec)?;
+    let t_xla = t0.elapsed();
+
+    let sse_n = native.sse(&data);
+    let sse_x = xla.sse(&data);
+    let agree = native
+        .labels
+        .iter()
+        .zip(&xla.labels)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "\nLloyd  native: {} iters, {:.1} ms   | xla: {} iters, {:.1} ms",
+        native.iterations,
+        t_native.as_secs_f64() * 1e3,
+        xla.iterations,
+        t_xla.as_secs_f64() * 1e3
+    );
+    println!(
+        "labels agree: {agree}/{} ({:.2}%)   sse: native {sse_n:.4e} vs xla {sse_x:.4e}",
+        data.rows(),
+        100.0 * agree as f64 / data.rows() as f64
+    );
+    anyhow::ensure!(
+        agree as f64 >= 0.999 * data.rows() as f64,
+        "layers disagree"
+    );
+    anyhow::ensure!((sse_n - sse_x).abs() <= 1e-3 * (1.0 + sse_n));
+
+    // --- The paper's algorithms on the same workload.
+    println!(
+        "\n{:<12} {:>12} {:>8} {:>10}  (same init, exact replicas)",
+        "algorithm", "distances", "rel", "time ms"
+    );
+    let mut standard = 0u64;
+    for alg in Algorithm::ALL {
+        let p = KMeansParams { algorithm: alg, ..params };
+        let mut ws = Workspace::new();
+        let r = kmeans::run(&data, &init, &p, &mut ws);
+        if alg == Algorithm::Standard {
+            standard = r.total_distances();
+        }
+        println!(
+            "{:<12} {:>12} {:>8.4} {:>10.2}",
+            alg.name(),
+            r.total_distances(),
+            r.total_distances() as f64 / standard as f64,
+            r.total_time().as_secs_f64() * 1e3,
+        );
+        assert_eq!(r.iterations, native.iterations, "exactness");
+    }
+
+    // Throughput headline for the dense path.
+    let evals = (data.rows() * k * xla.iterations) as f64;
+    println!(
+        "\nXLA dense path throughput: {:.1} M point-center distances/s",
+        evals / t_xla.as_secs_f64() / 1e6
+    );
+    println!("end_to_end OK");
+    Ok(())
+}

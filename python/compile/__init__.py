@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Nothing in this package is imported at request time; the Rust binary only
+consumes the HLO-text artifacts that ``python -m compile.aot`` writes.
+"""

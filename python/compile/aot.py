@@ -1,0 +1,99 @@
+"""AOT export: lower the L2 assign-step to HLO *text* artifacts.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what ``make
+artifacts`` does).  For every (d, k) lattice shape this writes
+``assign_d{D}_k{K}.hlo.txt`` plus a ``manifest.tsv`` that the Rust runtime
+reads to pick the smallest compiled shape covering a request.
+
+HLO **text** is the interchange format, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects with
+``proto.id() <= INT_MAX``.  The text parser on the Rust side reassigns ids,
+so text round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import assign as assign_kernel
+
+# (d, k) lattice.  d covers the paper's datasets (2-d geo .. 74-d KDD04,
+# padded to the next lattice point); k covers the paper's sweeps (k=10 ..
+# 1000).  Chunk is fixed at model.CHUNK rows.
+LATTICE_D = (2, 8, 16, 32, 64, 80, 128)
+LATTICE_K = (16, 64, 128, 256, 512, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(d: int, k: int, chunk: int = model.CHUNK) -> str:
+    return f"assign_c{chunk}_d{d}_k{k}.hlo.txt"
+
+
+def export_one(out_dir: str, d: int, k: int, chunk: int = model.CHUNK) -> str:
+    lowered = model.lower_assign(d, k, chunk)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, artifact_name(d, k, chunk))
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-artifact path (writes the d=8,k=16 "
+                         "quickstart shape there in addition to the lattice)")
+    ap.add_argument("--lattice-d", default=",".join(map(str, LATTICE_D)))
+    ap.add_argument("--lattice-k", default=",".join(map(str, LATTICE_K)))
+    ap.add_argument("--chunk", type=int, default=model.CHUNK)
+    args = ap.parse_args(argv)
+
+    ds = [int(x) for x in args.lattice_d.split(",") if x]
+    ks = [int(x) for x in args.lattice_k.split(",") if x]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []
+    for d in ds:
+        for k in ks:
+            path = export_one(args.out_dir, d, k, args.chunk)
+            vmem = assign_kernel.vmem_estimate_bytes(model.BLOCK_C, d, k)
+            mxu = assign_kernel.mxu_fraction(model.BLOCK_C, d, k)
+            manifest_rows.append(
+                (args.chunk, d, k, os.path.basename(path), vmem, f"{mxu:.4f}")
+            )
+            print(f"wrote {path} (VMEM est {vmem/1024:.0f} KiB, "
+                  f"MXU FLOP fraction {mxu:.3f})", file=sys.stderr)
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# chunk\td\tk\tfile\tvmem_bytes\tmxu_fraction\n")
+        for row in manifest_rows:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    print(f"wrote {manifest} ({len(manifest_rows)} artifacts)", file=sys.stderr)
+
+    if args.out:
+        # Back-compat with the original Makefile target layout.
+        lowered = model.lower_assign(8, 16, args.chunk)
+        with open(args.out, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

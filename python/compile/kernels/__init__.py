@@ -1,0 +1,3 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from . import assign, ref  # noqa: F401

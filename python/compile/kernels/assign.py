@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: weighted top-2 nearest-center assignment.
+
+The dense hot-spot of every k-means baseline in the paper is the assignment
+step (Eq. 1): for each point, the distance to every candidate center.  The
+paper's accelerated algorithms exist to *avoid* this work; the Standard
+baseline (and the first iteration of every stored-bounds algorithm) must pay
+it in full, so it is the kernel we AOT-compile and serve from Rust.
+
+Kernel contract (one ``pallas_call``):
+
+    inputs : x (c, d) f32, w (c,) f32 weights, centers (k, d) f32
+    outputs: labels (c,) i32, d1 (c,) f32, d2 (c,) f32,
+             sums (k, d) f32, counts (k,) f32
+
+``w`` is 1.0 for live rows and 0.0 for padding rows (the Rust runtime pads
+chunks up to the compiled lattice shape); it also directly supports
+*weighted* points, which is how cover-tree node aggregates (S_x, w_x) are
+clustered when running Lloyd over tree leaves.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the points chunk is tiled
+into ``block_c``-row blocks streamed HBM->VMEM by the BlockSpec grid; the
+full center matrix stays VMEM-resident across the grid (k <= 1024, d <= 128
+=> <= 512 KiB f32).  The distance expansion ||x||^2 + ||c||^2 - 2 x.C^T puts
+the dominant FLOPs in a (block_c, d) x (d, k) matmul that targets the MXU;
+the top-2 reduction and the one-hot partial-sum matmul reuse the same
+VMEM-resident tiles.  ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so the kernel is lowered through the
+Pallas interpreter into plain HLO (same numerics, same schedule structure).
+
+The pure-jnp oracle lives in :mod:`compile.kernels.ref`; pytest + hypothesis
+assert allclose between the two over a sweep of shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Center coordinates used to pad k up to a compiled lattice size.  Large
+# enough that a sentinel center can never be the (first or second) argmin
+# for real data, small enough that the squared-distance expansion stays
+# finite in f32 (1e15^2 * d <= ~1.3e32 << f32 max 3.4e38 for d <= 128).
+PAD_CENTER_VALUE = 1.0e15
+
+DEFAULT_BLOCK_C = 256
+
+
+def _assign_kernel(x_ref, w_ref, c_ref, labels_ref, d1_ref, d2_ref,
+                   sums_ref, counts_ref):
+    """One grid step: assign a block of points against all centers."""
+    pid = pl.program_id(0)
+    x = x_ref[...]                       # (bc, d)
+    w = w_ref[...]                       # (bc,)
+    c = c_ref[...]                       # (k, d)
+    k = c.shape[0]
+
+    # ||x - c||^2 = ||x||^2 + ||c||^2 - 2 <x, c>; the matmul is the MXU op.
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)          # (bc, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]                # (1, k)
+    dots = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    sq = jnp.maximum(x2 + c2 - 2.0 * dots, 0.0)         # (bc, k)
+
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    labels = jnp.argmin(sq, axis=1).astype(jnp.int32)   # ties: lowest index
+    d1sq = jnp.min(sq, axis=1)
+    masked = jnp.where(iota_k == labels[:, None], jnp.inf, sq)
+    d2sq = jnp.min(masked, axis=1)
+
+    labels_ref[...] = labels
+    d1_ref[...] = jnp.sqrt(d1sq)
+    d2_ref[...] = jnp.sqrt(d2sq)
+
+    # Weighted one-hot partial sums for the centroid update (Eq. 2).  The
+    # accumulator blocks are shared by every grid step (constant index_map);
+    # the TPU grid is sequential, so read-modify-write accumulation is safe
+    # (and the interpreter preserves that ordering).
+    onehot = (iota_k == labels[:, None]).astype(x.dtype) * w[:, None]
+    sums_update = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    counts_update = jnp.sum(onehot, axis=0)
+
+    @pl.when(pid == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += sums_update
+    counts_ref[...] += counts_update
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def assign_pallas(x: jnp.ndarray, w: jnp.ndarray, centers: jnp.ndarray,
+                  block_c: int = DEFAULT_BLOCK_C):
+    """Weighted top-2 assignment over a padded chunk.
+
+    ``x.shape[0]`` must be a multiple of ``block_c`` (the AOT lattice shapes
+    are); use :func:`compile.kernels.ref.assign_ref` for arbitrary shapes.
+    """
+    c_points, d = x.shape
+    k = centers.shape[0]
+    if c_points % block_c != 0:
+        raise ValueError(f"chunk {c_points} not a multiple of block_c {block_c}")
+    grid = (c_points // block_c,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, d), lambda i: (i, 0)),   # stream points
+            pl.BlockSpec((block_c,), lambda i: (i,)),       # stream weights
+            pl.BlockSpec((k, d), lambda i: (0, 0)),         # centers resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),         # accumulators:
+            pl.BlockSpec((k,), lambda i: (0,)),             # same block each step
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_points,), jnp.int32),
+            jax.ShapeDtypeStruct((c_points,), jnp.float32),
+            jax.ShapeDtypeStruct((c_points,), jnp.float32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, centers)
+
+
+def vmem_estimate_bytes(block_c: int, d: int, k: int) -> int:
+    """Static VMEM footprint estimate for one grid step (f32).
+
+    Used by DESIGN.md/EXPERIMENTS.md §Perf: inputs (x, w, centers), the
+    (block_c, k) distance tile, and the accumulators all co-resident.
+    """
+    f = 4
+    return f * (
+        block_c * d        # x block
+        + block_c          # w block
+        + k * d            # centers
+        + 2 * block_c * k  # sq + masked tiles
+        + k * d + k        # accumulators
+        + 3 * block_c      # labels/d1/d2
+    )
+
+
+def mxu_fraction(block_c: int, d: int, k: int) -> float:
+    """Fraction of kernel FLOPs that are matmul (MXU-eligible) FLOPs."""
+    matmul = 2.0 * block_c * d * k * 2          # x.C^T and onehot^T.x
+    elementwise = (
+        block_c * d * 2 + k * d * 2             # x2, c2
+        + block_c * k * 3                       # sq combine + clamp
+        + block_c * k * 2                       # two min/argmin passes
+        + block_c * k                           # onehot scale
+        + block_c * 3                           # sqrt etc.
+    )
+    return matmul / (matmul + elementwise)

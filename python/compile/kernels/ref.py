@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracle for the assign-step kernel.
+
+This is the semantic specification that both the Pallas kernel
+(:mod:`compile.kernels.assign`) and the Rust native assignment path must
+agree with: given a chunk of points ``x`` (c, d) and centers (k, d), compute
+
+* ``labels``  (c,)   int32 — index of the nearest center (ties: lowest index),
+* ``d1``      (c,)   f32   — distance to the nearest center,
+* ``d2``      (c,)   f32   — distance to the second-nearest center,
+* ``sums``    (k, d) f32   — per-cluster partial sums of assigned points,
+* ``counts``  (k,)   f32   — per-cluster assigned-point counts.
+
+Distances are Euclidean.  The top-2 outputs are exactly what the paper's
+stored-bounds algorithms (Hamerly/Exponion/Shallot, and the Hybrid hand-off
+of Eqs. 15-18) need as upper/lower bound seeds.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances, (c, k), via the expanded form.
+
+    ||x - c||^2 = ||x||^2 + ||c||^2 - 2 <x, c>.  The matmul term is what
+    maps onto the MXU on real hardware; the clamp guards the tiny negative
+    values the expansion can produce in floating point.
+    """
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)          # (c, 1)
+    c2 = jnp.sum(centers * centers, axis=1)[None, :]    # (1, k)
+    sq = x2 + c2 - 2.0 * (x @ centers.T)
+    return jnp.maximum(sq, 0.0)
+
+
+def assign_ref(x: jnp.ndarray, centers: jnp.ndarray):
+    """Reference assign step: top-2 nearest centers + centroid partials."""
+    k = centers.shape[0]
+    sq = pairwise_sqdist(x, centers)                    # (c, k)
+    labels = jnp.argmin(sq, axis=1).astype(jnp.int32)
+    d1sq = jnp.min(sq, axis=1)
+    # Mask out the winner to find the runner-up.  With k == 1 there is no
+    # second center; d2 is +inf then (matches the Rust side).
+    masked = jnp.where(jnp.arange(k)[None, :] == labels[:, None], jnp.inf, sq)
+    d2sq = jnp.min(masked, axis=1)
+    onehot = (jnp.arange(k)[None, :] == labels[:, None]).astype(x.dtype)
+    sums = onehot.T @ x                                  # (k, d)
+    counts = jnp.sum(onehot, axis=0)                     # (k,)
+    return labels, jnp.sqrt(d1sq), jnp.sqrt(d2sq), sums, counts

@@ -1,0 +1,54 @@
+"""L2: the JAX compute graph served to the Rust coordinator.
+
+``assign_step`` is the dense assignment + centroid-partial step of k-means
+(paper Eqs. 1-2) over one padded chunk of points, calling the L1 Pallas
+kernel so that both lower into a single HLO module.  ``aot.py`` lowers this
+function once per (d, k) lattice shape into ``artifacts/*.hlo.txt``; the
+Rust runtime (rust/src/runtime/) loads and executes those artifacts on the
+PJRT CPU client.  Python never runs at request time.
+
+Chunk protocol (mirrored by rust/src/runtime/executor.rs):
+  * points are processed in chunks of ``CHUNK`` rows; the final partial
+    chunk is zero-padded with weight 0,
+  * d is zero-padded up to the lattice d (distance-preserving),
+  * k is padded up to the lattice k with ``PAD_CENTER_VALUE`` sentinel
+    centers (never an argmin winner for real data).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import assign as assign_kernel
+from .kernels import ref as assign_ref_mod
+
+CHUNK = 1024
+BLOCK_C = assign_kernel.DEFAULT_BLOCK_C
+
+
+def assign_step(x: jnp.ndarray, w: jnp.ndarray, centers: jnp.ndarray):
+    """One chunk of the dense assign step.  Returns a 5-tuple.
+
+    (labels i32[c], d1 f32[c], d2 f32[c], sums f32[k,d], counts f32[k]).
+    """
+    return tuple(assign_kernel.assign_pallas(x, w, centers, block_c=BLOCK_C))
+
+
+def assign_step_ref(x: jnp.ndarray, w: jnp.ndarray, centers: jnp.ndarray):
+    """Pure-jnp twin of :func:`assign_step` (weighted), for L2 testing."""
+    labels, d1, d2, _sums, _counts = assign_ref_mod.assign_ref(x, centers)
+    k = centers.shape[0]
+    onehot = (jnp.arange(k)[None, :] == labels[:, None]).astype(x.dtype)
+    onehot = onehot * w[:, None]
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    return labels, d1, d2, sums, counts
+
+
+def lower_assign(d: int, k: int, chunk: int = CHUNK):
+    """Lower ``assign_step`` for a concrete (chunk, d, k) shape."""
+    x = jax.ShapeDtypeStruct((chunk, d), jnp.float32)
+    w = jax.ShapeDtypeStruct((chunk,), jnp.float32)
+    c = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    return jax.jit(assign_step).lower(x, w, c)

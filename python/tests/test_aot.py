@@ -1,0 +1,39 @@
+"""AOT export tests: HLO text well-formedness, manifest, determinism."""
+
+import os
+
+from compile import aot, model
+
+
+def test_to_hlo_text_wellformed():
+    txt = aot.to_hlo_text(model.lower_assign(2, 16))
+    assert txt.startswith("HloModule")
+    assert "ENTRY" in txt
+    # 5-tuple root: labels, d1, d2, sums, counts
+    assert "(s32[1024]" in txt.replace(" ", "")[:20000] or "s32[1024]" in txt
+
+
+def test_export_deterministic():
+    a = aot.to_hlo_text(model.lower_assign(2, 16))
+    b = aot.to_hlo_text(model.lower_assign(2, 16))
+    assert a == b
+
+
+def test_export_one_and_manifest(tmp_path):
+    rc = aot.main(["--out-dir", str(tmp_path),
+                   "--lattice-d", "2", "--lattice-k", "16"])
+    assert rc == 0
+    files = os.listdir(tmp_path)
+    assert aot.artifact_name(2, 16) in files
+    assert "manifest.tsv" in files
+    rows = [l for l in open(tmp_path / "manifest.tsv")
+            if not l.startswith("#")]
+    assert len(rows) == 1
+    chunk, d, k, fname, vmem, mxu = rows[0].split("\t")
+    assert (int(chunk), int(d), int(k)) == (model.CHUNK, 2, 16)
+    assert fname == aot.artifact_name(2, 16)
+    assert int(vmem) > 0 and 0.0 < float(mxu) < 1.0
+
+
+def test_artifact_name_format():
+    assert aot.artifact_name(64, 512) == "assign_c1024_d64_k512.hlo.txt"

@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas assign kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (chunk multiples of the block, d, k) and data
+regimes (normal, duplicates, large magnitudes); every output of the kernel
+must match ``ref.assign_ref`` to f32 tolerance, and the integer outputs
+must match exactly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign, ref
+
+BLOCK = 64  # small block for test speed; production uses 256
+
+
+def run_both(x, w, c, block=BLOCK):
+    out_k = assign.assign_pallas(jnp.array(x), jnp.array(w), jnp.array(c),
+                                 block_c=block)
+    labels, d1, d2, sums, counts = (np.asarray(o) for o in out_k)
+    rl, rd1, rd2, rsums, rcounts = (np.asarray(o)
+                                    for o in ref.assign_ref(jnp.array(x),
+                                                            jnp.array(c)))
+    return (labels, d1, d2, sums, counts), (rl, rd1, rd2, rsums, rcounts)
+
+
+def check_match(x, w, c, block=BLOCK):
+    (labels, d1, d2, sums, counts), (rl, rd1, rd2, rsums, rcounts) = \
+        run_both(x, w, c, block)
+    np.testing.assert_array_equal(labels, rl)
+    np.testing.assert_allclose(d1, rd1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(d2, rd2, rtol=1e-4, atol=1e-4)
+    # weighted partials: recompute the weighted oracle
+    k = c.shape[0]
+    onehot = (np.arange(k)[None, :] == rl[:, None]).astype(np.float32)
+    onehot *= w[:, None]
+    np.testing.assert_allclose(sums, onehot.T @ x, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(counts, onehot.sum(axis=0), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(1, 3),
+    d=st.integers(1, 24),
+    k=st.integers(2, 17),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_random(nblocks, d, k, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * BLOCK
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = np.ones(n, np.float32)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    check_match(x, w, c)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    scale=st.sampled_from([1e-3, 1.0, 1e3, 1e5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_magnitude_regimes(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(BLOCK, 8)) * scale).astype(np.float32)
+    w = np.ones(BLOCK, np.float32)
+    c = (rng.normal(size=(7, 8)) * scale).astype(np.float32)
+    check_match(x, w, c)
+
+
+def test_duplicate_points_and_centers():
+    # Traffic-like regime: many exact duplicates; ties must break to the
+    # lowest center index in both implementations.
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=(4, 3)).astype(np.float32)
+    x = np.repeat(base, BLOCK // 4, axis=0)
+    w = np.ones(BLOCK, np.float32)
+    c = np.vstack([base[0], base[0], base[2]]).astype(np.float32)  # dup centers
+    (labels, d1, _, _, counts), _ = run_both(x, w, c)
+    assert set(np.unique(labels)) <= {0, 2}          # index 1 never wins ties
+    np.testing.assert_allclose(d1[: BLOCK // 4], 0.0, atol=1e-6)
+    assert counts.sum() == BLOCK
+
+
+def test_zero_weight_rows_excluded_from_partials():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(BLOCK, 5)).astype(np.float32)
+    w = np.zeros(BLOCK, np.float32)
+    w[: BLOCK // 2] = 1.0
+    c = rng.normal(size=(6, 5)).astype(np.float32)
+    (labels, _, _, sums, counts), _ = run_both(x, w, c)
+    assert counts.sum() == BLOCK // 2
+    k = c.shape[0]
+    onehot = (np.arange(k)[None, :] == labels[:, None]).astype(np.float32)
+    onehot[BLOCK // 2:] = 0.0
+    np.testing.assert_allclose(sums, onehot.T @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_sentinel_padded_centers_never_win():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(BLOCK, 8)).astype(np.float32)
+    w = np.ones(BLOCK, np.float32)
+    c = rng.normal(size=(5, 8)).astype(np.float32)
+    cpad = np.vstack(
+        [c, np.full((11, 8), assign.PAD_CENTER_VALUE, np.float32)])
+    (labels, d1, d2, _, counts), _ = run_both(x, w, c)
+    (lp, d1p, d2p, _, cp), _ = run_both(x, w, cpad)
+    np.testing.assert_array_equal(labels, lp)
+    np.testing.assert_allclose(d1, d1p, rtol=1e-6)
+    np.testing.assert_allclose(d2, d2p, rtol=1e-6)
+    assert cp[5:].sum() == 0.0
+
+
+def test_single_center_d2_is_inf():
+    x = np.zeros((BLOCK, 2), np.float32)
+    w = np.ones(BLOCK, np.float32)
+    c = np.ones((1, 2), np.float32)
+    out = assign.assign_pallas(jnp.array(x), jnp.array(w), jnp.array(c),
+                               block_c=BLOCK)
+    assert np.all(np.isinf(np.asarray(out[2])))
+    np.testing.assert_allclose(np.asarray(out[1]), np.sqrt(2.0), rtol=1e-6)
+
+
+def test_rejects_non_multiple_chunk():
+    x = jnp.zeros((BLOCK + 1, 2), jnp.float32)
+    w = jnp.zeros((BLOCK + 1,), jnp.float32)
+    c = jnp.zeros((2, 2), jnp.float32)
+    with pytest.raises(ValueError):
+        assign.assign_pallas(x, w, c, block_c=BLOCK)
+
+
+def test_pad_center_value_finite_sqdist():
+    # The sentinel must not overflow the f32 expansion for the largest
+    # lattice d; NaNs here would poison argmin.
+    d = 128
+    x = np.full((BLOCK, d), 100.0, np.float32)
+    w = np.ones(BLOCK, np.float32)
+    c = np.vstack([np.zeros((1, d), np.float32),
+                   np.full((1, d), assign.PAD_CENTER_VALUE, np.float32)])
+    out = assign.assign_pallas(jnp.array(x), jnp.array(w), jnp.array(c),
+                               block_c=BLOCK)
+    assert not np.any(np.isnan(np.asarray(out[1])))
+    np.testing.assert_array_equal(np.asarray(out[0]), 0)

@@ -1,0 +1,108 @@
+"""L2 tests: assign_step shapes, padding protocol, weighted semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import assign as assign_kernel
+
+
+def test_assign_step_shapes():
+    x = jnp.zeros((model.CHUNK, 8), jnp.float32)
+    w = jnp.ones((model.CHUNK,), jnp.float32)
+    c = jnp.zeros((16, 8), jnp.float32)
+    labels, d1, d2, sums, counts = model.assign_step(x, w, c)
+    assert labels.shape == (model.CHUNK,) and labels.dtype == jnp.int32
+    assert d1.shape == d2.shape == (model.CHUNK,)
+    assert sums.shape == (16, 8) and counts.shape == (16,)
+
+
+def test_assign_step_matches_ref_twin():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(model.CHUNK, 16)).astype(np.float32)
+    w = (rng.random(model.CHUNK) < 0.9).astype(np.float32)
+    c = rng.normal(size=(64, 16)).astype(np.float32)
+    out_k = model.assign_step(jnp.array(x), jnp.array(w), jnp.array(c))
+    out_r = model.assign_step_ref(jnp.array(x), jnp.array(w), jnp.array(c))
+    names = ["labels", "d1", "d2", "sums", "counts"]
+    for a, b, n in zip(out_k, out_r, names):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-3, err_msg=n)
+
+
+def test_d_zero_padding_preserves_distances():
+    """The runtime pads d with zero columns; distances must be unchanged."""
+    rng = np.random.default_rng(1)
+    d_real, d_pad = 5, 8
+    x = rng.normal(size=(model.CHUNK, d_real)).astype(np.float32)
+    c = rng.normal(size=(16, d_real)).astype(np.float32)
+    w = np.ones(model.CHUNK, np.float32)
+    xp = np.zeros((model.CHUNK, d_pad), np.float32); xp[:, :d_real] = x
+    cp = np.zeros((16, d_pad), np.float32); cp[:, :d_real] = c
+    out = model.assign_step(jnp.array(x), jnp.array(w), jnp.array(c))
+    outp = model.assign_step(jnp.array(xp), jnp.array(w), jnp.array(cp))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(outp[0]))
+    # f32 reduction order differs between d=5 and padded d=8 lanes.
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(outp[1]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[3]),
+                               np.asarray(outp[3])[:, :d_real], rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_full_padding_protocol_roundtrip():
+    """Replicate exactly what rust runtime/executor.rs does for an odd
+    request (n=700, d=5, k=10) against lattice (chunk=1024, d=8, k=16)."""
+    rng = np.random.default_rng(2)
+    n, d, k = 700, 5, 10
+    dl, kl = 8, 16
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+
+    xp = np.zeros((model.CHUNK, dl), np.float32); xp[:n, :d] = x
+    wp = np.zeros(model.CHUNK, np.float32); wp[:n] = 1.0
+    cp = np.full((kl, dl), assign_kernel.PAD_CENTER_VALUE, np.float32)
+    cp[:k, :] = 0.0
+    cp[:k, :d] = c
+
+    labels, d1, d2, sums, counts = (
+        np.asarray(o) for o in model.assign_step(
+            jnp.array(xp), jnp.array(wp), jnp.array(cp)))
+
+    # Oracle on the unpadded problem.
+    from compile.kernels import ref
+    rl, rd1, rd2, rsums, rcounts = (np.asarray(o) for o in
+                                    ref.assign_ref(jnp.array(x), jnp.array(c)))
+    np.testing.assert_array_equal(labels[:n], rl)
+    np.testing.assert_allclose(d1[:n], rd1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(d2[:n], rd2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sums[:k, :d], rsums, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(counts[:k], rcounts, rtol=1e-6)
+    assert counts[k:].sum() == 0.0
+    assert np.abs(sums[k:, :]).sum() == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.floats(0.0, 1.0))
+def test_weight_linearity(seed, frac):
+    """sums/counts are linear in w: splitting weights across two calls and
+    adding equals one call with the summed weights."""
+    rng = np.random.default_rng(seed)
+    n, d, k = 256, 4, 8
+    # pad n to CHUNK
+    x = np.zeros((model.CHUNK, d), np.float32)
+    x[:n] = rng.normal(size=(n, d))
+    w = np.zeros(model.CHUNK, np.float32)
+    w[:n] = rng.random(n)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    w1 = w * frac
+    w2 = w - w1
+    out = model.assign_step(jnp.array(x), jnp.array(w), jnp.array(c))
+    o1 = model.assign_step(jnp.array(x), jnp.array(w1), jnp.array(c))
+    o2 = model.assign_step(jnp.array(x), jnp.array(w2), jnp.array(c))
+    np.testing.assert_allclose(np.asarray(o1[3]) + np.asarray(o2[3]),
+                               np.asarray(out[3]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o1[4]) + np.asarray(o2[4]),
+                               np.asarray(out[4]), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,60 @@
+"""Oracle self-checks: the pure-jnp reference must itself agree with a
+straightforward numpy brute force (if the oracle is wrong, every kernel
+test is vacuous)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def brute(x, c):
+    d = np.linalg.norm(x[:, None, :] - c[None, :, :], axis=2)
+    labels = d.argmin(axis=1)
+    d1 = d.min(axis=1)
+    d_masked = d.copy()
+    d_masked[np.arange(len(x)), labels] = np.inf
+    d2 = d_masked.min(axis=1)
+    return labels, d1, d2
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 80),
+    d=st.integers(1, 10),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_matches_numpy_brute_force(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    labels, d1, d2, sums, counts = (
+        np.asarray(o) for o in ref.assign_ref(jnp.array(x), jnp.array(c)))
+    bl, bd1, bd2 = brute(x, c)
+    np.testing.assert_array_equal(labels, bl)
+    np.testing.assert_allclose(d1, bd1, rtol=1e-3, atol=1e-3)
+    if k > 1:
+        np.testing.assert_allclose(d2, bd2, rtol=1e-3, atol=1e-3)
+    # partials
+    np.testing.assert_allclose(counts.sum(), n, rtol=1e-6)
+    np.testing.assert_allclose(sums.sum(axis=0), x.sum(axis=0),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pairwise_sqdist_nonnegative_and_zero_diag():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(20, 6)).astype(np.float32) * 100
+    sq = np.asarray(ref.pairwise_sqdist(jnp.array(x), jnp.array(x)))
+    assert (sq >= 0).all()
+    # The expanded form's absolute error scales with f32 eps * ||x||^2.
+    atol = 1e-6 * float((x * x).sum(axis=1).max())
+    assert np.allclose(np.diag(sq), 0.0, atol=atol)
+
+
+def test_tie_breaks_to_lowest_index():
+    x = np.zeros((4, 2), np.float32)
+    c = np.array([[1.0, 0.0], [-1.0, 0.0], [1.0, 0.0]], np.float32)
+    labels = np.asarray(ref.assign_ref(jnp.array(x), jnp.array(c))[0])
+    assert (labels == 0).all()

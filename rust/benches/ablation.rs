@@ -1,0 +1,49 @@
+//! Bench: design-choice ablations (DESIGN.md E8) — the cover tree scaling
+//! factor, the minimum node size, and the hybrid switch iteration, each
+//! varied alone on a tree-friendly (istanbul) and a tree-hostile (kdd04)
+//! dataset.
+//!
+//!     cargo bench --bench ablation
+
+use covermeans::benchutil::{bench_scale, CsvSink};
+use covermeans::coordinator::{run_experiment, sweep};
+use covermeans::kmeans::Algorithm;
+
+fn main() {
+    let scale = bench_scale();
+    let restarts: usize = std::env::var("REPRO_RESTARTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let mut sink = CsvSink::new(
+        "bench_ablation.csv",
+        "knob,dataset,algorithm,dist_rel,time_rel",
+    );
+    println!("ablations (scale {scale}, {restarts} restarts):");
+    println!(
+        "{:<22} {:<10} {:<12} {:>9} {:>9}",
+        "knob", "dataset", "algorithm", "dist rel", "time rel"
+    );
+    for (label, exp) in sweep::ablations(scale, restarts) {
+        let res = run_experiment(&exp, false).expect("ablation");
+        for ds in &exp.datasets {
+            for &alg in &exp.algorithms {
+                if alg == Algorithm::Standard {
+                    continue;
+                }
+                let dr = res
+                    .ratio_vs_standard(ds, alg, |c| c.total_distances() as f64)
+                    .unwrap_or(f64::NAN);
+                let tr = res
+                    .ratio_vs_standard(ds, alg, |c| c.total_time().as_secs_f64())
+                    .unwrap_or(f64::NAN);
+                println!(
+                    "{label:<22} {ds:<10} {:<12} {dr:>9.3} {tr:>9.3}",
+                    alg.name()
+                );
+                sink.row(format!("{label},{ds},{},{dr:.6},{tr:.6}", alg.name()));
+            }
+        }
+    }
+    sink.flush();
+}

@@ -1,0 +1,58 @@
+//! Bench: regenerate paper Fig. 1 — cumulative distance computations (1a)
+//! and cumulative time (1b) per iteration on the ALOI-64 analog, k = 400,
+//! normalized by the full Standard run; tree construction excluded.
+//!
+//!     cargo bench --bench fig1
+//!
+//! Writes results/bench_fig1.csv and prints the three behavioural groups
+//! the paper describes (constant tree cost, decaying stored-bounds cost,
+//! hybrid switching between them).
+
+use covermeans::benchutil::{bench_scale, CsvSink};
+use covermeans::coordinator::{report, run_experiment, sweep};
+use covermeans::kmeans::Algorithm;
+
+fn main() {
+    let scale = bench_scale();
+    // k scales with the dataset so cluster structure stays comparable at
+    // small scales (paper: k=400 at n=110k; keep k <= n/40).
+    let mut exp = sweep::fig1(scale);
+    let n_est = (covermeans::data::synth::ALOI_N as f64 * scale) as usize;
+    if 400 > n_est / 40 {
+        exp.ks = vec![(n_est / 40).max(10)];
+        eprintln!("fig1: scaled k down to {} for n~{n_est}", exp.ks[0]);
+    }
+    let res = run_experiment(&exp, true).expect("experiment");
+    let rows = report::fig1_series_csv(&exp, &res);
+
+    // Per-iteration marginal cost of the last iteration, by algorithm —
+    // the paper's "three groups" signature.
+    println!("Fig 1 (scale {scale}, k={}):", exp.ks[0]);
+    println!(
+        "{:<12} {:>6} {:>16} {:>16}",
+        "algorithm", "iters", "final dist rel", "final time rel"
+    );
+    for alg in Algorithm::ALL {
+        let series: Vec<&String> =
+            rows.iter().filter(|r| r.starts_with(alg.name())).collect();
+        if let Some(last) = series.last() {
+            let cols: Vec<&str> = last.split(',').collect();
+            println!(
+                "{:<12} {:>6} {:>16} {:>16}",
+                alg.name(),
+                series.len(),
+                cols[2],
+                cols[3]
+            );
+        }
+    }
+
+    let mut sink = CsvSink::new(
+        "bench_fig1.csv",
+        "algorithm,iter,dist_cum_rel,time_cum_rel",
+    );
+    for r in rows.iter().skip(1) {
+        sink.row(r.clone());
+    }
+    sink.flush();
+}

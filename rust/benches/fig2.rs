@@ -1,0 +1,51 @@
+//! Bench: regenerate paper Fig. 2 — run time relative to the Standard
+//! algorithm (a) vs dimensionality d in {10..50} on the MNIST analogs at
+//! k = 100, and (b) vs k on MNIST-10.
+//!
+//!     cargo bench --bench fig2
+
+use covermeans::benchutil::{bench_scale, CsvSink};
+use covermeans::coordinator::{report, run_experiment, sweep};
+
+fn main() {
+    let scale = bench_scale();
+    let restarts: usize = std::env::var("REPRO_RESTARTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+
+    // --- Fig 2a: vs dimensionality.
+    let exp_a = sweep::fig2a(scale, restarts);
+    eprintln!("fig2a: scale {scale}, {restarts} restarts, 5 dims");
+    let res_a = run_experiment(&exp_a, false).expect("fig2a");
+    let rows_a = report::fig2_series_csv(&exp_a, &res_a, false);
+    println!("Fig 2a (time rel. Standard vs d, k=100, scale {scale}):");
+    for r in &rows_a {
+        println!("  {r}");
+    }
+    let mut sink = CsvSink::new("bench_fig2a.csv", "dataset,algorithm,time_rel");
+    for r in rows_a.iter().skip(1) {
+        sink.row(r.clone());
+    }
+    sink.flush();
+
+    // --- Fig 2b: vs k (grid scaled to dataset size).
+    let mut exp_b = sweep::fig2b(scale, restarts);
+    let n_est = (covermeans::data::synth::MNIST_N as f64 * scale) as usize;
+    exp_b.ks.retain(|&k| k <= n_est / 10);
+    if exp_b.ks.is_empty() {
+        exp_b.ks = vec![10];
+    }
+    eprintln!("fig2b: k grid {:?}", exp_b.ks);
+    let res_b = run_experiment(&exp_b, false).expect("fig2b");
+    let rows_b = report::fig2_series_csv(&exp_b, &res_b, true);
+    println!("\nFig 2b (time rel. Standard vs k, mnist10, scale {scale}):");
+    for r in &rows_b {
+        println!("  {r}");
+    }
+    let mut sink = CsvSink::new("bench_fig2b.csv", "k,algorithm,time_rel");
+    for r in rows_b.iter().skip(1) {
+        sink.row(r.clone());
+    }
+    sink.flush();
+}

@@ -1,0 +1,156 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimization pass.
+//!
+//! Measures, in isolation:
+//!   * dense distance-evaluation throughput (the L3 roofline reference),
+//!   * cover tree construction throughput,
+//!   * one Cover-means assignment pass (the paper-critical inner loop),
+//!   * one Shallot iteration at converged bounds (the hybrid tail),
+//!   * the XLA dense assign step (runtime path), when artifacts exist.
+//!
+//!     cargo bench --bench hotpath
+
+use covermeans::benchutil::{bench_repeats, fmt_duration, measure, median, CsvSink};
+use covermeans::data::synth;
+use covermeans::kmeans::bounds::InterCenter;
+use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::metrics::DistCounter;
+use covermeans::tree::{CoverTree, CoverTreeParams};
+
+fn main() {
+    let repeats = bench_repeats();
+    let mut sink = CsvSink::new("bench_hotpath.csv", "section,metric,value");
+
+    // --- dense distance throughput (f64 native).
+    let data = synth::mnist(30, 0.05, 1); // 3500 x 30
+    let centers_m = {
+        let mut dc = DistCounter::new();
+        kmeans::init::kmeans_plus_plus(&data, 128, 1, &mut dc)
+    };
+    let n = data.rows();
+    let k = centers_m.rows();
+    let times = measure(repeats, || {
+        let mut dc = DistCounter::new();
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            for c in 0..k {
+                acc += dc.sq(data.row(i), centers_m.row(c));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    let med = median(&times);
+    let evals_per_s = (n * k) as f64 / med.as_secs_f64();
+    println!(
+        "dense sqdist (d=30): {} for {}x{} -> {:.1} M evals/s ({:.2} GFLOP/s)",
+        fmt_duration(med),
+        n,
+        k,
+        evals_per_s / 1e6,
+        evals_per_s * (3.0 * 30.0) / 1e9
+    );
+    sink.row(format!("dense_sqdist_d30,Mevals_per_s,{:.3}", evals_per_s / 1e6));
+
+    // --- cover tree construction.
+    let geo = synth::istanbul(0.02, 2); // ~6900 x 2
+    let times = measure(repeats, || {
+        let t = CoverTree::build(&geo, CoverTreeParams::default());
+        std::hint::black_box(t.node_count);
+    });
+    let med = median(&times);
+    println!(
+        "cover tree build (istanbul n={}): {} ({:.0} pts/ms)",
+        geo.rows(),
+        fmt_duration(med),
+        geo.rows() as f64 / med.as_secs_f64() / 1e3
+    );
+    sink.row(format!(
+        "covertree_build,points_per_ms,{:.3}",
+        geo.rows() as f64 / med.as_secs_f64() / 1e3
+    ));
+
+    // --- one Cover-means assignment pass (iteration 1 conditions).
+    let tree = CoverTree::build(&geo, CoverTreeParams::default());
+    let k2 = 100;
+    let init = {
+        let mut dc = DistCounter::new();
+        kmeans::init::kmeans_plus_plus(&geo, k2, 3, &mut dc)
+    };
+    let params = KMeansParams {
+        algorithm: Algorithm::CoverMeans,
+        max_iter: 1,
+        ..KMeansParams::default()
+    };
+    let times = measure(repeats, || {
+        let mut ws = Workspace::new();
+        ws.cover = Some(tree.clone());
+        let r = kmeans::run(&geo, &init, &params, &mut ws);
+        std::hint::black_box(r.distances);
+    });
+    let med = median(&times);
+    println!(
+        "cover-means pass (n={}, k={k2}): {} / iter",
+        geo.rows(),
+        fmt_duration(med)
+    );
+    sink.row(format!("cover_pass,ms,{:.3}", med.as_secs_f64() * 1e3));
+
+    // --- Shallot tail iteration (bounds warm, centers converged).
+    let full = kmeans::run(
+        &geo,
+        &init,
+        &KMeansParams { algorithm: Algorithm::Standard, ..KMeansParams::default() },
+        &mut Workspace::new(),
+    );
+    let params_s = KMeansParams {
+        algorithm: Algorithm::Shallot,
+        max_iter: 2,
+        ..KMeansParams::default()
+    };
+    let times = measure(repeats, || {
+        // From converged centers: iteration 2 is the "stable tail" cost.
+        let r = kmeans::run(&geo, &full.centers, &params_s, &mut Workspace::new());
+        std::hint::black_box(r.distances);
+    });
+    let med = median(&times);
+    println!("shallot tail (2 iters from converged): {}", fmt_duration(med));
+    sink.row(format!("shallot_tail,ms,{:.3}", med.as_secs_f64() * 1e3));
+
+    // --- inter-center matrix (per-iteration fixed cost at k=1000).
+    let big_init = {
+        let mut dc = DistCounter::new();
+        let big = synth::mnist(10, 0.03, 4);
+        kmeans::init::kmeans_plus_plus(&big, 1000, 5, &mut dc)
+    };
+    let times = measure(repeats, || {
+        let mut dc = DistCounter::new();
+        let ic = InterCenter::compute(&big_init, &mut dc);
+        std::hint::black_box(ic.s[0]);
+    });
+    let med = median(&times);
+    println!("inter-center matrix (k=1000, d=10): {}", fmt_duration(med));
+    sink.row(format!("intercenter_k1000,ms,{:.3}", med.as_secs_f64() * 1e3));
+
+    // --- XLA dense assign (runtime path).
+    match covermeans::runtime::AssignExecutor::load_default() {
+        Ok(mut exec) => {
+            let times = measure(repeats, || {
+                let out = exec.assign(&data, &centers_m).expect("assign");
+                std::hint::black_box(out.labels.len());
+            });
+            let med = median(&times);
+            let evals = (n * k) as f64;
+            println!(
+                "xla assign (n={n}, d=30->64, k=128): {} ({:.1} M evals/s)",
+                fmt_duration(med),
+                evals / med.as_secs_f64() / 1e6
+            );
+            sink.row(format!(
+                "xla_assign,Mevals_per_s,{:.3}",
+                evals / med.as_secs_f64() / 1e6
+            ));
+        }
+        Err(e) => eprintln!("xla assign skipped: {e}"),
+    }
+
+    sink.flush();
+}

@@ -1,0 +1,82 @@
+//! Bench: regenerate paper Table 2 — relative number of distance
+//! computations vs the Standard algorithm, k = 100, all eight datasets.
+//!
+//!     cargo bench --bench table2
+//!     REPRO_SCALE=0.2 REPRO_RESTARTS=10 cargo bench --bench table2
+//!
+//! Paper reference values (Table 2) are printed alongside for the shape
+//! comparison recorded in EXPERIMENTS.md.
+
+use covermeans::benchutil::{bench_scale, CsvSink};
+use covermeans::coordinator::{report, run_experiment, sweep};
+use covermeans::kmeans::Algorithm;
+
+/// Paper Table 2 rows, in dataset column order (covtype, istanbul, kdd04,
+/// traffic, mnist10, mnist30, aloi27, aloi64).
+const PAPER: &[(&str, [f64; 8])] = &[
+    ("Kanungo", [0.006, 0.002, 1.450, 0.000, 0.149, 0.370, 0.036, 0.048]),
+    ("Elkan", [0.004, 0.002, 0.025, 0.001, 0.007, 0.009, 0.005, 0.006]),
+    ("Hamerly", [0.099, 0.078, 0.364, 0.090, 0.198, 0.213, 0.229, 0.253]),
+    ("Exponion", [0.016, 0.010, 0.341, 0.009, 0.075, 0.130, 0.060, 0.075]),
+    ("Shallot", [0.012, 0.006, 0.311, 0.006, 0.034, 0.061, 0.030, 0.043]),
+    ("Cover-means", [0.012, 0.003, 0.807, 0.001, 0.097, 0.180, 0.044, 0.063]),
+    ("Hybrid", [0.005, 0.003, 0.310, 0.003, 0.031, 0.057, 0.027, 0.038]),
+];
+
+fn main() {
+    let scale = bench_scale();
+    let restarts: usize = std::env::var("REPRO_RESTARTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let exp = sweep::tables23(scale, restarts);
+    eprintln!(
+        "table2: scale {scale}, {restarts} restarts, {} cells",
+        exp.datasets.len() * exp.algorithms.len()
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_experiment(&exp, false).expect("experiment");
+    eprintln!("completed in {:.1?}", t0.elapsed());
+
+    println!(
+        "{}",
+        report::render_ratio_table(
+            &exp,
+            &res,
+            report::Metric::Distances,
+            &format!("Table 2 (measured, scale {scale}): relative distance computations, k=100"),
+        )
+    );
+    println!("Table 2 (paper, scale 1.0, real datasets):");
+    print!("{:<12}", "");
+    for ds in &exp.datasets {
+        print!(" {ds:>9}");
+    }
+    println!();
+    for (name, vals) in PAPER {
+        print!("{name:<12}");
+        for v in vals {
+            print!(" {v:>9.3}");
+        }
+        println!();
+    }
+
+    let mut sink = CsvSink::new("bench_table2.csv", "dataset,algorithm,ratio,paper_ratio");
+    for (di, ds) in exp.datasets.iter().enumerate() {
+        for &alg in &exp.algorithms {
+            if alg == Algorithm::Standard {
+                continue;
+            }
+            let measured = res
+                .ratio_vs_standard(ds, alg, |c| c.total_distances() as f64)
+                .unwrap_or(f64::NAN);
+            let paper = PAPER
+                .iter()
+                .find(|(n, _)| *n == alg.name())
+                .map(|(_, v)| v[di])
+                .unwrap_or(f64::NAN);
+            sink.row(format!("{ds},{},{measured:.6},{paper}", alg.name()));
+        }
+    }
+    sink.flush();
+}

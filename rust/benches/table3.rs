@@ -1,0 +1,71 @@
+//! Bench: regenerate paper Table 3 — relative run time (including tree
+//! construction) vs the Standard algorithm, k = 100, all eight datasets.
+//!
+//!     cargo bench --bench table3
+
+use covermeans::benchutil::{bench_scale, CsvSink};
+use covermeans::coordinator::{report, run_experiment, sweep};
+use covermeans::kmeans::Algorithm;
+
+const PAPER: &[(&str, [f64; 8])] = &[
+    ("Kanungo", [0.068, 0.123, 4.035, 0.182, 0.470, 0.798, 0.133, 0.130]),
+    ("Elkan", [0.114, 0.520, 0.193, 0.652, 0.454, 0.226, 0.180, 0.104]),
+    ("Hamerly", [0.139, 0.171, 0.383, 0.173, 0.262, 0.238, 0.262, 0.278]),
+    ("Exponion", [0.064, 0.132, 0.369, 0.142, 0.150, 0.161, 0.107, 0.109]),
+    ("Shallot", [0.062, 0.134, 0.346, 0.145, 0.120, 0.098, 0.084, 0.080]),
+    ("Cover-means", [0.072, 0.092, 1.121, 0.135, 0.352, 0.313, 0.138, 0.123]),
+    ("Hybrid", [0.051, 0.084, 0.457, 0.130, 0.133, 0.102, 0.082, 0.076]),
+];
+
+fn main() {
+    let scale = bench_scale();
+    let restarts: usize = std::env::var("REPRO_RESTARTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let exp = sweep::tables23(scale, restarts);
+    eprintln!("table3: scale {scale}, {restarts} restarts");
+    let res = run_experiment(&exp, false).expect("experiment");
+
+    println!(
+        "{}",
+        report::render_ratio_table(
+            &exp,
+            &res,
+            report::Metric::Time,
+            &format!("Table 3 (measured, scale {scale}): relative run time incl. construction, k=100"),
+        )
+    );
+    println!("Table 3 (paper):");
+    print!("{:<12}", "");
+    for ds in &exp.datasets {
+        print!(" {ds:>9}");
+    }
+    println!();
+    for (name, vals) in PAPER {
+        print!("{name:<12}");
+        for v in vals {
+            print!(" {v:>9.3}");
+        }
+        println!();
+    }
+
+    let mut sink = CsvSink::new("bench_table3.csv", "dataset,algorithm,ratio,paper_ratio");
+    for (di, ds) in exp.datasets.iter().enumerate() {
+        for &alg in &exp.algorithms {
+            if alg == Algorithm::Standard {
+                continue;
+            }
+            let measured = res
+                .ratio_vs_standard(ds, alg, |c| c.total_time().as_secs_f64())
+                .unwrap_or(f64::NAN);
+            let paper = PAPER
+                .iter()
+                .find(|(n, _)| *n == alg.name())
+                .map(|(_, v)| v[di])
+                .unwrap_or(f64::NAN);
+            sink.row(format!("{ds},{},{measured:.6},{paper}", alg.name()));
+        }
+    }
+    sink.flush();
+}

@@ -1,0 +1,90 @@
+//! Bench: regenerate paper Table 4 — relative run time of the full
+//! parameter sweep (16 values of k x restarts), cover/k-d trees amortized
+//! across the sweep.
+//!
+//!     cargo bench --bench table4
+//!
+//! The k grid follows the paper's protocol scaled down by default
+//! (REPRO_SWEEP_KS to override, e.g. REPRO_SWEEP_KS=full).
+
+use covermeans::benchutil::{bench_scale, CsvSink};
+use covermeans::coordinator::{report, run_experiment, sweep};
+use covermeans::kmeans::Algorithm;
+
+const PAPER: &[(&str, [f64; 8])] = &[
+    ("Kanungo", [0.040, 0.112, 5.090, 0.162, 0.409, 0.903, 0.114, 0.116]),
+    ("Elkan", [0.093, 0.609, 0.171, f64::NAN, 0.351, 0.187, 0.121, 0.065]),
+    ("Hamerly", [0.211, 0.208, 0.453, 0.238, 0.338, 0.347, 0.284, 0.304]),
+    ("Exponion", [0.040, 0.145, 0.492, 0.162, 0.154, 0.172, 0.077, 0.077]),
+    ("Shallot", [0.037, 0.145, 0.414, 0.154, 0.121, 0.100, 0.059, 0.050]),
+    ("Cover-means", [0.028, 0.059, 1.015, 0.093, 0.272, 0.248, 0.086, 0.077]),
+    ("Hybrid", [0.020, 0.056, 0.463, 0.089, 0.122, 0.095, 0.055, 0.047]),
+];
+
+fn main() {
+    let scale = bench_scale();
+    let restarts: usize = std::env::var("REPRO_RESTARTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let mut exp = sweep::table4(scale, restarts);
+    // The full 16-point grid up to k=1000 is heavy at bench scales; use an
+    // 8-point grid by default, the paper's full grid with REPRO_SWEEP_KS=full.
+    if std::env::var("REPRO_SWEEP_KS").as_deref() != Ok("full") {
+        exp.ks = vec![10, 20, 40, 70, 100, 140, 200, 280];
+    }
+    eprintln!(
+        "table4: scale {scale}, {restarts} restarts, {} k values (amortized trees)",
+        exp.ks.len()
+    );
+    let res = run_experiment(&exp, false).expect("experiment");
+
+    println!(
+        "{}",
+        report::render_ratio_table(
+            &exp,
+            &res,
+            report::Metric::Time,
+            &format!(
+                "Table 4 (measured, scale {scale}): relative sweep run time, {} ks x {restarts} restarts",
+                exp.ks.len()
+            ),
+        )
+    );
+    println!("Table 4 (paper; '-' = out of memory for Elkan on Traffic):");
+    print!("{:<12}", "");
+    for ds in &exp.datasets {
+        print!(" {ds:>9}");
+    }
+    println!();
+    for (name, vals) in PAPER {
+        print!("{name:<12}");
+        for v in vals {
+            if v.is_nan() {
+                print!(" {:>9}", "-");
+            } else {
+                print!(" {v:>9.3}");
+            }
+        }
+        println!();
+    }
+
+    let mut sink = CsvSink::new("bench_table4.csv", "dataset,algorithm,ratio,paper_ratio");
+    for (di, ds) in exp.datasets.iter().enumerate() {
+        for &alg in &exp.algorithms {
+            if alg == Algorithm::Standard {
+                continue;
+            }
+            let measured = res
+                .ratio_vs_standard(ds, alg, |c| c.total_time().as_secs_f64())
+                .unwrap_or(f64::NAN);
+            let paper = PAPER
+                .iter()
+                .find(|(n, _)| *n == alg.name())
+                .map(|(_, v)| v[di])
+                .unwrap_or(f64::NAN);
+            sink.row(format!("{ds},{},{measured:.6},{paper}", alg.name()));
+        }
+    }
+    sink.flush();
+}

@@ -1,0 +1,123 @@
+//! In-tree benchmark harness (criterion is not in the offline vendored
+//! crate set). Used by the `rust/benches/*.rs` targets (`harness = false`).
+//!
+//! Provides warmup + repeated measurement with median/min reporting, an
+//! environment-controlled scale knob (`REPRO_SCALE`) so `cargo bench`
+//! stays tractable, and a CSV sink under `results/`.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Dataset scale factor for benches: `REPRO_SCALE` env var, default 0.05.
+/// (Scale 1.0 = the paper's dataset sizes; see DESIGN.md §3.)
+pub fn bench_scale() -> f64 {
+    std::env::var("REPRO_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05)
+}
+
+/// Repeat count for timed sections: `REPRO_REPEATS`, default 3.
+pub fn bench_repeats() -> usize {
+    std::env::var("REPRO_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+}
+
+/// Measure a closure `repeats` times (after one warmup) and return all
+/// durations, sorted ascending.
+pub fn measure<F: FnMut()>(repeats: usize, mut f: F) -> Vec<Duration> {
+    f(); // warmup
+    let mut times = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    times
+}
+
+/// Median of a sorted duration slice.
+pub fn median(sorted: &[Duration]) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    sorted[sorted.len() / 2]
+}
+
+/// A simple CSV sink under `results/`.
+pub struct CsvSink {
+    path: PathBuf,
+    rows: Vec<String>,
+}
+
+impl CsvSink {
+    pub fn new(name: &str, header: &str) -> CsvSink {
+        CsvSink {
+            path: PathBuf::from("results").join(name),
+            rows: vec![header.to_string()],
+        }
+    }
+
+    pub fn row(&mut self, row: String) {
+        self.rows.push(row);
+    }
+
+    /// Write the collected rows; also echoes the path to stdout.
+    pub fn flush(&self) {
+        if let Some(dir) = self.path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Ok(mut f) = std::fs::File::create(&self.path) {
+            for r in &self.rows {
+                let _ = writeln!(f, "{r}");
+            }
+            println!("[csv] wrote {}", self.path.display());
+        }
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sorted() {
+        let times = measure(5, || std::thread::sleep(Duration::from_micros(10)));
+        assert_eq!(times.len(), 5);
+        for w in times.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(median(&times) >= Duration::from_micros(5));
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7us");
+    }
+
+    #[test]
+    fn scale_default() {
+        // Does not assert the exact value (env may be set by the runner),
+        // only sanity.
+        let s = bench_scale();
+        assert!(s > 0.0 && s <= 1.0);
+    }
+}

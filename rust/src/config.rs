@@ -1,0 +1,214 @@
+//! Run configuration: a small `key=value` format with file profiles.
+//!
+//! The offline crate set has no serde, so the launcher uses a minimal,
+//! forgiving format: one `key = value` per line, `#` comments. The same
+//! keys are accepted as `--key value` CLI overrides (see `cli.rs`), CLI
+//! taking precedence over file, file over defaults.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::tree::{CoverTreeParams, KdTreeParams};
+
+/// Everything a single experiment run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Dataset name in the registry (or `blobs:<n>:<d>:<k>`).
+    pub dataset: String,
+    /// Dataset scale factor relative to the paper's sizes.
+    pub scale: f64,
+    /// Dataset generation seed.
+    pub data_seed: u64,
+    /// Number of clusters.
+    pub k: usize,
+    /// Number of k-means++ restarts (the paper uses 10).
+    pub restarts: usize,
+    /// First init seed; restart r uses `seed + r`.
+    pub seed: u64,
+    /// Algorithms to run (paper table order by default).
+    pub algorithms: Vec<Algorithm>,
+    /// Shared algorithm parameters.
+    pub params: KMeansParams,
+    /// Worker threads for the sweep coordinator (jobs in parallel; each
+    /// job stays single-threaded like the paper's runs).
+    pub threads: usize,
+    /// Output directory for CSV results.
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "aloi64".to_string(),
+            scale: 0.05,
+            data_seed: 1,
+            k: 100,
+            restarts: 10,
+            seed: 1000,
+            algorithms: Algorithm::ALL.to_vec(),
+            params: KMeansParams::default(),
+            threads: default_threads(),
+            out_dir: "results".to_string(),
+        }
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+impl RunConfig {
+    /// Apply one `key = value` setting.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "dataset" => self.dataset = v.to_string(),
+            "scale" => self.scale = v.parse().context("scale")?,
+            "data_seed" => self.data_seed = v.parse().context("data_seed")?,
+            "k" => self.k = v.parse().context("k")?,
+            "restarts" => self.restarts = v.parse().context("restarts")?,
+            "seed" => self.seed = v.parse().context("seed")?,
+            "threads" => self.threads = v.parse().context("threads")?,
+            "out_dir" => self.out_dir = v.to_string(),
+            "max_iter" => self.params.max_iter = v.parse().context("max_iter")?,
+            "switch_at" => self.params.switch_at = v.parse().context("switch_at")?,
+            "scale_factor" => {
+                self.params.cover.scale_factor = v.parse().context("scale_factor")?
+            }
+            "min_node_size" => {
+                self.params.cover.min_node_size = v.parse().context("min_node_size")?
+            }
+            "kd_leaf_size" => self.params.kd.leaf_size = v.parse().context("kd_leaf_size")?,
+            "algorithms" => {
+                let mut algs = Vec::new();
+                for name in v.split(',') {
+                    let name = name.trim();
+                    if name.is_empty() {
+                        continue;
+                    }
+                    match Algorithm::parse(name) {
+                        Some(a) => algs.push(a),
+                        None => bail!("unknown algorithm {name:?}"),
+                    }
+                }
+                if algs.is_empty() {
+                    bail!("empty algorithm list");
+                }
+                self.algorithms = algs;
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines from a file over the current values.
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path:?}"))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path:?} line {}: expected key = value", lineno + 1))?;
+            self.set(k, v)
+                .with_context(|| format!("{path:?} line {}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Render as a sorted `key = value` listing (for logs / provenance).
+    pub fn dump(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("dataset", self.dataset.clone());
+        m.insert("scale", self.scale.to_string());
+        m.insert("data_seed", self.data_seed.to_string());
+        m.insert("k", self.k.to_string());
+        m.insert("restarts", self.restarts.to_string());
+        m.insert("seed", self.seed.to_string());
+        m.insert("threads", self.threads.to_string());
+        m.insert("out_dir", self.out_dir.clone());
+        m.insert("max_iter", self.params.max_iter.to_string());
+        m.insert("switch_at", self.params.switch_at.to_string());
+        m.insert("scale_factor", self.params.cover.scale_factor.to_string());
+        m.insert("min_node_size", self.params.cover.min_node_size.to_string());
+        m.insert("kd_leaf_size", self.params.kd.leaf_size.to_string());
+        m.insert(
+            "algorithms",
+            self.algorithms
+                .iter()
+                .map(|a| a.name())
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        m.iter()
+            .map(|(k, v)| format!("{k} = {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Cover tree parameters (convenience).
+    pub fn cover_params(&self) -> CoverTreeParams {
+        self.params.cover
+    }
+
+    pub fn kd_params(&self) -> KdTreeParams {
+        self.params.kd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_dump_roundtrip() {
+        let mut c = RunConfig::default();
+        c.set("dataset", "istanbul").unwrap();
+        c.set("k", "42").unwrap();
+        c.set("algorithms", "shallot, hybrid").unwrap();
+        c.set("scale_factor", "1.3").unwrap();
+        assert_eq!(c.dataset, "istanbul");
+        assert_eq!(c.k, 42);
+        assert_eq!(c.algorithms, vec![Algorithm::Shallot, Algorithm::Hybrid]);
+        assert!((c.params.cover.scale_factor - 1.3).abs() < 1e-12);
+        let dump = c.dump();
+        assert!(dump.contains("dataset = istanbul"));
+        assert!(dump.contains("algorithms = Shallot,Hybrid"));
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_algorithm() {
+        let mut c = RunConfig::default();
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("algorithms", "quantum").is_err());
+        assert!(c.set("algorithms", "").is_err());
+    }
+
+    #[test]
+    fn load_file_with_comments() {
+        let mut c = RunConfig::default();
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("covermeans_cfg_{}.conf", std::process::id()));
+        std::fs::write(&p, "# profile\nk = 7 # clusters\n\ndataset = kdd04\n").unwrap();
+        c.load_file(&p).unwrap();
+        assert_eq!(c.k, 7);
+        assert_eq!(c.dataset, "kdd04");
+    }
+
+    #[test]
+    fn load_file_reports_bad_line() {
+        let mut c = RunConfig::default();
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("covermeans_badcfg_{}.conf", std::process::id()));
+        std::fs::write(&p, "k 7\n").unwrap();
+        assert!(c.load_file(&p).is_err());
+    }
+}

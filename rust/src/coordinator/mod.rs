@@ -1,0 +1,324 @@
+//! L3 coordination: the experiment scheduler that reproduces the paper's
+//! evaluation protocol.
+//!
+//! The unit of scheduling is a **cell** — one `(dataset, algorithm)` pair
+//! covering all `(k, restart)` combinations of an experiment. Cells run in
+//! parallel on a work-stealing queue of OS threads, while everything
+//! *inside* a cell is strictly single-threaded (the paper benchmarks
+//! single-core runs; cross-job parallelism does not touch per-run timers
+//! or counters). Initial centers are derived from `(dataset, k, restart)`
+//! only, so every algorithm sees byte-identical k-means++ seeds — the
+//! paper's "same 10 random initializations for each algorithm".
+//!
+//! Tree amortization: with [`Experiment::amortize_tree`] (the Table 4
+//! parameter-sweep protocol) a cell keeps one [`Workspace`] across all its
+//! runs, so the cover/k-d tree is built once per dataset and its build
+//! cost is charged exactly once; otherwise every run rebuilds (Tables 2-3
+//! include construction per run).
+
+pub mod report;
+pub mod sweep;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::data::{registry, Matrix};
+use crate::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, IterationLog};
+
+/// One experiment specification.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub name: String,
+    pub datasets: Vec<String>,
+    pub algorithms: Vec<Algorithm>,
+    pub ks: Vec<usize>,
+    pub restarts: usize,
+    /// Dataset scale relative to the paper's sizes.
+    pub scale: f64,
+    pub data_seed: u64,
+    pub params: KMeansParams,
+    /// Reuse one workspace (tree) across all runs of a cell (Table 4).
+    pub amortize_tree: bool,
+    pub threads: usize,
+}
+
+impl Experiment {
+    pub fn new(name: &str) -> Experiment {
+        Experiment {
+            name: name.to_string(),
+            datasets: registry::table_names().iter().map(|s| s.to_string()).collect(),
+            algorithms: Algorithm::ALL.to_vec(),
+            ks: vec![100],
+            restarts: 10,
+            scale: 0.05,
+            data_seed: 1,
+            params: KMeansParams::default(),
+            amortize_tree: false,
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        }
+    }
+}
+
+/// Summary of a single run within a cell.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub k: usize,
+    pub restart: usize,
+    pub iterations: usize,
+    pub distances: u64,
+    pub build_dist: u64,
+    pub time: Duration,
+    pub build_time: Duration,
+    pub sse: f64,
+    pub converged: bool,
+    /// Per-iteration series (kept only when the experiment asks for it).
+    pub log: Option<IterationLog>,
+}
+
+/// Aggregated result of one `(dataset, algorithm)` cell.
+#[derive(Debug, Clone, Default)]
+pub struct CellResult {
+    pub distances: u64,
+    pub build_dist: u64,
+    pub time: Duration,
+    pub build_time: Duration,
+    pub runs: Vec<RunSummary>,
+}
+
+impl CellResult {
+    /// Total distance computations including index construction.
+    pub fn total_distances(&self) -> u64 {
+        self.distances + self.build_dist
+    }
+
+    pub fn total_time(&self) -> Duration {
+        self.time + self.build_time
+    }
+}
+
+/// All cells of an experiment, keyed `(dataset, algorithm)`.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentResult {
+    pub cells: BTreeMap<(String, &'static str), CellResult>,
+}
+
+impl ExperimentResult {
+    pub fn cell(&self, dataset: &str, alg: Algorithm) -> Option<&CellResult> {
+        self.cells.get(&(dataset.to_string(), alg.name()))
+    }
+
+    /// Ratio of a metric vs the Standard algorithm on the same dataset.
+    pub fn ratio_vs_standard<F: Fn(&CellResult) -> f64>(
+        &self,
+        dataset: &str,
+        alg: Algorithm,
+        f: F,
+    ) -> Option<f64> {
+        let cell = self.cell(dataset, alg)?;
+        let std_cell = self.cell(dataset, Algorithm::Standard)?;
+        let denom = f(std_cell);
+        if denom <= 0.0 {
+            return None;
+        }
+        Some(f(cell) / denom)
+    }
+}
+
+/// Deterministic init seed shared by all algorithms for a
+/// `(dataset, k, restart)` triple.
+pub fn init_seed(dataset: &str, k: usize, restart: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in dataset.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^= (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= (restart as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    h
+}
+
+/// Run every `(dataset, algorithm)` cell of the experiment on a thread
+/// pool. `keep_logs` retains per-iteration series (Fig. 1).
+pub fn run_experiment(exp: &Experiment, keep_logs: bool) -> Result<ExperimentResult> {
+    // Generate all datasets up front (deterministic, shared read-only).
+    let mut datasets: BTreeMap<String, Arc<Matrix>> = BTreeMap::new();
+    for name in &exp.datasets {
+        let m = registry::load(name, exp.scale, exp.data_seed)
+            .with_context(|| format!("unknown dataset {name:?}"))?;
+        datasets.insert(name.clone(), Arc::new(m));
+    }
+
+    // Cell queue.
+    struct Cell {
+        dataset: String,
+        alg: Algorithm,
+    }
+    let queue: Mutex<Vec<Cell>> = Mutex::new(
+        exp.datasets
+            .iter()
+            .flat_map(|d| {
+                exp.algorithms.iter().map(move |&alg| Cell { dataset: d.clone(), alg })
+            })
+            .collect(),
+    );
+    let results: Mutex<ExperimentResult> = Mutex::new(ExperimentResult::default());
+    let threads = exp.threads.max(1);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let cell = { queue.lock().unwrap().pop() };
+                let Some(cell) = cell else { break };
+                let data = datasets.get(&cell.dataset).unwrap().clone();
+                let res = run_cell(exp, &cell.dataset, cell.alg, &data, keep_logs);
+                results
+                    .lock()
+                    .unwrap()
+                    .cells
+                    .insert((cell.dataset, cell.alg.name()), res);
+            });
+        }
+    });
+
+    Ok(results.into_inner().unwrap())
+}
+
+/// Execute one cell: all `(k, restart)` runs of one algorithm on one
+/// dataset, sequential and single-threaded.
+fn run_cell(
+    exp: &Experiment,
+    dataset: &str,
+    alg: Algorithm,
+    data: &Matrix,
+    keep_logs: bool,
+) -> CellResult {
+    let mut out = CellResult::default();
+    let mut ws = Workspace::new();
+    let params = KMeansParams { algorithm: alg, ..exp.params };
+
+    for &k in &exp.ks {
+        let k = k.min(data.rows());
+        for restart in 0..exp.restarts {
+            if !exp.amortize_tree {
+                ws = Workspace::new();
+            }
+            let mut init_counter = DistCounter::new();
+            let init = kmeans::init::kmeans_plus_plus(
+                data,
+                k,
+                init_seed(dataset, k, restart),
+                &mut init_counter,
+            );
+            let r = kmeans::run(data, &init, &params, &mut ws);
+            out.distances += r.distances;
+            out.build_dist += r.build_dist;
+            out.time += r.time;
+            out.build_time += r.build_time;
+            out.runs.push(RunSummary {
+                k,
+                restart,
+                iterations: r.iterations,
+                distances: r.distances,
+                build_dist: r.build_dist,
+                time: r.time,
+                build_time: r.build_time,
+                sse: r.sse(data),
+                converged: r.converged,
+                log: keep_logs.then(|| r.log.clone()),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_experiment() -> Experiment {
+        Experiment {
+            datasets: vec!["blobs:200:3:4".into()],
+            algorithms: vec![Algorithm::Standard, Algorithm::Shallot, Algorithm::Hybrid],
+            ks: vec![4],
+            restarts: 2,
+            scale: 1.0,
+            threads: 2,
+            ..Experiment::new("tiny")
+        }
+    }
+
+    #[test]
+    fn experiment_runs_all_cells_and_is_exact() {
+        let exp = tiny_experiment();
+        let res = run_experiment(&exp, false).unwrap();
+        assert_eq!(res.cells.len(), 3);
+        // Same SSE per (k, restart) across algorithms (exactness).
+        let std_runs = &res.cell("blobs:200:3:4", Algorithm::Standard).unwrap().runs;
+        for alg in [Algorithm::Shallot, Algorithm::Hybrid] {
+            let runs = &res.cell("blobs:200:3:4", alg).unwrap().runs;
+            assert_eq!(runs.len(), std_runs.len());
+            for (a, b) in runs.iter().zip(std_runs) {
+                assert_eq!(a.iterations, b.iterations, "{}", alg.name());
+                assert!(
+                    (a.sse - b.sse).abs() < 1e-6 * (1.0 + b.sse),
+                    "{}: sse {} vs {}",
+                    alg.name(),
+                    a.sse,
+                    b.sse
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ratio_vs_standard_is_one_for_standard() {
+        let exp = tiny_experiment();
+        let res = run_experiment(&exp, false).unwrap();
+        let r = res
+            .ratio_vs_standard("blobs:200:3:4", Algorithm::Standard, |c| {
+                c.total_distances() as f64
+            })
+            .unwrap();
+        assert!((r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn init_seed_depends_on_all_inputs() {
+        let a = init_seed("x", 10, 0);
+        assert_ne!(a, init_seed("y", 10, 0));
+        assert_ne!(a, init_seed("x", 11, 0));
+        assert_ne!(a, init_seed("x", 10, 1));
+        assert_eq!(a, init_seed("x", 10, 0));
+    }
+
+    #[test]
+    fn amortized_tree_charges_build_once() {
+        let mut exp = tiny_experiment();
+        exp.algorithms = vec![Algorithm::CoverMeans];
+        exp.amortize_tree = true;
+        exp.restarts = 3;
+        let res = run_experiment(&exp, false).unwrap();
+        let cell = res.cell("blobs:200:3:4", Algorithm::CoverMeans).unwrap();
+        let builds: usize = cell
+            .runs
+            .iter()
+            .filter(|r| r.build_time > Duration::ZERO || r.build_dist > 0)
+            .count();
+        assert_eq!(builds, 1, "tree must be built exactly once");
+    }
+
+    #[test]
+    fn keep_logs_retains_series() {
+        let mut exp = tiny_experiment();
+        exp.algorithms = vec![Algorithm::Standard];
+        exp.restarts = 1;
+        let res = run_experiment(&exp, true).unwrap();
+        let cell = res.cell("blobs:200:3:4", Algorithm::Standard).unwrap();
+        let log = cell.runs[0].log.as_ref().unwrap();
+        assert_eq!(log.len(), cell.runs[0].iterations);
+    }
+}

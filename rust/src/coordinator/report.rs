@@ -1,0 +1,226 @@
+//! Report renderers: print the paper's tables/figures from an
+//! [`ExperimentResult`] and write the raw series as CSV.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::{CellResult, Experiment, ExperimentResult};
+use crate::kmeans::Algorithm;
+
+/// Which metric a table reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Relative number of distance computations (Table 2).
+    Distances,
+    /// Relative run time including index construction (Tables 3-4).
+    Time,
+}
+
+impl Metric {
+    fn extract(&self, c: &CellResult) -> f64 {
+        match self {
+            Metric::Distances => c.total_distances() as f64,
+            Metric::Time => c.total_time().as_secs_f64(),
+        }
+    }
+}
+
+/// Render a paper-style table: algorithms as rows, datasets as columns,
+/// each value the ratio vs the Standard algorithm on that dataset.
+pub fn render_ratio_table(
+    exp: &Experiment,
+    res: &ExperimentResult,
+    metric: Metric,
+    title: &str,
+) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{title}");
+    let _ = write!(s, "{:<12}", "");
+    for ds in &exp.datasets {
+        let _ = write!(s, " {ds:>9}");
+    }
+    let _ = writeln!(s);
+    for &alg in &exp.algorithms {
+        if alg == Algorithm::Standard {
+            continue; // the baseline row is 1.000 by construction
+        }
+        let _ = write!(s, "{:<12}", alg.name());
+        for ds in &exp.datasets {
+            match res.ratio_vs_standard(ds, alg, |c| metric.extract(c)) {
+                Some(r) => {
+                    let _ = write!(s, " {r:>9.3}");
+                }
+                None => {
+                    let _ = write!(s, " {:>9}", "-");
+                }
+            }
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// CSV rows for a ratio table: `dataset,algorithm,ratio`.
+pub fn ratio_table_csv(
+    exp: &Experiment,
+    res: &ExperimentResult,
+    metric: Metric,
+) -> Vec<String> {
+    let mut rows = vec!["dataset,algorithm,ratio".to_string()];
+    for ds in &exp.datasets {
+        for &alg in &exp.algorithms {
+            if let Some(r) = res.ratio_vs_standard(ds, alg, |c| metric.extract(c)) {
+                rows.push(format!("{ds},{},{r:.6}", alg.name()));
+            }
+        }
+    }
+    rows
+}
+
+/// Fig. 1 series: cumulative distance computations and time per iteration,
+/// normalized by the *full* Standard run (the paper's normalization).
+/// Returns CSV rows `algorithm,iter,dist_cum_rel,time_cum_rel`.
+pub fn fig1_series_csv(exp: &Experiment, res: &ExperimentResult) -> Vec<String> {
+    let mut rows = vec!["algorithm,iter,dist_cum_rel,time_cum_rel".to_string()];
+    let ds = &exp.datasets[0];
+    let Some(std_cell) = res.cell(ds, Algorithm::Standard) else {
+        return rows;
+    };
+    let Some(std_log) = std_cell.runs[0].log.as_ref() else {
+        return rows;
+    };
+    let Some(std_last) = std_log.stats.last() else {
+        return rows;
+    };
+    let std_dist = std_last.dist_cum as f64;
+    let std_time = std_last.time_cum.as_secs_f64();
+    for &alg in &exp.algorithms {
+        let Some(cell) = res.cell(ds, alg) else { continue };
+        let Some(log) = cell.runs[0].log.as_ref() else { continue };
+        for st in &log.stats {
+            rows.push(format!(
+                "{},{},{:.6},{:.6}",
+                alg.name(),
+                st.iter,
+                st.dist_cum as f64 / std_dist,
+                st.time_cum.as_secs_f64() / std_time,
+            ));
+        }
+    }
+    rows
+}
+
+/// Fig. 2 series: one ratio per (x, algorithm) where x is the dataset
+/// (Fig. 2a, d on the x-axis) or k (Fig. 2b).
+pub fn fig2_series_csv(
+    exp: &Experiment,
+    res: &ExperimentResult,
+    by_k: bool,
+) -> Vec<String> {
+    let mut rows = vec![format!(
+        "{},algorithm,time_rel",
+        if by_k { "k" } else { "dataset" }
+    )];
+    if by_k {
+        let ds = &exp.datasets[0];
+        for &k in &exp.ks {
+            for &alg in &exp.algorithms {
+                let (Some(cell), Some(std_cell)) =
+                    (res.cell(ds, alg), res.cell(ds, Algorithm::Standard))
+                else {
+                    continue;
+                };
+                let t = per_k_time(cell, k);
+                let ts = per_k_time(std_cell, k);
+                if ts > 0.0 {
+                    rows.push(format!("{k},{},{:.6}", alg.name(), t / ts));
+                }
+            }
+        }
+    } else {
+        for ds in &exp.datasets {
+            for &alg in &exp.algorithms {
+                if let Some(r) =
+                    res.ratio_vs_standard(ds, alg, |c| c.total_time().as_secs_f64())
+                {
+                    rows.push(format!("{ds},{},{r:.6}", alg.name()));
+                }
+            }
+        }
+    }
+    rows
+}
+
+fn per_k_time(cell: &CellResult, k: usize) -> f64 {
+    let mut t = 0.0;
+    for r in &cell.runs {
+        if r.k == k {
+            t += (r.time + r.build_time).as_secs_f64();
+        }
+    }
+    t
+}
+
+/// Quick ASCII bar chart of a ratio series (terminal figure rendering).
+pub fn ascii_chart(rows: &[(String, f64)], width: usize) -> String {
+    let max = rows.iter().map(|r| r.1).fold(0.0f64, f64::max).max(1e-12);
+    let mut s = String::new();
+    for (label, v) in rows {
+        let bar = ((v / max) * width as f64).round() as usize;
+        let _ = writeln!(s, "{label:<22} {:<width$} {v:.3}", "#".repeat(bar.max(1)));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_experiment;
+
+    fn tiny() -> (Experiment, ExperimentResult) {
+        let exp = Experiment {
+            datasets: vec!["blobs:150:2:3".into()],
+            algorithms: vec![Algorithm::Standard, Algorithm::Hamerly],
+            ks: vec![3],
+            restarts: 1,
+            scale: 1.0,
+            threads: 1,
+            ..Experiment::new("t")
+        };
+        let res = run_experiment(&exp, true).unwrap();
+        (exp, res)
+    }
+
+    #[test]
+    fn ratio_table_renders() {
+        let (exp, res) = tiny();
+        let t = render_ratio_table(&exp, &res, Metric::Distances, "Table X");
+        assert!(t.contains("Hamerly"));
+        assert!(!t.contains("Standard  ")); // baseline row omitted
+        let csv = ratio_table_csv(&exp, &res, Metric::Distances);
+        assert_eq!(csv[0], "dataset,algorithm,ratio");
+        assert!(csv.len() >= 3); // header + standard + hamerly
+    }
+
+    #[test]
+    fn fig1_series_normalized_to_standard_total() {
+        let (exp, res) = tiny();
+        let rows = fig1_series_csv(&exp, &res);
+        assert!(rows.len() > 1);
+        // The Standard algorithm's last row must be ~1.0 in both metrics.
+        let std_rows: Vec<&String> =
+            rows.iter().filter(|r| r.starts_with("Standard")).collect();
+        let last = std_rows.last().unwrap();
+        let cols: Vec<&str> = last.split(',').collect();
+        let dist_rel: f64 = cols[2].parse().unwrap();
+        assert!((dist_rel - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_chart_draws_bars() {
+        let chart = ascii_chart(
+            &[("a".into(), 1.0), ("b".into(), 0.5)],
+            20,
+        );
+        assert!(chart.contains("####"));
+    }
+}

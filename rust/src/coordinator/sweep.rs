@@ -1,0 +1,155 @@
+//! The paper's experiment protocols (§4), one constructor per table/figure.
+//!
+//! Each function returns an [`Experiment`] sized by a `scale` knob (1.0 =
+//! the paper's dataset sizes); the CLI and benches pass smaller scales so
+//! the full matrix completes in minutes. See DESIGN.md §4 for the index.
+
+use crate::coordinator::Experiment;
+use crate::kmeans::Algorithm;
+
+/// Tables 2 & 3: all eight datasets, k = 100, 10 k-means++ restarts.
+/// (Table 2 reads the distance metric off the result, Table 3 the time.)
+pub fn tables23(scale: f64, restarts: usize) -> Experiment {
+    Experiment {
+        restarts,
+        scale,
+        ..Experiment::new("tables23")
+    }
+}
+
+/// Table 4: the parameter sweep — 16 values of k, 10 restarts each, tree
+/// construction amortized across the whole sweep.
+pub fn table4(scale: f64, restarts: usize) -> Experiment {
+    Experiment {
+        ks: ks_sweep16(),
+        restarts,
+        scale,
+        amortize_tree: true,
+        ..Experiment::new("table4")
+    }
+}
+
+/// The 16-point k grid of the Table 4 sweep (the paper chooses k by a
+/// quality heuristic afterwards; the grid spans the "medium to large
+/// k = 10..1000" range of §4).
+pub fn ks_sweep16() -> Vec<usize> {
+    vec![10, 20, 30, 40, 50, 70, 100, 140, 200, 280, 400, 500, 600, 700, 850, 1000]
+}
+
+/// Fig. 1: ALOI-64 analog, k = 400, per-iteration cumulative series
+/// (tree construction excluded from the series; one restart).
+pub fn fig1(scale: f64) -> Experiment {
+    Experiment {
+        datasets: vec!["aloi64".into()],
+        ks: vec![400],
+        restarts: 1,
+        scale,
+        ..Experiment::new("fig1")
+    }
+}
+
+/// Fig. 2a: runtime vs dimensionality on the MNIST analogs, k = 100.
+pub fn fig2a(scale: f64, restarts: usize) -> Experiment {
+    Experiment {
+        datasets: vec![
+            "mnist10".into(),
+            "mnist20".into(),
+            "mnist30".into(),
+            "mnist40".into(),
+            "mnist50".into(),
+        ],
+        ks: vec![100],
+        restarts,
+        scale,
+        ..Experiment::new("fig2a")
+    }
+}
+
+/// Fig. 2b: runtime vs k on MNIST-10.
+pub fn fig2b(scale: f64, restarts: usize) -> Experiment {
+    Experiment {
+        datasets: vec!["mnist10".into()],
+        ks: vec![10, 20, 50, 100, 200, 400, 700, 1000],
+        restarts,
+        scale,
+        ..Experiment::new("fig2b")
+    }
+}
+
+/// E8 ablations: one knob varied at a time on two contrasting datasets
+/// (tree-friendly istanbul, tree-hostile kdd04). Returns labelled
+/// experiments; the bench/CLI runs each and reports Cover-means/Hybrid.
+pub fn ablations(scale: f64, restarts: usize) -> Vec<(String, Experiment)> {
+    let datasets: Vec<String> = vec!["istanbul".into(), "kdd04".into()];
+    let mut out = Vec::new();
+    for sf in [1.1, 1.2, 1.3, 2.0] {
+        let mut e = Experiment {
+            datasets: datasets.clone(),
+            algorithms: vec![Algorithm::Standard, Algorithm::CoverMeans, Algorithm::Hybrid],
+            ks: vec![100],
+            restarts,
+            scale,
+            ..Experiment::new(&format!("ablate_scale_factor_{sf}"))
+        };
+        e.params.cover.scale_factor = sf;
+        out.push((format!("scale_factor={sf}"), e));
+    }
+    for leaf in [1usize, 10, 100, 1000] {
+        let mut e = Experiment {
+            datasets: datasets.clone(),
+            algorithms: vec![Algorithm::Standard, Algorithm::CoverMeans, Algorithm::Hybrid],
+            ks: vec![100],
+            restarts,
+            scale,
+            ..Experiment::new(&format!("ablate_min_node_{leaf}"))
+        };
+        e.params.cover.min_node_size = leaf;
+        out.push((format!("min_node_size={leaf}"), e));
+    }
+    for sw in [1usize, 3, 7, 15] {
+        let mut e = Experiment {
+            datasets: datasets.clone(),
+            algorithms: vec![Algorithm::Standard, Algorithm::Shallot, Algorithm::Hybrid],
+            ks: vec![100],
+            restarts,
+            scale,
+            ..Experiment::new(&format!("ablate_switch_{sw}"))
+        };
+        e.params.switch_at = sw;
+        out.push((format!("switch_at={sw}"), e));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocols_match_paper_shapes() {
+        let t23 = tables23(0.01, 10);
+        assert_eq!(t23.datasets.len(), 8);
+        assert_eq!(t23.ks, vec![100]);
+        assert!(!t23.amortize_tree);
+
+        let t4 = table4(0.01, 10);
+        assert_eq!(t4.ks.len(), 16);
+        assert!(t4.amortize_tree);
+
+        let f1 = fig1(0.01);
+        assert_eq!(f1.ks, vec![400]);
+        assert_eq!(f1.datasets, vec!["aloi64"]);
+
+        assert_eq!(fig2a(0.01, 3).datasets.len(), 5);
+        assert_eq!(fig2b(0.01, 3).ks.len(), 8);
+    }
+
+    #[test]
+    fn ablations_cover_three_knobs() {
+        let abl = ablations(0.01, 2);
+        assert_eq!(abl.len(), 12);
+        assert!(abl.iter().any(|(n, _)| n == "scale_factor=1.2"));
+        assert!(abl.iter().any(|(n, _)| n == "min_node_size=1000"));
+        assert!(abl.iter().any(|(n, _)| n == "switch_at=15"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Dataset and result I/O: CSV matrices and a small binary format.
+//!
+//! CSV is used for interchange (results/, external data); the binary `.fmat`
+//! format caches generated datasets between benchmark runs (a header
+//! `FMAT1\n<rows> <cols>\n` followed by little-endian f64 rows).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::matrix::Matrix;
+
+/// Write a matrix as CSV (no header).
+pub fn write_csv(path: &Path, m: &Matrix) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for row in m.iter_rows() {
+        let mut first = true;
+        for v in row {
+            if !first {
+                w.write_all(b",")?;
+            }
+            write!(w, "{v}")?;
+            first = false;
+        }
+        w.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Read a CSV of floats (no header; `,`, `;` or whitespace separated).
+pub fn read_csv(path: &Path) -> Result<Matrix> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut data = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let vals: Vec<f64> = t
+            .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>().with_context(|| format!("line {}: {s:?}", lineno + 1)))
+            .collect::<Result<_>>()?;
+        if vals.is_empty() {
+            continue;
+        }
+        if cols == 0 {
+            cols = vals.len();
+        } else if vals.len() != cols {
+            bail!("ragged CSV at line {}: {} vs {} cols", lineno + 1, vals.len(), cols);
+        }
+        data.extend(vals);
+        rows += 1;
+    }
+    Ok(Matrix::from_vec(data, rows, cols))
+}
+
+/// Write the binary cache format.
+pub fn write_fmat(path: &Path, m: &Matrix) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    write!(w, "FMAT1\n{} {}\n", m.rows(), m.cols())?;
+    for &v in m.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary cache format.
+pub fn read_fmat(path: &Path) -> Result<Matrix> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut header = Vec::new();
+    // Read two newline-terminated header lines byte-wise.
+    for _ in 0..2 {
+        let mut line = Vec::new();
+        loop {
+            let mut b = [0u8; 1];
+            r.read_exact(&mut b)?;
+            if b[0] == b'\n' {
+                break;
+            }
+            line.push(b[0]);
+        }
+        header.push(String::from_utf8(line)?);
+    }
+    if header[0] != "FMAT1" {
+        bail!("bad magic {:?}", header[0]);
+    }
+    let dims: Vec<usize> = header[1]
+        .split_whitespace()
+        .map(|s| s.parse().context("bad dims"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 2 {
+        bail!("bad dims line {:?}", header[1]);
+    }
+    let (rows, cols) = (dims[0], dims[1]);
+    let mut buf = vec![0u8; rows * cols * 8];
+    r.read_exact(&mut buf)?;
+    let data: Vec<f64> = buf
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Matrix::from_vec(data, rows, cols))
+}
+
+/// Load a named dataset through a binary cache directory: generate it on a
+/// miss, reuse the cached bytes on a hit. Used by benches so the (large)
+/// Table-4 sweeps don't regenerate data per algorithm.
+pub fn load_cached(
+    cache_dir: &Path,
+    name: &str,
+    scale: f64,
+    seed: u64,
+) -> Result<Matrix> {
+    std::fs::create_dir_all(cache_dir)?;
+    let fname = format!("{name}_s{scale}_r{seed}.fmat");
+    let path = cache_dir.join(fname);
+    if path.exists() {
+        if let Ok(m) = read_fmat(&path) {
+            return Ok(m);
+        }
+    }
+    let m = crate::data::registry::load(name, scale, seed)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    write_fmat(&path, &m)?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "covermeans_io_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.5, -2.0], &[0.0, 3.25]]);
+        let p = tmpdir().join("t.csv");
+        write_csv(&p, &m).unwrap();
+        let m2 = read_csv(&p).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmpdir().join("ragged.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+
+    #[test]
+    fn csv_skips_comments_and_blanks() {
+        let p = tmpdir().join("c.csv");
+        std::fs::write(&p, "# header\n\n1,2\n").unwrap();
+        let m = read_csv(&p).unwrap();
+        assert_eq!((m.rows(), m.cols()), (1, 2));
+    }
+
+    #[test]
+    fn fmat_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[-4.0, 5.5, 6.0]]);
+        let p = tmpdir().join("t.fmat");
+        write_fmat(&p, &m).unwrap();
+        assert_eq!(read_fmat(&p).unwrap(), m);
+    }
+
+    #[test]
+    fn cached_load_hits() {
+        let dir = tmpdir().join("cache");
+        let a = load_cached(&dir, "blobs:100:2:3", 1.0, 7).unwrap();
+        let b = load_cached(&dir, "blobs:100:2:3", 1.0, 7).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dataset substrate: matrix container, synthetic generators, registry, I/O.
+
+pub mod io;
+pub mod matrix;
+pub mod registry;
+pub mod synth;
+
+pub use matrix::{dist, sqdist, Matrix};

@@ -1,0 +1,116 @@
+//! Named dataset registry mirroring the paper's Table 1.
+//!
+//! `load("mnist30", scale, seed)` returns the synthetic analog of the named
+//! paper dataset (see `synth`). Names accepted (case-insensitive):
+//! `covtype, istanbul, kdd04, traffic, aloi27, aloi64, mnist10, mnist20,
+//! mnist30, mnist40, mnist50`, plus `blobs:<n>:<d>:<k>` for ad-hoc data.
+
+use crate::data::matrix::Matrix;
+use crate::data::synth;
+
+/// Descriptor for one registered dataset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DatasetInfo {
+    pub name: &'static str,
+    /// Paper-size N (scale 1.0).
+    pub n: usize,
+    pub d: usize,
+    pub domain: &'static str,
+}
+
+/// The eight datasets of the paper's Tables 2-4, in table column order.
+pub const TABLE_DATASETS: [DatasetInfo; 8] = [
+    DatasetInfo { name: "covtype", n: synth::COVTYPE_N, d: 54, domain: "remote sensing" },
+    DatasetInfo { name: "istanbul", n: synth::ISTANBUL_N, d: 2, domain: "tweet locations" },
+    DatasetInfo { name: "kdd04", n: synth::KDD04_N, d: 74, domain: "biology" },
+    DatasetInfo { name: "traffic", n: synth::TRAFFIC_N, d: 2, domain: "accident locations" },
+    DatasetInfo { name: "mnist10", n: synth::MNIST_N, d: 10, domain: "autoencoder" },
+    DatasetInfo { name: "mnist30", n: synth::MNIST_N, d: 30, domain: "autoencoder" },
+    DatasetInfo { name: "aloi27", n: synth::ALOI_N, d: 27, domain: "color histograms" },
+    DatasetInfo { name: "aloi64", n: synth::ALOI_N, d: 64, domain: "color histograms" },
+];
+
+/// Look up a dataset descriptor by name.
+pub fn info(name: &str) -> Option<DatasetInfo> {
+    let lname = name.to_ascii_lowercase();
+    if let Some(i) = TABLE_DATASETS.iter().find(|i| i.name == lname) {
+        return Some(i.clone());
+    }
+    match lname.as_str() {
+        "mnist20" => Some(DatasetInfo { name: "mnist20", n: synth::MNIST_N, d: 20, domain: "autoencoder" }),
+        "mnist40" => Some(DatasetInfo { name: "mnist40", n: synth::MNIST_N, d: 40, domain: "autoencoder" }),
+        "mnist50" => Some(DatasetInfo { name: "mnist50", n: synth::MNIST_N, d: 50, domain: "autoencoder" }),
+        _ => None,
+    }
+}
+
+/// Generate the named dataset at the given scale and seed.
+pub fn load(name: &str, scale: f64, seed: u64) -> Option<Matrix> {
+    let lname = name.to_ascii_lowercase();
+    if let Some(rest) = lname.strip_prefix("blobs:") {
+        let parts: Vec<usize> =
+            rest.split(':').filter_map(|p| p.parse().ok()).collect();
+        if parts.len() == 3 {
+            return Some(synth::gaussian_blobs(
+                parts[0], parts[1], parts[2], 0.5, seed,
+            ));
+        }
+        return None;
+    }
+    if let Some(dstr) = lname.strip_prefix("mnist") {
+        if let Ok(d) = dstr.parse::<usize>() {
+            return Some(synth::mnist(d, scale, seed));
+        }
+    }
+    if let Some(dstr) = lname.strip_prefix("aloi") {
+        if let Ok(d) = dstr.parse::<usize>() {
+            return Some(synth::aloi(d, scale, seed));
+        }
+    }
+    match lname.as_str() {
+        "covtype" => Some(synth::covtype(scale, seed)),
+        "istanbul" => Some(synth::istanbul(scale, seed)),
+        "traffic" => Some(synth::traffic(scale, seed)),
+        "kdd04" => Some(synth::kdd04(scale, seed)),
+        _ => None,
+    }
+}
+
+/// Names of all paper-table datasets, in column order.
+pub fn table_names() -> Vec<&'static str> {
+    TABLE_DATASETS.iter().map(|i| i.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn info_known_and_unknown() {
+        assert_eq!(info("ALOI64").unwrap().d, 64);
+        assert_eq!(info("mnist40").unwrap().d, 40);
+        assert!(info("nope").is_none());
+    }
+
+    #[test]
+    fn load_all_table_datasets_tiny() {
+        for ds in TABLE_DATASETS.iter() {
+            let m = load(ds.name, 0.0005, 1).unwrap();
+            assert_eq!(m.cols(), ds.d, "{}", ds.name);
+            assert!(m.rows() >= 64);
+        }
+    }
+
+    #[test]
+    fn load_blobs_spec() {
+        let m = load("blobs:200:3:4", 1.0, 2).unwrap();
+        assert_eq!((m.rows(), m.cols()), (200, 3));
+        assert!(load("blobs:bad", 1.0, 2).is_none());
+    }
+
+    #[test]
+    fn load_arbitrary_mnist_dim() {
+        let m = load("mnist50", 0.001, 3).unwrap();
+        assert_eq!(m.cols(), 50);
+    }
+}

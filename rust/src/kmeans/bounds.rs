@@ -1,0 +1,263 @@
+//! Shared per-iteration machinery: inter-center distances (Eq. 5 filter
+//! input), center movement, and the centroid accumulator used by every
+//! assignment phase (Eq. 2).
+
+use crate::data::Matrix;
+use crate::metrics::DistCounter;
+
+/// Inter-center distance matrix plus `s_i = 1/2 min_{j != i} d(c_i, c_j)`,
+/// recomputed at the start of each iteration (paper §2.2: "computed and
+/// stored at the beginning of each iteration"). Costs k(k-1)/2 counted
+/// distance computations.
+#[derive(Debug, Clone)]
+pub struct InterCenter {
+    pub k: usize,
+    /// Row-major k x k distances (symmetric, zero diagonal).
+    pub cc: Vec<f64>,
+    /// Half the distance to the nearest other center.
+    pub s: Vec<f64>,
+}
+
+impl InterCenter {
+    pub fn compute(centers: &Matrix, dist: &mut DistCounter) -> InterCenter {
+        let k = centers.rows();
+        let mut cc = vec![0.0; k * k];
+        let mut nearest = vec![f64::INFINITY; k];
+        for i in 0..k {
+            for j in (i + 1)..k {
+                let d = dist.d(centers.row(i), centers.row(j));
+                cc[i * k + j] = d;
+                cc[j * k + i] = d;
+                if d < nearest[i] {
+                    nearest[i] = d;
+                }
+                if d < nearest[j] {
+                    nearest[j] = d;
+                }
+            }
+        }
+        let s = nearest.iter().map(|&d| 0.5 * d).collect();
+        InterCenter { k, cc, s }
+    }
+
+    #[inline]
+    pub fn d(&self, i: usize, j: usize) -> f64 {
+        self.cc[i * self.k + j]
+    }
+
+    /// Indices of all other centers sorted by distance from center `i`
+    /// (used by the annulus searches of Exponion and Shallot). Allocates;
+    /// callers should reuse via `sorted_neighbors_into`.
+    pub fn sorted_neighbors(&self, i: usize) -> Vec<(f64, u32)> {
+        let mut v = Vec::with_capacity(self.k - 1);
+        self.sorted_neighbors_into(i, &mut v);
+        v
+    }
+
+    pub fn sorted_neighbors_into(&self, i: usize, out: &mut Vec<(f64, u32)>) {
+        out.clear();
+        for j in 0..self.k {
+            if j != i {
+                out.push((self.d(i, j), j as u32));
+            }
+        }
+        out.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+}
+
+/// Centroid accumulator: the running `sum_{a(s)=i} s` and counts of Eq. 2.
+#[derive(Debug, Clone)]
+pub struct CentroidAccum {
+    pub sums: Matrix,
+    pub counts: Vec<f64>,
+}
+
+impl CentroidAccum {
+    pub fn new(k: usize, d: usize) -> Self {
+        CentroidAccum { sums: Matrix::zeros(k, d), counts: vec![0.0; k] }
+    }
+
+    pub fn clear(&mut self) {
+        self.sums.as_mut_slice().fill(0.0);
+        self.counts.fill(0.0);
+    }
+
+    #[inline]
+    pub fn add_point(&mut self, c: usize, p: &[f64]) {
+        let row = self.sums.row_mut(c);
+        for (r, &v) in row.iter_mut().zip(p) {
+            *r += v;
+        }
+        self.counts[c] += 1.0;
+    }
+
+    #[inline]
+    pub fn remove_point(&mut self, c: usize, p: &[f64]) {
+        let row = self.sums.row_mut(c);
+        for (r, &v) in row.iter_mut().zip(p) {
+            *r -= v;
+        }
+        self.counts[c] -= 1.0;
+    }
+
+    /// Add an aggregated subtree (`S_x`, `w_x`) at once — the cover tree
+    /// reassignment of paper §3.2.
+    #[inline]
+    pub fn add_aggregate(&mut self, c: usize, sum: &[f64], weight: f64) {
+        let row = self.sums.row_mut(c);
+        for (r, &v) in row.iter_mut().zip(sum) {
+            *r += v;
+        }
+        self.counts[c] += weight;
+    }
+
+    #[inline]
+    pub fn remove_aggregate(&mut self, c: usize, sum: &[f64], weight: f64) {
+        let row = self.sums.row_mut(c);
+        for (r, &v) in row.iter_mut().zip(sum) {
+            *r -= v;
+        }
+        self.counts[c] -= weight;
+    }
+
+    /// Produce the next centers (Eq. 2). Empty clusters keep their previous
+    /// center (ELKI's behaviour), so their movement is 0. Returns per-center
+    /// movement distances `d(c'_i, c_i)` (counted, as the bound updates of
+    /// §2.2 consume them).
+    pub fn update_centers(
+        &self,
+        centers: &mut Matrix,
+        dist: &mut DistCounter,
+        movement: &mut Vec<f64>,
+    ) {
+        let k = centers.rows();
+        let d = centers.cols();
+        movement.clear();
+        let mut new_row = vec![0.0; d];
+        for i in 0..k {
+            if self.counts[i] > 0.0 {
+                let inv = 1.0 / self.counts[i];
+                let srow = self.sums.row(i);
+                for j in 0..d {
+                    new_row[j] = srow[j] * inv;
+                }
+                let mv = dist.d(centers.row(i), &new_row);
+                centers.row_mut(i).copy_from_slice(&new_row);
+                movement.push(mv);
+            } else {
+                movement.push(0.0);
+            }
+        }
+    }
+}
+
+/// Dense nearest + second-nearest scan of a point against all centers,
+/// counting k distances. Ties break to the lowest index. Returns
+/// `(c1, d1, c2, d2)`; for k == 1, `c2 == c1` and `d2 == +inf`.
+#[inline]
+pub fn nearest_two(
+    point: &[f64],
+    centers: &Matrix,
+    dist: &mut DistCounter,
+) -> (u32, f64, u32, f64) {
+    let mut c1 = 0u32;
+    let mut d1 = f64::INFINITY;
+    let mut c2 = 0u32;
+    let mut d2 = f64::INFINITY;
+    for i in 0..centers.rows() {
+        let dd = dist.d(point, centers.row(i));
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn centers2() -> Matrix {
+        Matrix::from_rows(&[&[0.0, 0.0], &[4.0, 0.0], &[0.0, 3.0]])
+    }
+
+    #[test]
+    fn intercenter_symmetric_and_s() {
+        let mut dist = DistCounter::new();
+        let ic = InterCenter::compute(&centers2(), &mut dist);
+        assert_eq!(dist.count(), 3); // k(k-1)/2
+        assert_eq!(ic.d(0, 1), 4.0);
+        assert_eq!(ic.d(1, 0), 4.0);
+        assert_eq!(ic.d(0, 2), 3.0);
+        assert_eq!(ic.s[0], 1.5); // half of min(4, 3)
+        assert_eq!(ic.d(1, 1), 0.0); // diagonal zero
+    }
+
+    #[test]
+    fn sorted_neighbors_order() {
+        let mut dist = DistCounter::new();
+        let ic = InterCenter::compute(&centers2(), &mut dist);
+        let nb = ic.sorted_neighbors(0);
+        assert_eq!(nb.len(), 2);
+        assert_eq!(nb[0].1, 2); // distance 3 before distance 4
+        assert_eq!(nb[1].1, 1);
+    }
+
+    #[test]
+    fn accum_roundtrip_and_update() {
+        let mut acc = CentroidAccum::new(2, 2);
+        acc.add_point(0, &[1.0, 1.0]);
+        acc.add_point(0, &[3.0, 1.0]);
+        acc.add_aggregate(1, &[10.0, 0.0], 2.0);
+        let mut centers = Matrix::from_rows(&[&[0.0, 0.0], &[9.0, 9.0]]);
+        let mut dist = DistCounter::new();
+        let mut mv = Vec::new();
+        acc.update_centers(&mut centers, &mut dist, &mut mv);
+        assert_eq!(centers.row(0), &[2.0, 1.0]);
+        assert_eq!(centers.row(1), &[5.0, 0.0]);
+        assert_eq!(mv.len(), 2);
+        assert!(mv[0] > 0.0 && mv[1] > 0.0);
+        // removal restores
+        acc.remove_point(0, &[3.0, 1.0]);
+        assert_eq!(acc.counts[0], 1.0);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_center() {
+        let acc = CentroidAccum::new(1, 2);
+        let mut centers = Matrix::from_rows(&[&[7.0, 8.0]]);
+        let mut dist = DistCounter::new();
+        let mut mv = Vec::new();
+        acc.update_centers(&mut centers, &mut dist, &mut mv);
+        assert_eq!(centers.row(0), &[7.0, 8.0]);
+        assert_eq!(mv[0], 0.0);
+        assert_eq!(dist.count(), 0);
+    }
+
+    #[test]
+    fn nearest_two_ties_lowest_index() {
+        let centers = Matrix::from_rows(&[&[1.0], &[-1.0], &[1.0]]);
+        let mut dist = DistCounter::new();
+        let (c1, d1, c2, d2) = nearest_two(&[0.0], &centers, &mut dist);
+        assert_eq!(c1, 0); // ties: 0 before 1 and 2
+        assert_eq!(d1, 1.0);
+        assert_eq!(d2, 1.0);
+        assert!(c2 == 1 || c2 == 2);
+        assert_eq!(dist.count(), 3);
+    }
+
+    #[test]
+    fn nearest_two_single_center() {
+        let centers = Matrix::from_rows(&[&[2.0]]);
+        let mut dist = DistCounter::new();
+        let (c1, d1, _c2, d2) = nearest_two(&[0.0], &centers, &mut dist);
+        assert_eq!((c1, d1), (0, 2.0));
+        assert!(d2.is_infinite());
+    }
+}

@@ -1,0 +1,606 @@
+//! Cover-means (paper §3): k-means assignment over the cover tree,
+//! assigning whole subtrees at once and pruning candidate centers with the
+//! triangle inequality.
+//!
+//! Per iteration the tree is traversed from the root with a shrinking
+//! candidate set `A_x`:
+//!
+//! * **Eq. 9** — while computing the distances from a routing object `p_x`
+//!   to the candidates, a candidate `c_j` is dropped without computing its
+//!   distance when `d(c_best, c_j) >= 2 d(p_x, c_best) + 2 r_x` (the
+//!   Phillips filter lifted to a ball of radius `r_x`);
+//! * **Eq. 10** — the whole subtree is assigned to `c_1` when
+//!   `d(p_x,c_1) + r_x <= d(p_x,c_2) - r_x`;
+//! * **Eq. 11** — otherwise candidates with
+//!   `d(p_x,c_i) - r_x > d(p_x,c_1) + r_x` are pruned;
+//! * **Eqs. 12-14** — child nodes first try to inherit the parent's
+//!   assignment using only the stored parent distance `d(p_x,p_y)` and the
+//!   child radius (Eq. 12), then with one fresh distance `d(p_y,c_1)`
+//!   (Eq. 13), pruning the candidate set with Eq. 14 before recursing.
+//!
+//! Reassigned subtrees move their stored aggregates `(S_x, w_x)` between
+//! cluster accumulators in O(d) (§3.2). Every assignment also records the
+//! upper/lower bounds and second-nearest identity of Eqs. 15-18, which is
+//! what the Hybrid algorithm (§3.4) hands to Shallot.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::{KMeansParams, Workspace};
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::tree::covertree::{CoverTree, Node};
+
+/// Mutable per-iteration view shared by the traversal.
+struct Ctx<'a> {
+    data: &'a Matrix,
+    centers: &'a Matrix,
+    ic: &'a InterCenter,
+    labels: &'a mut [u32],
+    upper: &'a mut [f64],
+    lower: &'a mut [f64],
+    second: &'a mut [u32],
+    acc: &'a mut CentroidAccum,
+    dist: &'a mut DistCounter,
+    changed: usize,
+    /// Scratch buffers recycled across nodes (§Perf: the traversal is
+    /// allocation-free in steady state; buffers grow to the candidate-set
+    /// high-water mark and are reused down the recursion).
+    cand_pool: Vec<Vec<Cand>>,
+    id_pool: Vec<Vec<u32>>,
+}
+
+/// §Perf A/B switch: `COVERMEANS_NO_POOL=1` disables scratch recycling so
+/// the allocation cost of the naive traversal can be measured (see
+/// EXPERIMENTS.md §Perf).
+fn pool_disabled() -> bool {
+    static DISABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *DISABLED.get_or_init(|| std::env::var_os("COVERMEANS_NO_POOL").is_some())
+}
+
+impl Ctx<'_> {
+    #[inline]
+    fn take_cands(&mut self) -> Vec<Cand> {
+        if pool_disabled() {
+            return Vec::new();
+        }
+        self.cand_pool.pop().unwrap_or_default()
+    }
+
+    #[inline]
+    fn put_cands(&mut self, mut v: Vec<Cand>) {
+        v.clear();
+        self.cand_pool.push(v);
+    }
+
+    #[inline]
+    fn take_ids(&mut self) -> Vec<u32> {
+        if pool_disabled() {
+            return Vec::new();
+        }
+        self.id_pool.pop().unwrap_or_default()
+    }
+
+    #[inline]
+    fn put_ids(&mut self, mut v: Vec<u32>) {
+        v.clear();
+        self.id_pool.push(v);
+    }
+}
+
+/// A candidate center with its computed distance to the current routing
+/// object.
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    c: u32,
+    d: f64,
+}
+
+/// Run one full assignment pass over the tree. Returns the number of
+/// points whose assignment changed. Exposed for the Hybrid algorithm.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assign_pass(
+    data: &Matrix,
+    tree: &CoverTree,
+    centers: &Matrix,
+    ic: &InterCenter,
+    labels: &mut [u32],
+    upper: &mut [f64],
+    lower: &mut [f64],
+    second: &mut [u32],
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+) -> usize {
+    let mut ctx = Ctx {
+        data,
+        centers,
+        ic,
+        labels,
+        upper,
+        lower,
+        second,
+        acc,
+        dist,
+        changed: 0,
+        cand_pool: Vec::new(),
+        id_pool: Vec::new(),
+    };
+    // Root candidates: compute distances with the Eq. 9 running filter.
+    let root = &tree.root;
+    let all: Vec<u32> = (0..centers.rows() as u32).collect();
+    let p = data.row(root.routing as usize);
+    let mut lb = f64::INFINITY;
+    let mut cands = ctx.take_cands();
+    compute_candidates(&mut ctx, p, root.radius, &all, None, &mut lb, &mut cands);
+    assign_node(&mut ctx, root, &cands, lb);
+    ctx.put_cands(cands);
+    ctx.changed
+}
+
+/// Compute distances from routing object `p` to the given candidate ids,
+/// dropping candidates via Eq. 9 as the running best improves. `warm`
+/// optionally seeds the running best with an already-computed candidate
+/// (the parent's nearest, Eq. 13's tightening). Pruned candidates lower
+/// `lb` (a valid lower bound on their distance to any point in the ball).
+#[allow(clippy::too_many_arguments)]
+fn compute_candidates(
+    ctx: &mut Ctx,
+    p: &[f64],
+    radius: f64,
+    ids: &[u32],
+    warm: Option<Cand>,
+    lb: &mut f64,
+    out: &mut Vec<Cand>,
+) {
+    out.clear();
+    out.reserve(ids.len() + warm.is_some() as usize);
+    let (mut best_c, mut best_d) = match warm {
+        Some(w) => {
+            out.push(w);
+            (w.c, w.d)
+        }
+        None => (u32::MAX, f64::INFINITY),
+    };
+    for &j in ids {
+        if j == best_c {
+            continue;
+        }
+        if best_c != u32::MAX {
+            // Eq. 9: c_j cannot be nearest for any q in the ball.
+            let cc = ctx.ic.d(best_c as usize, j as usize);
+            if cc >= 2.0 * (best_d + radius) {
+                // d(q, c_j) >= cc - d(q, c_best) >= cc - best_d - radius.
+                *lb = lb.min(cc - best_d - radius);
+                continue;
+            }
+        }
+        let dj = ctx.dist.d(p, ctx.centers.row(j as usize));
+        out.push(Cand { c: j, d: dj });
+        if dj < best_d || (dj == best_d && j < best_c) {
+            best_d = dj;
+            best_c = j;
+        }
+    }
+}
+
+/// Best and second-best candidates (by distance; ties to lowest id).
+fn top2(cands: &[Cand]) -> (Cand, Option<Cand>) {
+    debug_assert!(!cands.is_empty());
+    let mut c1 = cands[0];
+    let mut c2: Option<Cand> = None;
+    for &cand in &cands[1..] {
+        if cand.d < c1.d || (cand.d == c1.d && cand.c < c1.c) {
+            c2 = Some(c1);
+            c1 = cand;
+        } else if c2.map(|s| cand.d < s.d).unwrap_or(true) {
+            c2 = Some(cand);
+        }
+    }
+    (c1, c2)
+}
+
+/// Assign the whole subtree under `node` to center `c1`, moving aggregates
+/// and recording the hand-off bounds (u, l, second) for every point.
+fn assign_subtree(ctx: &mut Ctx, node: &Node, c1: u32, u: f64, l: f64, sec: u32) {
+    ctx.acc.add_aggregate(c1 as usize, &node.sum, node.weight as f64);
+    let labels = &mut *ctx.labels;
+    let upper = &mut *ctx.upper;
+    let lower = &mut *ctx.lower;
+    let secv = &mut *ctx.second;
+    let mut changed = 0usize;
+    node.for_each_point(&mut |pi| {
+        let i = pi as usize;
+        if labels[i] != c1 {
+            labels[i] = c1;
+            changed += 1;
+        }
+        upper[i] = u;
+        lower[i] = l;
+        secv[i] = sec;
+    });
+    ctx.changed += changed;
+}
+
+/// Assign a single point.
+fn assign_point(ctx: &mut Ctx, pi: u32, c1: u32, u: f64, l: f64, sec: u32) {
+    let i = pi as usize;
+    ctx.acc.add_point(c1 as usize, ctx.data.row(i));
+    if ctx.labels[i] != c1 {
+        ctx.labels[i] = c1;
+        ctx.changed += 1;
+    }
+    ctx.upper[i] = u;
+    ctx.lower[i] = l;
+    ctx.second[i] = sec;
+}
+
+/// Recursive node assignment. `cands` are the computed (and Eq. 9
+/// filtered) candidate distances at this node's routing object;
+/// `inherited_lb` is a valid lower bound on the distance from any point in
+/// this subtree to every candidate dropped along the path from the root.
+fn assign_node(ctx: &mut Ctx, node: &Node, cands: &[Cand], inherited_lb: f64) {
+    let (c1, c2) = top2(cands);
+    let r = node.radius;
+    let (d2, sec) = match c2 {
+        Some(s) => (s.d, s.c),
+        None => (f64::INFINITY, c1.c),
+    };
+
+    // Eq. 10: the whole subtree is closest to c1.
+    if cands.len() == 1 || c1.d + r <= d2 - r {
+        let l = (d2 - r).min(inherited_lb);
+        assign_subtree(ctx, node, c1.c, c1.d + r, l, sec);
+        return;
+    }
+
+    // Eq. 11: prune candidates that cannot be nearest anywhere in the ball.
+    let mut pruned = ctx.take_cands();
+    let mut lb = inherited_lb;
+    for &cand in cands {
+        if cand.d - r > c1.d + r {
+            lb = lb.min(cand.d - r);
+        } else {
+            pruned.push(cand);
+        }
+    }
+
+    // Singletons: children of radius 0 at stored distance dq.
+    for &(pi, dq) in &node.singletons {
+        assign_singleton(ctx, pi, dq, &pruned, c1, d2, sec, lb);
+    }
+
+    // Child nodes.
+    for child in &node.children {
+        let dxy = child.parent_dist;
+        let ry = child.radius;
+
+        if child.routing == node.routing {
+            // Self-child: identical routing object, distances carry over;
+            // only the radius shrank. Re-run the tests on the same cands.
+            assign_node(ctx, child, &pruned, lb);
+            continue;
+        }
+
+        // Eq. 12: assign the child using only stored tree distances.
+        if c1.d + dxy + ry <= d2 - dxy - ry {
+            let l = (d2 - dxy - ry).min(lb);
+            assign_subtree(ctx, child, c1.c, c1.d + dxy + ry, l, sec);
+            continue;
+        }
+
+        // Eq. 13: one fresh distance to the parent's nearest.
+        let py = ctx.data.row(child.routing as usize);
+        let dy1 = ctx.dist.d(py, ctx.centers.row(c1.c as usize));
+        if dy1 + ry <= d2 - dxy - ry {
+            let l = (d2 - dxy - ry).min(lb);
+            assign_subtree(ctx, child, c1.c, dy1 + ry, l, sec);
+            continue;
+        }
+
+        // Eq. 14: prune candidates for the child, then recompute the
+        // survivors' distances at p_y (Eq. 9 filter, warm-started at c1).
+        let mut child_lb = lb;
+        let mut survivor_ids = ctx.take_ids();
+        for &cand in &pruned {
+            if cand.c == c1.c {
+                continue; // warm start carries it
+            }
+            if cand.d - dxy - ry > dy1 + ry {
+                child_lb = child_lb.min(cand.d - dxy - ry);
+            } else {
+                survivor_ids.push(cand.c);
+            }
+        }
+        let warm = Cand { c: c1.c, d: dy1 };
+        let mut child_cands = ctx.take_cands();
+        compute_candidates(
+            ctx,
+            py,
+            ry,
+            &survivor_ids,
+            Some(warm),
+            &mut child_lb,
+            &mut child_cands,
+        );
+        ctx.put_ids(survivor_ids);
+        assign_node(ctx, child, &child_cands, child_lb);
+        ctx.put_cands(child_cands);
+    }
+    ctx.put_cands(pruned);
+}
+
+/// A singleton is a radius-0 child at stored distance `dq` from the
+/// routing object: Eqs. 12-14 with `r_y = 0`, then an exact scan.
+#[allow(clippy::too_many_arguments)]
+fn assign_singleton(
+    ctx: &mut Ctx,
+    pi: u32,
+    dq: f64,
+    cands: &[Cand],
+    c1: Cand,
+    d2: f64,
+    sec: u32,
+    inherited_lb: f64,
+) {
+    // Eq. 12 (r_y = 0): no computation at all.
+    if c1.d + dq <= d2 - dq {
+        let l = (d2 - dq).min(inherited_lb);
+        assign_point(ctx, pi, c1.c, c1.d + dq, l, sec);
+        return;
+    }
+    let q = ctx.data.row(pi as usize);
+    // Eq. 13: exact distance to the inherited nearest only.
+    let dq1 = ctx.dist.d(q, ctx.centers.row(c1.c as usize));
+    if dq1 <= d2 - dq {
+        let l = (d2 - dq).min(inherited_lb);
+        assign_point(ctx, pi, c1.c, dq1, l, sec);
+        return;
+    }
+    // Eq. 14 prune + Eq. 9 running filter, then exact top-2.
+    let mut best = Cand { c: c1.c, d: dq1 };
+    let mut second_d = f64::INFINITY;
+    let mut second_c = sec;
+    let mut lb = inherited_lb;
+    for &cand in cands {
+        if cand.c == c1.c {
+            continue;
+        }
+        // Eq. 14 with r_y = 0: skip without computing.
+        if cand.d - dq > dq1 {
+            lb = lb.min(cand.d - dq);
+            continue;
+        }
+        // Eq. 9 with r = 0 against the running best.
+        let cc = ctx.ic.d(best.c as usize, cand.c as usize);
+        if cc >= 2.0 * best.d {
+            lb = lb.min(cc - best.d);
+            continue;
+        }
+        let dj = ctx.dist.d(q, ctx.centers.row(cand.c as usize));
+        if dj < best.d || (dj == best.d && cand.c < best.c) {
+            second_d = best.d;
+            second_c = best.c;
+            best = Cand { c: cand.c, d: dj };
+        } else if dj < second_d {
+            second_d = dj;
+            second_c = cand.c;
+        }
+    }
+    let l = second_d.min(lb);
+    assign_point(ctx, pi, best.c, best.d, l, second_c);
+}
+
+pub fn run(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+
+    let fresh = ws
+        .cover
+        .as_ref()
+        .map(|t| t.params != params.cover)
+        .unwrap_or(true);
+    let tree = ws.cover_tree(data, params.cover);
+    let (build_dist, build_time) = if fresh {
+        (tree.build_distances, tree.build_time)
+    } else {
+        (0, std::time::Duration::ZERO)
+    };
+
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+    let mut centers = init.clone();
+    let mut labels = vec![u32::MAX; n];
+    let mut upper = vec![0.0f64; n];
+    let mut lower = vec![0.0f64; n];
+    let mut second = vec![0u32; n];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for iter in 1..=params.max_iter {
+        iterations = iter;
+        let ic = InterCenter::compute(&centers, &mut dist);
+        acc.clear();
+        let changed = assign_pass(
+            data, tree, &centers, &ic, &mut labels, &mut upper, &mut lower,
+            &mut second, &mut acc, &mut dist,
+        );
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist,
+        time: sw.elapsed(),
+        build_time,
+        log,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+    use crate::tree::CoverTreeParams;
+
+    fn params_small_leaf() -> KMeansParams {
+        KMeansParams {
+            cover: CoverTreeParams { scale_factor: 1.2, min_node_size: 10 },
+            ..KMeansParams::with_algorithm(Algorithm::CoverMeans)
+        }
+    }
+
+    #[test]
+    fn matches_lloyd_exactly_blobs() {
+        let data = synth::gaussian_blobs(500, 3, 5, 1.0, 19);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 5, 13, &mut dc);
+        let params = params_small_leaf();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_c = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_c.labels, r_l.labels);
+        assert_eq!(r_c.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn matches_lloyd_exactly_geo() {
+        let data = synth::istanbul(0.002, 20);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 25, 14, &mut dc);
+        let params = params_small_leaf();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_c = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_c.labels, r_l.labels);
+        assert_eq!(r_c.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn saves_distances_first_iteration() {
+        // The tree method must beat n*k already in iteration 1 on
+        // clustered low-dim data (the paper's early-iteration advantage).
+        let data = synth::istanbul(0.003, 21);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 50, 15, &mut dc);
+        let params = KMeansParams {
+            max_iter: 1,
+            ..params_small_leaf()
+        };
+        let mut ws = Workspace::new();
+        let r_c = run(&data, &init_c, &params, &mut ws);
+        let full = (data.rows() * 50) as u64;
+        assert!(
+            r_c.distances < full / 2,
+            "cover {} vs full {}",
+            r_c.distances,
+            full
+        );
+    }
+
+    #[test]
+    fn handoff_bounds_are_valid() {
+        // After a full run, u >= d(x, c_a) and l <= d(x, c_j) for all
+        // j != a must hold for every point (Eqs. 15-18 soundness).
+        let data = synth::gaussian_blobs(400, 3, 6, 1.0, 22);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 6, 16, &mut dc);
+        let params = KMeansParams {
+            max_iter: 3,
+            ..params_small_leaf()
+        };
+
+        // Re-run the final pass manually to capture bounds pre-movement.
+        let tree = crate::tree::CoverTree::build(&data, params.cover);
+        let mut dist = DistCounter::new();
+        let mut centers = init_c.clone();
+        let n = data.rows();
+        let mut labels = vec![u32::MAX; n];
+        let mut upper = vec![0.0; n];
+        let mut lower = vec![0.0; n];
+        let mut second = vec![0u32; n];
+        let mut acc = CentroidAccum::new(6, 3);
+        for _ in 0..2 {
+            let ic = InterCenter::compute(&centers, &mut dist);
+            acc.clear();
+            assign_pass(
+                &data, &tree, &centers, &ic, &mut labels, &mut upper,
+                &mut lower, &mut second, &mut acc, &mut dist,
+            );
+            // Validate against the *current* centers (before movement).
+            for i in 0..n {
+                let a = labels[i] as usize;
+                let da = crate::data::matrix::dist(data.row(i), centers.row(a));
+                assert!(
+                    upper[i] >= da - 1e-9,
+                    "u[{i}]={} < d={da}",
+                    upper[i]
+                );
+                for j in 0..6 {
+                    if j != a {
+                        let dj =
+                            crate::data::matrix::dist(data.row(i), centers.row(j));
+                        assert!(
+                            lower[i] <= dj + 1e-9,
+                            "l[{i}]={} > d_{j}={dj}",
+                            lower[i]
+                        );
+                    }
+                }
+                // NOTE: second[i] may equal labels[i] when the candidate
+                // set collapsed to one center (Shallot's search handles
+                // that degenerate memory explicitly).
+            }
+            let mut movement = Vec::new();
+            acc.update_centers(&mut centers, &mut dist, &mut movement);
+        }
+    }
+
+    #[test]
+    fn near_duplicates_assign_cheaply() {
+        let data = synth::traffic(0.00005, 23);
+        let k = 10;
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, k, 17, &mut dc);
+        let params = params_small_leaf();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_c = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_c.labels, r_l.labels, "exactness on duplicate-heavy data");
+        assert!(
+            (r_c.distances as f64) < 0.5 * r_l.distances as f64,
+            "cover {} vs lloyd {}",
+            r_c.distances,
+            r_l.distances
+        );
+    }
+
+    #[test]
+    fn default_leaf_size_matches_too() {
+        let data = synth::mnist(10, 0.005, 24);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 15, 18, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::CoverMeans);
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_c = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_c.labels, r_l.labels);
+    }
+}

@@ -1,0 +1,197 @@
+//! Elkan's k-means [5] (paper §2.2): per-point upper bound `u` plus `k`
+//! per-center lower bounds `l[i][j]`, pruned with the inter-center
+//! distances. Fewest distance computations of the stored-bounds family,
+//! but O(n·k) bound memory and per-iteration update cost — the overhead
+//! the paper's Fig. 1b/Table 3 shows dominating on low-d data.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::KMeansParams;
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+
+    let mut centers = init.clone();
+    let mut labels = vec![0u32; n];
+    let mut upper = vec![0.0f64; n];
+    // Row-major n x k lower bounds.
+    let mut lower = vec![0.0f64; n * k];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // --- Iteration 1: full scan, seed all bounds (paper §2.2: the first
+    // iteration is as expensive as the Standard algorithm).
+    {
+        acc.clear();
+        for i in 0..n {
+            let p = data.row(i);
+            let lrow = &mut lower[i * k..(i + 1) * k];
+            let mut best = 0u32;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let dd = dist.d(p, centers.row(c));
+                lrow[c] = dd;
+                if dd < best_d {
+                    best_d = dd;
+                    best = c as u32;
+                }
+            }
+            labels[i] = best;
+            upper[i] = best_d;
+            acc.add_point(best as usize, p);
+        }
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        update_bounds(&mut upper, &mut lower, &labels, &movement, k);
+        iterations = 1;
+        log.push(1, dist.count(), sw.elapsed(), n);
+    }
+
+    for iter in 2..=params.max_iter {
+        iterations = iter;
+        let ic = InterCenter::compute(&centers, &mut dist);
+        acc.clear();
+        let mut changed = 0usize;
+
+        for i in 0..n {
+            let p = data.row(i);
+            let mut a = labels[i] as usize;
+            // Global filter: u <= s(a) means no other center can win.
+            if upper[i] > ic.s[a] {
+                let lrow = &mut lower[i * k..(i + 1) * k];
+                let mut tight = false;
+                for j in 0..k {
+                    if j == a {
+                        continue;
+                    }
+                    // Elkan's two per-center filters (Eqs. 4-5).
+                    if upper[i] <= lrow[j] || upper[i] <= 0.5 * ic.d(a, j) {
+                        continue;
+                    }
+                    if !tight {
+                        // Tighten the upper bound to the true distance.
+                        upper[i] = dist.d(p, centers.row(a));
+                        lrow[a] = upper[i];
+                        tight = true;
+                        if upper[i] <= lrow[j] || upper[i] <= 0.5 * ic.d(a, j) {
+                            continue;
+                        }
+                    }
+                    let dj = dist.d(p, centers.row(j));
+                    lrow[j] = dj;
+                    if dj < upper[i] {
+                        a = j;
+                        upper[i] = dj;
+                    }
+                }
+            }
+            if labels[i] != a as u32 {
+                labels[i] = a as u32;
+                changed += 1;
+            }
+            acc.add_point(a, p);
+        }
+
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        update_bounds(&mut upper, &mut lower, &labels, &movement, k);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time: std::time::Duration::ZERO,
+        log,
+        converged,
+    }
+}
+
+/// Bound maintenance after the means moved (paper §2.2): the upper bound
+/// grows by the assigned center's movement, every lower bound shrinks by
+/// that center's movement. This is the O(n·k) cost that makes Elkan slow
+/// per iteration even when it computes almost no distances.
+fn update_bounds(
+    upper: &mut [f64],
+    lower: &mut [f64],
+    labels: &[u32],
+    movement: &[f64],
+    k: usize,
+) {
+    for i in 0..upper.len() {
+        upper[i] += movement[labels[i] as usize];
+        let lrow = &mut lower[i * k..(i + 1) * k];
+        for (l, &mv) in lrow.iter_mut().zip(movement) {
+            *l -= mv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    /// Elkan must replicate Lloyd exactly (assignments and iterations).
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(400, 4, 6, 1.0, 7);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 6, 3, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Elkan);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_e = run(&data, &init_c, &params);
+        assert_eq!(r_e.labels, r_l.labels);
+        assert_eq!(r_e.iterations, r_l.iterations);
+        assert_eq!(r_e.converged, r_l.converged);
+        for (a, b) in r_e.centers.as_slice().iter().zip(r_l.centers.as_slice()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn saves_distances_vs_lloyd() {
+        let data = synth::mnist(10, 0.01, 1);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 20, 1, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Elkan);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_e = run(&data, &init_c, &params);
+        assert_eq!(r_e.labels, r_l.labels);
+        assert!(
+            r_e.distances < r_l.distances / 2,
+            "elkan {} vs lloyd {}",
+            r_e.distances,
+            r_l.distances
+        );
+    }
+
+    #[test]
+    fn first_iteration_costs_full_scan() {
+        let data = synth::gaussian_blobs(100, 3, 4, 0.5, 2);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 4, 1, &mut dc);
+        let params = KMeansParams {
+            max_iter: 1,
+            ..KMeansParams::with_algorithm(Algorithm::Elkan)
+        };
+        let r = run(&data, &init_c, &params);
+        assert!(r.distances >= 400, "first round must pay n*k");
+    }
+}

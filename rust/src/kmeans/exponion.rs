@@ -1,0 +1,183 @@
+//! Exponion (Newling & Fleuret [13], paper §2.2): Hamerly's bounds, but
+//! when they fail the rescan is restricted to the centers inside a ball
+//! around the assigned center instead of all k.
+//!
+//! After tightening `u = d(x, c_a)`, every center that could be nearer
+//! than `c_a` satisfies `d(c_a, c_j) <= 2u`; to also refresh the merged
+//! lower bound we search the slightly larger radius `R = 2u + delta_a`
+//! (`delta_a` = distance from `c_a` to its nearest other center), walking
+//! the centers in increasing distance from `c_a` via per-center sorted
+//! neighbor lists (built lazily once per iteration). Centers outside the
+//! ball are at distance > R - u from the point, which caps the new lower
+//! bound for them.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::hamerly::update_bounds;
+use crate::kmeans::KMeansParams;
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+
+    let mut centers = init.clone();
+    let mut labels = vec![0u32; n];
+    let mut upper = vec![0.0f64; n];
+    let mut lower = vec![0.0f64; n];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Iteration 1: full scan (identical to Hamerly).
+    {
+        acc.clear();
+        for i in 0..n {
+            let p = data.row(i);
+            let (c1, d1, _c2, d2) =
+                crate::kmeans::bounds::nearest_two(p, &centers, &mut dist);
+            labels[i] = c1;
+            upper[i] = d1;
+            lower[i] = d2;
+            acc.add_point(c1 as usize, p);
+        }
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        update_bounds(&mut upper, &mut lower, &labels, &movement);
+        iterations = 1;
+        log.push(1, dist.count(), sw.elapsed(), n);
+    }
+
+    // Lazily-built per-center sorted neighbor lists, valid one iteration.
+    let mut neighbors: Vec<Option<Vec<(f64, u32)>>> = vec![None; k];
+
+    for iter in 2..=params.max_iter {
+        iterations = iter;
+        let ic = InterCenter::compute(&centers, &mut dist);
+        for nb in neighbors.iter_mut() {
+            *nb = None;
+        }
+        acc.clear();
+        let mut changed = 0usize;
+
+        for i in 0..n {
+            let p = data.row(i);
+            let a = labels[i] as usize;
+            let m = ic.s[a].max(lower[i]);
+            if upper[i] > m {
+                upper[i] = dist.d(p, centers.row(a));
+                if upper[i] > m {
+                    // Annulus search around c_a.
+                    let u = upper[i];
+                    let delta = 2.0 * ic.s[a]; // d(c_a, nearest other)
+                    let radius = 2.0 * u + delta;
+                    let nb = neighbors[a]
+                        .get_or_insert_with(|| ic.sorted_neighbors(a));
+
+                    let mut c1 = a as u32;
+                    let mut d1 = u;
+                    let mut c2 = c1;
+                    let mut d2 = f64::INFINITY;
+                    for &(cc_dist, j) in nb.iter() {
+                        if cc_dist > radius {
+                            break;
+                        }
+                        let dj = dist.d(p, centers.row(j as usize));
+                        if dj < d1 || (dj == d1 && j < c1) {
+                            c2 = c1;
+                            d2 = d1;
+                            c1 = j;
+                            d1 = dj;
+                        } else if dj < d2 {
+                            c2 = j;
+                            d2 = dj;
+                        }
+                    }
+                    let _ = c2;
+                    // Excluded centers are farther than radius - u.
+                    let excluded_lb = radius - u;
+                    if c1 != labels[i] {
+                        labels[i] = c1;
+                        changed += 1;
+                    }
+                    upper[i] = d1;
+                    lower[i] = d2.min(excluded_lb);
+                }
+            }
+            acc.add_point(labels[i] as usize, p);
+        }
+
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        update_bounds(&mut upper, &mut lower, &labels, &movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time: std::time::Duration::ZERO,
+        log,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(400, 4, 8, 1.0, 10);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 8, 5, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Exponion);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_e = run(&data, &init_c, &params);
+        assert_eq!(r_e.labels, r_l.labels);
+        assert_eq!(r_e.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn beats_hamerly_on_distance_count() {
+        // Medium k, clustered data: the annulus should restrict rescans.
+        let data = synth::istanbul(0.003, 11);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 30, 6, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Exponion);
+        let r_h = crate::kmeans::hamerly::run(&data, &init_c, &params);
+        let r_e = run(&data, &init_c, &params);
+        assert_eq!(r_e.labels, r_h.labels);
+        assert!(
+            r_e.distances <= r_h.distances,
+            "exponion {} vs hamerly {}",
+            r_e.distances,
+            r_h.distances
+        );
+    }
+
+    #[test]
+    fn matches_lloyd_on_overlapping_data() {
+        let data = synth::kdd04(0.0015, 12);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 12, 7, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Exponion);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_e = run(&data, &init_c, &params);
+        assert_eq!(r_e.labels, r_l.labels);
+    }
+}

@@ -1,0 +1,166 @@
+//! Hamerly's k-means [7] (paper §2.2): one upper bound `u` and a *single*
+//! merged lower bound `l` per point. Less memory and cheaper bound updates
+//! than Elkan, at the price of looser bounds — one fast-moving center
+//! forces full rescans of many points (the effect visible in the paper's
+//! Fig. 1a, where Hamerly computes the most distances of the bounds family).
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{nearest_two, CentroidAccum, InterCenter};
+use crate::kmeans::KMeansParams;
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+
+    let mut centers = init.clone();
+    let mut labels = vec![0u32; n];
+    let mut upper = vec![0.0f64; n];
+    let mut lower = vec![0.0f64; n];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Iteration 1: full scan seeds u = d1, l = d2.
+    {
+        acc.clear();
+        for i in 0..n {
+            let p = data.row(i);
+            let (c1, d1, _c2, d2) = nearest_two(p, &centers, &mut dist);
+            labels[i] = c1;
+            upper[i] = d1;
+            lower[i] = d2;
+            acc.add_point(c1 as usize, p);
+        }
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        update_bounds(&mut upper, &mut lower, &labels, &movement);
+        iterations = 1;
+        log.push(1, dist.count(), sw.elapsed(), n);
+    }
+
+    for iter in 2..=params.max_iter {
+        iterations = iter;
+        let ic = InterCenter::compute(&centers, &mut dist);
+        acc.clear();
+        let mut changed = 0usize;
+
+        for i in 0..n {
+            let p = data.row(i);
+            let a = labels[i] as usize;
+            let m = ic.s[a].max(lower[i]);
+            if upper[i] > m {
+                // Tighten u to the true distance and re-test.
+                upper[i] = dist.d(p, centers.row(a));
+                if upper[i] > m {
+                    // Full rescan: recompute the two nearest centers.
+                    let (c1, d1, _c2, d2) = nearest_two(p, &centers, &mut dist);
+                    if c1 != labels[i] {
+                        labels[i] = c1;
+                        changed += 1;
+                    }
+                    upper[i] = d1;
+                    lower[i] = d2;
+                }
+            }
+            acc.add_point(labels[i] as usize, p);
+        }
+
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        update_bounds(&mut upper, &mut lower, &labels, &movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time: std::time::Duration::ZERO,
+        log,
+        converged,
+    }
+}
+
+/// u grows by the own-center movement; l shrinks by the largest movement
+/// of any *other* center (tracked via max and second-max so the own center
+/// can be excluded in O(1)).
+pub(crate) fn update_bounds(
+    upper: &mut [f64],
+    lower: &mut [f64],
+    labels: &[u32],
+    movement: &[f64],
+) {
+    let (mut max1, mut arg1, mut max2) = (0.0f64, usize::MAX, 0.0f64);
+    for (j, &mv) in movement.iter().enumerate() {
+        if mv > max1 {
+            max2 = max1;
+            max1 = mv;
+            arg1 = j;
+        } else if mv > max2 {
+            max2 = mv;
+        }
+    }
+    for i in 0..upper.len() {
+        let a = labels[i] as usize;
+        upper[i] += movement[a];
+        lower[i] -= if a == arg1 { max2 } else { max1 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(400, 4, 6, 1.0, 8);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 6, 4, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Hamerly);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_h = run(&data, &init_c, &params);
+        assert_eq!(r_h.labels, r_l.labels);
+        assert_eq!(r_h.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn saves_distances_on_easy_data() {
+        let data = synth::gaussian_blobs(500, 2, 5, 0.2, 9);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 5, 5, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Hamerly);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_h = run(&data, &init_c, &params);
+        assert_eq!(r_h.labels, r_l.labels);
+        assert!(r_h.distances < r_l.distances);
+    }
+
+    #[test]
+    fn bound_update_excludes_own_center() {
+        let mut upper = vec![1.0, 1.0];
+        let mut lower = vec![5.0, 5.0];
+        let labels = vec![0u32, 1u32];
+        let movement = vec![3.0, 1.0];
+        update_bounds(&mut upper, &mut lower, &labels, &movement);
+        // point 0: own center moved 3 -> u += 3; other max movement is 1.
+        assert_eq!(upper[0], 4.0);
+        assert_eq!(lower[0], 4.0);
+        // point 1: own center moved 1 -> u += 1; other max movement is 3.
+        assert_eq!(upper[1], 2.0);
+        assert_eq!(lower[1], 2.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Hybrid Cover-means -> Shallot (paper §3.4).
+//!
+//! The tree pass saves distance computations while the centers still move
+//! a lot (it can prune candidates in iteration 1 already); the
+//! stored-bounds pass wins once the centers stabilize. The hybrid runs
+//! Cover-means for `switch_at` iterations (paper default 7), then hands
+//! Shallot the upper/lower bounds and second-nearest identities that the
+//! tree traversal produced as a by-product (Eqs. 15-18) — *without* the
+//! full n x k scan every stored-bounds algorithm normally pays to
+//! initialize its bounds.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::shallot::{run_from_state, ShallotState};
+use crate::kmeans::{cover, hamerly, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+pub fn run(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+
+    let fresh = ws
+        .cover
+        .as_ref()
+        .map(|t| t.params != params.cover)
+        .unwrap_or(true);
+    let tree = ws.cover_tree(data, params.cover);
+    let (build_dist, build_time) = if fresh {
+        (tree.build_distances, tree.build_time)
+    } else {
+        (0, std::time::Duration::ZERO)
+    };
+
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+    let mut centers = init.clone();
+    let mut state = ShallotState {
+        labels: vec![u32::MAX; n],
+        second: vec![0u32; n],
+        upper: vec![0.0f64; n],
+        lower: vec![0.0f64; n],
+    };
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // --- Phase 1: Cover-means iterations.
+    let switch_at = params.switch_at.min(params.max_iter);
+    for iter in 1..=switch_at {
+        iterations = iter;
+        let ic = InterCenter::compute(&centers, &mut dist);
+        acc.clear();
+        let changed = cover::assign_pass(
+            data,
+            tree,
+            &centers,
+            &ic,
+            &mut state.labels,
+            &mut state.upper,
+            &mut state.lower,
+            &mut state.second,
+            &mut acc,
+            &mut dist,
+        );
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+        if iter == switch_at {
+            // Hand-off: the stored bounds are valid for the pre-movement
+            // centers; carry them across the movement exactly like the
+            // stored-bounds algorithms do (§2.2).
+            hamerly::update_bounds(
+                &mut state.upper,
+                &mut state.lower,
+                &state.labels,
+                &movement,
+            );
+        }
+    }
+
+    // --- Phase 2: Shallot from the tree-seeded state.
+    if !converged && iterations < params.max_iter {
+        let (iters, conv) = run_from_state(
+            data,
+            &mut centers,
+            &mut state,
+            params,
+            iterations + 1,
+            &mut dist,
+            &sw,
+            &mut log,
+        );
+        iterations = iters;
+        converged = conv;
+    }
+
+    RunResult {
+        labels: state.labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist,
+        time: sw.elapsed(),
+        build_time,
+        log,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+    use crate::tree::CoverTreeParams;
+
+    fn hybrid_params() -> KMeansParams {
+        KMeansParams {
+            cover: CoverTreeParams { scale_factor: 1.2, min_node_size: 10 },
+            ..KMeansParams::with_algorithm(Algorithm::Hybrid)
+        }
+    }
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(500, 3, 6, 1.0, 25);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 6, 19, &mut dc);
+        let params = hybrid_params();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_h = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_h.labels, r_l.labels);
+        assert_eq!(r_h.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn matches_lloyd_geo_many_clusters() {
+        let data = synth::istanbul(0.002, 26);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 30, 20, &mut dc);
+        let params = hybrid_params();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_h = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_h.labels, r_l.labels);
+        assert_eq!(r_h.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn converges_during_tree_phase_on_easy_data() {
+        // Well-separated blobs converge in < 7 iterations; the hybrid must
+        // terminate inside the cover phase.
+        let data = synth::gaussian_blobs(300, 2, 3, 0.05, 27);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 3, 21, &mut dc);
+        let params = hybrid_params();
+        let mut ws = Workspace::new();
+        let r = run(&data, &init_c, &params, &mut ws);
+        assert!(r.converged);
+        assert!(r.iterations <= 7, "iterations {}", r.iterations);
+    }
+
+    #[test]
+    fn switch_at_respected_and_uses_fewer_distances_late() {
+        let data = synth::istanbul(0.003, 28);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 40, 22, &mut dc);
+        let params = KMeansParams { switch_at: 3, ..hybrid_params() };
+        let mut ws = Workspace::new();
+        let r_h = run(&data, &init_c, &params, &mut ws);
+        let r_c = crate::kmeans::cover::run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_h.labels, r_c.labels);
+        if r_h.iterations > 8 {
+            // Late iterations: the hybrid (Shallot phase) must be cheaper
+            // per iteration than the pure tree method.
+            let late_h = r_h.log.stats.last().unwrap().dist_cum
+                - r_h.log.stats[r_h.log.len() - 2].dist_cum;
+            let late_c = r_c.log.stats.last().unwrap().dist_cum
+                - r_c.log.stats[r_c.log.len() - 2].dist_cum;
+            assert!(late_h <= late_c, "late hybrid {late_h} vs cover {late_c}");
+        }
+    }
+
+    #[test]
+    fn switch_at_zero_is_pure_shallot_with_scan_init() {
+        // Degenerate configuration: switch_at = 0 skips the tree phase;
+        // the Shallot phase then starts from iteration 1 with unseeded
+        // bounds. Guard: we document switch_at >= 1; value 0 must still
+        // terminate and be exact (first Shallot iteration sees u=0, l=0,
+        // forcing full searches).
+        let data = synth::gaussian_blobs(200, 2, 4, 0.5, 29);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 4, 23, &mut dc);
+        let params = KMeansParams { switch_at: 1, ..hybrid_params() };
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_h = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_h.labels, r_l.labels);
+    }
+}

@@ -1,0 +1,132 @@
+//! Initialization: k-means++ [1] and uniform sampling.
+//!
+//! The paper evaluates every algorithm on *the same* 10 k-means++ seeds per
+//! dataset, so initialization lives outside the per-algorithm counters: the
+//! coordinator generates the centers once per `(dataset, k, restart)` and
+//! hands identical copies to each algorithm. The `DistCounter` passed here
+//! is therefore a separate "init" counter, not an algorithm counter.
+
+use crate::data::Matrix;
+use crate::metrics::DistCounter;
+use crate::rng::Rng;
+
+/// k-means++ seeding (Arthur & Vassilvitskii): first center uniform, each
+/// subsequent center sampled proportionally to the squared distance to the
+/// nearest already-chosen center.
+pub fn kmeans_plus_plus(
+    data: &Matrix,
+    k: usize,
+    seed: u64,
+    dist: &mut DistCounter,
+) -> Matrix {
+    assert!(k >= 1 && k <= data.rows(), "k={k} out of range");
+    let n = data.rows();
+    let mut rng = Rng::derive(seed, "init/kmeans++");
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+
+    let first = rng.below(n);
+    chosen.push(first);
+
+    // Squared distance to the nearest chosen center, updated incrementally.
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| dist.sq(data.row(i), data.row(first)))
+        .collect();
+
+    while chosen.len() < k {
+        let next = match rng.choose_weighted(&d2) {
+            Some(i) => i,
+            // All remaining mass zero (fewer distinct points than k):
+            // fall back to an unchosen index to keep k centers.
+            None => (0..n).find(|i| !chosen.contains(i)).unwrap_or(0),
+        };
+        chosen.push(next);
+        for i in 0..n {
+            if d2[i] > 0.0 {
+                let nd = dist.sq(data.row(i), data.row(next));
+                if nd < d2[i] {
+                    d2[i] = nd;
+                }
+            }
+        }
+    }
+    data.select_rows(&chosen)
+}
+
+/// Uniform random distinct-index sampling (baseline init for tests).
+pub fn random_init(data: &Matrix, k: usize, seed: u64) -> Matrix {
+    assert!(k >= 1 && k <= data.rows());
+    let mut rng = Rng::derive(seed, "init/random");
+    let mut idx: Vec<usize> = (0..data.rows()).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(k);
+    data.select_rows(&idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn kpp_returns_k_distinct_centers_from_data() {
+        let data = synth::gaussian_blobs(200, 3, 4, 0.3, 1);
+        let mut dist = DistCounter::new();
+        let c = kmeans_plus_plus(&data, 4, 7, &mut dist);
+        assert_eq!((c.rows(), c.cols()), (4, 3));
+        // every center is an actual data row
+        for i in 0..4 {
+            assert!((0..data.rows()).any(|r| data.row(r) == c.row(i)));
+        }
+        // distinct rows (blob data has no duplicates)
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert_ne!(c.row(i), c.row(j));
+            }
+        }
+        assert!(dist.count() >= 200 * 3);
+    }
+
+    #[test]
+    fn kpp_deterministic_in_seed() {
+        let data = synth::gaussian_blobs(100, 2, 3, 0.5, 2);
+        let mut d1 = DistCounter::new();
+        let mut d2 = DistCounter::new();
+        let a = kmeans_plus_plus(&data, 5, 42, &mut d1);
+        let b = kmeans_plus_plus(&data, 5, 42, &mut d2);
+        assert_eq!(a, b);
+        let c = kmeans_plus_plus(&data, 5, 43, &mut d2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn kpp_spreads_over_blobs() {
+        // With well-separated blobs, k-means++ should hit all of them
+        // almost surely.
+        let data = synth::gaussian_blobs(300, 2, 3, 0.05, 3);
+        let mut dist = DistCounter::new();
+        let c = kmeans_plus_plus(&data, 3, 1, &mut dist);
+        // pairwise center distances must be blob-scale, not noise-scale
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                assert!(crate::data::matrix::dist(c.row(i), c.row(j)) > 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn kpp_handles_duplicates_fewer_distinct_than_k() {
+        let rows: Vec<Vec<f64>> = vec![vec![1.0, 1.0]; 10];
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let data = Matrix::from_rows(&refs);
+        let mut dist = DistCounter::new();
+        let c = kmeans_plus_plus(&data, 3, 1, &mut dist);
+        assert_eq!(c.rows(), 3); // padded from duplicate points
+    }
+
+    #[test]
+    fn random_init_distinct_indices() {
+        let data = synth::gaussian_blobs(50, 2, 2, 0.5, 4);
+        let c = random_init(&data, 10, 9);
+        assert_eq!(c.rows(), 10);
+    }
+}

@@ -1,0 +1,252 @@
+//! Kanungo et al.'s filtering algorithm [8] — the k-d-tree baseline the
+//! paper compares its cover tree approach against.
+//!
+//! Each iteration traverses the k-d tree top-down with a candidate center
+//! set `Z`. At a node, the candidate closest to the cell midpoint (`z*`)
+//! is found, then every other candidate `z` is pruned if the bisecting
+//! hyperplane test shows the whole bounding box is closer to `z*`
+//! (geometric pruning with the box corner extremal in direction `z - z*`;
+//! see [`crate::tree::kdtree::is_farther`]). When one candidate remains,
+//! the whole subtree is assigned at once using the node aggregates. The
+//! dominance test costs two d-dimensional distance evaluations, which we
+//! count — this is why Kanungo can exceed the Standard algorithm's count
+//! on overlap-heavy data (the paper's KDD04 column: 1.450).
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::CentroidAccum;
+use crate::kmeans::{KMeansParams, Workspace};
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::tree::kdtree::{is_farther, KdNode};
+
+pub fn run(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> RunResult {
+    let d = data.cols();
+    let k = init.rows();
+
+    // Build (or reuse) the index; fresh builds are charged to the result.
+    let fresh = ws
+        .kd
+        .as_ref()
+        .map(|t| t.params != params.kd)
+        .unwrap_or(true);
+    let tree = ws.kd_tree(data, params.kd);
+    let (build_dist, build_time) = if fresh {
+        (0, tree.build_time) // k-d construction computes no distances
+    } else {
+        (0, std::time::Duration::ZERO)
+    };
+
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+    let mut centers = init.clone();
+    let mut labels = vec![u32::MAX; data.rows()];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    let mut scratch_mid = vec![0.0; d];
+
+    for iter in 1..=params.max_iter {
+        iterations = iter;
+        acc.clear();
+        let mut changed = 0usize;
+        let all: Vec<u32> = (0..k as u32).collect();
+        filter(
+            data,
+            &tree.root,
+            &centers,
+            &all,
+            &mut labels,
+            &mut acc,
+            &mut dist,
+            &mut changed,
+            &mut scratch_mid,
+        );
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist,
+        time: sw.elapsed(),
+        build_time,
+        log,
+        converged,
+    }
+}
+
+/// Recursive filtering step.
+#[allow(clippy::too_many_arguments)]
+fn filter(
+    data: &Matrix,
+    node: &KdNode,
+    centers: &Matrix,
+    candidates: &[u32],
+    labels: &mut [u32],
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+    changed: &mut usize,
+    scratch_mid: &mut [f64],
+) {
+    if node.is_leaf() {
+        // Scan the remaining candidates per point.
+        for &pi in &node.points {
+            let p = data.row(pi as usize);
+            let mut best = candidates[0];
+            let mut best_d = f64::INFINITY;
+            for &z in candidates {
+                let dd = dist.d(p, centers.row(z as usize));
+                if dd < best_d || (dd == best_d && z < best) {
+                    best_d = dd;
+                    best = z;
+                }
+            }
+            if labels[pi as usize] != best {
+                labels[pi as usize] = best;
+                *changed += 1;
+            }
+            acc.add_point(best as usize, p);
+        }
+        return;
+    }
+
+    // z* = candidate closest to the cell midpoint (ties: lowest index,
+    // which the scan order provides).
+    for (j, m) in scratch_mid.iter_mut().enumerate() {
+        *m = 0.5 * (node.bbox_min[j] + node.bbox_max[j]);
+    }
+    let mut z_star = candidates[0];
+    let mut z_star_d = f64::INFINITY;
+    for &z in candidates {
+        let dd = dist.d(scratch_mid, centers.row(z as usize));
+        if dd < z_star_d {
+            z_star_d = dd;
+            z_star = z;
+        }
+    }
+
+    // Prune candidates dominated by z* over the whole box. The corner
+    // test evaluates two d-dim squared distances; count both.
+    let mut remaining: Vec<u32> = Vec::with_capacity(candidates.len());
+    for &z in candidates {
+        if z == z_star {
+            remaining.push(z);
+            continue;
+        }
+        dist.add_bulk(2);
+        if !is_farther(
+            centers.row(z as usize),
+            centers.row(z_star as usize),
+            &node.bbox_min,
+            &node.bbox_max,
+        ) {
+            remaining.push(z);
+        }
+    }
+
+    if remaining.len() == 1 {
+        // Assign the whole subtree to z* using the aggregates.
+        let z = remaining[0] as usize;
+        acc.add_aggregate(z, &node.sum, node.weight as f64);
+        node.for_each_point(&mut |pi| {
+            if labels[pi as usize] != z as u32 {
+                labels[pi as usize] = z as u32;
+                *changed += 1;
+            }
+        });
+        return;
+    }
+
+    filter(
+        data,
+        node.left.as_ref().unwrap(),
+        centers,
+        &remaining,
+        labels,
+        acc,
+        dist,
+        changed,
+        scratch_mid,
+    );
+    filter(
+        data,
+        node.right.as_ref().unwrap(),
+        centers,
+        &remaining,
+        labels,
+        acc,
+        dist,
+        changed,
+        scratch_mid,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(500, 3, 5, 1.0, 16);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 5, 10, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Kanungo);
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_k = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_k.labels, r_l.labels);
+        assert_eq!(r_k.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn saves_distances_on_low_dim_clustered_data() {
+        let data = synth::istanbul(0.002, 17);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 20, 11, &mut dc);
+        let params = KMeansParams {
+            kd: crate::tree::KdTreeParams { leaf_size: 20, max_depth: 64 },
+            ..KMeansParams::with_algorithm(Algorithm::Kanungo)
+        };
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_k = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_k.labels, r_l.labels);
+        assert!(
+            r_k.distances < r_l.distances / 2,
+            "kanungo {} vs lloyd {}",
+            r_k.distances,
+            r_l.distances
+        );
+    }
+
+    #[test]
+    fn workspace_reuse_skips_build_time() {
+        let data = synth::gaussian_blobs(300, 3, 4, 0.5, 18);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 4, 12, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Kanungo);
+        let mut ws = Workspace::new();
+        let r1 = run(&data, &init_c, &params, &mut ws);
+        let r2 = run(&data, &init_c, &params, &mut ws);
+        assert!(r1.build_time >= r2.build_time);
+        assert_eq!(r2.build_time, std::time::Duration::ZERO);
+        assert_eq!(r1.labels, r2.labels);
+    }
+}

@@ -1,0 +1,159 @@
+//! The Standard k-means algorithm (Lloyd [11] / Steinhaus [23], paper §2.1)
+//! — the baseline every metric in the evaluation is normalized against.
+//!
+//! Per iteration it computes all `n * k` point-center distances (Eq. 1),
+//! then the means (Eq. 2), and stops at the assignment fixpoint. The XLA
+//! backend variant, which runs the same assign step through the AOT-
+//! compiled Pallas kernel, lives in [`crate::runtime::lloyd_xla`].
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::CentroidAccum;
+use crate::kmeans::KMeansParams;
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+
+    let mut centers = init.clone();
+    let mut labels = vec![u32::MAX; n];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for iter in 1..=params.max_iter {
+        iterations = iter;
+        acc.clear();
+        let mut changed = 0usize;
+
+        for i in 0..n {
+            let p = data.row(i);
+            // Nearest center, ties to the lowest index (strict <).
+            let mut best = 0u32;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let dd = dist.d(p, centers.row(c));
+                if dd < best_d {
+                    best_d = dd;
+                    best = c as u32;
+                }
+            }
+            if labels[i] != best {
+                labels[i] = best;
+                changed += 1;
+            }
+            acc.add_point(best as usize, p);
+        }
+
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time: std::time::Duration::ZERO,
+        log,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn separates_clean_blobs() {
+        let data = synth::gaussian_blobs(300, 2, 3, 0.05, 1);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 3, 1, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Standard);
+        let r = run(&data, &init_c, &params);
+        assert!(r.converged);
+        // blobs are generated round-robin: points i, i+3, i+6 share a blob
+        for i in 0..3 {
+            for j in (i..300).step_by(3).take(20) {
+                assert_eq!(r.labels[j], r.labels[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn counts_nk_distances_per_iteration() {
+        let data = synth::gaussian_blobs(100, 2, 2, 0.3, 2);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 2, 1, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Standard);
+        let r = run(&data, &init_c, &params);
+        // n*k assignment distances + <= k movement distances per iteration
+        let per_iter_min = (100 * 2) as u64;
+        let per_iter_max = (100 * 2 + 2) as u64;
+        let iters = r.iterations as u64;
+        assert!(r.distances >= per_iter_min * iters);
+        assert!(r.distances <= per_iter_max * iters);
+    }
+
+    #[test]
+    fn fixpoint_means_stable_sse() {
+        let data = synth::gaussian_blobs(200, 3, 4, 0.5, 3);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 4, 2, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Standard);
+        let r = run(&data, &init_c, &params);
+        assert!(r.converged);
+        // Re-running from the final centers must not change anything
+        // (iteration 1 populates labels, iteration 2 confirms fixpoint).
+        let r2 = run(&data, &r.centers, &params);
+        assert_eq!(r2.iterations, 2);
+        assert_eq!(r2.labels, r.labels);
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let data = synth::gaussian_blobs(50, 2, 2, 0.5, 4);
+        let init_c = data.select_rows(&[0]);
+        let params = KMeansParams::with_algorithm(Algorithm::Standard);
+        let r = run(&data, &init_c, &params);
+        assert!(r.converged);
+        assert!(r.labels.iter().all(|&l| l == 0));
+        // center is the global mean
+        let mut mean = vec![0.0; 2];
+        for row in data.iter_rows() {
+            mean[0] += row[0];
+            mean[1] += row[1];
+        }
+        mean[0] /= 50.0;
+        mean[1] /= 50.0;
+        assert!((r.centers.get(0, 0) - mean[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_max_iter() {
+        let data = synth::kdd04(0.0008, 5);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 10, 1, &mut dc);
+        let params = KMeansParams {
+            max_iter: 2,
+            ..KMeansParams::with_algorithm(Algorithm::Standard)
+        };
+        let r = run(&data, &init_c, &params);
+        assert_eq!(r.iterations, 2);
+        assert_eq!(r.log.len(), 2);
+    }
+}

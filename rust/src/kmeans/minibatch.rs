@@ -1,0 +1,169 @@
+//! Mini-batch k-means (Sculley [22]) — the *approximate* aggregation
+//! family the paper positions itself against in §1: instead of exact
+//! assignment over all points, each step samples a batch, assigns it, and
+//! moves centers with a per-center learning rate `1 / count`. Included so
+//! the evaluation can quantify the exactness/SSE trade-off the "exact"
+//! algorithms avoid (the paper: "the expected values of the results are
+//! very similar ... because the means used in k-means are statistical
+//! summaries, too").
+//!
+//! Not exact: the convergence criterion is center movement below `tol`
+//! rather than an assignment fixpoint.
+
+use crate::data::Matrix;
+use crate::kmeans::KMeansParams;
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::rng::Rng;
+
+/// Mini-batch specific knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MiniBatchParams {
+    pub batch: usize,
+    /// Stop when the max center movement in a step falls below this.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for MiniBatchParams {
+    fn default() -> Self {
+        MiniBatchParams { batch: 1024, tol: 1e-4, seed: 0xB47C4 }
+    }
+}
+
+pub fn run(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    mb: &MiniBatchParams,
+) -> RunResult {
+    let n = data.rows();
+    let k = init.rows();
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+    let mut rng = Rng::derive(mb.seed, "minibatch");
+
+    let mut centers = init.clone();
+    let mut counts = vec![0.0f64; k];
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+    let batch = mb.batch.min(n);
+
+    for iter in 1..=params.max_iter {
+        iterations = iter;
+        let mut max_move_sq = 0.0f64;
+        for _ in 0..batch {
+            let i = rng.below(n);
+            let p = data.row(i);
+            // Nearest center (k counted distances).
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let dd = dist.d(p, centers.row(c));
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            // Online update with decaying rate (Sculley's update).
+            counts[best] += 1.0;
+            let eta = 1.0 / counts[best];
+            let row = centers.row_mut(best);
+            let mut move_sq = 0.0;
+            for (cj, &pj) in row.iter_mut().zip(p) {
+                let delta = eta * (pj - *cj);
+                *cj += delta;
+                move_sq += delta * delta;
+            }
+            max_move_sq = max_move_sq.max(move_sq);
+        }
+        log.push(iter, dist.count(), sw.elapsed(), batch);
+        if max_move_sq.sqrt() < mb.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // Final full assignment for reporting (counted: it is real work a user
+    // needs to obtain labels).
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let p = data.row(i);
+        let mut best = 0u32;
+        let mut best_d = f64::INFINITY;
+        for c in 0..k {
+            let dd = dist.d(p, centers.row(c));
+            if dd < best_d {
+                best_d = dd;
+                best = c as u32;
+            }
+        }
+        labels[i] = best;
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time: std::time::Duration::ZERO,
+        log,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn sse_close_to_lloyd_on_blobs() {
+        let data = synth::gaussian_blobs(2000, 4, 5, 0.3, 37);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 5, 30, &mut dc);
+        let params = KMeansParams { max_iter: 100, ..KMeansParams::default() };
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_m = run(&data, &init_c, &params, &MiniBatchParams::default());
+        let sse_l = r_l.sse(&data);
+        let sse_m = r_m.sse(&data);
+        assert!(
+            sse_m <= 1.25 * sse_l,
+            "minibatch sse {sse_m} vs lloyd {sse_l}"
+        );
+    }
+
+    #[test]
+    fn cheaper_than_lloyd_on_large_n() {
+        let data = synth::istanbul(0.02, 38);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 50, 31, &mut dc);
+        // Lloyd runs to convergence; mini-batch is capped at a fixed
+        // budget of batches (its normal usage mode).
+        let params_l = KMeansParams { max_iter: 200, ..KMeansParams::default() };
+        let params_m = KMeansParams { max_iter: 30, ..KMeansParams::default() };
+        let r_l = lloyd::run(&data, &init_c, &params_l);
+        let r_m = run(&data, &init_c, &params_m, &MiniBatchParams::default());
+        assert!(
+            r_m.distances < r_l.distances,
+            "minibatch {} vs lloyd {}",
+            r_m.distances,
+            r_l.distances
+        );
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let data = synth::gaussian_blobs(300, 2, 3, 0.5, 39);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 3, 32, &mut dc);
+        let params = KMeansParams::default();
+        let a = run(&data, &init_c, &params, &MiniBatchParams::default());
+        let b = run(&data, &init_c, &params, &MiniBatchParams::default());
+        assert_eq!(a.labels, b.labels);
+    }
+}

@@ -1,0 +1,285 @@
+//! The k-means algorithm family of the paper's evaluation (§4).
+//!
+//! All algorithms are **exact**: given the same initial centers they
+//! replicate the Standard algorithm's assignment sequence (ties broken by
+//! the lowest center index), differing only in how many distance
+//! computations they spend. That invariant is enforced by the property
+//! tests in `rust/tests/exactness.rs`.
+//!
+//! | variant      | module      | paper ref |
+//! |--------------|-------------|-----------|
+//! | Standard     | `lloyd`     | Lloyd [11] / Steinhaus [23] |
+//! | Elkan        | `elkan`     | [5] |
+//! | Hamerly      | `hamerly`   | [7] |
+//! | Exponion     | `exponion`  | Newling & Fleuret [13] |
+//! | Shallot      | `shallot`   | Borgelt [3] |
+//! | Kanungo      | `kanungo`   | k-d-tree filtering [8] |
+//! | Cover-means  | `cover`     | **this paper §3.1-3.3** |
+//! | Hybrid       | `hybrid`    | **this paper §3.4** |
+
+pub mod bounds;
+pub mod cover;
+pub mod elkan;
+pub mod exponion;
+pub mod hamerly;
+pub mod hybrid;
+pub mod init;
+pub mod kanungo;
+pub mod lloyd;
+pub mod minibatch;
+pub mod pelleg;
+pub mod phillips;
+pub mod shallot;
+
+use std::time::Duration;
+
+use crate::data::Matrix;
+use crate::metrics::RunResult;
+use crate::tree::{CoverTree, CoverTreeParams, KdTree, KdTreeParams};
+
+/// Which algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Standard,
+    Elkan,
+    Hamerly,
+    Exponion,
+    Shallot,
+    Kanungo,
+    CoverMeans,
+    Hybrid,
+    /// Phillips' compare-means [15] (related work; exact).
+    Phillips,
+    /// Pelleg & Moore's box-blacklisting k-d tree k-means [14] (exact).
+    PellegMoore,
+    /// Sculley's mini-batch k-means [22] (approximate; §1 contrast).
+    MiniBatch,
+}
+
+impl Algorithm {
+    /// The paper's evaluated algorithms, in the row order of Tables 2-4.
+    pub const ALL: [Algorithm; 8] = [
+        Algorithm::Standard,
+        Algorithm::Kanungo,
+        Algorithm::Elkan,
+        Algorithm::Hamerly,
+        Algorithm::Exponion,
+        Algorithm::Shallot,
+        Algorithm::CoverMeans,
+        Algorithm::Hybrid,
+    ];
+
+    /// Extended family: the paper's table plus the related-work methods
+    /// it discusses (§1-2) that this repo also implements.
+    pub const EXTENDED: [Algorithm; 11] = [
+        Algorithm::Standard,
+        Algorithm::Kanungo,
+        Algorithm::PellegMoore,
+        Algorithm::Phillips,
+        Algorithm::Elkan,
+        Algorithm::Hamerly,
+        Algorithm::Exponion,
+        Algorithm::Shallot,
+        Algorithm::CoverMeans,
+        Algorithm::Hybrid,
+        Algorithm::MiniBatch,
+    ];
+
+    /// Is the variant exact (replicates the Standard algorithm)?
+    pub fn is_exact(&self) -> bool {
+        !matches!(self, Algorithm::MiniBatch)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Standard => "Standard",
+            Algorithm::Elkan => "Elkan",
+            Algorithm::Hamerly => "Hamerly",
+            Algorithm::Exponion => "Exponion",
+            Algorithm::Shallot => "Shallot",
+            Algorithm::Kanungo => "Kanungo",
+            Algorithm::CoverMeans => "Cover-means",
+            Algorithm::Hybrid => "Hybrid",
+            Algorithm::Phillips => "Phillips",
+            Algorithm::PellegMoore => "Pelleg-Moore",
+            Algorithm::MiniBatch => "MiniBatch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "standard" | "lloyd" => Some(Algorithm::Standard),
+            "elkan" => Some(Algorithm::Elkan),
+            "hamerly" => Some(Algorithm::Hamerly),
+            "exponion" => Some(Algorithm::Exponion),
+            "shallot" => Some(Algorithm::Shallot),
+            "kanungo" | "kdtree" => Some(Algorithm::Kanungo),
+            "cover" | "covermeans" | "cover-means" => Some(Algorithm::CoverMeans),
+            "hybrid" => Some(Algorithm::Hybrid),
+            "phillips" | "compare-means" => Some(Algorithm::Phillips),
+            "pelleg" | "pelleg-moore" | "pellegmoore" => Some(Algorithm::PellegMoore),
+            "minibatch" | "mini-batch" => Some(Algorithm::MiniBatch),
+            _ => None,
+        }
+    }
+
+    /// Does this algorithm use a spatial index?
+    pub fn uses_tree(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::Kanungo
+                | Algorithm::CoverMeans
+                | Algorithm::Hybrid
+                | Algorithm::PellegMoore
+        )
+    }
+}
+
+/// Parameters shared by every run (paper §4 "Parameterization" defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct KMeansParams {
+    pub algorithm: Algorithm,
+    /// Iteration cap (the paper runs to convergence; the cap is a guard).
+    pub max_iter: usize,
+    /// Cover tree construction parameters (scale 1.2, min node 100).
+    pub cover: CoverTreeParams,
+    /// k-d tree construction parameters for Kanungo.
+    pub kd: KdTreeParams,
+    /// Hybrid: switch from Cover-means to Shallot after this many
+    /// iterations (paper default: 7).
+    pub switch_at: usize,
+}
+
+impl Default for KMeansParams {
+    fn default() -> Self {
+        KMeansParams {
+            algorithm: Algorithm::Standard,
+            max_iter: 200,
+            cover: CoverTreeParams::default(),
+            kd: KdTreeParams::default(),
+            switch_at: 7,
+        }
+    }
+}
+
+impl KMeansParams {
+    pub fn with_algorithm(algorithm: Algorithm) -> Self {
+        KMeansParams { algorithm, ..Default::default() }
+    }
+}
+
+/// Reusable per-dataset state: the spatial indexes. The parameter-sweep
+/// protocol of Table 4 amortizes tree construction across 10 restarts x 16
+/// values of k by reusing one `Workspace`; Tables 3 and E6 build fresh
+/// trees per run (construction cost included in the reported time).
+#[derive(Default)]
+pub struct Workspace {
+    pub cover: Option<CoverTree>,
+    pub kd: Option<KdTree>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Get or build the cover tree (build cost charged only on the miss).
+    pub fn cover_tree(&mut self, data: &Matrix, params: CoverTreeParams) -> &CoverTree {
+        if self.cover.as_ref().map(|t| t.params != params).unwrap_or(true) {
+            self.cover = Some(CoverTree::build(data, params));
+        }
+        self.cover.as_ref().unwrap()
+    }
+
+    /// Get or build the k-d tree.
+    pub fn kd_tree(&mut self, data: &Matrix, params: KdTreeParams) -> &KdTree {
+        if self.kd.as_ref().map(|t| t.params != params).unwrap_or(true) {
+            self.kd = Some(KdTree::build(data, params));
+        }
+        self.kd.as_ref().unwrap()
+    }
+}
+
+/// Run the configured algorithm from the given initial centers.
+///
+/// `init` must be a `k x d` matrix (use [`init::kmeans_plus_plus`]). Tree
+/// construction, when required and not cached in `ws`, is charged to the
+/// result's `build_time`/`build_dist`.
+pub fn run(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> RunResult {
+    assert!(init.rows() > 0, "need at least one initial center");
+    assert_eq!(init.cols(), data.cols(), "center/data dimension mismatch");
+    assert!(
+        init.rows() <= data.rows(),
+        "more centers than points"
+    );
+    match params.algorithm {
+        Algorithm::Standard => lloyd::run(data, init, params),
+        Algorithm::Elkan => elkan::run(data, init, params),
+        Algorithm::Hamerly => hamerly::run(data, init, params),
+        Algorithm::Exponion => exponion::run(data, init, params),
+        Algorithm::Shallot => shallot::run(data, init, params),
+        Algorithm::Kanungo => kanungo::run(data, init, params, ws),
+        Algorithm::CoverMeans => cover::run(data, init, params, ws),
+        Algorithm::Hybrid => hybrid::run(data, init, params, ws),
+        Algorithm::Phillips => phillips::run(data, init, params),
+        Algorithm::PellegMoore => pelleg::run(data, init, params, ws),
+        Algorithm::MiniBatch => {
+            minibatch::run(data, init, params, &minibatch::MiniBatchParams::default())
+        }
+    }
+}
+
+/// Convenience wrapper: k-means++ init + run, fresh workspace.
+pub fn cluster(
+    data: &Matrix,
+    k: usize,
+    seed: u64,
+    params: &KMeansParams,
+) -> RunResult {
+    let mut counter = crate::metrics::DistCounter::new();
+    let init = init::kmeans_plus_plus(data, k, seed, &mut counter);
+    let mut ws = Workspace::new();
+    run(data, &init, params, &mut ws)
+}
+
+/// Outcome fields shared by the per-algorithm run loops.
+pub(crate) struct LoopState {
+    pub labels: Vec<u32>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub log: crate::metrics::IterationLog,
+    pub time: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("lloyd"), Some(Algorithm::Standard));
+        assert!(Algorithm::parse("foo").is_none());
+    }
+
+    #[test]
+    fn workspace_caches_trees() {
+        let data = crate::data::synth::gaussian_blobs(200, 3, 3, 0.5, 1);
+        let mut ws = Workspace::new();
+        let p = CoverTreeParams::default();
+        let t1 = ws.cover_tree(&data, p) as *const _;
+        let t2 = ws.cover_tree(&data, p) as *const _;
+        assert_eq!(t1, t2, "second call must reuse the cached tree");
+        // Different params force a rebuild.
+        let p2 = CoverTreeParams { scale_factor: 1.5, ..p };
+        ws.cover_tree(&data, p2);
+        assert_eq!(ws.cover.as_ref().unwrap().params, p2);
+    }
+}

@@ -1,0 +1,229 @@
+//! Pelleg & Moore's "blacklisting" k-means [14] — the first k-d-tree
+//! acceleration (paper §1): candidates are pruned per node using the
+//! *minimum/maximum distances to the node's bounding box* rather than the
+//! hyperplane dominance test Kanungo et al. later introduced.
+//!
+//! Pruning rule (sound, box-based): let `h* = min_z max_dist(z, box)` over
+//! the candidate set. Any candidate `z` with `min_dist(z, box) > h*`
+//! cannot be nearest for any point of the box and is blacklisted for the
+//! subtree. A single survivor owns the node and is assigned via the
+//! aggregates. Each candidate's min/max box distance costs one
+//! d-dimensional pass, counted as one distance computation each.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::CentroidAccum;
+use crate::kmeans::{KMeansParams, Workspace};
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::tree::kdtree::KdNode;
+
+/// Squared min and max distance from `z` to the box `[lo, hi]`.
+fn box_dist_sq(z: &[f64], lo: &[f64], hi: &[f64]) -> (f64, f64) {
+    let mut dmin = 0.0;
+    let mut dmax = 0.0;
+    for j in 0..z.len() {
+        let below = lo[j] - z[j];
+        let above = z[j] - hi[j];
+        let out = below.max(above).max(0.0);
+        dmin += out * out;
+        // farthest corner coordinate-wise
+        let far = (z[j] - lo[j]).abs().max((hi[j] - z[j]).abs());
+        dmax += far * far;
+    }
+    (dmin, dmax)
+}
+
+pub fn run(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> RunResult {
+    let d = data.cols();
+    let k = init.rows();
+
+    let fresh = ws.kd.as_ref().map(|t| t.params != params.kd).unwrap_or(true);
+    let tree = ws.kd_tree(data, params.kd);
+    let build_time = if fresh { tree.build_time } else { std::time::Duration::ZERO };
+
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+    let mut centers = init.clone();
+    let mut labels = vec![u32::MAX; data.rows()];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for iter in 1..=params.max_iter {
+        iterations = iter;
+        acc.clear();
+        let mut changed = 0usize;
+        let all: Vec<u32> = (0..k as u32).collect();
+        descend(
+            data, &tree.root, &centers, &all, &mut labels, &mut acc, &mut dist,
+            &mut changed,
+        );
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time,
+        log,
+        converged,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn descend(
+    data: &Matrix,
+    node: &KdNode,
+    centers: &Matrix,
+    candidates: &[u32],
+    labels: &mut [u32],
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+    changed: &mut usize,
+) {
+    if node.is_leaf() {
+        for &pi in &node.points {
+            let p = data.row(pi as usize);
+            let mut best = candidates[0];
+            let mut best_d = f64::INFINITY;
+            for &z in candidates {
+                let dd = dist.d(p, centers.row(z as usize));
+                if dd < best_d || (dd == best_d && z < best) {
+                    best_d = dd;
+                    best = z;
+                }
+            }
+            if labels[pi as usize] != best {
+                labels[pi as usize] = best;
+                *changed += 1;
+            }
+            acc.add_point(best as usize, p);
+        }
+        return;
+    }
+
+    // Blacklist: min/max box distances per candidate (one counted pass
+    // each, analogous to a distance computation over d dims).
+    let mut h_star = f64::INFINITY;
+    let mut mins: Vec<f64> = Vec::with_capacity(candidates.len());
+    for &z in candidates {
+        dist.add_bulk(1);
+        let (dmin, dmax) = box_dist_sq(
+            centers.row(z as usize),
+            &node.bbox_min,
+            &node.bbox_max,
+        );
+        mins.push(dmin);
+        if dmax < h_star {
+            h_star = dmax;
+        }
+    }
+    let remaining: Vec<u32> = candidates
+        .iter()
+        .zip(&mins)
+        .filter(|&(_, &dmin)| dmin <= h_star)
+        .map(|(&z, _)| z)
+        .collect();
+
+    if remaining.len() == 1 {
+        let z = remaining[0] as usize;
+        acc.add_aggregate(z, &node.sum, node.weight as f64);
+        node.for_each_point(&mut |pi| {
+            if labels[pi as usize] != z as u32 {
+                labels[pi as usize] = z as u32;
+                *changed += 1;
+            }
+        });
+        return;
+    }
+
+    descend(data, node.left.as_ref().unwrap(), centers, &remaining, labels, acc, dist, changed);
+    descend(data, node.right.as_ref().unwrap(), centers, &remaining, labels, acc, dist, changed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn box_dist_inside_and_outside() {
+        let lo = [0.0, 0.0];
+        let hi = [2.0, 2.0];
+        let (dmin, dmax) = box_dist_sq(&[1.0, 1.0], &lo, &hi);
+        assert_eq!(dmin, 0.0); // inside
+        assert_eq!(dmax, 2.0); // to a corner
+        let (dmin, _) = box_dist_sq(&[4.0, 1.0], &lo, &hi);
+        assert_eq!(dmin, 4.0);
+    }
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(500, 3, 5, 1.0, 34);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 5, 27, &mut dc);
+        let params = KMeansParams::default();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_p = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_p.labels, r_l.labels);
+        assert_eq!(r_p.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn matches_lloyd_geo() {
+        let data = synth::istanbul(0.0015, 35);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 20, 28, &mut dc);
+        let params = KMeansParams {
+            kd: crate::tree::KdTreeParams { leaf_size: 20, max_depth: 64 },
+            ..KMeansParams::default()
+        };
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_p = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_p.labels, r_l.labels);
+        assert!(r_p.distances < r_l.distances);
+    }
+
+    #[test]
+    fn kanungo_prunes_no_worse_than_pelleg() {
+        // The hyperplane dominance test dominates the box min/max test on
+        // most data (that is why Kanungo superseded it).
+        let data = synth::istanbul(0.002, 36);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 30, 29, &mut dc);
+        let params = KMeansParams {
+            kd: crate::tree::KdTreeParams { leaf_size: 50, max_depth: 64 },
+            ..KMeansParams::default()
+        };
+        let mut ws1 = Workspace::new();
+        let mut ws2 = Workspace::new();
+        let r_p = run(&data, &init_c, &params, &mut ws1);
+        let r_k = crate::kmeans::kanungo::run(&data, &init_c, &params, &mut ws2);
+        assert_eq!(r_p.labels, r_k.labels);
+        assert!(
+            (r_k.distances as f64) < 1.3 * r_p.distances as f64,
+            "kanungo {} vs pelleg {}",
+            r_k.distances,
+            r_p.distances
+        );
+    }
+}

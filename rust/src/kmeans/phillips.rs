@@ -1,0 +1,150 @@
+//! Phillips' compare-means [15] — the earliest triangle-inequality
+//! acceleration the paper builds on (§2.2, Eq. 5): keep no stored bounds,
+//! but per point first tighten `d(x, c_a)` and then skip every candidate
+//! `c_j` with `d(c_a, c_j) >= 2 d(x, c_a)`, which by Eq. 5 cannot be
+//! nearer. Exact, memoryless, and the conceptual ancestor of the Eq. 9
+//! node-level filter in Cover-means.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::KMeansParams;
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+
+    let mut centers = init.clone();
+    let mut labels = vec![0u32; n];
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Iteration 1: plain full scan (no previous assignment to seed Eq. 5).
+    {
+        acc.clear();
+        for i in 0..n {
+            let p = data.row(i);
+            let mut best = 0u32;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let dd = dist.d(p, centers.row(c));
+                if dd < best_d {
+                    best_d = dd;
+                    best = c as u32;
+                }
+            }
+            labels[i] = best;
+            acc.add_point(best as usize, p);
+        }
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        iterations = 1;
+        log.push(1, dist.count(), sw.elapsed(), n);
+    }
+
+    for iter in 2..=params.max_iter {
+        iterations = iter;
+        let ic = InterCenter::compute(&centers, &mut dist);
+        acc.clear();
+        let mut changed = 0usize;
+
+        for i in 0..n {
+            let p = data.row(i);
+            let a = labels[i] as usize;
+            // Tighten the anchor distance, then Eq. 5 filter against it.
+            let mut best = a as u32;
+            let mut best_d = dist.d(p, centers.row(a));
+            for j in 0..k {
+                if j == a {
+                    continue;
+                }
+                // Filter against the *current* best (a running variant of
+                // Eq. 5, strictly stronger than anchoring on a alone).
+                if ic.d(best as usize, j) >= 2.0 * best_d {
+                    continue;
+                }
+                let dj = dist.d(p, centers.row(j));
+                if dj < best_d || (dj == best_d && (j as u32) < best) {
+                    best_d = dj;
+                    best = j as u32;
+                }
+            }
+            if labels[i] != best {
+                labels[i] = best;
+                changed += 1;
+            }
+            acc.add_point(best as usize, p);
+        }
+
+        acc.update_centers(&mut centers, &mut dist, &mut movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    RunResult {
+        labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time: std::time::Duration::ZERO,
+        log,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(400, 4, 6, 1.0, 31);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 6, 24, &mut dc);
+        let params = KMeansParams::default();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_p = run(&data, &init_c, &params);
+        assert_eq!(r_p.labels, r_l.labels);
+        assert_eq!(r_p.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn saves_distances_on_clustered_data() {
+        let data = synth::istanbul(0.002, 32);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 25, 25, &mut dc);
+        let params = KMeansParams::default();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_p = run(&data, &init_c, &params);
+        assert_eq!(r_p.labels, r_l.labels);
+        assert!(r_p.distances < r_l.distances);
+    }
+
+    #[test]
+    fn weaker_than_stored_bounds_late() {
+        // Phillips has no stored bounds, so once centers stabilize it
+        // still pays ~n distance tightenings per iteration — more than
+        // Hamerly-family methods on easy data.
+        let data = synth::gaussian_blobs(600, 3, 6, 0.2, 33);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 6, 26, &mut dc);
+        let params = KMeansParams::default();
+        let r_p = run(&data, &init_c, &params);
+        let r_s = crate::kmeans::shallot::run(&data, &init_c, &params);
+        assert_eq!(r_p.labels, r_s.labels);
+        assert!(r_p.distances >= r_s.distances);
+    }
+}

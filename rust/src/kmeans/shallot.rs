@@ -1,0 +1,266 @@
+//! Shallot (Borgelt [3], paper §2.2): the state-of-the-art stored-bounds
+//! algorithm the paper's Hybrid switches to.
+//!
+//! Like Exponion it keeps Hamerly's `(u, l)` pair, but additionally
+//! remembers the *identity* of the (assumed) second-nearest center. On a
+//! bound failure it first probes that remembered center — often already
+//! the new winner — and then walks the sorted neighbors of the best center
+//! inside a ball whose radius `d1 + d2` *shrinks* as better candidates are
+//! found (the onion layers that give the algorithm its name). The search
+//! radius starts from `u + d(x, c_second)`, which is typically much
+//! tighter than Exponion's `2u + delta`.
+//!
+//! As the paper notes (§3.4), the remembered second-nearest identity may
+//! go stale; correctness only needs `l` to lower-bound every non-assigned
+//! center, which the shrinking-ball argument preserves.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::hamerly::update_bounds;
+use crate::kmeans::KMeansParams;
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+/// Per-point stored state seeded either by the first full scan or by the
+/// cover tree hand-off (paper Eqs. 15-18).
+#[derive(Debug, Clone)]
+pub struct ShallotState {
+    pub labels: Vec<u32>,
+    /// Assumed second-nearest center identity.
+    pub second: Vec<u32>,
+    pub upper: Vec<f64>,
+    pub lower: Vec<f64>,
+}
+
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = init.rows();
+    let sw = Stopwatch::start();
+    let mut dist = DistCounter::new();
+
+    let mut centers = init.clone();
+    let mut state = ShallotState {
+        labels: vec![0u32; n],
+        second: vec![0u32; n],
+        upper: vec![0.0f64; n],
+        lower: vec![0.0f64; n],
+    };
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut log = IterationLog::new();
+
+    // Iteration 1: full scan.
+    acc.clear();
+    for i in 0..n {
+        let p = data.row(i);
+        let (c1, d1, c2, d2) =
+            crate::kmeans::bounds::nearest_two(p, &centers, &mut dist);
+        state.labels[i] = c1;
+        state.second[i] = c2;
+        state.upper[i] = d1;
+        state.lower[i] = d2;
+        acc.add_point(c1 as usize, p);
+    }
+    acc.update_centers(&mut centers, &mut dist, &mut movement);
+    update_bounds(&mut state.upper, &mut state.lower, &state.labels, &movement);
+    log.push(1, dist.count(), sw.elapsed(), n);
+
+    let (iterations, converged) = run_from_state(
+        data,
+        &mut centers,
+        &mut state,
+        params,
+        2,
+        &mut dist,
+        &sw,
+        &mut log,
+    );
+
+    RunResult {
+        labels: state.labels,
+        centers,
+        iterations,
+        distances: dist.count(),
+        build_dist: 0,
+        time: sw.elapsed(),
+        build_time: std::time::Duration::ZERO,
+        log,
+        converged,
+    }
+}
+
+/// The Shallot iteration loop, starting at `first_iter` from an existing
+/// bounded state. Shared with the Hybrid algorithm (§3.4), which seeds
+/// `state` from the cover tree instead of a full first scan.
+///
+/// Returns `(iterations_total, converged)` where `iterations_total` is the
+/// last iteration index executed (continuing the caller's numbering).
+#[allow(clippy::too_many_arguments)]
+pub fn run_from_state(
+    data: &Matrix,
+    centers: &mut Matrix,
+    state: &mut ShallotState,
+    params: &KMeansParams,
+    first_iter: usize,
+    dist: &mut DistCounter,
+    sw: &Stopwatch,
+    log: &mut IterationLog,
+) -> (usize, bool) {
+    let n = data.rows();
+    let d = data.cols();
+    let k = centers.rows();
+    let mut acc = CentroidAccum::new(k, d);
+    let mut movement: Vec<f64> = Vec::with_capacity(k);
+    let mut neighbors: Vec<Option<Vec<(f64, u32)>>> = vec![None; k];
+    let mut iterations = first_iter.saturating_sub(1);
+    let mut converged = false;
+
+    for iter in first_iter..=params.max_iter {
+        iterations = iter;
+        let ic = InterCenter::compute(centers, dist);
+        for nb in neighbors.iter_mut() {
+            *nb = None;
+        }
+        acc.clear();
+        let mut changed = 0usize;
+
+        for i in 0..n {
+            let p = data.row(i);
+            let a = state.labels[i] as usize;
+            let m = ic.s[a].max(state.lower[i]);
+            if state.upper[i] > m {
+                // Tighten u.
+                state.upper[i] = dist.d(p, centers.row(a));
+                if state.upper[i] > m {
+                    search(p, i, centers, &ic, &mut neighbors, state, dist, &mut changed);
+                }
+            }
+            acc.add_point(state.labels[i] as usize, p);
+        }
+
+        acc.update_centers(centers, dist, &mut movement);
+        update_bounds(&mut state.upper, &mut state.lower, &state.labels, &movement);
+        log.push(iter, dist.count(), sw.elapsed(), changed);
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+    }
+    (iterations, converged)
+}
+
+/// The shrinking-ball search for one point whose bounds failed.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn search(
+    p: &[f64],
+    i: usize,
+    centers: &Matrix,
+    ic: &InterCenter,
+    neighbors: &mut [Option<Vec<(f64, u32)>>],
+    state: &mut ShallotState,
+    dist: &mut DistCounter,
+    changed: &mut usize,
+) {
+    let a_orig = state.labels[i];
+    let u_orig = state.upper[i];
+
+    // Probe the remembered second-nearest first.
+    let mut c1 = a_orig;
+    let mut d1 = u_orig;
+    let mut b = state.second[i];
+    if b == c1 {
+        // Degenerate memory (k == 1 hand-off); pick any other center.
+        b = if c1 == 0 { (centers.rows() - 1) as u32 } else { 0 };
+    }
+    let mut d2 = dist.d(p, centers.row(b as usize));
+    let mut c2 = b;
+    if d2 < d1 || (d2 == d1 && c2 < c1) {
+        std::mem::swap(&mut c1, &mut c2);
+        std::mem::swap(&mut d1, &mut d2);
+    }
+
+    // Walk neighbors of the original assigned center (the annulus anchor)
+    // while the shrinking radius allows.
+    let anchor = a_orig as usize;
+    let nb = neighbors[anchor].get_or_insert_with(|| ic.sorted_neighbors(anchor));
+    for &(cc_dist, j) in nb.iter() {
+        // Shrinking ball: any center with d(x, c_j) < d2 must satisfy
+        // d(c_anchor, c_j) <= d(x, c_anchor) + d(x, c_j) < u_orig + d2.
+        if cc_dist > u_orig + d2 {
+            break;
+        }
+        if j == b || j == a_orig {
+            continue; // already probed
+        }
+        let dj = dist.d(p, centers.row(j as usize));
+        if dj < d1 || (dj == d1 && j < c1) {
+            c2 = c1;
+            d2 = d1;
+            c1 = j;
+            d1 = dj;
+        } else if dj < d2 {
+            c2 = j;
+            d2 = dj;
+        }
+    }
+
+    // Centers never probed satisfy d(x,c_j) >= cc(anchor, j) - u_orig >
+    // (u_orig + d2) - u_orig = d2 at the moment the walk stopped, so `d2`
+    // is a valid merged lower bound.
+    if c1 != state.labels[i] {
+        state.labels[i] = c1;
+        *changed += 1;
+    }
+    state.second[i] = c2;
+    state.upper[i] = d1;
+    state.lower[i] = d2;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let data = synth::gaussian_blobs(400, 4, 8, 1.0, 13);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 8, 6, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Shallot);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_s = run(&data, &init_c, &params);
+        assert_eq!(r_s.labels, r_l.labels);
+        assert_eq!(r_s.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn no_worse_than_exponion() {
+        let data = synth::istanbul(0.003, 14);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 30, 8, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Shallot);
+        let r_e = crate::kmeans::exponion::run(&data, &init_c, &params);
+        let r_s = run(&data, &init_c, &params);
+        assert_eq!(r_s.labels, r_e.labels);
+        assert!(
+            (r_s.distances as f64) <= 1.05 * r_e.distances as f64,
+            "shallot {} vs exponion {}",
+            r_s.distances,
+            r_e.distances
+        );
+    }
+
+    #[test]
+    fn matches_lloyd_high_dim_overlap() {
+        let data = synth::kdd04(0.0015, 15);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 12, 9, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::Shallot);
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_s = run(&data, &init_c, &params);
+        assert_eq!(r_s.labels, r_l.labels);
+    }
+}

@@ -1,0 +1,32 @@
+//! # covermeans
+//!
+//! A reproduction of Lang & Schubert, *Accelerating k-Means Clustering with
+//! Cover Trees* (DOI 10.1007/978-3-031-46994-7_13), as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's algorithms: a cover tree with node
+//!   aggregates, Cover-means (tree-at-once assignment with triangle-
+//!   inequality pruning, §3), the Hybrid hand-off to Shallot (§3.4), and
+//!   every baseline of the evaluation (Lloyd, Elkan, Hamerly, Exponion,
+//!   Shallot, Kanungo's k-d-tree filter), plus the sweep coordinator and
+//!   benchmark harness that regenerate the paper's tables and figures.
+//! * **L2/L1 (python/, build-time only)** — the dense assign-step
+//!   (distance matrix + top-2 + centroid partials) as a Pallas kernel in a
+//!   JAX graph, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — loads those artifacts through the PJRT C API (`xla`
+//!   crate) so the Standard baseline and the quickstart example can run
+//!   the dense step on the compiled path. Python is never on the run path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod kmeans;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+pub mod tree;

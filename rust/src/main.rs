@@ -1,0 +1,358 @@
+//! `covermeans` — launcher CLI for the cover-tree k-means reproduction.
+//!
+//! Subcommands (see `covermeans help`):
+//!   run       one clustering run (choice of algorithm and backend)
+//!   table     regenerate paper Table 2, 3 or 4
+//!   fig1      regenerate the Fig. 1 per-iteration series
+//!   fig2      regenerate the Fig. 2 d/k scaling series
+//!   ablate    design-choice ablations (scale factor, leaf size, switch)
+//!   datasets  list the dataset registry
+//!   info      artifact manifest + runtime platform
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use covermeans::config::RunConfig;
+use covermeans::coordinator::{report, run_experiment, sweep, Experiment};
+use covermeans::data::registry;
+use covermeans::kmeans::{self, Algorithm, Workspace};
+use covermeans::metrics::DistCounter;
+use covermeans::runtime::{lloyd_xla, AssignExecutor};
+
+const HELP: &str = "\
+covermeans — Accelerating k-Means Clustering with Cover Trees (reproduction)
+
+USAGE:
+  covermeans <command> [--key value ...] [--config file]
+
+COMMANDS:
+  run        single clustering run
+             --dataset NAME --k K --algorithm NAME --scale S --seed N
+             --backend native|xla   (xla: Standard algorithm only)
+  table      --id 2|3|4 [--scale S] [--restarts N] — paper tables
+  fig1       [--scale S] [--k K] — Fig. 1 cumulative series (ALOI-64)
+  fig2       --axis d|k [--scale S] [--restarts N] — Fig. 2 series
+  ablate     [--scale S] [--restarts N] — design-choice ablations
+  datasets   list registered datasets
+  info       artifacts manifest + PJRT platform
+  help       this text
+
+CONFIG KEYS (also accepted in --config files as `key = value`):
+  dataset scale data_seed k restarts seed threads out_dir max_iter
+  switch_at scale_factor min_node_size kd_leaf_size algorithms
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand into the config; pairs
+/// the config does not know are returned for the command to interpret.
+fn parse_overrides(
+    args: &[String],
+    cfg: &mut RunConfig,
+) -> Result<Vec<(String, String)>> {
+    let mut extras = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .with_context(|| format!("expected --key, got {:?}", args[i]))?;
+        let value = args
+            .get(i + 1)
+            .with_context(|| format!("--{key} needs a value"))?
+            .clone();
+        if key == "config" {
+            cfg.load_file(Path::new(&value))?;
+        } else if key == "algorithm" {
+            cfg.set("algorithms", &value)?;
+        } else if cfg.set(key, &value).is_err() {
+            extras.push((key.to_string(), value));
+        }
+        i += 2;
+    }
+    Ok(extras)
+}
+
+fn extra<'a>(extras: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    extras.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "table" => cmd_table(rest),
+        "fig1" => cmd_fig1(rest),
+        "fig2" => cmd_fig2(rest),
+        "ablate" => cmd_ablate(rest),
+        "datasets" => cmd_datasets(),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `covermeans help`"),
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let extras = parse_overrides(args, &mut cfg)?;
+    let backend = extra(&extras, "backend").unwrap_or("native");
+    let alg = cfg.algorithms[0];
+
+    eprintln!("# config\n{}\n", cfg.dump());
+    let data = registry::load(&cfg.dataset, cfg.scale, cfg.data_seed)
+        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+    eprintln!(
+        "dataset {} : n={} d={} (scale {})",
+        cfg.dataset,
+        data.rows(),
+        data.cols(),
+        cfg.scale
+    );
+
+    let mut init_counter = DistCounter::new();
+    let init = kmeans::init::kmeans_plus_plus(
+        &data,
+        cfg.k.min(data.rows()),
+        cfg.seed,
+        &mut init_counter,
+    );
+
+    let params = kmeans::KMeansParams { algorithm: alg, ..cfg.params };
+    let result = match backend {
+        "native" => kmeans::run(&data, &init, &params, &mut Workspace::new()),
+        "xla" => {
+            if alg != Algorithm::Standard {
+                bail!(
+                    "--backend xla drives the dense assign step (Standard \
+                     algorithm); use native for {}",
+                    alg.name()
+                );
+            }
+            let mut exec = AssignExecutor::load_default()?;
+            eprintln!("PJRT platform: {}", exec.platform());
+            lloyd_xla(&data, &init, &params, &mut exec)?
+        }
+        other => bail!("unknown backend {other:?}"),
+    };
+
+    println!("algorithm   : {}", alg.name());
+    println!("backend     : {backend}");
+    println!(
+        "iterations  : {} (converged: {})",
+        result.iterations, result.converged
+    );
+    println!(
+        "distances   : {} (+{} build)",
+        result.distances, result.build_dist
+    );
+    println!(
+        "time        : {:.3}s (+{:.3}s build)",
+        result.time.as_secs_f64(),
+        result.build_time.as_secs_f64()
+    );
+    println!("sse         : {:.6e}", result.sse(&data));
+    Ok(())
+}
+
+fn experiment_from_cfg(cfg: &RunConfig, mut exp: Experiment) -> Experiment {
+    exp.threads = cfg.threads;
+    exp.params = cfg.params;
+    exp.data_seed = cfg.data_seed;
+    exp
+}
+
+fn cmd_table(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let extras = parse_overrides(args, &mut cfg)?;
+    let id: u32 = extra(&extras, "id").unwrap_or("2").parse().context("--id")?;
+    let exp = match id {
+        2 | 3 => experiment_from_cfg(&cfg, sweep::tables23(cfg.scale, cfg.restarts)),
+        4 => experiment_from_cfg(&cfg, sweep::table4(cfg.scale, cfg.restarts)),
+        other => bail!("no table {other}; expected 2, 3 or 4"),
+    };
+    eprintln!(
+        "running {} cells ({} datasets x {} algorithms, {} ks, {} restarts, scale {})...",
+        exp.datasets.len() * exp.algorithms.len(),
+        exp.datasets.len(),
+        exp.algorithms.len(),
+        exp.ks.len(),
+        exp.restarts,
+        exp.scale
+    );
+    let res = run_experiment(&exp, false)?;
+    let (metric, title) = match id {
+        2 => (
+            report::Metric::Distances,
+            "Table 2: relative distance computations (k=100)",
+        ),
+        3 => (
+            report::Metric::Time,
+            "Table 3: relative run time incl. tree construction (k=100)",
+        ),
+        _ => (
+            report::Metric::Time,
+            "Table 4: relative run time, parameter sweep (amortized trees)",
+        ),
+    };
+    println!("{}", report::render_ratio_table(&exp, &res, metric, title));
+    write_csv(
+        &cfg,
+        &format!("table{id}.csv"),
+        &report::ratio_table_csv(&exp, &res, metric),
+    )
+}
+
+fn cmd_fig1(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let _ = parse_overrides(args, &mut cfg)?;
+    let mut exp = experiment_from_cfg(&cfg, sweep::fig1(cfg.scale));
+    if cfg.k != RunConfig::default().k {
+        exp.ks = vec![cfg.k]; // --k override for smaller runs
+    }
+    let res = run_experiment(&exp, true)?;
+    let rows = report::fig1_series_csv(&exp, &res);
+    println!(
+        "Fig 1 (ALOI-64 analog, k={}): final cumulative ratios vs Standard",
+        exp.ks[0]
+    );
+    let mut finals: Vec<(String, f64)> = Vec::new();
+    for alg in Algorithm::ALL {
+        if let Some(last) = rows.iter().filter(|r| r.starts_with(alg.name())).next_back()
+        {
+            let cols: Vec<&str> = last.split(',').collect();
+            finals.push((
+                alg.name().to_string(),
+                cols[2].parse().unwrap_or(f64::NAN),
+            ));
+        }
+    }
+    print!("{}", report::ascii_chart(&finals, 40));
+    write_csv(&cfg, "fig1.csv", &rows)
+}
+
+fn cmd_fig2(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let extras = parse_overrides(args, &mut cfg)?;
+    let axis = extra(&extras, "axis").unwrap_or("d");
+    let by_k = match axis {
+        "d" => false,
+        "k" => true,
+        other => bail!("--axis must be d or k, got {other:?}"),
+    };
+    let exp = if by_k {
+        experiment_from_cfg(&cfg, sweep::fig2b(cfg.scale, cfg.restarts))
+    } else {
+        experiment_from_cfg(&cfg, sweep::fig2a(cfg.scale, cfg.restarts))
+    };
+    let res = run_experiment(&exp, false)?;
+    let rows = report::fig2_series_csv(&exp, &res, by_k);
+    println!(
+        "Fig 2{} series (time relative to Standard):",
+        if by_k { "b" } else { "a" }
+    );
+    for r in &rows {
+        println!("  {r}");
+    }
+    write_csv(
+        &cfg,
+        &format!("fig2{}.csv", if by_k { "b" } else { "a" }),
+        &rows,
+    )
+}
+
+fn cmd_ablate(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let _ = parse_overrides(args, &mut cfg)?;
+    let mut rows = vec!["knob,dataset,algorithm,dist_rel,time_rel".to_string()];
+    for (label, mut exp) in sweep::ablations(cfg.scale, cfg.restarts.min(3)) {
+        // Keep the ablated knob; adopt only the orthogonal settings.
+        exp.threads = cfg.threads;
+        exp.data_seed = cfg.data_seed;
+        let res = run_experiment(&exp, false)?;
+        for ds in &exp.datasets.clone() {
+            for &alg in &exp.algorithms {
+                if alg == Algorithm::Standard {
+                    continue;
+                }
+                let dr = res
+                    .ratio_vs_standard(ds, alg, |c| c.total_distances() as f64)
+                    .unwrap_or(f64::NAN);
+                let tr = res
+                    .ratio_vs_standard(ds, alg, |c| c.total_time().as_secs_f64())
+                    .unwrap_or(f64::NAN);
+                println!(
+                    "{label:<22} {ds:<10} {:<12} dist {dr:>7.3}  time {tr:>7.3}",
+                    alg.name()
+                );
+                rows.push(format!("{label},{ds},{},{dr:.6},{tr:.6}", alg.name()));
+            }
+        }
+    }
+    write_csv(&cfg, "ablations.csv", &rows)
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<10} {:>9} {:>4}  domain", "name", "N(paper)", "d");
+    for info in registry::TABLE_DATASETS.iter() {
+        println!(
+            "{:<10} {:>9} {:>4}  {}",
+            info.name, info.n, info.d, info.domain
+        );
+    }
+    println!("(also: mnist20/40/50, aloi<d>, blobs:<n>:<d>:<k>)");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    match AssignExecutor::load_default() {
+        Ok(exec) => {
+            println!("PJRT platform : {}", exec.platform());
+            println!(
+                "artifacts     : {}",
+                covermeans::runtime::artifacts_dir().display()
+            );
+            println!(
+                "{:>6} {:>5} {:>5}  {:>10} {:>8}  file",
+                "chunk", "d", "k", "vmem KiB", "mxu"
+            );
+            for e in &exec.manifest().entries {
+                println!(
+                    "{:>6} {:>5} {:>5}  {:>10.0} {:>8.3}  {}",
+                    e.chunk,
+                    e.d,
+                    e.k,
+                    e.vmem_bytes as f64 / 1024.0,
+                    e.mxu_fraction,
+                    e.file
+                );
+            }
+        }
+        Err(e) => {
+            println!("runtime unavailable: {e:#}");
+            println!("run `make artifacts` to build the HLO lattice");
+        }
+    }
+    Ok(())
+}
+
+fn write_csv(cfg: &RunConfig, name: &str, rows: &[String]) -> Result<()> {
+    let dir = Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, rows.join("\n") + "\n")?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! Measurement substrate: the paper's evaluation metrics.
+//!
+//! The paper reports two per-algorithm quantities, both *relative to the
+//! Standard algorithm*: the number of Euclidean distance computations
+//! (Tables 2, Fig. 1a) and wall-clock run time (Tables 3-4, Figs. 1b, 2).
+//! `DistCounter` is the single funnel through which all algorithm code
+//! computes distances, so the counts are exact and backend-independent;
+//! `IterationLog` captures the cumulative per-iteration series of Fig. 1.
+
+pub mod quality;
+
+use std::time::{Duration, Instant};
+
+use crate::data::matrix;
+
+/// Counted distance oracle. Every Euclidean distance (or squared distance)
+/// an algorithm evaluates goes through this; one evaluation = one count,
+/// matching how ELKI's benchmark counts them (inter-center distances and
+/// center-movement distances included).
+#[derive(Debug, Default, Clone)]
+pub struct DistCounter {
+    count: u64,
+}
+
+impl DistCounter {
+    pub fn new() -> Self {
+        DistCounter { count: 0 }
+    }
+
+    /// Euclidean distance, counted.
+    #[inline]
+    pub fn d(&mut self, a: &[f64], b: &[f64]) -> f64 {
+        self.count += 1;
+        matrix::dist(a, b)
+    }
+
+    /// Squared Euclidean distance, counted once (a squared distance is the
+    /// same loop; algorithms that compare squared values avoid the sqrt but
+    /// still pay the O(d) pass the paper counts).
+    #[inline]
+    pub fn sq(&mut self, a: &[f64], b: &[f64]) -> f64 {
+        self.count += 1;
+        matrix::sqdist(a, b)
+    }
+
+    /// Record `n` distance computations performed on an external backend
+    /// (the XLA assign path computes chunk x centers distances in bulk).
+    #[inline]
+    pub fn add_bulk(&mut self, n: u64) {
+        self.count += n;
+    }
+
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn reset(&mut self) {
+        self.count = 0;
+    }
+}
+
+/// One row of the Fig. 1 series: state *after* iteration `iter`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationStat {
+    pub iter: usize,
+    /// Cumulative distance computations up to and including this iteration.
+    pub dist_cum: u64,
+    /// Cumulative elapsed time (excludes tree construction; Fig. 1 does).
+    pub time_cum: Duration,
+    /// Number of points whose assignment changed this iteration.
+    pub changed: usize,
+}
+
+/// Per-run iteration series.
+#[derive(Debug, Default, Clone)]
+pub struct IterationLog {
+    pub stats: Vec<IterationStat>,
+}
+
+impl IterationLog {
+    pub fn new() -> Self {
+        IterationLog { stats: Vec::new() }
+    }
+
+    pub fn push(&mut self, iter: usize, dist_cum: u64, time_cum: Duration, changed: usize) {
+        self.stats.push(IterationStat { iter, dist_cum, time_cum, changed });
+    }
+
+    pub fn len(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stats.is_empty()
+    }
+}
+
+/// Simple monotonic stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Outcome of one k-means run (all algorithms return this shape).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Final assignment, one cluster index per point.
+    pub labels: Vec<u32>,
+    /// Final cluster centers (k x d).
+    pub centers: crate::data::Matrix,
+    /// Iterations until convergence (assignment fixpoint) or the cap.
+    pub iterations: usize,
+    /// Total distance computations (excludes index construction; see
+    /// `build_dist` for those, as the paper separates them in Fig. 1).
+    pub distances: u64,
+    /// Distance computations spent building the tree index (0 for
+    /// non-tree algorithms).
+    pub build_dist: u64,
+    /// Algorithm time excluding index construction.
+    pub time: Duration,
+    /// Index construction time (0 for non-tree algorithms).
+    pub build_time: Duration,
+    /// Per-iteration series for Fig. 1.
+    pub log: IterationLog,
+    /// Whether the run reached the assignment fixpoint before the cap.
+    pub converged: bool,
+}
+
+impl RunResult {
+    /// Sum of squared errors of the final clustering, computed fresh
+    /// (not counted: it is an evaluation quantity, not algorithm work).
+    pub fn sse(&self, data: &crate::data::Matrix) -> f64 {
+        let mut sse = 0.0;
+        for (i, &l) in self.labels.iter().enumerate() {
+            sse += matrix::sqdist(data.row(i), self.centers.row(l as usize));
+        }
+        sse
+    }
+
+    /// Total time including index construction (Tables 3-4 include it).
+    pub fn total_time(&self) -> Duration {
+        self.time + self.build_time
+    }
+
+    /// Total distance computations including index construction.
+    pub fn total_distances(&self) -> u64 {
+        self.distances + self.build_dist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let mut c = DistCounter::new();
+        let a = [0.0, 0.0];
+        let b = [3.0, 4.0];
+        assert_eq!(c.d(&a, &b), 5.0);
+        assert_eq!(c.sq(&a, &b), 25.0);
+        c.add_bulk(10);
+        assert_eq!(c.count(), 12);
+        c.reset();
+        assert_eq!(c.count(), 0);
+    }
+
+    #[test]
+    fn iteration_log_series() {
+        let mut log = IterationLog::new();
+        log.push(1, 100, Duration::from_millis(5), 50);
+        log.push(2, 150, Duration::from_millis(9), 3);
+        assert_eq!(log.len(), 2);
+        assert!(log.stats[1].dist_cum >= log.stats[0].dist_cum);
+    }
+
+    #[test]
+    fn run_result_sse() {
+        use crate::data::Matrix;
+        let data = Matrix::from_rows(&[&[0.0], &[2.0]]);
+        let centers = Matrix::from_rows(&[&[1.0]]);
+        let r = RunResult {
+            labels: vec![0, 0],
+            centers,
+            iterations: 1,
+            distances: 2,
+            build_dist: 0,
+            time: Duration::ZERO,
+            build_time: Duration::ZERO,
+            log: IterationLog::new(),
+            converged: true,
+        };
+        assert_eq!(r.sse(&data), 2.0);
+    }
+}

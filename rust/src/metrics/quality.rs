@@ -1,0 +1,214 @@
+//! Clustering quality criteria for choosing k (paper §4, Table 4: "the
+//! 'best' clustering can be chosen by a heuristic such as the 'Elbow'
+//! method, or any of the better alternatives [19]").
+//!
+//! Implemented: SSE (the k-means objective), the Calinski-Harabasz
+//! variance-ratio criterion, the simplified silhouette, and the BIC score
+//! under a spherical Gaussian model — the standard "better alternatives"
+//! family. All evaluate a finished clustering; none is counted against the
+//! algorithm's distance budget (they are evaluation work).
+
+use crate::data::matrix::{sqdist, Matrix};
+
+/// Sum of squared errors (the k-means objective; lower is better).
+pub fn sse(data: &Matrix, labels: &[u32], centers: &Matrix) -> f64 {
+    labels
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| sqdist(data.row(i), centers.row(l as usize)))
+        .sum()
+}
+
+/// Calinski-Harabasz variance-ratio criterion (higher is better):
+/// `(B / (k-1)) / (W / (n-k))` with between/within-cluster dispersion.
+pub fn calinski_harabasz(data: &Matrix, labels: &[u32], centers: &Matrix) -> f64 {
+    let n = data.rows();
+    let k = centers.rows();
+    if k <= 1 || n <= k {
+        return f64::NAN;
+    }
+    let d = data.cols();
+    // Global mean.
+    let mut mean = vec![0.0; d];
+    for row in data.iter_rows() {
+        for j in 0..d {
+            mean[j] += row[j];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    // Cluster sizes.
+    let mut sizes = vec![0usize; k];
+    for &l in labels {
+        sizes[l as usize] += 1;
+    }
+    let between: f64 = (0..k)
+        .map(|c| sizes[c] as f64 * sqdist(centers.row(c), &mean))
+        .sum();
+    let within = sse(data, labels, centers);
+    if within <= 0.0 {
+        return f64::INFINITY;
+    }
+    (between / (k - 1) as f64) / (within / (n - k) as f64)
+}
+
+/// Simplified silhouette (higher is better, in [-1, 1]): per point,
+/// `a` = distance to own center, `b` = distance to the nearest other
+/// center; silhouette = (b - a) / max(a, b). O(n k) but centroid-based
+/// (the full silhouette is O(n^2) and impractical at the paper's sizes).
+pub fn simplified_silhouette(data: &Matrix, labels: &[u32], centers: &Matrix) -> f64 {
+    let n = data.rows();
+    let k = centers.rows();
+    if k <= 1 || n == 0 {
+        return f64::NAN;
+    }
+    let mut total = 0.0;
+    for (i, &l) in labels.iter().enumerate() {
+        let p = data.row(i);
+        let a = sqdist(p, centers.row(l as usize)).sqrt();
+        let mut b = f64::INFINITY;
+        for c in 0..k {
+            if c != l as usize {
+                b = b.min(sqdist(p, centers.row(c)).sqrt());
+            }
+        }
+        let m = a.max(b);
+        total += if m > 0.0 { (b - a) / m } else { 0.0 };
+    }
+    total / n as f64
+}
+
+/// BIC under identical spherical Gaussians (X-means style; higher is
+/// better): log-likelihood minus `0.5 * p * ln n` with `p = k*(d+1)`
+/// free parameters.
+pub fn bic(data: &Matrix, labels: &[u32], centers: &Matrix) -> f64 {
+    let n = data.rows();
+    let k = centers.rows();
+    let d = data.cols() as f64;
+    if n <= k {
+        return f64::NAN;
+    }
+    let rss = sse(data, labels, centers);
+    // MLE of the shared spherical variance.
+    let var = (rss / ((n - k) as f64 * d)).max(1e-300);
+    let mut sizes = vec![0usize; k];
+    for &l in labels {
+        sizes[l as usize] += 1;
+    }
+    let nf = n as f64;
+    let mut loglik = 0.0;
+    for &sz in &sizes {
+        if sz > 0 {
+            let szf = sz as f64;
+            loglik += szf * (szf / nf).ln();
+        }
+    }
+    loglik += -0.5 * nf * d * (2.0 * std::f64::consts::PI * var).ln()
+        - 0.5 * (nf - k as f64) * d;
+    let params = k as f64 * (d + 1.0);
+    loglik - 0.5 * params * nf.ln()
+}
+
+/// Pick the best k from `(k, labels, centers)` candidates by a criterion.
+pub fn choose_k<'a, I>(data: &Matrix, candidates: I, criterion: Criterion) -> Option<usize>
+where
+    I: IntoIterator<Item = (usize, &'a [u32], &'a Matrix)>,
+{
+    let mut best: Option<(usize, f64)> = None;
+    for (k, labels, centers) in candidates {
+        let score = match criterion {
+            Criterion::CalinskiHarabasz => calinski_harabasz(data, labels, centers),
+            Criterion::SimplifiedSilhouette => {
+                simplified_silhouette(data, labels, centers)
+            }
+            Criterion::Bic => bic(data, labels, centers),
+        };
+        if score.is_nan() {
+            continue;
+        }
+        if best.map(|(_, s)| score > s).unwrap_or(true) {
+            best = Some((k, score));
+        }
+    }
+    best.map(|(k, _)| k)
+}
+
+/// Criterion selector for [`choose_k`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    CalinskiHarabasz,
+    SimplifiedSilhouette,
+    Bic,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{self, init, Algorithm, KMeansParams, Workspace};
+    use crate::metrics::DistCounter;
+
+    fn cluster(data: &Matrix, k: usize) -> (Vec<u32>, Matrix) {
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(data, k, 5, &mut dc);
+        let r = kmeans::run(
+            data,
+            &init_c,
+            &KMeansParams::with_algorithm(Algorithm::Hybrid),
+            &mut Workspace::new(),
+        );
+        (r.labels, r.centers)
+    }
+
+    #[test]
+    fn criteria_prefer_true_k_on_separated_blobs() {
+        let true_k = 4;
+        let data = synth::gaussian_blobs(600, 3, true_k, 0.08, 41);
+        let mut results = Vec::new();
+        for k in [2usize, 3, 4, 6, 8] {
+            results.push((k, cluster(&data, k)));
+        }
+        let cands: Vec<(usize, &[u32], &Matrix)> = results
+            .iter()
+            .map(|(k, (l, c))| (*k, l.as_slice(), c))
+            .collect();
+        let ch = choose_k(&data, cands.iter().map(|&(k, l, c)| (k, l, c)),
+                          Criterion::CalinskiHarabasz);
+        let sil = choose_k(&data, cands.iter().map(|&(k, l, c)| (k, l, c)),
+                           Criterion::SimplifiedSilhouette);
+        assert_eq!(ch, Some(true_k), "CH should find the true k");
+        assert_eq!(sil, Some(true_k), "silhouette should find the true k");
+    }
+
+    #[test]
+    fn silhouette_bounds() {
+        let data = synth::gaussian_blobs(200, 2, 3, 0.1, 43);
+        let (labels, centers) = cluster(&data, 3);
+        let s = simplified_silhouette(&data, &labels, &centers);
+        assert!((-1.0..=1.0).contains(&s));
+        assert!(s > 0.5, "well-separated blobs should score high, got {s}");
+    }
+
+    #[test]
+    fn degenerate_cases_are_nan() {
+        let data = synth::gaussian_blobs(50, 2, 2, 0.5, 44);
+        let (labels, centers) = cluster(&data, 1);
+        assert!(calinski_harabasz(&data, &labels, &centers).is_nan());
+        assert!(simplified_silhouette(&data, &labels, &centers).is_nan());
+    }
+
+    #[test]
+    fn sse_matches_runresult() {
+        let data = synth::gaussian_blobs(100, 2, 3, 0.4, 45);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 3, 6, &mut dc);
+        let r = kmeans::run(
+            &data,
+            &init_c,
+            &KMeansParams::default(),
+            &mut Workspace::new(),
+        );
+        assert!((r.sse(&data) - sse(&data, &r.labels, &r.centers)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,305 @@
+//! Artifact manifest + padded chunked execution of the assign step.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::Matrix;
+use crate::runtime::PAD_CENTER_VALUE;
+
+/// One row of `artifacts/manifest.tsv` (written by `python -m compile.aot`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub chunk: usize,
+    pub d: usize,
+    pub k: usize,
+    pub file: String,
+    /// Static VMEM footprint estimate of the kernel at this shape (bytes).
+    pub vmem_bytes: u64,
+    /// Fraction of kernel FLOPs that are MXU-eligible matmul FLOPs.
+    pub mxu_fraction: f64,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                bail!("{path:?} line {}: expected 6 columns", lineno + 1);
+            }
+            entries.push(ManifestEntry {
+                chunk: cols[0].parse().context("chunk")?,
+                d: cols[1].parse().context("d")?,
+                k: cols[2].parse().context("k")?,
+                file: cols[3].to_string(),
+                vmem_bytes: cols[4].parse().context("vmem")?,
+                mxu_fraction: cols[5].parse().context("mxu")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("{path:?}: empty manifest");
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Smallest lattice shape covering `(d, k)` (min padded area d*k;
+    /// ties broken toward smaller d). `None` if nothing fits.
+    pub fn pick(&self, d: usize, k: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.d >= d && e.k >= k)
+            .min_by_key(|e| (e.d * e.k, e.d))
+    }
+}
+
+/// Output of one assign call over the full dataset (unpadded).
+#[derive(Debug, Clone)]
+pub struct AssignOutput {
+    /// Nearest center per point.
+    pub labels: Vec<u32>,
+    /// Distance to the nearest center.
+    pub d1: Vec<f64>,
+    /// Distance to the second-nearest center.
+    pub d2: Vec<f64>,
+    /// Per-cluster weighted sums of assigned points (k x d).
+    pub sums: Matrix,
+    /// Per-cluster assigned weight.
+    pub counts: Vec<f64>,
+}
+
+/// Executes the AOT assign-step artifacts on the PJRT CPU client with the
+/// padding protocol of `python/compile/model.py`. Executables are compiled
+/// lazily per lattice shape and cached.
+pub struct AssignExecutor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    compiled: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+    /// Reused staging buffers (hot path: no per-chunk allocation).
+    x_buf: Vec<f32>,
+    w_buf: Vec<f32>,
+}
+
+impl AssignExecutor {
+    /// Load the manifest from [`crate::runtime::artifacts_dir`].
+    pub fn load_default() -> Result<AssignExecutor> {
+        Self::new(&crate::runtime::artifacts_dir())
+    }
+
+    pub fn new(dir: &Path) -> Result<AssignExecutor> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(AssignExecutor {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            compiled: HashMap::new(),
+            x_buf: Vec::new(),
+            w_buf: Vec::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(
+        &mut self,
+        entry: &ManifestEntry,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (entry.chunk, entry.d, entry.k);
+        if !self.compiled.contains_key(&key) {
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+            self.compiled.insert(key, exe);
+        }
+        Ok(self.compiled.get(&key).unwrap())
+    }
+
+    /// Uniform-weight assignment of every row of `data` against `centers`.
+    pub fn assign(&mut self, data: &Matrix, centers: &Matrix) -> Result<AssignOutput> {
+        self.assign_weighted(data, None, centers)
+    }
+
+    /// Weighted assignment; `weights` defaults to 1.0 per row. Points with
+    /// weight 0 still receive labels/d1/d2 but contribute nothing to the
+    /// partial sums — the same mechanism the padding uses.
+    pub fn assign_weighted(
+        &mut self,
+        data: &Matrix,
+        weights: Option<&[f64]>,
+        centers: &Matrix,
+    ) -> Result<AssignOutput> {
+        let n = data.rows();
+        let d = data.cols();
+        let k = centers.rows();
+        anyhow::ensure!(centers.cols() == d, "dimension mismatch");
+        if let Some(w) = weights {
+            anyhow::ensure!(w.len() == n, "weights length mismatch");
+        }
+        let entry = self
+            .manifest
+            .pick(d, k)
+            .with_context(|| format!("no artifact covers d={d}, k={k}"))?
+            .clone();
+        let (chunk, dl, kl) = (entry.chunk, entry.d, entry.k);
+
+        // Padded center literal (shared by all chunks).
+        let mut c_buf = vec![PAD_CENTER_VALUE; kl * dl];
+        for i in 0..k {
+            let row = centers.row(i);
+            for j in 0..dl {
+                c_buf[i * dl + j] = if j < d { row[j] as f32 } else { 0.0 };
+            }
+        }
+        let c_lit = xla::Literal::vec1(&c_buf)
+            .reshape(&[kl as i64, dl as i64])
+            .map_err(|e| anyhow!("reshape centers: {e:?}"))?;
+
+        let mut out = AssignOutput {
+            labels: Vec::with_capacity(n),
+            d1: Vec::with_capacity(n),
+            d2: Vec::with_capacity(n),
+            sums: Matrix::zeros(k, d),
+            counts: vec![0.0; k],
+        };
+
+        let mut start = 0usize;
+        while start < n {
+            let rows = (n - start).min(chunk);
+            // Stage the padded chunk.
+            self.x_buf.clear();
+            self.x_buf.resize(chunk * dl, 0.0);
+            self.w_buf.clear();
+            self.w_buf.resize(chunk, 0.0);
+            for r in 0..rows {
+                let src = data.row(start + r);
+                let dst = &mut self.x_buf[r * dl..r * dl + d];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o = v as f32;
+                }
+                self.w_buf[r] = weights.map(|w| w[start + r] as f32).unwrap_or(1.0);
+            }
+            let x_lit = xla::Literal::vec1(&self.x_buf)
+                .reshape(&[chunk as i64, dl as i64])
+                .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+            let w_lit = xla::Literal::vec1(&self.w_buf);
+
+            let exe = self.executable(&entry)?;
+            let result = exe
+                .execute::<xla::Literal>(&[x_lit, w_lit, c_lit.clone()])
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?
+                .to_tuple()
+                .map_err(|e| anyhow!("untuple: {e:?}"))?;
+            anyhow::ensure!(tuple.len() == 5, "expected 5 outputs, got {}", tuple.len());
+
+            let labels: Vec<i32> =
+                tuple[0].to_vec().map_err(|e| anyhow!("labels: {e:?}"))?;
+            let d1: Vec<f32> = tuple[1].to_vec().map_err(|e| anyhow!("d1: {e:?}"))?;
+            let d2: Vec<f32> = tuple[2].to_vec().map_err(|e| anyhow!("d2: {e:?}"))?;
+            let sums: Vec<f32> = tuple[3].to_vec().map_err(|e| anyhow!("sums: {e:?}"))?;
+            let counts: Vec<f32> =
+                tuple[4].to_vec().map_err(|e| anyhow!("counts: {e:?}"))?;
+
+            for r in 0..rows {
+                out.labels.push(labels[r] as u32);
+                out.d1.push(d1[r] as f64);
+                out.d2.push(d2[r] as f64);
+            }
+            for i in 0..k {
+                for j in 0..d {
+                    let v = sums[i * dl + j] as f64;
+                    let cur = out.sums.get(i, j);
+                    out.sums.set(i, j, cur + v);
+                }
+                out.counts[i] += counts[i] as f64;
+            }
+            // Sentinel centers must never capture weight.
+            debug_assert!(counts[k..].iter().all(|&c| c == 0.0));
+
+            start += rows;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_from(rows: &[(usize, usize, usize)]) -> Manifest {
+        Manifest {
+            entries: rows
+                .iter()
+                .map(|&(chunk, d, k)| ManifestEntry {
+                    chunk,
+                    d,
+                    k,
+                    file: format!("assign_c{chunk}_d{d}_k{k}.hlo.txt"),
+                    vmem_bytes: 1,
+                    mxu_fraction: 0.5,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn pick_smallest_cover() {
+        let m = manifest_from(&[(1024, 8, 16), (1024, 64, 512), (1024, 16, 64)]);
+        assert_eq!(m.pick(5, 10).unwrap().d, 8);
+        assert_eq!(m.pick(9, 10).unwrap().d, 16);
+        assert_eq!(m.pick(16, 64).unwrap().k, 64);
+        assert_eq!(m.pick(64, 65).unwrap().k, 512);
+        assert!(m.pick(100, 10).is_none());
+        assert!(m.pick(8, 1000).is_none());
+    }
+
+    #[test]
+    fn manifest_load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("cm_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "# header only\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.tsv"), "1024\t8\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# c\td\tk\tfile\tv\tm\n1024\t8\t16\ta.hlo.txt\t100\t0.9\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].k, 16);
+    }
+}

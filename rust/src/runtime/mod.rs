@@ -1,0 +1,37 @@
+//! PJRT runtime: load and execute the AOT-compiled assign-step artifacts.
+//!
+//! `python -m compile.aot` (run once by `make artifacts`, never at request
+//! time) lowers the L2 JAX graph — which calls the L1 Pallas kernel — to
+//! HLO **text** for a lattice of `(chunk, d, k)` shapes and writes a
+//! `manifest.tsv`. This module loads the manifest, compiles artifacts
+//! on the PJRT CPU client on first use, and exposes a padded, chunked
+//! [`AssignExecutor::assign`] with the exact padding protocol the kernel
+//! was built for (see `python/compile/model.py`):
+//!
+//! * rows are zero-padded to the chunk size with weight 0 (their outputs
+//!   are discarded and they contribute nothing to the partial sums);
+//! * columns (d) are zero-padded — distance preserving;
+//! * centers (k) are padded with a large finite sentinel so a pad center
+//!   can never be the nearest or second-nearest of a real point.
+//!
+//! HLO text (not a serialized `HloModuleProto`) is the interchange format:
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+pub mod executor;
+pub mod lloyd_xla;
+
+pub use executor::{AssignExecutor, AssignOutput, Manifest};
+pub use lloyd_xla::run as lloyd_xla;
+
+/// Sentinel coordinate for padded centers. Must match
+/// `compile.kernels.assign.PAD_CENTER_VALUE`: large enough to never win,
+/// small enough that the f32 squared-distance expansion stays finite.
+pub const PAD_CENTER_VALUE: f32 = 1.0e15;
+
+/// Default artifacts directory, overridable with `COVERMEANS_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("COVERMEANS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

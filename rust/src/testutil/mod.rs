@@ -1,0 +1,86 @@
+//! Minimal property-based testing support (no `proptest` in the offline
+//! vendored crate set).
+//!
+//! [`check`] runs a closure over `cases` deterministic pseudo-random seeds
+//! and, on failure, re-raises with the failing case index and seed so the
+//! case can be replayed (`CASE_SEED` env var narrows a run to one seed).
+
+use crate::rng::Rng;
+
+/// Configuration for a property check.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u32,
+    /// Base seed; each case derives its own stream.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 32, seed: 0xC07E_C0DE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` generated seeds. The closure receives a
+/// per-case RNG and should panic (assert) on property violation.
+pub fn check<F: FnMut(&mut Rng)>(cfg: Config, name: &str, mut prop: F) {
+    // Replay support: CASE_SEED=<u64> runs exactly one case.
+    if let Ok(s) = std::env::var("CASE_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+            return;
+        }
+    }
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed at case {case}/{}; replay with CASE_SEED={case_seed}",
+                cfg.cases
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform choice helpers for property generators.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(Config { cases: 10, seed: 1 }, "count", |_rng| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn distinct_case_seeds() {
+        let mut seen = Vec::new();
+        check(Config { cases: 5, seed: 2 }, "seeds", |rng| {
+            seen.push(rng.next_u64());
+        });
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = usize_in(&mut rng, 5, 9);
+            assert!((5..=9).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! Cover tree with node aggregates — the paper's index (§2.3).
+//!
+//! A practical (simplified) cover tree built greedily in the spirit of
+//! Beygelzimer et al. [2], with the paper's extensions:
+//!
+//! * **scaling factor** `b` (default 1.2, paper §2.3): each child cover
+//!   radius is the parent's divided by `b`, trading fan-out vs depth;
+//! * **minimum node size** (default 100, paper §4): construction stops
+//!   splitting below this size and stores remaining points as *singletons*
+//!   (radius-0 children kept compactly as `(index, parent_dist)` pairs);
+//! * **aggregates**: each node stores the vector sum `S_x` and count `w_x`
+//!   of every point in its subtree (paper §2.3), enabling whole-subtree
+//!   cluster reassignment in O(d);
+//! * **parent distances**: each child stores `d(p_parent, p_child)`, and
+//!   each singleton stores its distance to the node's routing object —
+//!   exactly the quantities Eqs. 7-8 and 12-14 consume. The routing object
+//!   is its own first child ("self child") at distance 0, so distances to
+//!   it are reusable down the tree (paper §2.3).
+//!
+//! Construction distance computations are counted into a separate counter
+//! (the paper excludes build cost from Fig. 1 but includes it in Tables
+//! 3-4; we report both).
+
+use crate::data::matrix::Matrix;
+use crate::metrics::DistCounter;
+
+/// A cover tree node. `children[0]` is always the self-child (same routing
+/// object, smaller radius) when children exist.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Index of the routing object in the dataset.
+    pub routing: u32,
+    /// Distance from this node's routing object to the parent's routing
+    /// object (0 for the root and for self-children).
+    pub parent_dist: f64,
+    /// Cover radius: max distance from `routing` to any point in the
+    /// subtree (the `r_x` of Eq. 6). 0 for pure singleton leaves.
+    pub radius: f64,
+    /// Vector sum over all points in the subtree (`S_x`).
+    pub sum: Vec<f64>,
+    /// Number of points in the subtree (`w_x`).
+    pub weight: u32,
+    /// Child nodes (empty for leaves).
+    pub children: Vec<Node>,
+    /// Singleton points stored directly: `(point index, dist to routing)`.
+    /// The routing object itself appears here **only at the node where its
+    /// descent stops** (so each dataset point occurs exactly once among all
+    /// singleton lists).
+    pub singletons: Vec<(u32, f64)>,
+}
+
+/// Construction parameters (paper §4 defaults).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoverTreeParams {
+    /// Radius scaling factor between levels (`b`), > 1.
+    pub scale_factor: f64,
+    /// Stop splitting nodes with at most this many points.
+    pub min_node_size: usize,
+}
+
+impl Default for CoverTreeParams {
+    fn default() -> Self {
+        CoverTreeParams { scale_factor: 1.2, min_node_size: 100 }
+    }
+}
+
+/// The index: a root node over all points plus build-cost accounting.
+#[derive(Debug, Clone)]
+pub struct CoverTree {
+    pub root: Node,
+    pub params: CoverTreeParams,
+    /// Distance computations spent in construction.
+    pub build_distances: u64,
+    /// Wall time of construction.
+    pub build_time: std::time::Duration,
+    /// Number of internal nodes (diagnostics / memory accounting).
+    pub node_count: usize,
+    /// Number of singleton entries (should equal N).
+    pub singleton_count: usize,
+}
+
+impl CoverTree {
+    /// Build over all rows of `data`.
+    pub fn build(data: &Matrix, params: CoverTreeParams) -> CoverTree {
+        assert!(params.scale_factor > 1.0, "scale factor must be > 1");
+        assert!(data.rows() > 0, "empty dataset");
+        let sw = std::time::Instant::now();
+        let mut dist = DistCounter::new();
+
+        // Root routing object: first point (deterministic; the tree is an
+        // index, any choice is valid).
+        let root_pt = 0u32;
+        let mut elems: Vec<(u32, f64)> = Vec::with_capacity(data.rows() - 1);
+        for i in 1..data.rows() as u32 {
+            let d = dist.d(data.row(root_pt as usize), data.row(i as usize));
+            elems.push((i, d));
+        }
+        let root = build_node(data, &params, &mut dist, root_pt, 0.0, elems, true);
+
+        let mut tree = CoverTree {
+            root,
+            params,
+            build_distances: dist.count(),
+            build_time: sw.elapsed(),
+            node_count: 0,
+            singleton_count: 0,
+        };
+        let (nodes, singles) = tree.root.count_entries();
+        tree.node_count = nodes;
+        tree.singleton_count = singles;
+        tree
+    }
+
+    /// Total number of points indexed.
+    pub fn len(&self) -> usize {
+        self.root.weight as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate index memory in bytes (paper §1 argues the ball-per-node
+    /// representation is ~2x smaller than k-d tree bounding boxes).
+    pub fn memory_bytes(&self, d: usize) -> usize {
+        self.node_count * (std::mem::size_of::<Node>() + d * 8)
+            + self.singleton_count * 12
+    }
+}
+
+/// Recursive greedy construction.
+///
+/// `elems` holds `(index, distance to p)` for every point this node must
+/// cover (excluding `p` itself iff `owns_routing`; the routing object is
+/// carried implicitly and emitted as a singleton exactly once, at the node
+/// where recursion stops).
+fn build_node(
+    data: &Matrix,
+    params: &CoverTreeParams,
+    dist: &mut DistCounter,
+    p: u32,
+    parent_dist: f64,
+    mut elems: Vec<(u32, f64)>,
+    owns_routing: bool,
+) -> Node {
+    let d = data.cols();
+    let radius = elems.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
+
+    // Leaf: small enough, or all points coincide with the routing object.
+    if elems.len() < params.min_node_size || radius <= 0.0 {
+        let mut node = Node {
+            routing: p,
+            parent_dist,
+            radius,
+            sum: vec![0.0; d],
+            weight: 0,
+            children: Vec::new(),
+            singletons: Vec::new(),
+        };
+        if owns_routing {
+            node.singletons.push((p, 0.0));
+        }
+        node.singletons.append(&mut elems);
+        finish_aggregates(data, &mut node);
+        return node;
+    }
+
+    // Children cover radius: shrink by the scaling factor.
+    let cov = radius / params.scale_factor;
+
+    // Partition: points within `cov` of p stay with the self-child.
+    let mut near: Vec<(u32, f64)> = Vec::new();
+    let mut far: Vec<(u32, f64)> = Vec::new();
+    for e in elems {
+        if e.1 <= cov {
+            near.push(e);
+        } else {
+            far.push(e);
+        }
+    }
+
+    let mut node = Node {
+        routing: p,
+        parent_dist,
+        radius,
+        sum: vec![0.0; d],
+        weight: 0,
+        children: Vec::new(),
+        singletons: Vec::new(),
+    };
+
+    // Self-child: same routing object, radius <= cov, dist-to-parent 0.
+    node.children
+        .push(build_node(data, params, dist, p, 0.0, near, owns_routing));
+
+    // Remaining far points: repeatedly promote the farthest point to a new
+    // routing object and give it everything within `cov` of it
+    // (farthest-point heuristic approximates the separation invariant).
+    while !far.is_empty() {
+        let (far_idx, _) = far
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .unwrap();
+        let (q, q_pdist) = far.swap_remove(far_idx);
+
+        let mut q_elems: Vec<(u32, f64)> = Vec::new();
+        let mut rest: Vec<(u32, f64)> = Vec::with_capacity(far.len());
+        for (idx, pd) in far {
+            // Triangle shortcut: if |d(x,p) - d(q,p)| > cov the point
+            // cannot be within cov of q; skip the distance computation.
+            if (pd - q_pdist).abs() > cov {
+                rest.push((idx, pd));
+                continue;
+            }
+            let dq = dist.d(data.row(q as usize), data.row(idx as usize));
+            if dq <= cov {
+                q_elems.push((idx, dq));
+            } else {
+                rest.push((idx, pd));
+            }
+        }
+        far = rest;
+        node.children
+            .push(build_node(data, params, dist, q, q_pdist, q_elems, true));
+    }
+
+    finish_aggregates(data, &mut node);
+    node
+}
+
+/// Bottom-up aggregation of `S_x` and `w_x` (paper §2.3).
+fn finish_aggregates(data: &Matrix, node: &mut Node) {
+    let d = data.cols();
+    let mut sum = vec![0.0; d];
+    let mut weight = 0u32;
+    for ch in &node.children {
+        for j in 0..d {
+            sum[j] += ch.sum[j];
+        }
+        weight += ch.weight;
+    }
+    for &(idx, _) in &node.singletons {
+        let row = data.row(idx as usize);
+        for j in 0..d {
+            sum[j] += row[j];
+        }
+        weight += 1;
+    }
+    node.sum = sum;
+    node.weight = weight;
+}
+
+impl Node {
+    /// (internal node count incl. self, total singleton entries).
+    pub fn count_entries(&self) -> (usize, usize) {
+        let mut nodes = 1;
+        let mut singles = self.singletons.len();
+        for ch in &self.children {
+            let (n, s) = ch.count_entries();
+            nodes += n;
+            singles += s;
+        }
+        (nodes, singles)
+    }
+
+    /// Depth of the subtree (1 for a leaf).
+    pub fn depth(&self) -> usize {
+        1 + self.children.iter().map(|c| c.depth()).max().unwrap_or(0)
+    }
+
+    /// Visit every point index in the subtree.
+    pub fn for_each_point(&self, f: &mut impl FnMut(u32)) {
+        for &(idx, _) in &self.singletons {
+            f(idx);
+        }
+        for ch in &self.children {
+            ch.for_each_point(f);
+        }
+    }
+
+    /// Centroid of the subtree (S_x / w_x).
+    pub fn centroid(&self) -> Vec<f64> {
+        let w = self.weight.max(1) as f64;
+        self.sum.iter().map(|&s| s / w).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::dist as raw_dist;
+    use crate::data::synth;
+
+    fn check_invariants(data: &Matrix, node: &Node) {
+        // 1. Radius invariant: every point in the subtree is within
+        //    `radius` of the routing object (Eq. 6 soundness).
+        let p = data.row(node.routing as usize);
+        let mut count = 0u32;
+        let mut sum = vec![0.0; data.cols()];
+        node.for_each_point(&mut |idx| {
+            let dd = raw_dist(p, data.row(idx as usize));
+            assert!(
+                dd <= node.radius + 1e-9,
+                "point {idx} at {dd} > radius {}",
+                node.radius
+            );
+            count += 1;
+            for (j, v) in data.row(idx as usize).iter().enumerate() {
+                sum[j] += v;
+            }
+        });
+        // 2. Aggregates match.
+        assert_eq!(count, node.weight);
+        for j in 0..data.cols() {
+            assert!((sum[j] - node.sum[j]).abs() < 1e-6 * (1.0 + sum[j].abs()));
+        }
+        // 3. Parent distances stored on children are true distances, and
+        //    the self-child (index 0) shares the routing object.
+        if let Some(first) = node.children.first() {
+            assert_eq!(first.routing, node.routing);
+            assert_eq!(first.parent_dist, 0.0);
+        }
+        for ch in &node.children {
+            let dd = raw_dist(p, data.row(ch.routing as usize));
+            assert!((dd - ch.parent_dist).abs() < 1e-9);
+            // 4. Child radii shrink (cover invariant with scale factor).
+            assert!(ch.radius <= node.radius + 1e-9);
+            check_invariants(data, ch);
+        }
+        // 5. Singleton parent distances are true distances.
+        for &(idx, pd) in &node.singletons {
+            let dd = raw_dist(p, data.row(idx as usize));
+            assert!((dd - pd).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn builds_and_obeys_invariants_blobs() {
+        let data = synth::gaussian_blobs(500, 4, 5, 0.5, 1);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 10 },
+        );
+        assert_eq!(tree.len(), 500);
+        assert_eq!(tree.singleton_count, 500);
+        check_invariants(&data, &tree.root);
+    }
+
+    #[test]
+    fn each_point_exactly_once() {
+        let data = synth::istanbul(0.002, 3);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.3, min_node_size: 25 },
+        );
+        let mut seen = vec![0u32; data.rows()];
+        tree.root.for_each_point(&mut |i| seen[i as usize] += 1);
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn duplicates_collapse_to_zero_radius_leaf() {
+        // 200 copies of the same point + 10 others.
+        let mut rows: Vec<Vec<f64>> = vec![vec![1.0, 2.0]; 200];
+        for i in 0..10 {
+            rows.push(vec![i as f64 * 10.0, -5.0]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let data = Matrix::from_rows(&refs);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 5 },
+        );
+        check_invariants(&data, &tree.root);
+        // Find the duplicate leaf: some node must hold >= 200 points with
+        // radius 0 (the paper's near-duplicate benefit).
+        let mut found = false;
+        fn visit(n: &Node, found: &mut bool) {
+            if n.radius == 0.0 && n.weight >= 200 {
+                *found = true;
+            }
+            for c in &n.children {
+                visit(c, found);
+            }
+        }
+        visit(&tree.root, &mut found);
+        assert!(found, "expected a radius-0 node holding the duplicates");
+    }
+
+    #[test]
+    fn min_node_size_respected() {
+        let data = synth::gaussian_blobs(1000, 3, 4, 1.0, 2);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 100 },
+        );
+        // No internal node should have split a set smaller than min size:
+        // children with < min points must be leaves.
+        fn visit(n: &Node) {
+            if (n.weight as usize) < 100 {
+                assert!(
+                    n.children.is_empty(),
+                    "node with {} points was split",
+                    n.weight
+                );
+            }
+            for c in &n.children {
+                visit(c);
+            }
+        }
+        visit(&tree.root);
+    }
+
+    #[test]
+    fn build_counts_distances() {
+        let data = synth::gaussian_blobs(300, 3, 3, 0.5, 4);
+        let tree = CoverTree::build(&data, CoverTreeParams::default());
+        assert!(tree.build_distances >= 299, "at least root scan");
+    }
+
+    #[test]
+    fn scale_factor_controls_depth() {
+        let data = synth::gaussian_blobs(2000, 3, 5, 1.0, 5);
+        let deep = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.1, min_node_size: 10 },
+        );
+        let shallow = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 2.0, min_node_size: 10 },
+        );
+        assert!(shallow.root.depth() <= deep.root.depth());
+    }
+
+    #[test]
+    fn centroid_matches_mean() {
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[2.0, 0.0], &[1.0, 3.0]]);
+        let tree = CoverTree::build(&data, CoverTreeParams::default());
+        let c = tree.root.centroid();
+        assert!((c[0] - 1.0).abs() < 1e-12 && (c[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "scale factor")]
+    fn rejects_bad_scale() {
+        let data = Matrix::from_rows(&[&[0.0]]);
+        CoverTree::build(&data, CoverTreeParams { scale_factor: 0.9, min_node_size: 1 });
+    }
+}

@@ -1,0 +1,298 @@
+//! k-d tree with bounding boxes and node aggregates — the substrate of
+//! Kanungo et al.'s filtering algorithm [8] that the paper compares against.
+//!
+//! Unlike the classic k-d tree, the filtering variant stores, per node, the
+//! axis-aligned bounding box of its *cell* and the aggregate (vector sum,
+//! count) of its points, so whole cells can be assigned to a center at
+//! once. Splits use the midpoint rule along the longest box side (as in
+//! Kanungo et al.), which can produce empty sides; empty sides are skipped.
+//! This is the "two vectors per node" representation the paper contrasts
+//! with the cover tree's one-vector ball representation (§1).
+
+use crate::data::matrix::Matrix;
+
+/// Node of the filtering k-d tree.
+#[derive(Debug, Clone)]
+pub struct KdNode {
+    /// Bounding box of the points in this node (tight, not the cell).
+    pub bbox_min: Vec<f64>,
+    pub bbox_max: Vec<f64>,
+    /// Aggregate sum of points and count.
+    pub sum: Vec<f64>,
+    pub weight: u32,
+    /// Children; `None` for leaves.
+    pub left: Option<Box<KdNode>>,
+    pub right: Option<Box<KdNode>>,
+    /// Point indices (only populated for leaves).
+    pub points: Vec<u32>,
+}
+
+/// Construction parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KdTreeParams {
+    /// Stop splitting at or below this many points (Kanungo uses 1; a
+    /// larger leaf keeps the tree small like the cover tree's min size).
+    pub leaf_size: usize,
+    /// Maximum tree depth (guards degenerate midpoint splits).
+    pub max_depth: usize,
+}
+
+impl Default for KdTreeParams {
+    fn default() -> Self {
+        KdTreeParams { leaf_size: 100, max_depth: 64 }
+    }
+}
+
+/// The filtering k-d tree index.
+#[derive(Debug, Clone)]
+pub struct KdTree {
+    pub root: KdNode,
+    pub params: KdTreeParams,
+    pub build_time: std::time::Duration,
+    pub node_count: usize,
+}
+
+impl KdTree {
+    pub fn build(data: &Matrix, params: KdTreeParams) -> KdTree {
+        assert!(data.rows() > 0, "empty dataset");
+        let sw = std::time::Instant::now();
+        let idx: Vec<u32> = (0..data.rows() as u32).collect();
+        let root = build_node(data, &params, idx, 0);
+        let mut tree = KdTree {
+            root,
+            params,
+            build_time: sw.elapsed(),
+            node_count: 0,
+        };
+        tree.node_count = tree.root.count_nodes();
+        tree
+    }
+
+    pub fn len(&self) -> usize {
+        self.root.weight as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate index memory in bytes: two box vectors + one sum vector
+    /// per node (the paper's factor-of-two argument vs the cover tree).
+    pub fn memory_bytes(&self, d: usize) -> usize {
+        self.node_count * (std::mem::size_of::<KdNode>() + 3 * d * 8)
+    }
+}
+
+fn build_node(data: &Matrix, params: &KdTreeParams, idx: Vec<u32>, depth: usize) -> KdNode {
+    let d = data.cols();
+    let mut bbox_min = vec![f64::INFINITY; d];
+    let mut bbox_max = vec![f64::NEG_INFINITY; d];
+    let mut sum = vec![0.0; d];
+    for &i in &idx {
+        let row = data.row(i as usize);
+        for j in 0..d {
+            bbox_min[j] = bbox_min[j].min(row[j]);
+            bbox_max[j] = bbox_max[j].max(row[j]);
+            sum[j] += row[j];
+        }
+    }
+    let weight = idx.len() as u32;
+
+    // Longest side and its extent.
+    let (split_dim, extent) = (0..d)
+        .map(|j| (j, bbox_max[j] - bbox_min[j]))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+
+    if idx.len() <= params.leaf_size || depth >= params.max_depth || extent <= 0.0 {
+        return KdNode {
+            bbox_min,
+            bbox_max,
+            sum,
+            weight,
+            left: None,
+            right: None,
+            points: idx,
+        };
+    }
+
+    // Midpoint rule along the longest side.
+    let mid = 0.5 * (bbox_min[split_dim] + bbox_max[split_dim]);
+    let (mut li, mut ri) = (Vec::new(), Vec::new());
+    for &i in &idx {
+        if data.get(i as usize, split_dim) <= mid {
+            li.push(i);
+        } else {
+            ri.push(i);
+        }
+    }
+    // Degenerate split (all points on one side of the midpoint despite a
+    // positive extent cannot happen: the max point is > mid, the min point
+    // is <= mid). Both sides are non-empty here.
+    debug_assert!(!li.is_empty() && !ri.is_empty());
+
+    KdNode {
+        bbox_min,
+        bbox_max,
+        sum,
+        weight,
+        left: Some(Box::new(build_node(data, params, li, depth + 1))),
+        right: Some(Box::new(build_node(data, params, ri, depth + 1))),
+        points: Vec::new(),
+    }
+}
+
+impl KdNode {
+    pub fn is_leaf(&self) -> bool {
+        self.left.is_none()
+    }
+
+    pub fn count_nodes(&self) -> usize {
+        1 + self.left.as_ref().map_or(0, |n| n.count_nodes())
+            + self.right.as_ref().map_or(0, |n| n.count_nodes())
+    }
+
+    pub fn depth(&self) -> usize {
+        1 + self
+            .left
+            .as_ref()
+            .map_or(0, |n| n.depth())
+            .max(self.right.as_ref().map_or(0, |n| n.depth()))
+    }
+
+    /// Box midpoint (used by the filtering algorithm to pick the candidate
+    /// the others are compared against).
+    pub fn midpoint(&self) -> Vec<f64> {
+        self.bbox_min
+            .iter()
+            .zip(&self.bbox_max)
+            .map(|(&lo, &hi)| 0.5 * (lo + hi))
+            .collect()
+    }
+
+    /// Visit all point indices in the subtree.
+    pub fn for_each_point(&self, f: &mut impl FnMut(u32)) {
+        for &i in &self.points {
+            f(i);
+        }
+        if let Some(l) = &self.left {
+            l.for_each_point(f);
+        }
+        if let Some(r) = &self.right {
+            r.for_each_point(f);
+        }
+    }
+}
+
+/// The dominance test of Kanungo et al.: is candidate `z` "farther" from
+/// the whole box than `z_star`, i.e. is every point of the box at least as
+/// close to `z_star` as to `z`? Decided by checking the box corner that
+/// maximally favors `z` (the vertex of the box extremal in the direction
+/// `z - z_star`). Returns true if `z` can be pruned.
+///
+/// Costs two squared-distance evaluations to a synthesized corner point;
+/// callers must account for them (see `kmeans::kanungo`).
+pub fn is_farther(z: &[f64], z_star: &[f64], bbox_min: &[f64], bbox_max: &[f64]) -> bool {
+    let mut dz = 0.0;
+    let mut dstar = 0.0;
+    for j in 0..z.len() {
+        let corner = if z[j] > z_star[j] { bbox_max[j] } else { bbox_min[j] };
+        let a = z[j] - corner;
+        let b = z_star[j] - corner;
+        dz += a * a;
+        dstar += b * b;
+    }
+    dz >= dstar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn check_invariants(data: &Matrix, node: &KdNode) {
+        let d = data.cols();
+        let mut count = 0u32;
+        let mut sum = vec![0.0; d];
+        node.for_each_point(&mut |i| {
+            let row = data.row(i as usize);
+            for j in 0..d {
+                assert!(row[j] >= node.bbox_min[j] - 1e-12);
+                assert!(row[j] <= node.bbox_max[j] + 1e-12);
+                sum[j] += row[j];
+            }
+            count += 1;
+        });
+        assert_eq!(count, node.weight);
+        for j in 0..d {
+            assert!((sum[j] - node.sum[j]).abs() < 1e-6 * (1.0 + sum[j].abs()));
+        }
+        match (&node.left, &node.right) {
+            (Some(l), Some(r)) => {
+                assert_eq!(l.weight + r.weight, node.weight);
+                check_invariants(data, l);
+                check_invariants(data, r);
+            }
+            (None, None) => assert_eq!(node.points.len(), node.weight as usize),
+            _ => panic!("half-split node"),
+        }
+    }
+
+    #[test]
+    fn builds_and_obeys_invariants() {
+        let data = synth::gaussian_blobs(800, 5, 4, 1.0, 1);
+        let tree = KdTree::build(&data, KdTreeParams { leaf_size: 10, max_depth: 64 });
+        assert_eq!(tree.len(), 800);
+        check_invariants(&data, &tree.root);
+    }
+
+    #[test]
+    fn every_point_once() {
+        let data = synth::istanbul(0.001, 2);
+        let tree = KdTree::build(&data, KdTreeParams::default());
+        let mut seen = vec![0u32; data.rows()];
+        tree.root.for_each_point(&mut |i| seen[i as usize] += 1);
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn duplicates_stop_splitting() {
+        let rows: Vec<Vec<f64>> = vec![vec![3.0, 3.0]; 500];
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let data = Matrix::from_rows(&refs);
+        let tree = KdTree::build(&data, KdTreeParams { leaf_size: 10, max_depth: 64 });
+        assert!(tree.root.is_leaf(), "zero-extent box must not split");
+    }
+
+    #[test]
+    fn dominance_test_basic() {
+        // Box [0,1]^2; z* at origin-ish, z far right: z prunable.
+        let bmin = [0.0, 0.0];
+        let bmax = [1.0, 1.0];
+        assert!(is_farther(&[5.0, 0.5], &[0.5, 0.5], &bmin, &bmax));
+        // z inside the box is never prunable vs an outside z*.
+        assert!(!is_farther(&[0.5, 0.5], &[5.0, 0.5], &bmin, &bmax));
+    }
+
+    #[test]
+    fn dominance_test_symmetry_break() {
+        // Two candidates straddling the box: neither dominates.
+        let bmin = [0.0];
+        let bmax = [10.0];
+        assert!(!is_farther(&[-1.0], &[11.0], &bmin, &bmax));
+        assert!(!is_farther(&[11.0], &[-1.0], &bmin, &bmax));
+    }
+
+    #[test]
+    fn deeper_than_cover_tree_on_same_data() {
+        // The paper argues the binary k-d tree is deeper than the wide
+        // cover tree; sanity-check on clustered 2-d data.
+        let data = synth::istanbul(0.002, 5);
+        let kd = KdTree::build(&data, KdTreeParams { leaf_size: 100, max_depth: 64 });
+        let ct = crate::tree::covertree::CoverTree::build(
+            &data,
+            crate::tree::covertree::CoverTreeParams::default(),
+        );
+        assert!(kd.root.depth() >= ct.root.depth() / 2);
+    }
+}

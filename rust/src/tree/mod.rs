@@ -1,0 +1,9 @@
+//! Spatial index substrates: the paper's cover tree (§2.3) and the
+//! k-d tree used by the Kanungo et al. baseline.
+
+pub mod covertree;
+pub mod kdtree;
+pub mod search;
+
+pub use covertree::{CoverTree, CoverTreeParams};
+pub use kdtree::{KdTree, KdTreeParams};

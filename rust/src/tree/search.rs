@@ -1,0 +1,274 @@
+//! Nearest-neighbor and radius search on the cover tree — the queries the
+//! index was designed for (Beygelzimer et al. [2]; paper §2.3). Validates
+//! the index substrate independently of k-means and provides the k-NN
+//! utility a downstream user of the library expects.
+//!
+//! Both searches use the same ball bounds as Cover-means: a subtree rooted
+//! at routing object `p` with radius `r` can contain a point within `t` of
+//! the query `q` only if `d(q, p) <= t + r` (Eq. 6 rearranged).
+
+use crate::data::matrix::Matrix;
+use crate::metrics::DistCounter;
+use crate::tree::covertree::{CoverTree, Node};
+
+/// One search hit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub index: u32,
+    pub dist: f64,
+}
+
+/// Bounded max-heap of the current k best (simple Vec-based; k is small).
+struct TopK {
+    k: usize,
+    items: Vec<Neighbor>,
+}
+
+impl TopK {
+    fn new(k: usize) -> Self {
+        TopK { k, items: Vec::with_capacity(k + 1) }
+    }
+
+    fn bound(&self) -> f64 {
+        if self.items.len() < self.k {
+            f64::INFINITY
+        } else {
+            self.items.last().unwrap().dist
+        }
+    }
+
+    fn push(&mut self, n: Neighbor) {
+        let pos = self
+            .items
+            .partition_point(|x| (x.dist, x.index) < (n.dist, n.index));
+        self.items.insert(pos, n);
+        if self.items.len() > self.k {
+            self.items.pop();
+        }
+    }
+}
+
+/// k-nearest-neighbor query. Distance evaluations are counted into `dist`.
+pub fn knn(
+    tree: &CoverTree,
+    data: &Matrix,
+    query: &[f64],
+    k: usize,
+    dist: &mut DistCounter,
+) -> Vec<Neighbor> {
+    assert!(k >= 1);
+    let mut top = TopK::new(k);
+    let root = &tree.root;
+    let d_root = dist.d(query, data.row(root.routing as usize));
+    descend_knn(tree, data, query, root, d_root, &mut top, dist);
+    top.items
+}
+
+/// Recursive descent; `d_p` is the (already computed) distance from the
+/// query to this node's routing object.
+fn descend_knn(
+    tree: &CoverTree,
+    data: &Matrix,
+    query: &[f64],
+    node: &Node,
+    d_p: f64,
+    top: &mut TopK,
+    dist: &mut DistCounter,
+) {
+    // Singletons: reuse the stored parent distance as a lower bound
+    // |d(q,p) - d(p,s)| <= d(q,s) to skip hopeless candidates.
+    for &(idx, pd) in &node.singletons {
+        if (d_p - pd).abs() > top.bound() {
+            continue;
+        }
+        let dd = if idx == node.routing {
+            d_p // already computed
+        } else {
+            dist.d(query, data.row(idx as usize))
+        };
+        if dd < top.bound() {
+            top.push(Neighbor { index: idx, dist: dd });
+        }
+    }
+    // Children ordered by optimistic bound (closest first expands the best
+    // candidates early and tightens the pruning radius).
+    let mut order: Vec<(f64, usize, f64)> = Vec::with_capacity(node.children.len());
+    for (ci, ch) in node.children.iter().enumerate() {
+        let d_c = if ch.routing == node.routing {
+            d_p
+        } else {
+            // Prune without computing when even the parent-distance bound
+            // cannot reach the subtree: d(q, c) >= |d(q,p) - d(p,c)|.
+            if (d_p - ch.parent_dist).abs() > top.bound() + ch.radius {
+                continue;
+            }
+            dist.d(query, data.row(ch.routing as usize))
+        };
+        order.push(((d_c - ch.radius).max(0.0), ci, d_c));
+    }
+    order.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (opt, ci, d_c) in order {
+        if opt > top.bound() {
+            break; // all later children are at least this far
+        }
+        descend_knn(tree, data, query, &node.children[ci], d_c, top, dist);
+    }
+}
+
+/// Radius query: all points within `radius` of `query` (inclusive),
+/// sorted by distance.
+pub fn radius(
+    tree: &CoverTree,
+    data: &Matrix,
+    query: &[f64],
+    radius: f64,
+    dist: &mut DistCounter,
+) -> Vec<Neighbor> {
+    let mut out = Vec::new();
+    let root = &tree.root;
+    let d_root = dist.d(query, data.row(root.routing as usize));
+    descend_radius(data, query, root, d_root, radius, &mut out, dist);
+    out.sort_unstable_by(|a, b| (a.dist, a.index).partial_cmp(&(b.dist, b.index)).unwrap());
+    out
+}
+
+fn descend_radius(
+    data: &Matrix,
+    query: &[f64],
+    node: &Node,
+    d_p: f64,
+    t: f64,
+    out: &mut Vec<Neighbor>,
+    dist: &mut DistCounter,
+) {
+    if d_p > t + node.radius {
+        return; // ball cannot intersect the query ball
+    }
+    for &(idx, pd) in &node.singletons {
+        if (d_p - pd).abs() > t {
+            continue;
+        }
+        let dd = if idx == node.routing {
+            d_p
+        } else {
+            dist.d(query, data.row(idx as usize))
+        };
+        if dd <= t {
+            out.push(Neighbor { index: idx, dist: dd });
+        }
+    }
+    for ch in &node.children {
+        let d_c = if ch.routing == node.routing {
+            d_p
+        } else {
+            if (d_p - ch.parent_dist).abs() > t + ch.radius {
+                continue;
+            }
+            dist.d(query, data.row(ch.routing as usize))
+        };
+        descend_radius(data, query, ch, d_c, t, out, dist);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::tree::covertree::CoverTreeParams;
+
+    fn brute_knn(data: &Matrix, q: &[f64], k: usize) -> Vec<Neighbor> {
+        let mut all: Vec<Neighbor> = (0..data.rows())
+            .map(|i| Neighbor {
+                index: i as u32,
+                dist: crate::data::matrix::dist(q, data.row(i)),
+            })
+            .collect();
+        all.sort_unstable_by(|a, b| {
+            (a.dist, a.index).partial_cmp(&(b.dist, b.index)).unwrap()
+        });
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let data = synth::istanbul(0.001, 50);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 20 },
+        );
+        for qi in [0usize, 7, 100] {
+            let q: Vec<f64> = data.row(qi).to_vec();
+            let mut dc = DistCounter::new();
+            let got = knn(&tree, &data, &q, 5, &mut dc);
+            let want = brute_knn(&data, &q, 5);
+            let gd: Vec<f64> = got.iter().map(|n| n.dist).collect();
+            let wd: Vec<f64> = want.iter().map(|n| n.dist).collect();
+            for (a, b) in gd.iter().zip(&wd) {
+                assert!((a - b).abs() < 1e-12, "{gd:?} vs {wd:?}");
+            }
+            // And it must have pruned: fewer distance computations than
+            // brute force on clustered data.
+            assert!(
+                dc.count() < data.rows() as u64,
+                "no pruning: {} >= {}",
+                dc.count(),
+                data.rows()
+            );
+        }
+    }
+
+    #[test]
+    fn knn_off_sample_query() {
+        let data = synth::gaussian_blobs(400, 3, 4, 0.5, 51);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.3, min_node_size: 10 },
+        );
+        let q = vec![0.1, -0.2, 0.3];
+        let mut dc = DistCounter::new();
+        let got = knn(&tree, &data, &q, 3, &mut dc);
+        let want = brute_knn(&data, &q, 3);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a.dist - b.dist).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn radius_matches_brute_force() {
+        let data = synth::istanbul(0.0008, 52);
+        let tree = CoverTree::build(&data, CoverTreeParams::default());
+        let q: Vec<f64> = data.row(3).to_vec();
+        let t = 0.05;
+        let mut dc = DistCounter::new();
+        let got = radius(&tree, &data, &q, t, &mut dc);
+        let want: Vec<u32> = (0..data.rows())
+            .filter(|&i| crate::data::matrix::dist(&q, data.row(i)) <= t)
+            .map(|i| i as u32)
+            .collect();
+        let got_idx: Vec<u32> = {
+            let mut v: Vec<u32> = got.iter().map(|n| n.index).collect();
+            v.sort_unstable();
+            v
+        };
+        let mut want_sorted = want.clone();
+        want_sorted.sort_unstable();
+        assert_eq!(got_idx, want_sorted);
+        // Sorted by distance.
+        for w in got.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+    }
+
+    #[test]
+    fn knn_k_larger_than_n() {
+        let data = synth::gaussian_blobs(10, 2, 2, 0.5, 53);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 2 },
+        );
+        let mut dc = DistCounter::new();
+        let got = knn(&tree, &data, data.row(0), 20, &mut dc);
+        assert_eq!(got.len(), 10);
+    }
+}

@@ -1,0 +1,133 @@
+//! Coordinator-level integration tests: full experiment protocols on small
+//! scales, checking the cross-algorithm consistency the paper's tables
+//! rely on, plus the report renderers.
+
+use covermeans::coordinator::{report, run_experiment, sweep, Experiment};
+use covermeans::kmeans::Algorithm;
+
+#[test]
+fn tables23_protocol_small() {
+    let mut exp = sweep::tables23(0.002, 2);
+    exp.datasets = vec!["istanbul".into(), "kdd04".into()];
+    exp.threads = 4;
+    let res = run_experiment(&exp, false).unwrap();
+    assert_eq!(res.cells.len(), 2 * Algorithm::ALL.len());
+
+    // Exactness across the full matrix: same SSE per (dataset, run).
+    for ds in &exp.datasets {
+        let std_runs = &res.cell(ds, Algorithm::Standard).unwrap().runs;
+        for &alg in &exp.algorithms {
+            let runs = &res.cell(ds, alg).unwrap().runs;
+            for (a, b) in runs.iter().zip(std_runs) {
+                assert!(
+                    (a.sse - b.sse).abs() < 1e-6 * (1.0 + b.sse),
+                    "{ds}/{}: sse {} vs standard {}",
+                    alg.name(),
+                    a.sse,
+                    b.sse
+                );
+                assert_eq!(a.iterations, b.iterations, "{ds}/{}", alg.name());
+            }
+        }
+    }
+
+    // Table rendering produces a row per non-Standard algorithm.
+    let table = report::render_ratio_table(&exp, &res, report::Metric::Distances, "t2");
+    for alg in Algorithm::ALL {
+        if alg != Algorithm::Standard {
+            assert!(table.contains(alg.name()), "missing row {}", alg.name());
+        }
+    }
+}
+
+#[test]
+fn table4_sweep_amortizes_and_reports() {
+    let mut exp = sweep::table4(0.002, 1);
+    exp.datasets = vec!["istanbul".into()];
+    exp.ks = vec![5, 10, 20]; // reduced grid for test time
+    exp.threads = 4;
+    let res = run_experiment(&exp, false).unwrap();
+    let cover = res.cell("istanbul", Algorithm::CoverMeans).unwrap();
+    // One tree build across the whole sweep.
+    let builds = cover
+        .runs
+        .iter()
+        .filter(|r| r.build_dist > 0)
+        .count();
+    assert_eq!(builds, 1);
+    assert_eq!(cover.runs.len(), 3);
+    let csv = report::ratio_table_csv(&exp, &res, report::Metric::Time);
+    assert!(csv.len() > 1);
+}
+
+#[test]
+fn fig1_series_has_all_algorithms() {
+    let mut exp = sweep::fig1(0.002);
+    exp.ks = vec![30];
+    exp.threads = 4;
+    let res = run_experiment(&exp, true).unwrap();
+    let rows = report::fig1_series_csv(&exp, &res);
+    for alg in Algorithm::ALL {
+        assert!(
+            rows.iter().any(|r| r.starts_with(alg.name())),
+            "fig1 missing {}",
+            alg.name()
+        );
+    }
+    // Cumulative series must be monotone per algorithm.
+    let mut last: Option<(String, f64)> = None;
+    for row in rows.iter().skip(1) {
+        let cols: Vec<&str> = row.split(',').collect();
+        let alg = cols[0].to_string();
+        let v: f64 = cols[2].parse().unwrap();
+        if let Some((ref la, lv)) = last {
+            if *la == alg {
+                assert!(v >= lv - 1e-12, "non-monotone series for {alg}");
+            }
+        }
+        last = Some((alg, v));
+    }
+}
+
+#[test]
+fn fig2b_series_covers_k_grid() {
+    let exp = Experiment {
+        datasets: vec!["mnist10".into()],
+        algorithms: vec![Algorithm::Standard, Algorithm::Shallot, Algorithm::Hybrid],
+        ks: vec![5, 15],
+        restarts: 1,
+        scale: 0.002,
+        threads: 4,
+        ..Experiment::new("fig2b-test")
+    };
+    let res = run_experiment(&exp, false).unwrap();
+    let rows = report::fig2_series_csv(&exp, &res, true);
+    // header + 2 k values x 3 algorithms
+    assert_eq!(rows.len(), 1 + 2 * 3);
+}
+
+#[test]
+fn hybrid_wins_or_ties_shallot_on_tree_friendly_data() {
+    // The paper's headline: Hybrid <= Shallot in distance computations on
+    // most datasets (Table 2: hybrid 0.003 vs shallot 0.006 on istanbul).
+    let exp = Experiment {
+        datasets: vec!["istanbul".into()],
+        algorithms: vec![Algorithm::Standard, Algorithm::Shallot, Algorithm::Hybrid],
+        ks: vec![50],
+        restarts: 3,
+        scale: 0.004,
+        threads: 4,
+        ..Experiment::new("headline")
+    };
+    let res = run_experiment(&exp, false).unwrap();
+    let shallot = res
+        .ratio_vs_standard("istanbul", Algorithm::Shallot, |c| c.distances as f64)
+        .unwrap();
+    let hybrid = res
+        .ratio_vs_standard("istanbul", Algorithm::Hybrid, |c| c.distances as f64)
+        .unwrap();
+    assert!(
+        hybrid <= shallot * 1.15,
+        "hybrid {hybrid:.4} should be <= ~shallot {shallot:.4}"
+    );
+}

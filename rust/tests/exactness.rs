@@ -1,0 +1,139 @@
+//! The central property of the paper's algorithm family: every accelerated
+//! variant replicates the Standard algorithm **exactly** — same assignment
+//! sequence, same iteration count, same final centers — on generic
+//! (continuous) data. Randomized over datasets, dimensions, k, and seeds
+//! via the in-tree property harness.
+
+use covermeans::data::{synth, Matrix};
+use covermeans::kmeans::{self, init, Algorithm, KMeansParams, Workspace};
+use covermeans::metrics::DistCounter;
+use covermeans::rng::Rng;
+use covermeans::testutil::{check, usize_in, Config};
+use covermeans::tree::CoverTreeParams;
+
+fn random_dataset(rng: &mut Rng) -> Matrix {
+    match rng.below(5) {
+        0 => {
+            let n = usize_in(rng, 100, 600);
+            let d = usize_in(rng, 1, 16);
+            let k = usize_in(rng, 2, 8);
+            synth::gaussian_blobs(n, d, k, 0.1 + rng.f64() * 2.0, rng.next_u64())
+        }
+        1 => synth::istanbul(0.0005 + rng.f64() * 0.001, rng.next_u64()),
+        2 => synth::mnist(usize_in(rng, 5, 20), 0.003, rng.next_u64()),
+        3 => synth::kdd04(0.001, rng.next_u64()),
+        _ => synth::traffic(0.00003, rng.next_u64()),
+    }
+}
+
+fn check_all_match(data: &Matrix, k: usize, seed: u64, params: &KMeansParams) {
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(data, k, seed, &mut dc);
+    let lloyd_params = KMeansParams { algorithm: Algorithm::Standard, ..*params };
+    let reference = kmeans::run(data, &init_c, &lloyd_params, &mut Workspace::new());
+
+    for alg in [
+        Algorithm::Elkan,
+        Algorithm::Hamerly,
+        Algorithm::Exponion,
+        Algorithm::Shallot,
+        Algorithm::Kanungo,
+        Algorithm::CoverMeans,
+        Algorithm::Hybrid,
+    ] {
+        let p = KMeansParams { algorithm: alg, ..*params };
+        let r = kmeans::run(data, &init_c, &p, &mut Workspace::new());
+        assert_eq!(
+            r.labels,
+            reference.labels,
+            "{} diverged from Standard (n={}, d={}, k={k})",
+            alg.name(),
+            data.rows(),
+            data.cols()
+        );
+        assert_eq!(r.iterations, reference.iterations, "{} iterations", alg.name());
+        assert_eq!(r.converged, reference.converged, "{} convergence", alg.name());
+        for (a, b) in r.centers.as_slice().iter().zip(reference.centers.as_slice()) {
+            assert!(
+                (a - b).abs() < 1e-9 * (1.0 + b.abs()),
+                "{} centers differ",
+                alg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_algorithms_replicate_lloyd() {
+    check(Config { cases: 12, seed: 0xEAAC7 }, "exactness", |rng| {
+        let data = random_dataset(rng);
+        let k = usize_in(rng, 2, 40).min(data.rows() / 2);
+        let params = KMeansParams {
+            max_iter: 60,
+            cover: CoverTreeParams {
+                scale_factor: 1.1 + rng.f64() * 0.4,
+                min_node_size: usize_in(rng, 1, 150),
+            },
+            switch_at: usize_in(rng, 1, 10),
+            ..KMeansParams::default()
+        };
+        check_all_match(&data, k, rng.next_u64(), &params);
+    });
+}
+
+#[test]
+fn exactness_with_extreme_tree_params() {
+    // Degenerate trees (leaf=1 splits everything; huge leaf = flat tree)
+    // must not break exactness.
+    for min_node_size in [1usize, 10_000] {
+        let data = synth::istanbul(0.001, 99);
+        let params = KMeansParams {
+            cover: CoverTreeParams { scale_factor: 1.2, min_node_size },
+            ..KMeansParams::default()
+        };
+        check_all_match(&data, 15, 5, &params);
+    }
+}
+
+#[test]
+fn exactness_with_large_scale_factor() {
+    let data = synth::mnist(10, 0.004, 7);
+    let params = KMeansParams {
+        cover: CoverTreeParams { scale_factor: 3.0, min_node_size: 50 },
+        ..KMeansParams::default()
+    };
+    check_all_match(&data, 25, 11, &params);
+}
+
+#[test]
+fn exactness_k_larger_than_natural_clusters() {
+    // k far above the generative cluster count stresses tie-ish regions.
+    let data = synth::gaussian_blobs(400, 3, 4, 1.5, 13);
+    let params = KMeansParams::default();
+    check_all_match(&data, 60, 17, &params);
+}
+
+#[test]
+fn distance_counts_ordering_holds_on_clustered_data() {
+    // The qualitative ordering the paper reports (Table 2): Elkan fewest
+    // among bounds algorithms; Shallot <= Exponion <= Hamerly.
+    let data = synth::istanbul(0.004, 23);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 50, 3, &mut dc);
+    let mut counts = std::collections::HashMap::new();
+    for alg in [
+        Algorithm::Standard,
+        Algorithm::Elkan,
+        Algorithm::Hamerly,
+        Algorithm::Exponion,
+        Algorithm::Shallot,
+    ] {
+        let p = KMeansParams { algorithm: alg, ..KMeansParams::default() };
+        let r = kmeans::run(&data, &init_c, &p, &mut Workspace::new());
+        counts.insert(alg.name(), r.distances);
+    }
+    assert!(counts["Elkan"] < counts["Standard"]);
+    assert!(counts["Shallot"] <= counts["Exponion"]);
+    assert!(counts["Exponion"] <= counts["Hamerly"]);
+    assert!(counts["Hamerly"] < counts["Standard"]);
+}

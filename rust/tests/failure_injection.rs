@@ -1,0 +1,182 @@
+//! Edge-case and failure-injection tests: degenerate datasets, forced
+//! empty clusters, extreme parameters — the situations a library user hits
+//! that a paper never mentions. Every exact algorithm must behave
+//! identically to the Standard algorithm even here.
+
+use covermeans::data::{synth, Matrix};
+use covermeans::kmeans::{self, init, Algorithm, KMeansParams, Workspace};
+use covermeans::metrics::DistCounter;
+
+fn all_match(data: &Matrix, init_c: &Matrix, params: &KMeansParams) {
+    let p = KMeansParams { algorithm: Algorithm::Standard, ..*params };
+    let reference = kmeans::run(data, init_c, &p, &mut Workspace::new());
+    for alg in [
+        Algorithm::Elkan,
+        Algorithm::Hamerly,
+        Algorithm::Exponion,
+        Algorithm::Shallot,
+        Algorithm::Kanungo,
+        Algorithm::PellegMoore,
+        Algorithm::Phillips,
+        Algorithm::CoverMeans,
+        Algorithm::Hybrid,
+    ] {
+        let p = KMeansParams { algorithm: alg, ..*params };
+        let r = kmeans::run(data, init_c, &p, &mut Workspace::new());
+        assert_eq!(r.labels, reference.labels, "{}", alg.name());
+        assert_eq!(r.iterations, reference.iterations, "{}", alg.name());
+    }
+}
+
+#[test]
+fn k_equals_n() {
+    // Every point its own cluster: converges immediately, zero SSE.
+    let data = synth::gaussian_blobs(40, 3, 4, 1.0, 60);
+    let idx: Vec<usize> = (0..40).collect();
+    let init_c = data.select_rows(&idx);
+    let params = KMeansParams::default();
+    all_match(&data, &init_c, &params);
+    let r = kmeans::run(&data, &init_c, &params, &mut Workspace::new());
+    assert!(r.sse(&data) < 1e-18);
+}
+
+#[test]
+fn forced_empty_cluster_keeps_center() {
+    // Two far blobs, three centers, one center far away from everything:
+    // it captures nothing and must stay put in every algorithm.
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut rng = covermeans::rng::Rng::new(61);
+    for _ in 0..50 {
+        rows.push(vec![rng.gaussian() * 0.1, 0.0]);
+        rows.push(vec![10.0 + rng.gaussian() * 0.1, 0.0]);
+    }
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    let data = Matrix::from_rows(&refs);
+    let init_c = Matrix::from_rows(&[&[0.0, 0.0], &[10.0, 0.0], &[1000.0, 1000.0]]);
+    let params = KMeansParams::default();
+    all_match(&data, &init_c, &params);
+    let r = kmeans::run(&data, &init_c, &params, &mut Workspace::new());
+    assert_eq!(r.centers.row(2), &[1000.0, 1000.0], "empty cluster moved");
+    assert!(r.labels.iter().all(|&l| l < 2));
+}
+
+#[test]
+fn one_dimensional_data() {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut rng = covermeans::rng::Rng::new(62);
+    for i in 0..200 {
+        rows.push(vec![(i % 4) as f64 * 5.0 + rng.gaussian() * 0.2]);
+    }
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    let data = Matrix::from_rows(&refs);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 4, 63, &mut dc);
+    all_match(&data, &init_c, &KMeansParams::default());
+}
+
+#[test]
+fn constant_dataset_all_points_identical() {
+    // Every point AND every center coincide: an all-ties input. This is
+    // the one regime where the documented tie caveat applies (exact
+    // equality of distances), so cross-algorithm label equality is NOT
+    // required — but every algorithm must converge, put all points in a
+    // single cluster, and reach SSE 0.
+    let rows: Vec<Vec<f64>> = vec![vec![3.5, -1.0, 2.0]; 150];
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    let data = Matrix::from_rows(&refs);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 3, 64, &mut dc);
+    for alg in [
+        Algorithm::Standard,
+        Algorithm::Elkan,
+        Algorithm::Hamerly,
+        Algorithm::Exponion,
+        Algorithm::Shallot,
+        Algorithm::Kanungo,
+        Algorithm::PellegMoore,
+        Algorithm::Phillips,
+        Algorithm::CoverMeans,
+        Algorithm::Hybrid,
+    ] {
+        let p = KMeansParams { algorithm: alg, ..KMeansParams::default() };
+        let r = kmeans::run(&data, &init_c, &p, &mut Workspace::new());
+        assert!(r.converged, "{}", alg.name());
+        let first = r.labels[0];
+        assert!(
+            r.labels.iter().all(|&l| l == first),
+            "{}: identical points split across clusters",
+            alg.name()
+        );
+        assert!(r.sse(&data) < 1e-18, "{}", alg.name());
+    }
+}
+
+#[test]
+fn max_iter_one_partial_run_is_consistent() {
+    let data = synth::kdd04(0.001, 65);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 8, 66, &mut dc);
+    let params = KMeansParams { max_iter: 1, ..KMeansParams::default() };
+    all_match(&data, &init_c, &params);
+}
+
+#[test]
+fn huge_coordinates_no_overflow() {
+    // 1e12-scale coordinates: squared distances ~1e24 stay finite in f64;
+    // bounds arithmetic must not produce NaN/inf pruning errors.
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut rng = covermeans::rng::Rng::new(67);
+    for i in 0..300 {
+        let base = (i % 3) as f64 * 1e12;
+        rows.push(vec![base + rng.gaussian() * 1e9, base - rng.gaussian() * 1e9]);
+    }
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    let data = Matrix::from_rows(&refs);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 3, 68, &mut dc);
+    all_match(&data, &init_c, &KMeansParams::default());
+}
+
+#[test]
+fn tiny_scale_coordinates() {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut rng = covermeans::rng::Rng::new(69);
+    for i in 0..300 {
+        let base = (i % 3) as f64 * 1e-12;
+        rows.push(vec![base + rng.gaussian() * 1e-15]);
+    }
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    let data = Matrix::from_rows(&refs);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 3, 70, &mut dc);
+    all_match(&data, &init_c, &KMeansParams::default());
+}
+
+#[test]
+fn duplicated_initial_centers() {
+    // k-means++ on duplicate-heavy data can emit coinciding centers; all
+    // algorithms must agree on the tie-broken result.
+    let data = synth::traffic(0.00003, 71);
+    let init_c = Matrix::from_rows(&[data.row(0), data.row(0), data.row(1)]);
+    all_match(&data, &init_c, &KMeansParams::default());
+}
+
+#[test]
+fn minibatch_is_well_behaved_not_exact() {
+    let data = synth::gaussian_blobs(500, 3, 4, 0.3, 72);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 4, 73, &mut dc);
+    let params = KMeansParams { algorithm: Algorithm::MiniBatch, ..KMeansParams::default() };
+    let r = kmeans::run(&data, &init_c, &params, &mut Workspace::new());
+    assert_eq!(r.labels.len(), 500);
+    assert!(r.labels.iter().all(|&l| l < 4));
+    assert!(!Algorithm::MiniBatch.is_exact());
+    // SSE sane: within 2x of the exact result.
+    let exact = kmeans::run(
+        &data,
+        &init_c,
+        &KMeansParams::default(),
+        &mut Workspace::new(),
+    );
+    assert!(r.sse(&data) <= 2.0 * exact.sse(&data) + 1e-12);
+}

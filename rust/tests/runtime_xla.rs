@@ -1,0 +1,152 @@
+//! Integration tests for the PJRT runtime path: AOT artifacts (built by
+//! `make artifacts`) loaded and executed from Rust, validated against the
+//! native f64 implementation.
+//!
+//! These tests are skipped (with a loud warning) when `artifacts/` is
+//! missing, so `cargo test` still works in a fresh checkout; `make test`
+//! always builds artifacts first.
+
+use covermeans::data::{synth, Matrix};
+use covermeans::kmeans::{init, lloyd, Algorithm, KMeansParams};
+use covermeans::metrics::DistCounter;
+use covermeans::runtime::{artifacts_dir, lloyd_xla, AssignExecutor};
+
+fn executor_or_skip() -> Option<AssignExecutor> {
+    if !artifacts_dir().join("manifest.tsv").exists() {
+        eprintln!(
+            "WARNING: artifacts/manifest.tsv missing — run `make artifacts`; skipping XLA test"
+        );
+        return None;
+    }
+    Some(AssignExecutor::load_default().expect("load executor"))
+}
+
+fn native_assign(data: &Matrix, centers: &Matrix) -> (Vec<u32>, Vec<f64>, Vec<f64>) {
+    let mut dist = DistCounter::new();
+    let n = data.rows();
+    let mut labels = Vec::with_capacity(n);
+    let mut d1 = Vec::with_capacity(n);
+    let mut d2 = Vec::with_capacity(n);
+    for i in 0..n {
+        let (c1, dd1, _c2, dd2) =
+            covermeans::kmeans::bounds::nearest_two(data.row(i), centers, &mut dist);
+        labels.push(c1);
+        d1.push(dd1);
+        d2.push(dd2);
+    }
+    (labels, d1, d2)
+}
+
+#[test]
+fn xla_assign_matches_native() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    // Odd sizes exercise all three padding axes (n % chunk, d pad, k pad).
+    let data = synth::gaussian_blobs(1500, 5, 7, 1.0, 42);
+    let mut dc = DistCounter::new();
+    let centers = init::kmeans_plus_plus(&data, 7, 3, &mut dc);
+
+    let out = exec.assign(&data, &centers).expect("assign");
+    let (labels, d1, d2) = native_assign(&data, &centers);
+
+    assert_eq!(out.labels.len(), 1500);
+    let mut label_mismatch = 0;
+    for i in 0..1500 {
+        if out.labels[i] != labels[i] {
+            label_mismatch += 1;
+        }
+        // The kernel uses the expanded form ||x||^2 + ||c||^2 - 2<x,c> in
+        // f32 (the accelerator-native formulation): the absolute error of
+        // a *distance* scales with ||x|| * sqrt(f32_eps), not with d1.
+        let xnorm = covermeans::data::matrix::dist(
+            data.row(i),
+            &vec![0.0; data.cols()],
+        );
+        let tol = 2e-3 * (1.0 + xnorm + d1[i]);
+        assert!(
+            (out.d1[i] - d1[i]).abs() <= tol,
+            "d1[{i}]: xla {} native {} (tol {tol})",
+            out.d1[i],
+            d1[i]
+        );
+        assert!(
+            (out.d2[i] - d2[i]).abs() <= tol,
+            "d2[{i}]: xla {} native {} (tol {tol})",
+            out.d2[i],
+            d2[i]
+        );
+    }
+    // f32 vs f64 may flip near-equidistant points; must be very rare.
+    assert!(label_mismatch <= 2, "{label_mismatch} label mismatches");
+
+    // Partial sums/counts must aggregate to the native assignment.
+    let total: f64 = out.counts.iter().sum();
+    assert!((total - 1500.0).abs() < 1e-6);
+    let mut native_counts = vec![0.0f64; 7];
+    for &l in &labels {
+        native_counts[l as usize] += 1.0;
+    }
+    for c in 0..7 {
+        assert!(
+            (out.counts[c] - native_counts[c]).abs() <= label_mismatch as f64,
+            "count[{c}]: xla {} native {}",
+            out.counts[c],
+            native_counts[c]
+        );
+    }
+}
+
+#[test]
+fn xla_weighted_assign_drops_zero_weight_rows() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let data = synth::gaussian_blobs(300, 3, 4, 0.5, 7);
+    let mut dc = DistCounter::new();
+    let centers = init::kmeans_plus_plus(&data, 4, 5, &mut dc);
+    let mut weights = vec![1.0f64; 300];
+    for w in weights.iter_mut().skip(150) {
+        *w = 0.0;
+    }
+    let out = exec
+        .assign_weighted(&data, Some(&weights), &centers)
+        .expect("assign");
+    let total: f64 = out.counts.iter().sum();
+    assert!((total - 150.0).abs() < 1e-6, "total weight {total}");
+    // labels still produced for all rows
+    assert_eq!(out.labels.len(), 300);
+}
+
+#[test]
+fn lloyd_xla_matches_native_lloyd() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let data = synth::gaussian_blobs(800, 6, 5, 0.4, 11);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 5, 9, &mut dc);
+    let params = KMeansParams::with_algorithm(Algorithm::Standard);
+
+    let r_native = lloyd::run(&data, &init_c, &params);
+    let r_xla = lloyd_xla(&data, &init_c, &params, &mut exec).expect("lloyd_xla");
+
+    // Well-separated blobs: identical clustering and iteration count.
+    assert_eq!(r_xla.labels, r_native.labels);
+    assert_eq!(r_xla.iterations, r_native.iterations);
+    assert_eq!(r_xla.distances, r_native.distances, "semantic counting");
+    let sse_n = r_native.sse(&data);
+    let sse_x = r_xla.sse(&data);
+    assert!(
+        (sse_n - sse_x).abs() <= 1e-3 * (1.0 + sse_n),
+        "sse native {sse_n} vs xla {sse_x}"
+    );
+}
+
+#[test]
+fn manifest_shapes_cover_paper_datasets() {
+    let Some(exec) = executor_or_skip() else { return };
+    // Every paper dataset dimension and the k sweep range must be covered.
+    for d in [2usize, 10, 27, 30, 50, 54, 64, 74] {
+        for k in [10usize, 100, 400, 1000] {
+            assert!(
+                exec.manifest().pick(d, k).is_some(),
+                "no artifact covers d={d} k={k}"
+            );
+        }
+    }
+}

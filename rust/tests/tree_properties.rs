@@ -1,0 +1,189 @@
+//! Property-based invariant tests for the spatial indexes, randomized over
+//! data regimes and construction parameters.
+
+use covermeans::data::{matrix::dist, synth, Matrix};
+use covermeans::rng::Rng;
+use covermeans::testutil::{check, usize_in, Config};
+use covermeans::tree::covertree::{CoverTree, CoverTreeParams, Node};
+use covermeans::tree::kdtree::{is_farther, KdTree, KdTreeParams};
+
+fn random_data(rng: &mut Rng) -> Matrix {
+    match rng.below(4) {
+        0 => synth::gaussian_blobs(
+            usize_in(rng, 50, 800),
+            usize_in(rng, 1, 12),
+            usize_in(rng, 1, 6),
+            rng.f64() * 2.0 + 0.01,
+            rng.next_u64(),
+        ),
+        1 => synth::istanbul(0.0003 + rng.f64() * 0.001, rng.next_u64()),
+        2 => synth::traffic(0.00002 + rng.f64() * 0.00005, rng.next_u64()),
+        _ => synth::aloi(usize_in(rng, 4, 27), 0.002, rng.next_u64()),
+    }
+}
+
+/// Cover-tree invariants the k-means bounds (Eqs. 6-8) rely on.
+fn check_cover_node(data: &Matrix, node: &Node) -> (u32, Vec<f64>) {
+    let p = data.row(node.routing as usize);
+    let mut count = 0u32;
+    let mut sum = vec![0.0; data.cols()];
+    node.for_each_point(&mut |idx| {
+        let dd = dist(p, data.row(idx as usize));
+        assert!(dd <= node.radius + 1e-9, "radius violated");
+        count += 1;
+        for (j, v) in data.row(idx as usize).iter().enumerate() {
+            sum[j] += v;
+        }
+    });
+    assert_eq!(count, node.weight, "aggregate weight");
+    for j in 0..data.cols() {
+        assert!(
+            (sum[j] - node.sum[j]).abs() < 1e-6 * (1.0 + sum[j].abs()),
+            "aggregate sum"
+        );
+    }
+    for ch in &node.children {
+        let dd = dist(p, data.row(ch.routing as usize));
+        assert!((dd - ch.parent_dist).abs() < 1e-9, "parent distance");
+        assert!(ch.radius <= node.radius + 1e-9, "radius monotone");
+        check_cover_node(data, ch);
+    }
+    for &(idx, pd) in &node.singletons {
+        let dd = dist(p, data.row(idx as usize));
+        assert!((dd - pd).abs() < 1e-9, "singleton distance");
+    }
+    (count, sum)
+}
+
+#[test]
+fn cover_tree_invariants_random() {
+    check(Config { cases: 16, seed: 0xC0FE }, "cover-invariants", |rng| {
+        let data = random_data(rng);
+        let params = CoverTreeParams {
+            scale_factor: 1.05 + rng.f64() * 1.5,
+            min_node_size: usize_in(rng, 1, 200),
+        };
+        let tree = CoverTree::build(&data, params);
+        assert_eq!(tree.len(), data.rows());
+        let (count, _) = check_cover_node(&data, &tree.root);
+        assert_eq!(count as usize, data.rows());
+        // Partition: every point exactly once.
+        let mut seen = vec![0u8; data.rows()];
+        tree.root.for_each_point(&mut |i| seen[i as usize] += 1);
+        assert!(seen.iter().all(|&c| c == 1), "each point exactly once");
+    });
+}
+
+#[test]
+fn kd_tree_invariants_random() {
+    check(Config { cases: 16, seed: 0x6D }, "kd-invariants", |rng| {
+        let data = random_data(rng);
+        let params = KdTreeParams {
+            leaf_size: usize_in(rng, 1, 200),
+            max_depth: usize_in(rng, 8, 64),
+        };
+        let tree = KdTree::build(&data, params);
+        assert_eq!(tree.len(), data.rows());
+        check_kd(&data, &tree.root);
+        let mut seen = vec![0u8; data.rows()];
+        tree.root.for_each_point(&mut |i| seen[i as usize] += 1);
+        assert!(seen.iter().all(|&c| c == 1));
+    });
+}
+
+fn check_kd(data: &Matrix, node: &covermeans::tree::kdtree::KdNode) {
+    let mut count = 0u32;
+    node.for_each_point(&mut |i| {
+        let row = data.row(i as usize);
+        for j in 0..data.cols() {
+            assert!(row[j] >= node.bbox_min[j] - 1e-12);
+            assert!(row[j] <= node.bbox_max[j] + 1e-12);
+        }
+        count += 1;
+    });
+    assert_eq!(count, node.weight);
+    if let (Some(l), Some(r)) = (&node.left, &node.right) {
+        assert_eq!(l.weight + r.weight, node.weight);
+        check_kd(data, l);
+        check_kd(data, r);
+    }
+}
+
+/// The dominance test must be *sound*: whenever it prunes `z`, every point
+/// of the box really is at least as close to `z_star` as to `z`.
+#[test]
+fn dominance_test_sound() {
+    check(Config { cases: 64, seed: 7 }, "dominance-sound", |rng| {
+        let d = usize_in(rng, 1, 6);
+        let mut bmin = vec![0.0; d];
+        let mut bmax = vec![0.0; d];
+        for j in 0..d {
+            let a = rng.gaussian() * 3.0;
+            let b = rng.gaussian() * 3.0;
+            bmin[j] = a.min(b);
+            bmax[j] = a.max(b);
+        }
+        let z: Vec<f64> = (0..d).map(|_| rng.gaussian() * 5.0).collect();
+        let zs: Vec<f64> = (0..d).map(|_| rng.gaussian() * 5.0).collect();
+        if is_farther(&z, &zs, &bmin, &bmax) {
+            // Sample random points in the box; none may be closer to z.
+            for _ in 0..64 {
+                let q: Vec<f64> = (0..d)
+                    .map(|j| bmin[j] + rng.f64() * (bmax[j] - bmin[j]))
+                    .collect();
+                assert!(
+                    dist(&q, &z) + 1e-9 >= dist(&q, &zs),
+                    "pruned z was closer for a box point"
+                );
+            }
+        }
+    });
+}
+
+/// The paper's §1 memory claim: the ball representation (center vector +
+/// radius, i.e. d+1 floats of payload) is ~2x more compact per node than
+/// the k-d tree's boxes (midpoint+width or min+max = 2d floats, plus the
+/// aggregate sum both need). Checked on a meaningful dimensionality.
+#[test]
+fn cover_node_payload_smaller_than_kd() {
+    let d = 27; // ALOI-27
+    // cover node payload: sum vector + radius + parent_dist.
+    let cover_payload = (d + 2) * 8;
+    // kd node payload: bbox min + max + sum vector.
+    let kd_payload = 3 * d * 8;
+    assert!(cover_payload * 2 <= kd_payload + 2 * 8);
+}
+
+/// On near-duplicate-heavy data the cover tree stays within a small factor
+/// of the k-d tree's node count despite its self-child chains, and both
+/// stay far below one node per point (duplicates collapse).
+#[test]
+fn cover_tree_compact_on_duplicates() {
+    let data = synth::traffic(0.0005, 3);
+    let tree = CoverTree::build(&data, CoverTreeParams::default());
+    let kd = KdTree::build(&data, KdTreeParams::default());
+    assert!(
+        tree.node_count <= 3 * kd.node_count,
+        "cover nodes {} vs kd nodes {}",
+        tree.node_count,
+        kd.node_count
+    );
+    assert!(tree.node_count * 10 < data.rows(), "duplicates must collapse");
+    assert_eq!(tree.singleton_count, data.rows());
+}
+
+/// Build-cost sanity: construction distance count grows roughly
+/// linearithmically, not quadratically, on clustered data.
+#[test]
+fn cover_tree_build_cost_subquadratic() {
+    let small = synth::istanbul(0.001, 5);
+    let large = synth::istanbul(0.004, 5);
+    let t_small = CoverTree::build(&small, CoverTreeParams::default());
+    let t_large = CoverTree::build(&large, CoverTreeParams::default());
+    let ratio_n = large.rows() as f64 / small.rows() as f64;
+    let ratio_dist = t_large.build_distances as f64 / t_small.build_distances as f64;
+    assert!(
+        ratio_dist < ratio_n * ratio_n / 2.0,
+        "build cost scaled x{ratio_dist:.1} for n x{ratio_n:.1}"
+    );
+}
