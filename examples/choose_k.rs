@@ -7,11 +7,10 @@
 //!     cargo run --release --example choose_k [scale]
 
 use covermeans::data::synth;
-use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::kmeans::{Algorithm, KMeans, Workspace};
 use covermeans::metrics::quality::{
     bic, calinski_harabasz, simplified_silhouette,
 };
-use covermeans::metrics::DistCounter;
 
 fn main() {
     let scale: f64 = std::env::args()
@@ -26,7 +25,6 @@ fn main() {
         data.cols()
     );
 
-    let params = KMeansParams::with_algorithm(Algorithm::Hybrid);
     let mut ws = Workspace::new(); // one cover tree for the whole sweep
     let sweep = std::time::Instant::now();
 
@@ -36,9 +34,11 @@ fn main() {
     );
     let mut best = (0usize, f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY);
     for k in [2usize, 4, 6, 8, 10, 13, 16, 20, 30] {
-        let mut dc = DistCounter::new();
-        let init = kmeans::init::kmeans_plus_plus(&data, k, 17, &mut dc);
-        let r = kmeans::run(&data, &init, &params, &mut ws);
+        let r = KMeans::new(k)
+            .algorithm(Algorithm::Hybrid)
+            .seed(17)
+            .fit_with(&data, &mut ws)
+            .expect("valid configuration");
         let ch = calinski_harabasz(&data, &r.labels, &r.centers);
         let sil = simplified_silhouette(&data, &r.labels, &r.centers);
         let b = bic(&data, &r.labels, &r.centers);

@@ -9,7 +9,7 @@
 //!     cargo run --release --example dedup_traffic [scale]
 
 use covermeans::data::synth;
-use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::kmeans::{self, Algorithm, KMeans};
 use covermeans::metrics::DistCounter;
 use covermeans::tree::{CoverTree, CoverTreeParams};
 
@@ -51,9 +51,11 @@ fn main() {
         Algorithm::CoverMeans,
         Algorithm::Hybrid,
     ] {
-        let params = KMeansParams { algorithm: alg, ..KMeansParams::default() };
-        let mut ws = Workspace::new();
-        let r = kmeans::run(&data, &init, &params, &mut ws);
+        let r = KMeans::new(k)
+            .algorithm(alg)
+            .warm_start(init.clone())
+            .fit(&data)
+            .expect("valid configuration");
         if alg == Algorithm::Standard {
             standard = r.distances;
         }

@@ -1,0 +1,99 @@
+//! Early stopping on an inertia plateau — the stepwise/observer API.
+//!
+//! Exact k-means runs to the assignment fixpoint, but a practitioner
+//! often wants out as soon as the SSE curve flattens: the last few
+//! iterations shuffle a handful of points for a relative improvement of
+//! 1e-6 or less. This example runs the Hybrid algorithm twice on the same
+//! seed — once to convergence, once with an observer that stops when the
+//! relative SSE improvement stays below a threshold for `patience`
+//! consecutive iterations — and reports what the plateau rule saved. It
+//! also shows the raw `fit_step()` loop for custom drive-it-yourself
+//! schedules.
+//!
+//!     cargo run --release --example early_stop [scale]
+
+use covermeans::data::synth;
+use covermeans::kmeans::{Algorithm, KMeans, Signal, StepView};
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.005);
+    let data = synth::kdd04(scale, 11);
+    let k = 40;
+    println!(
+        "kdd04 analog (overlap-heavy, converges slowly): n={} d={} k={k}",
+        data.rows(),
+        data.cols()
+    );
+
+    // --- Run 1: exact convergence (the paper's protocol).
+    let full = KMeans::new(k)
+        .algorithm(Algorithm::Hybrid)
+        .seed(3)
+        .fit(&data)
+        .expect("valid configuration");
+    println!(
+        "\nto fixpoint  : {:>4} iters, {:>12} distances, sse {:.6e}",
+        full.iterations,
+        full.distances,
+        full.sse(&data)
+    );
+
+    // --- Run 2: observer stops on an inertia plateau.
+    let rel_tol = 1e-5;
+    let patience = 3usize;
+    let data_for_obs = data.clone();
+    let mut prev_sse = f64::INFINITY;
+    let mut flat = 0usize;
+    let early = KMeans::new(k)
+        .algorithm(Algorithm::Hybrid)
+        .seed(3)
+        .observer(move |view: &StepView<'_>| {
+            let sse = view.sse(&data_for_obs);
+            let rel = (prev_sse - sse) / prev_sse.max(f64::MIN_POSITIVE);
+            flat = if rel < rel_tol { flat + 1 } else { 0 };
+            prev_sse = sse;
+            if flat >= patience { Signal::Stop } else { Signal::Continue }
+        })
+        .fit(&data)
+        .expect("valid configuration");
+    println!(
+        "plateau stop : {:>4} iters, {:>12} distances, sse {:.6e}",
+        early.iterations,
+        early.distances,
+        early.sse(&data)
+    );
+    let sse_gap = (early.sse(&data) - full.sse(&data)) / full.sse(&data);
+    println!(
+        "saved {:.0}% of iterations for a {:.2e} relative SSE gap",
+        100.0 * (1.0 - early.iterations as f64 / full.iterations as f64),
+        sse_gap
+    );
+
+    // --- The same control, driven by hand with fit_step().
+    let mut fit = KMeans::new(k)
+        .algorithm(Algorithm::Shallot)
+        .seed(3)
+        .fit_step(&data)
+        .expect("valid configuration");
+    println!("\nstepwise drive (Shallot), one line per iteration:");
+    while let Some(info) = fit.step() {
+        println!(
+            "  iter {:>3}: {:>6} reassigned, {:>12} cumulative distances, max move {:.3e}",
+            info.iter, info.changed, info.distances, info.max_movement
+        );
+        if info.iter >= 5 && !info.done {
+            println!("  ... handing the rest to run-to-completion");
+            break;
+        }
+    }
+    let r = fit.run();
+    println!(
+        "final        : {:>4} iters, converged {}, sse {:.6e}",
+        r.iterations,
+        r.converged,
+        r.sse(&data)
+    );
+}

@@ -13,7 +13,7 @@
 //!     make artifacts && cargo run --release --example end_to_end
 
 use covermeans::data::synth;
-use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::kmeans::{self, Algorithm, KMeans, KMeansParams};
 use covermeans::metrics::DistCounter;
 use covermeans::runtime::{lloyd_xla, AssignExecutor};
 
@@ -82,9 +82,11 @@ fn main() -> anyhow::Result<()> {
     );
     let mut standard = 0u64;
     for alg in Algorithm::ALL {
-        let p = KMeansParams { algorithm: alg, ..params };
-        let mut ws = Workspace::new();
-        let r = kmeans::run(&data, &init, &p, &mut ws);
+        let r = KMeans::new(k)
+            .algorithm(alg)
+            .warm_start(init.clone())
+            .fit(&data)
+            .expect("valid configuration");
         if alg == Algorithm::Standard {
             standard = r.total_distances();
         }

@@ -1,10 +1,11 @@
 //! Quickstart: cluster a small synthetic dataset with every algorithm of
-//! the paper and print their relative cost — a 30-second tour of the API.
+//! the paper and print their relative cost — a 30-second tour of the
+//! fluent [`KMeans`] builder API.
 //!
 //!     cargo run --release --example quickstart
 
 use covermeans::data::synth;
-use covermeans::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use covermeans::kmeans::{self, Algorithm, KMeans};
 use covermeans::metrics::DistCounter;
 
 fn main() {
@@ -13,7 +14,8 @@ fn main() {
     let k = 50;
     println!("dataset: istanbul analog, n={} d={}, k={k}", data.rows(), data.cols());
 
-    // The paper's protocol: identical k-means++ centers for everyone.
+    // The paper's protocol: identical k-means++ centers for everyone —
+    // generated once and fed to each run via `warm_start`.
     let mut init_counter = DistCounter::new();
     let init = kmeans::init::kmeans_plus_plus(&data, k, 7, &mut init_counter);
 
@@ -23,9 +25,11 @@ fn main() {
     );
     let mut standard_dist = 0u64;
     for alg in Algorithm::ALL {
-        let params = KMeansParams { algorithm: alg, ..KMeansParams::default() };
-        let mut ws = Workspace::new();
-        let r = kmeans::run(&data, &init, &params, &mut ws);
+        let r = KMeans::new(k)
+            .algorithm(alg)
+            .warm_start(init.clone())
+            .fit(&data)
+            .expect("valid configuration");
         if alg == Algorithm::Standard {
             standard_dist = r.total_distances();
         }
@@ -42,6 +46,7 @@ fn main() {
     println!(
         "\nAll algorithms are exact: identical SSE, identical iterations.\n\
          The tree methods (Cover-means, Hybrid) also pay a one-off build cost\n\
-         included above; amortize it with kmeans::Workspace across restarts."
+         included above; amortize it across runs by holding a\n\
+         kmeans::Workspace and fitting with KMeans::fit_with."
     );
 }

@@ -76,7 +76,11 @@ impl RunConfig {
             "threads" => self.threads = v.parse().context("threads")?,
             "out_dir" => self.out_dir = v.to_string(),
             "max_iter" => self.params.max_iter = v.parse().context("max_iter")?,
+            "tol" => self.params.tol = v.parse().context("tol")?,
             "switch_at" => self.params.switch_at = v.parse().context("switch_at")?,
+            "mb_batch" => self.params.minibatch.batch = v.parse().context("mb_batch")?,
+            "mb_tol" => self.params.minibatch.tol = v.parse().context("mb_tol")?,
+            "mb_seed" => self.params.minibatch.seed = v.parse().context("mb_seed")?,
             "scale_factor" => {
                 self.params.cover.scale_factor = v.parse().context("scale_factor")?
             }
@@ -136,7 +140,11 @@ impl RunConfig {
         m.insert("threads", self.threads.to_string());
         m.insert("out_dir", self.out_dir.clone());
         m.insert("max_iter", self.params.max_iter.to_string());
+        m.insert("tol", self.params.tol.to_string());
         m.insert("switch_at", self.params.switch_at.to_string());
+        m.insert("mb_batch", self.params.minibatch.batch.to_string());
+        m.insert("mb_tol", self.params.minibatch.tol.to_string());
+        m.insert("mb_seed", self.params.minibatch.seed.to_string());
         m.insert("scale_factor", self.params.cover.scale_factor.to_string());
         m.insert("min_node_size", self.params.cover.min_node_size.to_string());
         m.insert("kd_leaf_size", self.params.kd.leaf_size.to_string());
@@ -175,13 +183,23 @@ mod tests {
         c.set("k", "42").unwrap();
         c.set("algorithms", "shallot, hybrid").unwrap();
         c.set("scale_factor", "1.3").unwrap();
+        c.set("tol", "1e-6").unwrap();
+        c.set("mb_batch", "256").unwrap();
+        c.set("mb_tol", "0.001").unwrap();
+        c.set("mb_seed", "99").unwrap();
         assert_eq!(c.dataset, "istanbul");
         assert_eq!(c.k, 42);
         assert_eq!(c.algorithms, vec![Algorithm::Shallot, Algorithm::Hybrid]);
         assert!((c.params.cover.scale_factor - 1.3).abs() < 1e-12);
+        assert!((c.params.tol - 1e-6).abs() < 1e-18);
+        assert_eq!(c.params.minibatch.batch, 256);
+        assert!((c.params.minibatch.tol - 0.001).abs() < 1e-12);
+        assert_eq!(c.params.minibatch.seed, 99);
         let dump = c.dump();
         assert!(dump.contains("dataset = istanbul"));
         assert!(dump.contains("algorithms = Shallot,Hybrid"));
+        assert!(dump.contains("mb_batch = 256"));
+        assert!(dump.contains("tol = 0.000001"));
     }
 
     #[test]

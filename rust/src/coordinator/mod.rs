@@ -26,7 +26,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::data::{registry, Matrix};
-use crate::kmeans::{self, Algorithm, KMeansParams, Workspace};
+use crate::kmeans::{self, Algorithm, AlgorithmSpec, KMeans, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, IterationLog};
 
 /// One experiment specification.
@@ -43,6 +43,13 @@ pub struct Experiment {
     pub params: KMeansParams,
     /// Reuse one workspace (tree) across all runs of a cell (Table 4).
     pub amortize_tree: bool,
+    /// Warm-started sweep restarts: with `ks` ascending, each restart of a
+    /// larger k starts from the same restart's previous-k solution,
+    /// extended to k centers by D² sampling
+    /// ([`kmeans::init::extend_centers`]), instead of a cold k-means++
+    /// seed. Off by default — it changes the optimization trajectory, so
+    /// the paper-replication protocols never enable it.
+    pub warm_restarts: bool,
     pub threads: usize,
 }
 
@@ -58,6 +65,7 @@ impl Experiment {
             data_seed: 1,
             params: KMeansParams::default(),
             amortize_tree: false,
+            warm_restarts: false,
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
         }
     }
@@ -198,7 +206,9 @@ fn run_cell(
 ) -> CellResult {
     let mut out = CellResult::default();
     let mut ws = Workspace::new();
-    let params = KMeansParams { algorithm: alg, ..exp.params };
+    let spec = AlgorithmSpec::from_params(alg, &exp.params);
+    // Previous-k solution per restart, for the warm-started sweep.
+    let mut prev_centers: Vec<Option<Matrix>> = vec![None; exp.restarts];
 
     for &k in &exp.ks {
         let k = k.min(data.rows());
@@ -206,14 +216,27 @@ fn run_cell(
             if !exp.amortize_tree {
                 ws = Workspace::new();
             }
+            // Init distances are charged to a separate counter (the paper
+            // generates each seed once, outside the per-algorithm cost).
             let mut init_counter = DistCounter::new();
-            let init = kmeans::init::kmeans_plus_plus(
-                data,
-                k,
-                init_seed(dataset, k, restart),
-                &mut init_counter,
-            );
-            let r = kmeans::run(data, &init, &params, &mut ws);
+            let seed = init_seed(dataset, k, restart);
+            let init = match &prev_centers[restart] {
+                Some(prev) if exp.warm_restarts && prev.rows() <= k => {
+                    kmeans::init::extend_centers(data, prev, k, seed, &mut init_counter)
+                }
+                _ => kmeans::init::kmeans_plus_plus(data, k, seed, &mut init_counter),
+            };
+            let builder = KMeans::new(k)
+                .algorithm(spec)
+                .max_iter(exp.params.max_iter)
+                .tol(exp.params.tol)
+                .warm_start(init);
+            // fit_with routes MiniBatch to its own runner and drives the
+            // exact algorithms through the stepwise fit_step_with loop.
+            let r = builder.fit_with(data, &mut ws).expect("validated shapes");
+            if exp.warm_restarts {
+                prev_centers[restart] = Some(r.centers.clone());
+            }
             out.distances += r.distances;
             out.build_dist += r.build_dist;
             out.time += r.time;
@@ -309,6 +332,27 @@ mod tests {
             .filter(|r| r.build_time > Duration::ZERO || r.build_dist > 0)
             .count();
         assert_eq!(builds, 1, "tree must be built exactly once");
+    }
+
+    #[test]
+    fn warm_restarts_reuse_previous_k() {
+        let mut exp = tiny_experiment();
+        exp.algorithms = vec![Algorithm::Hybrid];
+        exp.ks = vec![2, 4];
+        exp.restarts = 2;
+        exp.amortize_tree = true;
+        exp.warm_restarts = true;
+        let res = run_experiment(&exp, false).unwrap();
+        let cell = res.cell("blobs:200:3:4", Algorithm::Hybrid).unwrap();
+        assert_eq!(cell.runs.len(), 4);
+        for r in &cell.runs {
+            assert!(r.converged, "k={} restart={}", r.k, r.restart);
+            assert!(r.sse.is_finite() && r.sse >= 0.0);
+        }
+        // Warm-started k=4 refines the k=2 solutions: SSE must drop.
+        let sse2: f64 = cell.runs.iter().filter(|r| r.k == 2).map(|r| r.sse).sum();
+        let sse4: f64 = cell.runs.iter().filter(|r| r.k == 4).map(|r| r.sse).sum();
+        assert!(sse4 < sse2, "k=4 warm sse {sse4} vs k=2 sse {sse2}");
     }
 
     #[test]

@@ -29,6 +29,18 @@ pub fn table4(scale: f64, restarts: usize) -> Experiment {
     }
 }
 
+/// Table 4 variant with warm-started restarts: each restart of the next
+/// larger k continues from its previous-k solution, extended by D²
+/// sampling (`kmeans::init::extend_centers`). Faster sweeps at the cost
+/// of a different optimization trajectory than the paper's protocol —
+/// use for production k-selection, not table replication.
+pub fn table4_warm(scale: f64, restarts: usize) -> Experiment {
+    Experiment {
+        warm_restarts: true,
+        ..table4(scale, restarts)
+    }
+}
+
 /// The 16-point k grid of the Table 4 sweep (the paper chooses k by a
 /// quality heuristic afterwards; the grid spans the "medium to large
 /// k = 10..1000" range of §4).
@@ -135,6 +147,11 @@ mod tests {
         let t4 = table4(0.01, 10);
         assert_eq!(t4.ks.len(), 16);
         assert!(t4.amortize_tree);
+        assert!(!t4.warm_restarts, "paper protocol stays cold-started");
+
+        let t4w = table4_warm(0.01, 10);
+        assert!(t4w.warm_restarts);
+        assert!(t4w.amortize_tree);
 
         let f1 = fig1(0.01);
         assert_eq!(f1.ks, vec![400]);

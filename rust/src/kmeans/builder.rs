@@ -1,0 +1,424 @@
+//! The fluent front door: [`KMeans`] configures a run, validates it, and
+//! hands back either a finished [`RunResult`] (`fit`) or a stepwise
+//! [`Fit`] handle (`fit_step`).
+//!
+//! ```no_run
+//! use covermeans::data::synth;
+//! use covermeans::kmeans::{Algorithm, KMeans};
+//!
+//! let data = synth::istanbul(0.01, 42);
+//! let result = KMeans::new(50)
+//!     .algorithm(Algorithm::Hybrid)
+//!     .tol(1e-6)
+//!     .max_iter(200)
+//!     .seed(7)
+//!     .fit(&data)
+//!     .unwrap();
+//! assert!(result.converged);
+//! ```
+//!
+//! Per-algorithm knobs are typed: [`AlgorithmSpec`] carries exactly the
+//! parameters its variant consumes (cover tree construction for
+//! Cover-means, `switch_at` for Hybrid, batch/tol/seed for MiniBatch),
+//! replacing the flat [`KMeansParams`] bag and the bolted-on
+//! `MiniBatchParams` side channel.
+
+use std::fmt;
+
+use crate::data::Matrix;
+use crate::kmeans::driver::{Fit, Observer, Signal, StepView};
+use crate::kmeans::minibatch::MiniBatchParams;
+use crate::kmeans::{driver, init, minibatch, Algorithm, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, RunResult};
+use crate::tree::{CoverTreeParams, KdTreeParams};
+
+/// An algorithm plus the knobs *that algorithm* actually consumes.
+///
+/// `Algorithm` (the bare enum) converts into the spec with paper-default
+/// knobs, so `.algorithm(Algorithm::Hybrid)` and
+/// `.algorithm(AlgorithmSpec::Hybrid { cover, switch_at })` both work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlgorithmSpec {
+    Standard,
+    Elkan,
+    Hamerly,
+    Exponion,
+    Shallot,
+    Phillips,
+    Kanungo { kd: KdTreeParams },
+    PellegMoore { kd: KdTreeParams },
+    CoverMeans { cover: CoverTreeParams },
+    Hybrid { cover: CoverTreeParams, switch_at: usize },
+    MiniBatch { batch: usize, tol: f64, seed: u64 },
+}
+
+impl AlgorithmSpec {
+    /// The algorithm this spec configures.
+    pub fn kind(&self) -> Algorithm {
+        match self {
+            AlgorithmSpec::Standard => Algorithm::Standard,
+            AlgorithmSpec::Elkan => Algorithm::Elkan,
+            AlgorithmSpec::Hamerly => Algorithm::Hamerly,
+            AlgorithmSpec::Exponion => Algorithm::Exponion,
+            AlgorithmSpec::Shallot => Algorithm::Shallot,
+            AlgorithmSpec::Phillips => Algorithm::Phillips,
+            AlgorithmSpec::Kanungo { .. } => Algorithm::Kanungo,
+            AlgorithmSpec::PellegMoore { .. } => Algorithm::PellegMoore,
+            AlgorithmSpec::CoverMeans { .. } => Algorithm::CoverMeans,
+            AlgorithmSpec::Hybrid { .. } => Algorithm::Hybrid,
+            AlgorithmSpec::MiniBatch { .. } => Algorithm::MiniBatch,
+        }
+    }
+
+    /// Typed spec for `algorithm` with the knobs lifted out of a flat
+    /// parameter struct (migration path for config files / the CLI).
+    pub fn from_params(algorithm: Algorithm, p: &KMeansParams) -> AlgorithmSpec {
+        match algorithm {
+            Algorithm::Standard => AlgorithmSpec::Standard,
+            Algorithm::Elkan => AlgorithmSpec::Elkan,
+            Algorithm::Hamerly => AlgorithmSpec::Hamerly,
+            Algorithm::Exponion => AlgorithmSpec::Exponion,
+            Algorithm::Shallot => AlgorithmSpec::Shallot,
+            Algorithm::Phillips => AlgorithmSpec::Phillips,
+            Algorithm::Kanungo => AlgorithmSpec::Kanungo { kd: p.kd },
+            Algorithm::PellegMoore => AlgorithmSpec::PellegMoore { kd: p.kd },
+            Algorithm::CoverMeans => AlgorithmSpec::CoverMeans { cover: p.cover },
+            Algorithm::Hybrid => {
+                AlgorithmSpec::Hybrid { cover: p.cover, switch_at: p.switch_at }
+            }
+            Algorithm::MiniBatch => AlgorithmSpec::MiniBatch {
+                batch: p.minibatch.batch,
+                tol: p.minibatch.tol,
+                seed: p.minibatch.seed,
+            },
+        }
+    }
+
+    /// Fold the typed knobs into the flat legacy parameter struct.
+    pub(crate) fn apply(&self, p: &mut KMeansParams) {
+        p.algorithm = self.kind();
+        match *self {
+            AlgorithmSpec::Kanungo { kd } | AlgorithmSpec::PellegMoore { kd } => p.kd = kd,
+            AlgorithmSpec::CoverMeans { cover } => p.cover = cover,
+            AlgorithmSpec::Hybrid { cover, switch_at } => {
+                p.cover = cover;
+                p.switch_at = switch_at;
+            }
+            AlgorithmSpec::MiniBatch { batch, tol, seed } => {
+                p.minibatch = MiniBatchParams { batch, tol, seed };
+            }
+            _ => {}
+        }
+    }
+}
+
+impl From<Algorithm> for AlgorithmSpec {
+    fn from(a: Algorithm) -> AlgorithmSpec {
+        AlgorithmSpec::from_params(a, &KMeansParams::default())
+    }
+}
+
+/// Validation failures of a [`KMeans`] configuration, surfaced as values
+/// instead of the panics of the legacy `kmeans::run` asserts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KMeansError {
+    /// `k == 0`: no centers to fit.
+    ZeroK,
+    /// More centers than points.
+    KExceedsN { k: usize, n: usize },
+    /// Warm-start centers whose dimensionality differs from the data.
+    DimMismatch { expected: usize, got: usize },
+    /// Warm-start center count differs from the configured `k`.
+    WarmStartK { expected: usize, got: usize },
+    /// `fit_step` on an algorithm without exact stepwise semantics
+    /// (MiniBatch moves centers online inside its batch loop).
+    NotStepwise(Algorithm),
+}
+
+impl fmt::Display for KMeansError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KMeansError::ZeroK => write!(f, "k must be at least 1"),
+            KMeansError::KExceedsN { k, n } => {
+                write!(f, "more centers than points (k={k}, n={n})")
+            }
+            KMeansError::DimMismatch { expected, got } => {
+                write!(f, "center/data dimension mismatch (data d={expected}, centers d={got})")
+            }
+            KMeansError::WarmStartK { expected, got } => {
+                write!(f, "warm-start centers disagree with k (k={expected}, centers={got})")
+            }
+            KMeansError::NotStepwise(a) => {
+                write!(f, "{} has no exact stepwise iteration", a.name())
+            }
+        }
+    }
+}
+
+impl std::error::Error for KMeansError {}
+
+/// Fluent k-means configuration. See the [module docs](self) for the
+/// canonical chain; every setter returns `self`.
+pub struct KMeans {
+    k: usize,
+    spec: AlgorithmSpec,
+    max_iter: usize,
+    tol: f64,
+    seed: u64,
+    warm: Option<Matrix>,
+    observer: Option<Observer>,
+}
+
+impl KMeans {
+    /// Start configuring a fit with `k` clusters. Defaults: Standard
+    /// algorithm, `max_iter` 200, exact convergence (`tol` 0), seed 0.
+    pub fn new(k: usize) -> KMeans {
+        let d = KMeansParams::default();
+        KMeans {
+            k,
+            spec: AlgorithmSpec::Standard,
+            max_iter: d.max_iter,
+            tol: d.tol,
+            seed: 0,
+            warm: None,
+            observer: None,
+        }
+    }
+
+    /// Select the algorithm — a bare [`Algorithm`] for paper defaults, or
+    /// an [`AlgorithmSpec`] carrying tuned per-algorithm knobs.
+    pub fn algorithm(mut self, spec: impl Into<AlgorithmSpec>) -> Self {
+        self.spec = spec.into();
+        self
+    }
+
+    /// Iteration cap (the paper runs to convergence; this is a guard).
+    pub fn max_iter(mut self, max_iter: usize) -> Self {
+        self.max_iter = max_iter;
+        self
+    }
+
+    /// Convergence tolerance on the largest center movement. 0 (default)
+    /// keeps the paper's exact assignment-fixpoint criterion.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Seed for the k-means++ initialization (ignored under warm start).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Start from these centers instead of k-means++ — prior results,
+    /// sweep reuse, or an explicit shared init for cross-algorithm
+    /// comparisons. Must be `k x d`.
+    pub fn warm_start(mut self, centers: Matrix) -> Self {
+        self.warm = Some(centers);
+        self
+    }
+
+    /// Register a per-iteration observer (early stopping, telemetry).
+    /// Only exact algorithms have iteration boundaries to observe;
+    /// fitting MiniBatch with an observer returns
+    /// [`KMeansError::NotStepwise`].
+    pub fn observer<F>(mut self, f: F) -> Self
+    where
+        F: FnMut(&StepView<'_>) -> Signal + 'static,
+    {
+        self.observer = Some(Box::new(f));
+        self
+    }
+
+    /// The flat parameter struct this configuration folds down to.
+    pub fn params(&self) -> KMeansParams {
+        let mut p = KMeansParams {
+            max_iter: self.max_iter,
+            tol: self.tol,
+            ..KMeansParams::default()
+        };
+        self.spec.apply(&mut p);
+        p
+    }
+
+    /// Validate against `data` and produce the initial centers.
+    fn make_init(&mut self, data: &Matrix) -> Result<Matrix, KMeansError> {
+        if self.k == 0 {
+            return Err(KMeansError::ZeroK);
+        }
+        if self.k > data.rows() {
+            return Err(KMeansError::KExceedsN { k: self.k, n: data.rows() });
+        }
+        if let Some(warm) = self.warm.take() {
+            if warm.cols() != data.cols() {
+                return Err(KMeansError::DimMismatch {
+                    expected: data.cols(),
+                    got: warm.cols(),
+                });
+            }
+            if warm.rows() != self.k {
+                return Err(KMeansError::WarmStartK {
+                    expected: self.k,
+                    got: warm.rows(),
+                });
+            }
+            return Ok(warm);
+        }
+        // Init distances stay outside the run counters (paper protocol:
+        // identical seeds are generated once, not charged per algorithm).
+        let mut counter = DistCounter::new();
+        Ok(init::kmeans_plus_plus(data, self.k, self.seed, &mut counter))
+    }
+
+    /// Fit to completion with a fresh workspace.
+    pub fn fit(self, data: &Matrix) -> Result<RunResult, KMeansError> {
+        let mut ws = Workspace::new();
+        self.fit_with(data, &mut ws)
+    }
+
+    /// Fit to completion, reusing `ws`'s cached spatial indexes (the
+    /// Table 4 amortization protocol).
+    pub fn fit_with(mut self, data: &Matrix, ws: &mut Workspace) -> Result<RunResult, KMeansError> {
+        if let AlgorithmSpec::MiniBatch { .. } = self.spec {
+            if self.observer.is_some() {
+                // Mini-batch moves centers online inside its batch loop;
+                // there is no exact iteration boundary to observe. Error
+                // instead of silently never firing the callback.
+                return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
+            }
+            let params = self.params();
+            let init_c = self.make_init(data)?;
+            return Ok(minibatch::run(data, &init_c, &params, &params.minibatch));
+        }
+        let fit = self.fit_step_with(data, ws)?;
+        Ok(fit.run())
+    }
+
+    /// Begin a stepwise fit with a fresh workspace: returns a [`Fit`]
+    /// whose `step()` exposes every iteration boundary.
+    pub fn fit_step(self, data: &Matrix) -> Result<Fit<'_>, KMeansError> {
+        let mut ws = Workspace::new();
+        self.fit_step_with(data, &mut ws)
+    }
+
+    /// Begin a stepwise fit against a caller-owned workspace. The returned
+    /// handle borrows only `data`; the spatial index is shared out of the
+    /// workspace cache, so `ws` is free for the next run immediately.
+    pub fn fit_step_with<'a>(
+        mut self,
+        data: &'a Matrix,
+        ws: &mut Workspace,
+    ) -> Result<Fit<'a>, KMeansError> {
+        if let AlgorithmSpec::MiniBatch { .. } = self.spec {
+            return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
+        }
+        let params = self.params();
+        let init_c = self.make_init(data)?;
+        let (drv, build_dist, build_time) =
+            driver::new_driver(data, init_c.rows(), &params, ws);
+        Ok(Fit::from_driver(data, drv, &init_c, params.max_iter, params.tol)
+            .with_build_cost(build_dist, build_time)
+            .with_observer(self.observer.take()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn builder_validates_before_running() {
+        let data = synth::gaussian_blobs(50, 2, 2, 0.5, 1);
+        assert_eq!(KMeans::new(0).fit(&data).unwrap_err(), KMeansError::ZeroK);
+        assert_eq!(
+            KMeans::new(51).fit(&data).unwrap_err(),
+            KMeansError::KExceedsN { k: 51, n: 50 }
+        );
+        let bad_dim = Matrix::zeros(3, 5);
+        assert_eq!(
+            KMeans::new(3).warm_start(bad_dim).fit(&data).unwrap_err(),
+            KMeansError::DimMismatch { expected: 2, got: 5 }
+        );
+        let bad_k = Matrix::zeros(4, 2);
+        assert_eq!(
+            KMeans::new(3).warm_start(bad_k).fit(&data).unwrap_err(),
+            KMeansError::WarmStartK { expected: 3, got: 4 }
+        );
+        // Errors render human-readable messages.
+        assert!(KMeansError::ZeroK.to_string().contains("k"));
+    }
+
+    #[test]
+    fn spec_round_trips_algorithm_kind() {
+        for a in Algorithm::EXTENDED {
+            assert_eq!(AlgorithmSpec::from(a).kind(), a, "{}", a.name());
+        }
+    }
+
+    #[test]
+    fn builder_matches_legacy_run() {
+        let data = synth::istanbul(0.001, 5);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 12, 3, &mut dc);
+        for alg in [Algorithm::Standard, Algorithm::Elkan, Algorithm::CoverMeans] {
+            let params = KMeansParams { algorithm: alg, ..KMeansParams::default() };
+            let legacy =
+                crate::kmeans::run(&data, &init_c, &params, &mut Workspace::new());
+            let new = KMeans::new(12)
+                .algorithm(alg)
+                .warm_start(init_c.clone())
+                .fit(&data)
+                .unwrap();
+            assert_eq!(new.labels, legacy.labels, "{}", alg.name());
+            assert_eq!(new.iterations, legacy.iterations, "{}", alg.name());
+            assert_eq!(new.distances, legacy.distances, "{}", alg.name());
+        }
+    }
+
+    #[test]
+    fn minibatch_routes_tuned_config() {
+        let data = synth::gaussian_blobs(400, 3, 4, 0.4, 6);
+        // A 1-point batch with a huge tol converges almost immediately;
+        // the default (1024-point batch) runs far more distance evals. If
+        // the tuned config were dropped (the old side-channel bug), both
+        // runs would count the same.
+        let tiny = KMeans::new(4)
+            .algorithm(AlgorithmSpec::MiniBatch { batch: 1, tol: 1e-4, seed: 1 })
+            .max_iter(20)
+            .seed(2)
+            .fit(&data)
+            .unwrap();
+        let default = KMeans::new(4)
+            .algorithm(Algorithm::MiniBatch)
+            .max_iter(20)
+            .seed(2)
+            .fit(&data)
+            .unwrap();
+        assert!(
+            tiny.distances < default.distances,
+            "tuned batch size ignored: {} vs {}",
+            tiny.distances,
+            default.distances
+        );
+    }
+
+    #[test]
+    fn minibatch_has_no_stepwise_fit() {
+        let data = synth::gaussian_blobs(100, 2, 2, 0.5, 7);
+        let err = KMeans::new(2)
+            .algorithm(Algorithm::MiniBatch)
+            .fit_step(&data)
+            .unwrap_err();
+        assert_eq!(err, KMeansError::NotStepwise(Algorithm::MiniBatch));
+        // An observer on the mini-batch fit errors too, instead of being
+        // silently dropped.
+        let err = KMeans::new(2)
+            .algorithm(Algorithm::MiniBatch)
+            .observer(|_| crate::kmeans::Signal::Continue)
+            .fit(&data)
+            .unwrap_err();
+        assert_eq!(err, KMeansError::NotStepwise(Algorithm::MiniBatch));
+    }
+}

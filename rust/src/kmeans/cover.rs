@@ -23,10 +23,13 @@
 //! upper/lower bounds and second-nearest identity of Eqs. 15-18, which is
 //! what the Hybrid algorithm (§3.4) hands to Shallot.
 
+use std::sync::Arc;
+
 use crate::data::Matrix;
 use crate::kmeans::bounds::{CentroidAccum, InterCenter};
-use crate::kmeans::{KMeansParams, Workspace};
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, RunResult};
 use crate::tree::covertree::{CoverTree, Node};
 
 /// Mutable per-iteration view shared by the traversal.
@@ -388,68 +391,124 @@ fn assign_singleton(
     assign_point(ctx, pi, best.c, best.d, l, second_c);
 }
 
+/// One full Cover-means iteration: inter-center distances, then the tree
+/// assignment pass. Shared with the Hybrid driver's tree phase.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn iterate_pass(
+    data: &Matrix,
+    tree: &CoverTree,
+    centers: &Matrix,
+    labels: &mut [u32],
+    upper: &mut [f64],
+    lower: &mut [f64],
+    second: &mut [u32],
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+) -> usize {
+    let ic = InterCenter::compute(centers, dist);
+    assign_pass(data, tree, centers, &ic, labels, upper, lower, second, acc, dist)
+}
+
+/// The tree-at-once driver: the cover tree plus per-point labels and the
+/// Eqs. 15-18 hand-off bounds (kept fresh every pass as a by-product).
+pub(crate) struct CoverDriver<'a> {
+    data: &'a Matrix,
+    tree: Arc<CoverTree>,
+    labels: Vec<u32>,
+    upper: Vec<f64>,
+    lower: Vec<f64>,
+    second: Vec<u32>,
+}
+
+impl<'a> CoverDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, tree: Arc<CoverTree>) -> CoverDriver<'a> {
+        let n = data.rows();
+        CoverDriver {
+            data,
+            tree,
+            labels: vec![u32::MAX; n],
+            upper: vec![0.0f64; n],
+            lower: vec![0.0f64; n],
+            second: vec![0u32; n],
+        }
+    }
+
+    fn pass(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        iterate_pass(
+            self.data,
+            &self.tree,
+            centers,
+            &mut self.labels,
+            &mut self.upper,
+            &mut self.lower,
+            &mut self.second,
+            acc,
+            dist,
+        )
+    }
+}
+
+impl KMeansDriver for CoverDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::CoverMeans
+    }
+
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive Cover-means through the shared loop, reusing (or
+/// building) the workspace's cover tree.
 pub fn run(
     data: &Matrix,
     init: &Matrix,
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-
-    let fresh = ws
-        .cover
-        .as_ref()
-        .map(|t| t.params != params.cover)
-        .unwrap_or(true);
-    let tree = ws.cover_tree(data, params.cover);
+    let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
     let (build_dist, build_time) = if fresh {
         (tree.build_distances, tree.build_time)
     } else {
         (0, std::time::Duration::ZERO)
     };
-
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
-    let mut centers = init.clone();
-    let mut labels = vec![u32::MAX; n];
-    let mut upper = vec![0.0f64; n];
-    let mut lower = vec![0.0f64; n];
-    let mut second = vec![0u32; n];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
-
-    for iter in 1..=params.max_iter {
-        iterations = iter;
-        let ic = InterCenter::compute(&centers, &mut dist);
-        acc.clear();
-        let changed = assign_pass(
-            data, tree, &centers, &ic, &mut labels, &mut upper, &mut lower,
-            &mut second, &mut acc, &mut dist,
-        );
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
-    }
-
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist,
-        time: sw.elapsed(),
-        build_time,
-        log,
-        converged,
-    }
+    Fit::from_driver(
+        data,
+        Box::new(CoverDriver::new(data, tree)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .with_build_cost(build_dist, build_time)
+    .run()
 }
 
 #[cfg(test)]

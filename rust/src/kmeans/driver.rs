@@ -1,0 +1,479 @@
+//! The unified per-iteration driver behind every exact algorithm.
+//!
+//! The paper's family (§2-3) shares one outer loop — assign, recompute the
+//! means (Eq. 2), check the assignment fixpoint — and differs only in *how*
+//! each assignment pass prunes distance computations. This module makes
+//! that structure literal:
+//!
+//! * [`KMeansDriver`] — the per-iteration strategy: `init_state` seeds the
+//!   per-point state (iteration 1, conventionally a full scan or a tree
+//!   pass), `iterate` runs one pruned assignment pass, `post_update` is the
+//!   bound-maintenance hook after the centers moved, `finish` yields the
+//!   final labels.
+//! * [`Fit`] — the shared outer loop as a stepwise handle: it owns the
+//!   centers, the [`CentroidAccum`], the [`DistCounter`], convergence
+//!   checking (fixpoint, optional movement tolerance, iteration cap) and
+//!   the per-iteration log. `step()` advances one iteration and returns a
+//!   [`StepInfo`]; `run()` drives to completion, consulting the registered
+//!   [`Observer`] after every iteration (early stopping, telemetry).
+//!
+//! Exactness invariant: driving any exact algorithm through this loop
+//! replicates the pre-refactor per-algorithm loops byte-for-byte — same
+//! assignment sequence, same distance counts (`rust/tests/exactness.rs`).
+
+use std::time::Duration;
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::CentroidAccum;
+use crate::kmeans::{
+    cover, elkan, exponion, hamerly, hybrid, kanungo, lloyd, pelleg, phillips,
+    shallot, Algorithm, KMeansParams, Workspace,
+};
+use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+/// Per-iteration strategy of one exact k-means variant.
+///
+/// The shared outer loop ([`Fit`]) owns the centers, the accumulator,
+/// convergence checking and iteration logging; a driver owns the per-point
+/// state (labels, stored bounds, spatial index) and implements the
+/// assignment passes. Implementations must uphold the exactness contract:
+/// every pass assigns each point to its true nearest center (ties to the
+/// lowest index).
+pub trait KMeansDriver {
+    /// Which algorithm this driver implements (display / reporting).
+    fn algorithm(&self) -> Algorithm;
+
+    /// Iteration 1: seed the per-point state with a first assignment pass
+    /// against `centers`, filling `acc`. Returns the number of points
+    /// whose assignment changed (conventionally `n`).
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize;
+
+    /// Iterations 2..: one pruned assignment pass. Same contract as
+    /// [`KMeansDriver::init_state`].
+    fn iterate(
+        &mut self,
+        iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize;
+
+    /// Bound maintenance after the outer loop recomputed the centers;
+    /// `movement` holds the per-center movement distances (§2.2). Default:
+    /// no stored bounds, nothing to maintain.
+    fn post_update(&mut self, _iter: usize, _movement: &[f64]) {}
+
+    /// Current assignment (valid after `init_state`).
+    fn labels(&self) -> &[u32];
+
+    /// Consume the driver, yielding the final labels without cloning.
+    fn finish(self: Box<Self>) -> Vec<u32>;
+}
+
+/// Observer verdict after an iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    Continue,
+    /// Halt after this iteration; the run keeps whatever `converged`
+    /// status the loop itself established.
+    Stop,
+}
+
+/// The numbers of one completed iteration, returned by [`Fit::step`] and
+/// embedded in the observer's [`StepView`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    /// 1-based iteration index.
+    pub iter: usize,
+    /// Points whose assignment changed this iteration.
+    pub changed: usize,
+    /// Cumulative counted distance computations (excludes tree build).
+    pub distances: u64,
+    /// Largest per-center movement of this iteration's recomputation.
+    pub max_movement: f64,
+    /// Assignment fixpoint (or movement tolerance) reached.
+    pub converged: bool,
+    /// No further iterations will run (fixpoint, tolerance, or cap).
+    pub done: bool,
+}
+
+/// What an observer sees after each iteration: the numbers plus the state
+/// needed for early-stopping decisions and sweep-time center reuse.
+pub struct StepView<'v> {
+    pub info: StepInfo,
+    /// Centers *after* this iteration's recomputation.
+    pub centers: &'v Matrix,
+    /// Assignment produced by this iteration.
+    pub labels: &'v [u32],
+}
+
+impl StepView<'_> {
+    /// SSE of this snapshot against `data` (uncounted evaluation work;
+    /// labels predate the center recomputation, so this is the standard
+    /// post-assignment inertia practitioners plot per iteration).
+    pub fn sse(&self, data: &Matrix) -> f64 {
+        crate::metrics::sse(data, self.labels, self.centers)
+    }
+}
+
+/// Per-iteration callback; return [`Signal::Stop`] to end the run early.
+pub type Observer = Box<dyn FnMut(&StepView<'_>) -> Signal>;
+
+/// A stepwise k-means run: the shared outer loop with the iteration
+/// boundary exposed. Construct via [`crate::kmeans::KMeans::fit_step`] (or
+/// [`Fit::from_driver`] for a custom [`KMeansDriver`]), then either call
+/// [`Fit::step`] yourself or [`Fit::run`] to completion.
+pub struct Fit<'a> {
+    data: &'a Matrix,
+    driver: Box<dyn KMeansDriver + 'a>,
+    centers: Matrix,
+    acc: CentroidAccum,
+    movement: Vec<f64>,
+    dist: DistCounter,
+    log: IterationLog,
+    sw: Stopwatch,
+    iter: usize,
+    max_iter: usize,
+    tol: f64,
+    converged: bool,
+    done: bool,
+    build_dist: u64,
+    build_time: Duration,
+    observer: Option<Observer>,
+}
+
+impl<'a> Fit<'a> {
+    /// Assemble a stepwise run from an explicit driver. Exposed so custom
+    /// `KMeansDriver` implementations can reuse the shared outer loop.
+    pub fn from_driver(
+        data: &'a Matrix,
+        driver: Box<dyn KMeansDriver + 'a>,
+        init: &Matrix,
+        max_iter: usize,
+        tol: f64,
+    ) -> Fit<'a> {
+        let k = init.rows();
+        Fit {
+            data,
+            driver,
+            centers: init.clone(),
+            acc: CentroidAccum::new(k, init.cols()),
+            movement: Vec::with_capacity(k),
+            dist: DistCounter::new(),
+            log: IterationLog::new(),
+            sw: Stopwatch::start(),
+            iter: 0,
+            max_iter,
+            tol,
+            converged: false,
+            done: max_iter == 0,
+            build_dist: 0,
+            build_time: Duration::ZERO,
+            observer: None,
+        }
+    }
+
+    pub(crate) fn with_build_cost(mut self, build_dist: u64, build_time: Duration) -> Self {
+        self.build_dist = build_dist;
+        self.build_time = build_time;
+        self
+    }
+
+    pub(crate) fn with_observer(mut self, observer: Option<Observer>) -> Self {
+        self.observer = observer;
+        self
+    }
+
+    /// Advance one iteration: assignment pass, center recomputation, bound
+    /// maintenance, convergence check, observer consultation. Returns
+    /// `None` once the run is done (fixpoint, tolerance, cap, or observer
+    /// stop) — so a manual `while fit.step().is_some() {}` drive honors
+    /// the registered observer exactly like [`Fit::run`] does.
+    pub fn step(&mut self) -> Option<StepInfo> {
+        if self.done {
+            return None;
+        }
+        self.iter += 1;
+        self.acc.clear();
+        let changed = if self.iter == 1 {
+            self.driver.init_state(&self.centers, &mut self.acc, &mut self.dist)
+        } else {
+            self.driver.iterate(self.iter, &self.centers, &mut self.acc, &mut self.dist)
+        };
+        self.acc.update_centers(&mut self.centers, &mut self.dist, &mut self.movement);
+        self.driver.post_update(self.iter, &self.movement);
+        self.log.push(self.iter, self.dist.count(), self.sw.elapsed(), changed);
+        let max_movement = self.movement.iter().fold(0.0f64, |a, &b| a.max(b));
+        // Fixpoint is the paper's criterion; the movement tolerance is an
+        // opt-in addition (tol = 0 preserves exact replication).
+        if changed == 0 || (self.tol > 0.0 && max_movement <= self.tol) {
+            self.converged = true;
+        }
+        if self.converged || self.iter >= self.max_iter {
+            self.done = true;
+        }
+        let mut info = StepInfo {
+            iter: self.iter,
+            changed,
+            distances: self.dist.count(),
+            max_movement,
+            converged: self.converged,
+            done: self.done,
+        };
+        if let Some(mut obs) = self.observer.take() {
+            let view = StepView {
+                info,
+                centers: &self.centers,
+                labels: self.driver.labels(),
+            };
+            let signal = obs(&view);
+            self.observer = Some(obs);
+            if signal == Signal::Stop {
+                self.done = true;
+                info.done = true;
+            }
+        }
+        Some(info)
+    }
+
+    /// Drive to completion (the observer, if any, is consulted inside
+    /// every [`Fit::step`]).
+    pub fn run(mut self) -> RunResult {
+        while self.step().is_some() {}
+        self.finish()
+    }
+
+    /// Seal the run into a [`RunResult`] (callable at any iteration
+    /// boundary after the first step — iteration 1 produces the first
+    /// valid assignment; before it, labels are the unassigned sentinel).
+    pub fn finish(self) -> RunResult {
+        RunResult {
+            labels: self.driver.finish(),
+            centers: self.centers,
+            iterations: self.iter,
+            distances: self.dist.count(),
+            build_dist: self.build_dist,
+            time: self.sw.elapsed(),
+            build_time: self.build_time,
+            log: self.log,
+            converged: self.converged,
+        }
+    }
+
+    /// The algorithm being driven.
+    pub fn algorithm(&self) -> Algorithm {
+        self.driver.algorithm()
+    }
+
+    /// Centers after the last completed iteration.
+    pub fn centers(&self) -> &Matrix {
+        &self.centers
+    }
+
+    /// Assignment after the last completed iteration. Valid once the
+    /// first step ran; before that, tree-based drivers report the
+    /// `u32::MAX` unassigned sentinel.
+    pub fn labels(&self) -> &[u32] {
+        self.driver.labels()
+    }
+
+    /// Completed iterations so far.
+    pub fn iterations(&self) -> usize {
+        self.iter
+    }
+
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Cumulative counted distances (excludes tree construction).
+    pub fn distances(&self) -> u64 {
+        self.dist.count()
+    }
+
+    /// Current inertia (SSE) of the snapshot, or `f64::INFINITY` before
+    /// the first step produced an assignment.
+    pub fn sse(&self) -> f64 {
+        if self.iter == 0 {
+            return f64::INFINITY;
+        }
+        crate::metrics::sse(self.data, self.driver.labels(), &self.centers)
+    }
+}
+
+/// Construct the driver for `params.algorithm`, charging a fresh tree
+/// build (when the workspace misses) to the returned build cost pair.
+/// Panics on [`Algorithm::MiniBatch`], which is approximate and does not
+/// run the exact outer loop.
+pub(crate) fn new_driver<'a>(
+    data: &'a Matrix,
+    k: usize,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> (Box<dyn KMeansDriver + 'a>, u64, Duration) {
+    match params.algorithm {
+        Algorithm::Standard => (Box::new(lloyd::LloydDriver::new(data)), 0, Duration::ZERO),
+        Algorithm::Elkan => (Box::new(elkan::ElkanDriver::new(data, k)), 0, Duration::ZERO),
+        Algorithm::Hamerly => {
+            (Box::new(hamerly::HamerlyDriver::new(data)), 0, Duration::ZERO)
+        }
+        Algorithm::Exponion => {
+            (Box::new(exponion::ExponionDriver::new(data, k)), 0, Duration::ZERO)
+        }
+        Algorithm::Shallot => {
+            (Box::new(shallot::ShallotDriver::new(data, k)), 0, Duration::ZERO)
+        }
+        Algorithm::Phillips => {
+            (Box::new(phillips::PhillipsDriver::new(data)), 0, Duration::ZERO)
+        }
+        Algorithm::Kanungo => {
+            let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
+            let bt = if fresh { tree.build_time } else { Duration::ZERO };
+            (Box::new(kanungo::KanungoDriver::new(data, tree)), 0, bt)
+        }
+        Algorithm::PellegMoore => {
+            let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
+            let bt = if fresh { tree.build_time } else { Duration::ZERO };
+            (Box::new(pelleg::PellegDriver::new(data, tree)), 0, bt)
+        }
+        Algorithm::CoverMeans => {
+            let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
+            let (bd, bt) = if fresh {
+                (tree.build_distances, tree.build_time)
+            } else {
+                (0, Duration::ZERO)
+            };
+            (Box::new(cover::CoverDriver::new(data, tree)), bd, bt)
+        }
+        Algorithm::Hybrid => {
+            let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
+            let (bd, bt) = if fresh {
+                (tree.build_distances, tree.build_time)
+            } else {
+                (0, Duration::ZERO)
+            };
+            (
+                Box::new(hybrid::HybridDriver::new(data, tree, params.switch_at)),
+                bd,
+                bt,
+            )
+        }
+        Algorithm::MiniBatch => {
+            unreachable!("mini-batch is approximate; it does not use the exact driver loop")
+        }
+    }
+}
+
+/// One-shot runner over the shared loop — the engine behind the legacy
+/// free-function shims (`kmeans::run` and the per-module `run`s).
+pub(crate) fn run_exact(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> RunResult {
+    let (driver, build_dist, build_time) = new_driver(data, init.rows(), params, ws);
+    Fit::from_driver(data, driver, init, params.max_iter, params.tol)
+        .with_build_cost(build_dist, build_time)
+        .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, KMeans};
+    use crate::metrics::DistCounter;
+
+    fn blobs_and_init() -> (Matrix, Matrix) {
+        let data = synth::gaussian_blobs(300, 3, 4, 0.6, 41);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 4, 9, &mut dc);
+        (data, init_c)
+    }
+
+    #[test]
+    fn stepwise_equals_one_shot() {
+        let (data, init_c) = blobs_and_init();
+        for alg in [Algorithm::Standard, Algorithm::Shallot, Algorithm::Hybrid] {
+            let params = KMeansParams { algorithm: alg, ..KMeansParams::default() };
+            let one = run_exact(&data, &init_c, &params, &mut Workspace::new());
+            let (driver, bd, bt) =
+                new_driver(&data, init_c.rows(), &params, &mut Workspace::new());
+            let mut fit = Fit::from_driver(&data, driver, &init_c, params.max_iter, 0.0)
+                .with_build_cost(bd, bt);
+            while fit.step().is_some() {}
+            let stepped = fit.finish();
+            assert_eq!(stepped.labels, one.labels, "{}", alg.name());
+            assert_eq!(stepped.iterations, one.iterations, "{}", alg.name());
+            assert_eq!(stepped.distances, one.distances, "{}", alg.name());
+            assert_eq!(stepped.converged, one.converged, "{}", alg.name());
+        }
+    }
+
+    #[test]
+    fn observer_sees_every_iteration_and_can_stop() {
+        let (data, init_c) = blobs_and_init();
+        let baseline = run_exact(
+            &data,
+            &init_c,
+            &KMeansParams::default(),
+            &mut Workspace::new(),
+        );
+        assert!(baseline.iterations > 2, "need a multi-iteration run");
+
+        let seen = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let seen2 = seen.clone();
+        let r = KMeans::new(4)
+            .warm_start(init_c.clone())
+            .observer(move |view: &StepView<'_>| {
+                seen2.borrow_mut().push(view.info.iter);
+                if view.info.iter == 2 { Signal::Stop } else { Signal::Continue }
+            })
+            .fit(&data)
+            .unwrap();
+        assert_eq!(r.iterations, 2, "observer stop must halt the loop");
+        assert!(!r.converged);
+        assert_eq!(*seen.borrow(), vec![1, 2]);
+    }
+
+    #[test]
+    fn tol_stops_before_fixpoint() {
+        let (data, init_c) = blobs_and_init();
+        let exact = run_exact(
+            &data,
+            &init_c,
+            &KMeansParams::default(),
+            &mut Workspace::new(),
+        );
+        let loose = run_exact(
+            &data,
+            &init_c,
+            &KMeansParams { tol: 1e9, ..KMeansParams::default() },
+            &mut Workspace::new(),
+        );
+        assert!(loose.converged);
+        assert!(loose.iterations <= exact.iterations);
+        assert_eq!(loose.iterations, 1, "huge tol stops after one iteration");
+    }
+
+    #[test]
+    fn max_iter_zero_runs_nothing() {
+        let (data, init_c) = blobs_and_init();
+        let params = KMeansParams { max_iter: 0, ..KMeansParams::default() };
+        let r = run_exact(&data, &init_c, &params, &mut Workspace::new());
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.distances, 0);
+        assert!(!r.converged);
+        assert!(r.log.is_empty());
+    }
+}

@@ -6,34 +6,51 @@
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{CentroidAccum, InterCenter};
-use crate::kmeans::KMeansParams;
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::metrics::{DistCounter, RunResult};
 
-pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
+/// Stored-bounds driver: `u` per point, `l` per (point, center).
+pub(crate) struct ElkanDriver<'a> {
+    data: &'a Matrix,
+    k: usize,
+    labels: Vec<u32>,
+    upper: Vec<f64>,
+    /// Row-major n x k lower bounds.
+    lower: Vec<f64>,
+}
 
-    let mut centers = init.clone();
-    let mut labels = vec![0u32; n];
-    let mut upper = vec![0.0f64; n];
-    // Row-major n x k lower bounds.
-    let mut lower = vec![0.0f64; n * k];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
+impl<'a> ElkanDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, k: usize) -> ElkanDriver<'a> {
+        let n = data.rows();
+        ElkanDriver {
+            data,
+            k,
+            labels: vec![0u32; n],
+            upper: vec![0.0f64; n],
+            lower: vec![0.0f64; n * k],
+        }
+    }
+}
 
-    // --- Iteration 1: full scan, seed all bounds (paper §2.2: the first
-    // iteration is as expensive as the Standard algorithm).
-    {
-        acc.clear();
+impl KMeansDriver for ElkanDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Elkan
+    }
+
+    /// Iteration 1: full scan, seed all bounds (paper §2.2: the first
+    /// iteration is as expensive as the Standard algorithm).
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let n = self.data.rows();
+        let k = self.k;
         for i in 0..n {
-            let p = data.row(i);
-            let lrow = &mut lower[i * k..(i + 1) * k];
+            let p = self.data.row(i);
+            let lrow = &mut self.lower[i * k..(i + 1) * k];
             let mut best = 0u32;
             let mut best_d = f64::INFINITY;
             for c in 0..k {
@@ -44,81 +61,90 @@ pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
                     best = c as u32;
                 }
             }
-            labels[i] = best;
-            upper[i] = best_d;
+            self.labels[i] = best;
+            self.upper[i] = best_d;
             acc.add_point(best as usize, p);
         }
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        update_bounds(&mut upper, &mut lower, &labels, &movement, k);
-        iterations = 1;
-        log.push(1, dist.count(), sw.elapsed(), n);
+        n
     }
 
-    for iter in 2..=params.max_iter {
-        iterations = iter;
-        let ic = InterCenter::compute(&centers, &mut dist);
-        acc.clear();
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let n = self.data.rows();
+        let k = self.k;
+        let ic = InterCenter::compute(centers, dist);
         let mut changed = 0usize;
 
         for i in 0..n {
-            let p = data.row(i);
-            let mut a = labels[i] as usize;
+            let p = self.data.row(i);
+            let mut a = self.labels[i] as usize;
             // Global filter: u <= s(a) means no other center can win.
-            if upper[i] > ic.s[a] {
-                let lrow = &mut lower[i * k..(i + 1) * k];
+            if self.upper[i] > ic.s[a] {
+                let lrow = &mut self.lower[i * k..(i + 1) * k];
                 let mut tight = false;
                 for j in 0..k {
                     if j == a {
                         continue;
                     }
                     // Elkan's two per-center filters (Eqs. 4-5).
-                    if upper[i] <= lrow[j] || upper[i] <= 0.5 * ic.d(a, j) {
+                    if self.upper[i] <= lrow[j] || self.upper[i] <= 0.5 * ic.d(a, j) {
                         continue;
                     }
                     if !tight {
                         // Tighten the upper bound to the true distance.
-                        upper[i] = dist.d(p, centers.row(a));
-                        lrow[a] = upper[i];
+                        self.upper[i] = dist.d(p, centers.row(a));
+                        lrow[a] = self.upper[i];
                         tight = true;
-                        if upper[i] <= lrow[j] || upper[i] <= 0.5 * ic.d(a, j) {
+                        if self.upper[i] <= lrow[j] || self.upper[i] <= 0.5 * ic.d(a, j)
+                        {
                             continue;
                         }
                     }
                     let dj = dist.d(p, centers.row(j));
                     lrow[j] = dj;
-                    if dj < upper[i] {
+                    if dj < self.upper[i] {
                         a = j;
-                        upper[i] = dj;
+                        self.upper[i] = dj;
                     }
                 }
             }
-            if labels[i] != a as u32 {
-                labels[i] = a as u32;
+            if self.labels[i] != a as u32 {
+                self.labels[i] = a as u32;
                 changed += 1;
             }
             acc.add_point(a, p);
         }
-
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        update_bounds(&mut upper, &mut lower, &labels, &movement, k);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
+        changed
     }
 
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist: 0,
-        time: sw.elapsed(),
-        build_time: std::time::Duration::ZERO,
-        log,
-        converged,
+    fn post_update(&mut self, _iter: usize, movement: &[f64]) {
+        update_bounds(&mut self.upper, &mut self.lower, &self.labels, movement, self.k);
     }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive Elkan through the shared loop.
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    Fit::from_driver(
+        data,
+        Box::new(ElkanDriver::new(data, init.rows())),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .run()
 }
 
 /// Bound maintenance after the means moved (paper §2.2): the upper bound

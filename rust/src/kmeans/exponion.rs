@@ -12,70 +12,83 @@
 //! bound for them.
 
 use crate::data::Matrix;
-use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::bounds::{nearest_two, CentroidAccum, InterCenter};
+use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::hamerly::update_bounds;
-use crate::kmeans::KMeansParams;
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::metrics::{DistCounter, RunResult};
 
-pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
+/// Hamerly bounds plus lazily-built sorted neighbor lists per iteration.
+pub(crate) struct ExponionDriver<'a> {
+    data: &'a Matrix,
+    labels: Vec<u32>,
+    upper: Vec<f64>,
+    lower: Vec<f64>,
+    neighbors: Vec<Option<Vec<(f64, u32)>>>,
+}
 
-    let mut centers = init.clone();
-    let mut labels = vec![0u32; n];
-    let mut upper = vec![0.0f64; n];
-    let mut lower = vec![0.0f64; n];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
-
-    // Iteration 1: full scan (identical to Hamerly).
-    {
-        acc.clear();
-        for i in 0..n {
-            let p = data.row(i);
-            let (c1, d1, _c2, d2) =
-                crate::kmeans::bounds::nearest_two(p, &centers, &mut dist);
-            labels[i] = c1;
-            upper[i] = d1;
-            lower[i] = d2;
-            acc.add_point(c1 as usize, p);
+impl<'a> ExponionDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, k: usize) -> ExponionDriver<'a> {
+        let n = data.rows();
+        ExponionDriver {
+            data,
+            labels: vec![0u32; n],
+            upper: vec![0.0f64; n],
+            lower: vec![0.0f64; n],
+            neighbors: vec![None; k],
         }
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        update_bounds(&mut upper, &mut lower, &labels, &movement);
-        iterations = 1;
-        log.push(1, dist.count(), sw.elapsed(), n);
+    }
+}
+
+impl KMeansDriver for ExponionDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Exponion
     }
 
-    // Lazily-built per-center sorted neighbor lists, valid one iteration.
-    let mut neighbors: Vec<Option<Vec<(f64, u32)>>> = vec![None; k];
+    /// Iteration 1: full scan (identical to Hamerly).
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let n = self.data.rows();
+        for i in 0..n {
+            let p = self.data.row(i);
+            let (c1, d1, _c2, d2) = nearest_two(p, centers, dist);
+            self.labels[i] = c1;
+            self.upper[i] = d1;
+            self.lower[i] = d2;
+            acc.add_point(c1 as usize, p);
+        }
+        n
+    }
 
-    for iter in 2..=params.max_iter {
-        iterations = iter;
-        let ic = InterCenter::compute(&centers, &mut dist);
-        for nb in neighbors.iter_mut() {
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let ic = InterCenter::compute(centers, dist);
+        for nb in self.neighbors.iter_mut() {
             *nb = None;
         }
-        acc.clear();
         let mut changed = 0usize;
 
-        for i in 0..n {
-            let p = data.row(i);
-            let a = labels[i] as usize;
-            let m = ic.s[a].max(lower[i]);
-            if upper[i] > m {
-                upper[i] = dist.d(p, centers.row(a));
-                if upper[i] > m {
+        for i in 0..self.data.rows() {
+            let p = self.data.row(i);
+            let a = self.labels[i] as usize;
+            let m = ic.s[a].max(self.lower[i]);
+            if self.upper[i] > m {
+                self.upper[i] = dist.d(p, centers.row(a));
+                if self.upper[i] > m {
                     // Annulus search around c_a.
-                    let u = upper[i];
+                    let u = self.upper[i];
                     let delta = 2.0 * ic.s[a]; // d(c_a, nearest other)
                     let radius = 2.0 * u + delta;
-                    let nb = neighbors[a]
+                    let nb = self.neighbors[a]
                         .get_or_insert_with(|| ic.sorted_neighbors(a));
 
                     let mut c1 = a as u32;
@@ -100,37 +113,42 @@ pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
                     let _ = c2;
                     // Excluded centers are farther than radius - u.
                     let excluded_lb = radius - u;
-                    if c1 != labels[i] {
-                        labels[i] = c1;
+                    if c1 != self.labels[i] {
+                        self.labels[i] = c1;
                         changed += 1;
                     }
-                    upper[i] = d1;
-                    lower[i] = d2.min(excluded_lb);
+                    self.upper[i] = d1;
+                    self.lower[i] = d2.min(excluded_lb);
                 }
             }
-            acc.add_point(labels[i] as usize, p);
+            acc.add_point(self.labels[i] as usize, p);
         }
-
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        update_bounds(&mut upper, &mut lower, &labels, &movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
+        changed
     }
 
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist: 0,
-        time: sw.elapsed(),
-        build_time: std::time::Duration::ZERO,
-        log,
-        converged,
+    fn post_update(&mut self, _iter: usize, movement: &[f64]) {
+        update_bounds(&mut self.upper, &mut self.lower, &self.labels, movement);
     }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive Exponion through the shared loop.
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    Fit::from_driver(
+        data,
+        Box::new(ExponionDriver::new(data, init.rows())),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .run()
 }
 
 #[cfg(test)]

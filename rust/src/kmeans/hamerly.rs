@@ -6,90 +6,109 @@
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{nearest_two, CentroidAccum, InterCenter};
-use crate::kmeans::KMeansParams;
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::metrics::{DistCounter, RunResult};
 
-pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
+/// Merged-bounds driver: `(u, l)` per point.
+pub(crate) struct HamerlyDriver<'a> {
+    data: &'a Matrix,
+    labels: Vec<u32>,
+    upper: Vec<f64>,
+    lower: Vec<f64>,
+}
 
-    let mut centers = init.clone();
-    let mut labels = vec![0u32; n];
-    let mut upper = vec![0.0f64; n];
-    let mut lower = vec![0.0f64; n];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
+impl<'a> HamerlyDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix) -> HamerlyDriver<'a> {
+        let n = data.rows();
+        HamerlyDriver {
+            data,
+            labels: vec![0u32; n],
+            upper: vec![0.0f64; n],
+            lower: vec![0.0f64; n],
+        }
+    }
+}
 
-    // Iteration 1: full scan seeds u = d1, l = d2.
-    {
-        acc.clear();
+impl KMeansDriver for HamerlyDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Hamerly
+    }
+
+    /// Iteration 1: full scan seeds u = d1, l = d2.
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let n = self.data.rows();
         for i in 0..n {
-            let p = data.row(i);
-            let (c1, d1, _c2, d2) = nearest_two(p, &centers, &mut dist);
-            labels[i] = c1;
-            upper[i] = d1;
-            lower[i] = d2;
+            let p = self.data.row(i);
+            let (c1, d1, _c2, d2) = nearest_two(p, centers, dist);
+            self.labels[i] = c1;
+            self.upper[i] = d1;
+            self.lower[i] = d2;
             acc.add_point(c1 as usize, p);
         }
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        update_bounds(&mut upper, &mut lower, &labels, &movement);
-        iterations = 1;
-        log.push(1, dist.count(), sw.elapsed(), n);
+        n
     }
 
-    for iter in 2..=params.max_iter {
-        iterations = iter;
-        let ic = InterCenter::compute(&centers, &mut dist);
-        acc.clear();
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let ic = InterCenter::compute(centers, dist);
         let mut changed = 0usize;
-
-        for i in 0..n {
-            let p = data.row(i);
-            let a = labels[i] as usize;
-            let m = ic.s[a].max(lower[i]);
-            if upper[i] > m {
+        for i in 0..self.data.rows() {
+            let p = self.data.row(i);
+            let a = self.labels[i] as usize;
+            let m = ic.s[a].max(self.lower[i]);
+            if self.upper[i] > m {
                 // Tighten u to the true distance and re-test.
-                upper[i] = dist.d(p, centers.row(a));
-                if upper[i] > m {
+                self.upper[i] = dist.d(p, centers.row(a));
+                if self.upper[i] > m {
                     // Full rescan: recompute the two nearest centers.
-                    let (c1, d1, _c2, d2) = nearest_two(p, &centers, &mut dist);
-                    if c1 != labels[i] {
-                        labels[i] = c1;
+                    let (c1, d1, _c2, d2) = nearest_two(p, centers, dist);
+                    if c1 != self.labels[i] {
+                        self.labels[i] = c1;
                         changed += 1;
                     }
-                    upper[i] = d1;
-                    lower[i] = d2;
+                    self.upper[i] = d1;
+                    self.lower[i] = d2;
                 }
             }
-            acc.add_point(labels[i] as usize, p);
+            acc.add_point(self.labels[i] as usize, p);
         }
-
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        update_bounds(&mut upper, &mut lower, &labels, &movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
+        changed
     }
 
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist: 0,
-        time: sw.elapsed(),
-        build_time: std::time::Duration::ZERO,
-        log,
-        converged,
+    fn post_update(&mut self, _iter: usize, movement: &[f64]) {
+        update_bounds(&mut self.upper, &mut self.lower, &self.labels, movement);
     }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive Hamerly through the shared loop.
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    Fit::from_driver(
+        data,
+        Box::new(HamerlyDriver::new(data)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .run()
 }
 
 /// u grows by the own-center movement; l shrinks by the largest movement

@@ -9,113 +9,150 @@
 //! full n x k scan every stored-bounds algorithm normally pays to
 //! initialize its bounds.
 
-use crate::data::Matrix;
-use crate::kmeans::bounds::{CentroidAccum, InterCenter};
-use crate::kmeans::shallot::{run_from_state, ShallotState};
-use crate::kmeans::{cover, hamerly, KMeansParams, Workspace};
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use std::sync::Arc;
 
+use crate::data::Matrix;
+use crate::kmeans::bounds::CentroidAccum;
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::shallot::ShallotState;
+use crate::kmeans::{cover, hamerly, shallot, Algorithm, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, RunResult};
+use crate::tree::CoverTree;
+
+/// Phase-switching driver: Cover-means passes for iterations
+/// `1..=switch_at`, Shallot passes afterwards, with the bound hand-off in
+/// [`KMeansDriver::post_update`] at the switch iteration.
+pub(crate) struct HybridDriver<'a> {
+    data: &'a Matrix,
+    tree: Arc<CoverTree>,
+    switch_at: usize,
+    state: ShallotState,
+    /// Shallot-phase sorted neighbor cache, sized on first use.
+    neighbors: Vec<Option<Vec<(f64, u32)>>>,
+}
+
+impl<'a> HybridDriver<'a> {
+    pub(crate) fn new(
+        data: &'a Matrix,
+        tree: Arc<CoverTree>,
+        switch_at: usize,
+    ) -> HybridDriver<'a> {
+        HybridDriver {
+            data,
+            tree,
+            switch_at,
+            state: ShallotState::unassigned(data.rows()),
+            neighbors: Vec::new(),
+        }
+    }
+
+    fn pass(
+        &mut self,
+        iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        if iter <= self.switch_at {
+            cover::iterate_pass(
+                self.data,
+                &self.tree,
+                centers,
+                &mut self.state.labels,
+                &mut self.state.upper,
+                &mut self.state.lower,
+                &mut self.state.second,
+                acc,
+                dist,
+            )
+        } else {
+            if self.neighbors.len() != centers.rows() {
+                self.neighbors = vec![None; centers.rows()];
+            }
+            shallot::iterate_pass(
+                self.data,
+                centers,
+                &mut self.state,
+                &mut self.neighbors,
+                acc,
+                dist,
+            )
+        }
+    }
+}
+
+impl KMeansDriver for HybridDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Hybrid
+    }
+
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(1, centers, acc, dist)
+    }
+
+    fn iterate(
+        &mut self,
+        iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(iter, centers, acc, dist)
+    }
+
+    fn post_update(&mut self, iter: usize, movement: &[f64]) {
+        // At iter == switch_at this is the hand-off (§3.4): the tree pass
+        // left bounds valid for the pre-movement centers; carry them
+        // across the movement exactly like the stored-bounds algorithms
+        // do (§2.2). Afterwards it is Shallot's per-iteration maintenance.
+        // Cover-phase iterations overwrite their bounds anyway.
+        if iter >= self.switch_at {
+            hamerly::update_bounds(
+                &mut self.state.upper,
+                &mut self.state.lower,
+                &self.state.labels,
+                movement,
+            );
+        }
+    }
+
+    fn labels(&self) -> &[u32] {
+        &self.state.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.state.labels
+    }
+}
+
+/// Legacy shim: drive the Hybrid through the shared loop, reusing (or
+/// building) the workspace's cover tree.
 pub fn run(
     data: &Matrix,
     init: &Matrix,
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-
-    let fresh = ws
-        .cover
-        .as_ref()
-        .map(|t| t.params != params.cover)
-        .unwrap_or(true);
-    let tree = ws.cover_tree(data, params.cover);
+    let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
     let (build_dist, build_time) = if fresh {
         (tree.build_distances, tree.build_time)
     } else {
         (0, std::time::Duration::ZERO)
     };
-
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
-    let mut centers = init.clone();
-    let mut state = ShallotState {
-        labels: vec![u32::MAX; n],
-        second: vec![0u32; n],
-        upper: vec![0.0f64; n],
-        lower: vec![0.0f64; n],
-    };
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
-
-    // --- Phase 1: Cover-means iterations.
-    let switch_at = params.switch_at.min(params.max_iter);
-    for iter in 1..=switch_at {
-        iterations = iter;
-        let ic = InterCenter::compute(&centers, &mut dist);
-        acc.clear();
-        let changed = cover::assign_pass(
-            data,
-            tree,
-            &centers,
-            &ic,
-            &mut state.labels,
-            &mut state.upper,
-            &mut state.lower,
-            &mut state.second,
-            &mut acc,
-            &mut dist,
-        );
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
-        if iter == switch_at {
-            // Hand-off: the stored bounds are valid for the pre-movement
-            // centers; carry them across the movement exactly like the
-            // stored-bounds algorithms do (§2.2).
-            hamerly::update_bounds(
-                &mut state.upper,
-                &mut state.lower,
-                &state.labels,
-                &movement,
-            );
-        }
-    }
-
-    // --- Phase 2: Shallot from the tree-seeded state.
-    if !converged && iterations < params.max_iter {
-        let (iters, conv) = run_from_state(
-            data,
-            &mut centers,
-            &mut state,
-            params,
-            iterations + 1,
-            &mut dist,
-            &sw,
-            &mut log,
-        );
-        iterations = iters;
-        converged = conv;
-    }
-
-    RunResult {
-        labels: state.labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist,
-        time: sw.elapsed(),
-        build_time,
-        log,
-        converged,
-    }
+    Fit::from_driver(
+        data,
+        Box::new(HybridDriver::new(data, tree, params.switch_at)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .with_build_cost(build_dist, build_time)
+    .run()
 }
 
 #[cfg(test)]

@@ -52,6 +52,59 @@ pub fn kmeans_plus_plus(
     data.select_rows(&chosen)
 }
 
+/// Extend an existing center set to `k` rows — the warm-started sweep
+/// protocol: keep `base` (a previous, smaller-k solution) and add the
+/// missing centers by the same D² sampling k-means++ uses, measured
+/// against the current set. `base.rows()` may equal `k` (returns a copy).
+pub fn extend_centers(
+    data: &Matrix,
+    base: &Matrix,
+    k: usize,
+    seed: u64,
+    dist: &mut DistCounter,
+) -> Matrix {
+    assert!(base.rows() <= k, "cannot shrink {} centers to k={k}", base.rows());
+    assert!(k <= data.rows(), "k={k} out of range");
+    assert_eq!(base.cols(), data.cols(), "center/data dimension mismatch");
+    let n = data.rows();
+    let mut rng = Rng::derive(seed, "init/extend");
+    let mut rows: Vec<Vec<f64>> = base.iter_rows().map(|r| r.to_vec()).collect();
+    let mut chosen: Vec<usize> = Vec::new();
+
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| {
+            let mut best = f64::INFINITY;
+            for c in 0..base.rows() {
+                let nd = dist.sq(data.row(i), base.row(c));
+                if nd < best {
+                    best = nd;
+                }
+            }
+            best
+        })
+        .collect();
+
+    while rows.len() < k {
+        let next = match rng.choose_weighted(&d2) {
+            Some(i) => i,
+            // All remaining mass zero: fall back to an unchosen index.
+            None => (0..n).find(|i| !chosen.contains(i)).unwrap_or(0),
+        };
+        chosen.push(next);
+        rows.push(data.row(next).to_vec());
+        for i in 0..n {
+            if d2[i] > 0.0 {
+                let nd = dist.sq(data.row(i), data.row(next));
+                if nd < d2[i] {
+                    d2[i] = nd;
+                }
+            }
+        }
+    }
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    Matrix::from_rows(&refs)
+}
+
 /// Uniform random distinct-index sampling (baseline init for tests).
 pub fn random_init(data: &Matrix, k: usize, seed: u64) -> Matrix {
     assert!(k >= 1 && k <= data.rows());
@@ -121,6 +174,25 @@ mod tests {
         let mut dist = DistCounter::new();
         let c = kmeans_plus_plus(&data, 3, 1, &mut dist);
         assert_eq!(c.rows(), 3); // padded from duplicate points
+    }
+
+    #[test]
+    fn extend_centers_keeps_base_and_reaches_k() {
+        let data = synth::gaussian_blobs(200, 3, 4, 0.3, 5);
+        let mut dist = DistCounter::new();
+        let base = kmeans_plus_plus(&data, 3, 1, &mut dist);
+        let ext = extend_centers(&data, &base, 6, 2, &mut dist);
+        assert_eq!((ext.rows(), ext.cols()), (6, 3));
+        for i in 0..3 {
+            assert_eq!(ext.row(i), base.row(i), "base center {i} must survive");
+        }
+        // Added rows are actual data points.
+        for i in 3..6 {
+            assert!((0..data.rows()).any(|r| data.row(r) == ext.row(i)));
+        }
+        // k == base.rows() is an identity.
+        let same = extend_centers(&data, &base, 3, 9, &mut dist);
+        assert_eq!(same, base);
     }
 
     #[test]

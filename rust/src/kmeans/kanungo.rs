@@ -12,81 +12,112 @@
 //! count — this is why Kanungo can exceed the Standard algorithm's count
 //! on overlap-heavy data (the paper's KDD04 column: 1.450).
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
-use crate::kmeans::{KMeansParams, Workspace};
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, RunResult};
 use crate::tree::kdtree::{is_farther, KdNode};
+use crate::tree::KdTree;
 
+/// The filtering driver: the k-d tree plus the labels. The tree is shared
+/// out of the [`Workspace`] cache, so sweeps amortize construction.
+pub(crate) struct KanungoDriver<'a> {
+    data: &'a Matrix,
+    tree: Arc<KdTree>,
+    labels: Vec<u32>,
+    scratch_mid: Vec<f64>,
+}
+
+impl<'a> KanungoDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, tree: Arc<KdTree>) -> KanungoDriver<'a> {
+        KanungoDriver {
+            data,
+            tree,
+            labels: vec![u32::MAX; data.rows()],
+            scratch_mid: vec![0.0; data.cols()],
+        }
+    }
+
+    fn pass(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let mut changed = 0usize;
+        let all: Vec<u32> = (0..centers.rows() as u32).collect();
+        filter(
+            self.data,
+            &self.tree.root,
+            centers,
+            &all,
+            &mut self.labels,
+            acc,
+            dist,
+            &mut changed,
+            &mut self.scratch_mid,
+        );
+        changed
+    }
+}
+
+impl KMeansDriver for KanungoDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Kanungo
+    }
+
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive the filtering algorithm through the shared loop,
+/// reusing (or building) the workspace's k-d tree.
 pub fn run(
     data: &Matrix,
     init: &Matrix,
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let d = data.cols();
-    let k = init.rows();
-
-    // Build (or reuse) the index; fresh builds are charged to the result.
-    let fresh = ws
-        .kd
-        .as_ref()
-        .map(|t| t.params != params.kd)
-        .unwrap_or(true);
-    let tree = ws.kd_tree(data, params.kd);
-    let (build_dist, build_time) = if fresh {
-        (0, tree.build_time) // k-d construction computes no distances
-    } else {
-        (0, std::time::Duration::ZERO)
-    };
-
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
-    let mut centers = init.clone();
-    let mut labels = vec![u32::MAX; data.rows()];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
-
-    let mut scratch_mid = vec![0.0; d];
-
-    for iter in 1..=params.max_iter {
-        iterations = iter;
-        acc.clear();
-        let mut changed = 0usize;
-        let all: Vec<u32> = (0..k as u32).collect();
-        filter(
-            data,
-            &tree.root,
-            &centers,
-            &all,
-            &mut labels,
-            &mut acc,
-            &mut dist,
-            &mut changed,
-            &mut scratch_mid,
-        );
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
-    }
-
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist,
-        time: sw.elapsed(),
-        build_time,
-        log,
-        converged,
-    }
+    let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
+    // k-d construction computes no distances; only the time is charged.
+    let build_time = if fresh { tree.build_time } else { Duration::ZERO };
+    Fit::from_driver(
+        data,
+        Box::new(KanungoDriver::new(data, tree)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .with_build_cost(0, build_time)
+    .run()
 }
 
 /// Recursive filtering step.

@@ -1,38 +1,39 @@
 //! The Standard k-means algorithm (Lloyd [11] / Steinhaus [23], paper §2.1)
 //! — the baseline every metric in the evaluation is normalized against.
 //!
-//! Per iteration it computes all `n * k` point-center distances (Eq. 1),
-//! then the means (Eq. 2), and stops at the assignment fixpoint. The XLA
-//! backend variant, which runs the same assign step through the AOT-
-//! compiled Pallas kernel, lives in [`crate::runtime::lloyd_xla`].
+//! Per iteration it computes all `n * k` point-center distances (Eq. 1);
+//! the shared [`crate::kmeans::Fit`] loop then computes the means (Eq. 2)
+//! and stops at the assignment fixpoint. The XLA backend variant, which
+//! runs the same assign step through the AOT-compiled Pallas kernel, lives
+//! in `crate::runtime::lloyd_xla` (behind the `xla` feature).
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
-use crate::kmeans::KMeansParams;
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::metrics::{DistCounter, RunResult};
 
-pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
+/// The dense full-scan driver: no state beyond the labels.
+pub(crate) struct LloydDriver<'a> {
+    data: &'a Matrix,
+    labels: Vec<u32>,
+}
 
-    let mut centers = init.clone();
-    let mut labels = vec![u32::MAX; n];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
+impl<'a> LloydDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix) -> LloydDriver<'a> {
+        LloydDriver { data, labels: vec![u32::MAX; data.rows()] }
+    }
 
-    for iter in 1..=params.max_iter {
-        iterations = iter;
-        acc.clear();
+    fn scan(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let k = centers.rows();
         let mut changed = 0usize;
-
-        for i in 0..n {
-            let p = data.row(i);
+        for i in 0..self.data.rows() {
+            let p = self.data.row(i);
             // Nearest center, ties to the lowest index (strict <).
             let mut best = 0u32;
             let mut best_d = f64::INFINITY;
@@ -43,32 +44,59 @@ pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
                     best = c as u32;
                 }
             }
-            if labels[i] != best {
-                labels[i] = best;
+            if self.labels[i] != best {
+                self.labels[i] = best;
                 changed += 1;
             }
             acc.add_point(best as usize, p);
         }
+        changed
+    }
+}
 
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
+impl KMeansDriver for LloydDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Standard
     }
 
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist: 0,
-        time: sw.elapsed(),
-        build_time: std::time::Duration::ZERO,
-        log,
-        converged,
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.scan(centers, acc, dist)
     }
+
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.scan(centers, acc, dist)
+    }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive the Standard algorithm through the shared loop.
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    Fit::from_driver(
+        data,
+        Box::new(LloydDriver::new(data)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .run()
 }
 
 #[cfg(test)]

@@ -15,8 +15,11 @@ use crate::kmeans::KMeansParams;
 use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
 use crate::rng::Rng;
 
-/// Mini-batch specific knobs.
-#[derive(Debug, Clone, Copy)]
+/// Mini-batch specific knobs. Reaches the runner through
+/// `KMeansParams::minibatch` (or the builder's
+/// `AlgorithmSpec::MiniBatch`); `kmeans::run` honors caller-tuned values
+/// instead of silently substituting the defaults.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MiniBatchParams {
     pub batch: usize,
     /// Stop when the max center movement in a step falls below this.

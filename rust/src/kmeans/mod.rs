@@ -1,12 +1,27 @@
-//! The k-means algorithm family of the paper's evaluation (§4).
+//! The k-means algorithm family of the paper's evaluation (§4), served by
+//! one unified driver API.
 //!
-//! All algorithms are **exact**: given the same initial centers they
-//! replicate the Standard algorithm's assignment sequence (ties broken by
-//! the lowest center index), differing only in how many distance
-//! computations they spend. That invariant is enforced by the property
-//! tests in `rust/tests/exactness.rs`.
+//! All exact algorithms are interchangeable per-iteration strategies under
+//! a single outer loop: each implements [`KMeansDriver`]
+//! (`init_state` / `iterate` / `post_update` / `finish`) and is driven by
+//! the shared [`Fit`] loop, which owns convergence checking, iteration
+//! logging, and center recomputation. Configure and launch runs through
+//! the fluent [`KMeans`] builder:
 //!
-//! | variant      | module      | paper ref |
+//! ```no_run
+//! # use covermeans::data::synth;
+//! # use covermeans::kmeans::{Algorithm, KMeans};
+//! # let data = synth::istanbul(0.01, 1);
+//! let r = KMeans::new(50).algorithm(Algorithm::Hybrid).seed(7).fit(&data).unwrap();
+//! ```
+//!
+//! Given the same initial centers every exact variant replicates the
+//! Standard algorithm's assignment sequence (ties broken by the lowest
+//! center index), differing only in how many distance computations it
+//! spends. That invariant is enforced by the property tests in
+//! `rust/tests/exactness.rs`.
+//!
+//! | variant      | driver in   | paper ref |
 //! |--------------|-------------|-----------|
 //! | Standard     | `lloyd`     | Lloyd [11] / Steinhaus [23] |
 //! | Elkan        | `elkan`     | [5] |
@@ -14,11 +29,21 @@
 //! | Exponion     | `exponion`  | Newling & Fleuret [13] |
 //! | Shallot      | `shallot`   | Borgelt [3] |
 //! | Kanungo      | `kanungo`   | k-d-tree filtering [8] |
+//! | Pelleg-Moore | `pelleg`    | blacklisting k-d tree [14] |
+//! | Phillips     | `phillips`  | compare-means [15] |
 //! | Cover-means  | `cover`     | **this paper §3.1-3.3** |
 //! | Hybrid       | `hybrid`    | **this paper §3.4** |
+//! | MiniBatch    | `minibatch` | Sculley [22] (approximate; no driver) |
+//!
+//! The free functions [`run`] and [`cluster`] and the flat
+//! [`KMeansParams`] struct are kept as thin shims over the driver loop so
+//! existing callers and the exactness suite pin behavior across the
+//! refactor; new code should prefer the builder.
 
 pub mod bounds;
+pub mod builder;
 pub mod cover;
+pub mod driver;
 pub mod elkan;
 pub mod exponion;
 pub mod hamerly;
@@ -31,11 +56,15 @@ pub mod pelleg;
 pub mod phillips;
 pub mod shallot;
 
-use std::time::Duration;
+use std::sync::Arc;
 
 use crate::data::Matrix;
 use crate::metrics::RunResult;
 use crate::tree::{CoverTree, CoverTreeParams, KdTree, KdTreeParams};
+
+pub use builder::{AlgorithmSpec, KMeans, KMeansError};
+pub use driver::{Fit, KMeansDriver, Observer, Signal, StepInfo, StepView};
+pub use minibatch::MiniBatchParams;
 
 /// Which algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -135,12 +164,18 @@ impl Algorithm {
     }
 }
 
-/// Parameters shared by every run (paper §4 "Parameterization" defaults).
+/// Flat run parameters (paper §4 "Parameterization" defaults) — the legacy
+/// configuration surface, kept for the shims and the coordinator's config
+/// files. New code should configure through [`KMeans`] / [`AlgorithmSpec`],
+/// which fold down to this struct internally.
 #[derive(Debug, Clone, Copy)]
 pub struct KMeansParams {
     pub algorithm: Algorithm,
     /// Iteration cap (the paper runs to convergence; the cap is a guard).
     pub max_iter: usize,
+    /// Convergence tolerance on the largest per-center movement. 0 keeps
+    /// the paper's exact assignment-fixpoint criterion (the default).
+    pub tol: f64,
     /// Cover tree construction parameters (scale 1.2, min node 100).
     pub cover: CoverTreeParams,
     /// k-d tree construction parameters for Kanungo.
@@ -148,6 +183,8 @@ pub struct KMeansParams {
     /// Hybrid: switch from Cover-means to Shallot after this many
     /// iterations (paper default: 7).
     pub switch_at: usize,
+    /// Mini-batch knobs (consumed only by [`Algorithm::MiniBatch`]).
+    pub minibatch: MiniBatchParams,
 }
 
 impl Default for KMeansParams {
@@ -155,9 +192,11 @@ impl Default for KMeansParams {
         KMeansParams {
             algorithm: Algorithm::Standard,
             max_iter: 200,
+            tol: 0.0,
             cover: CoverTreeParams::default(),
             kd: KdTreeParams::default(),
             switch_at: 7,
+            minibatch: MiniBatchParams::default(),
         }
     }
 }
@@ -168,14 +207,61 @@ impl KMeansParams {
     }
 }
 
+/// Identity of the matrix a cached tree was built over: buffer address,
+/// shape, and a sampled content fingerprint. The fingerprint closes the
+/// allocator-reuse (ABA) hole: a same-shape matrix built after the cached
+/// one was dropped can land on the same address, but its values hash
+/// differently, so the cache rebuilds instead of serving a stale tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct DataKey {
+    ptr: usize,
+    rows: usize,
+    cols: usize,
+    fingerprint: u64,
+}
+
+impl DataKey {
+    fn of(data: &Matrix) -> DataKey {
+        let buf = data.as_slice();
+        // FNV-1a over up to 1024 evenly-spaced elements: small matrices
+        // are hashed in full; large ones are sampled across the whole
+        // buffer (~8 KiB of hashing, negligible next to one assignment
+        // pass). A stale hit then needs allocator address reuse AND the
+        // same shape AND the same params AND agreement at every sampled
+        // position — a full-buffer hash would close even that sliver but
+        // costs O(nd) per cache probe, defeating the amortization the
+        // workspace exists for.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let step = (buf.len() / 1024).max(1);
+        for &v in buf.iter().step_by(step) {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        DataKey {
+            ptr: buf.as_ptr() as usize,
+            rows: data.rows(),
+            cols: data.cols(),
+            fingerprint: h,
+        }
+    }
+}
+
 /// Reusable per-dataset state: the spatial indexes. The parameter-sweep
 /// protocol of Table 4 amortizes tree construction across 10 restarts x 16
 /// values of k by reusing one `Workspace`; Tables 3 and E6 build fresh
 /// trees per run (construction cost included in the reported time).
+///
+/// The cache is keyed on *(data identity, construction params)*: calling
+/// with a different matrix — or the same matrix after reallocation — or
+/// different params rebuilds instead of silently serving a stale tree.
+/// Trees are stored behind [`Arc`] so stepwise [`Fit`] handles can hold
+/// the index while the workspace moves on to the next run.
 #[derive(Default)]
 pub struct Workspace {
-    pub cover: Option<CoverTree>,
-    pub kd: Option<KdTree>,
+    cover: Option<(DataKey, Arc<CoverTree>)>,
+    kd: Option<(DataKey, Arc<KdTree>)>,
 }
 
 impl Workspace {
@@ -185,26 +271,68 @@ impl Workspace {
 
     /// Get or build the cover tree (build cost charged only on the miss).
     pub fn cover_tree(&mut self, data: &Matrix, params: CoverTreeParams) -> &CoverTree {
-        if self.cover.as_ref().map(|t| t.params != params).unwrap_or(true) {
-            self.cover = Some(CoverTree::build(data, params));
-        }
-        self.cover.as_ref().unwrap()
+        self.cover_tree_arc(data, params);
+        &self.cover.as_ref().unwrap().1
     }
 
     /// Get or build the k-d tree.
     pub fn kd_tree(&mut self, data: &Matrix, params: KdTreeParams) -> &KdTree {
-        if self.kd.as_ref().map(|t| t.params != params).unwrap_or(true) {
-            self.kd = Some(KdTree::build(data, params));
+        self.kd_tree_arc(data, params);
+        &self.kd.as_ref().unwrap().1
+    }
+
+    /// Shared-ownership variant; the `bool` reports whether this call
+    /// built the tree (`true` = fresh, charge the build cost).
+    pub fn cover_tree_arc(
+        &mut self,
+        data: &Matrix,
+        params: CoverTreeParams,
+    ) -> (Arc<CoverTree>, bool) {
+        let key = DataKey::of(data);
+        let stale = match &self.cover {
+            Some((k, t)) => *k != key || t.params != params,
+            None => true,
+        };
+        if stale {
+            self.cover = Some((key, Arc::new(CoverTree::build(data, params))));
         }
-        self.kd.as_ref().unwrap()
+        (self.cover.as_ref().unwrap().1.clone(), stale)
+    }
+
+    pub fn kd_tree_arc(
+        &mut self,
+        data: &Matrix,
+        params: KdTreeParams,
+    ) -> (Arc<KdTree>, bool) {
+        let key = DataKey::of(data);
+        let stale = match &self.kd {
+            Some((k, t)) => *k != key || t.params != params,
+            None => true,
+        };
+        if stale {
+            self.kd = Some((key, Arc::new(KdTree::build(data, params))));
+        }
+        (self.kd.as_ref().unwrap().1.clone(), stale)
+    }
+
+    /// The cached cover tree, if any (inspection/tests).
+    pub fn cached_cover(&self) -> Option<&CoverTree> {
+        self.cover.as_ref().map(|(_, t)| t.as_ref())
+    }
+
+    /// The cached k-d tree, if any (inspection/tests).
+    pub fn cached_kd(&self) -> Option<&KdTree> {
+        self.kd.as_ref().map(|(_, t)| t.as_ref())
     }
 }
 
 /// Run the configured algorithm from the given initial centers.
 ///
-/// `init` must be a `k x d` matrix (use [`init::kmeans_plus_plus`]). Tree
+/// Legacy shim over the [`KMeansDriver`] loop (and the mini-batch runner
+/// for [`Algorithm::MiniBatch`], honoring `params.minibatch`). `init` must
+/// be a `k x d` matrix (use [`init::kmeans_plus_plus`]). Tree
 /// construction, when required and not cached in `ws`, is charged to the
-/// result's `build_time`/`build_dist`.
+/// result's `build_time`/`build_dist`. New code should prefer [`KMeans`].
 pub fn run(
     data: &Matrix,
     init: &Matrix,
@@ -217,24 +345,14 @@ pub fn run(
         init.rows() <= data.rows(),
         "more centers than points"
     );
-    match params.algorithm {
-        Algorithm::Standard => lloyd::run(data, init, params),
-        Algorithm::Elkan => elkan::run(data, init, params),
-        Algorithm::Hamerly => hamerly::run(data, init, params),
-        Algorithm::Exponion => exponion::run(data, init, params),
-        Algorithm::Shallot => shallot::run(data, init, params),
-        Algorithm::Kanungo => kanungo::run(data, init, params, ws),
-        Algorithm::CoverMeans => cover::run(data, init, params, ws),
-        Algorithm::Hybrid => hybrid::run(data, init, params, ws),
-        Algorithm::Phillips => phillips::run(data, init, params),
-        Algorithm::PellegMoore => pelleg::run(data, init, params, ws),
-        Algorithm::MiniBatch => {
-            minibatch::run(data, init, params, &minibatch::MiniBatchParams::default())
-        }
+    if params.algorithm == Algorithm::MiniBatch {
+        return minibatch::run(data, init, params, &params.minibatch);
     }
+    driver::run_exact(data, init, params, ws)
 }
 
-/// Convenience wrapper: k-means++ init + run, fresh workspace.
+/// Convenience wrapper: k-means++ init + run, fresh workspace. Legacy
+/// shim; equivalent to `KMeans::new(k).algorithm(...).seed(seed).fit(data)`.
 pub fn cluster(
     data: &Matrix,
     k: usize,
@@ -245,15 +363,6 @@ pub fn cluster(
     let init = init::kmeans_plus_plus(data, k, seed, &mut counter);
     let mut ws = Workspace::new();
     run(data, &init, params, &mut ws)
-}
-
-/// Outcome fields shared by the per-algorithm run loops.
-pub(crate) struct LoopState {
-    pub labels: Vec<u32>,
-    pub iterations: usize,
-    pub converged: bool,
-    pub log: crate::metrics::IterationLog,
-    pub time: Duration,
 }
 
 #[cfg(test)]
@@ -270,6 +379,21 @@ mod tests {
     }
 
     #[test]
+    fn algorithm_parse_roundtrip_extended() {
+        // Display names must parse back for the whole extended family —
+        // including the hyphenated "Pelleg-Moore" and camel "MiniBatch".
+        for a in Algorithm::EXTENDED {
+            assert_eq!(Algorithm::parse(a.name()), Some(a), "{}", a.name());
+            assert_eq!(
+                Algorithm::parse(&a.name().to_ascii_uppercase()),
+                Some(a),
+                "case-insensitive {}",
+                a.name()
+            );
+        }
+    }
+
+    #[test]
     fn workspace_caches_trees() {
         let data = crate::data::synth::gaussian_blobs(200, 3, 3, 0.5, 1);
         let mut ws = Workspace::new();
@@ -280,6 +404,59 @@ mod tests {
         // Different params force a rebuild.
         let p2 = CoverTreeParams { scale_factor: 1.5, ..p };
         ws.cover_tree(&data, p2);
-        assert_eq!(ws.cover.as_ref().unwrap().params, p2);
+        assert_eq!(ws.cached_cover().unwrap().params, p2);
+    }
+
+    #[test]
+    fn workspace_rebuilds_for_different_data() {
+        // Regression: the cache used to be keyed on params only, so a
+        // second dataset silently got the first dataset's tree.
+        let data1 = crate::data::synth::gaussian_blobs(200, 3, 3, 0.5, 1);
+        let data2 = crate::data::synth::gaussian_blobs(300, 3, 3, 0.5, 2);
+        let mut ws = Workspace::new();
+        let p = CoverTreeParams::default();
+        let (t1, fresh1) = ws.cover_tree_arc(&data1, p);
+        assert!(fresh1);
+        let (t2, fresh2) = ws.cover_tree_arc(&data2, p);
+        assert!(fresh2, "same params, different data must rebuild");
+        assert!(!Arc::ptr_eq(&t1, &t2));
+        assert_eq!(t2.root.weight as usize, data2.rows());
+
+        let (k1, fresh_k1) = ws.kd_tree_arc(&data1, KdTreeParams::default());
+        assert!(fresh_k1);
+        let (k2, fresh_k2) = ws.kd_tree_arc(&data2, KdTreeParams::default());
+        assert!(fresh_k2, "kd cache must also key on data");
+        assert!(!Arc::ptr_eq(&k1, &k2));
+
+        // And a run on the second dataset after caching the first must be
+        // exact (this panicked on out-of-range point ids before the fix).
+        let mut dc = crate::metrics::DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data2, 3, 4, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::CoverMeans);
+        let r_cover = run(&data2, &init_c, &params, &mut ws);
+        let r_std = run(
+            &data2,
+            &init_c,
+            &KMeansParams::default(),
+            &mut Workspace::new(),
+        );
+        assert_eq!(r_cover.labels, r_std.labels);
+    }
+
+    #[test]
+    fn run_routes_minibatch_params() {
+        let data = crate::data::synth::gaussian_blobs(300, 2, 3, 0.4, 3);
+        let mut dc = crate::metrics::DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 3, 5, &mut dc);
+        let mut params = KMeansParams::with_algorithm(Algorithm::MiniBatch);
+        params.max_iter = 10;
+        params.minibatch = MiniBatchParams { batch: 2, tol: 1e-12, seed: 1 };
+        let tiny = run(&data, &init_c, &params, &mut Workspace::new());
+        params.minibatch = MiniBatchParams::default();
+        let dflt = run(&data, &init_c, &params, &mut Workspace::new());
+        assert!(
+            tiny.distances < dflt.distances,
+            "caller-tuned mini-batch settings must reach the runner"
+        );
     }
 }

@@ -10,11 +10,16 @@
 //! aggregates. Each candidate's min/max box distance costs one
 //! d-dimensional pass, counted as one distance computation each.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
-use crate::kmeans::{KMeansParams, Workspace};
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, RunResult};
 use crate::tree::kdtree::KdNode;
+use crate::tree::KdTree;
 
 /// Squared min and max distance from `z` to the box `[lo, hi]`.
 fn box_dist_sq(z: &[f64], lo: &[f64], hi: &[f64]) -> (f64, f64) {
@@ -32,57 +37,92 @@ fn box_dist_sq(z: &[f64], lo: &[f64], hi: &[f64]) -> (f64, f64) {
     (dmin, dmax)
 }
 
+/// The blacklisting driver: the k-d tree plus the labels.
+pub(crate) struct PellegDriver<'a> {
+    data: &'a Matrix,
+    tree: Arc<KdTree>,
+    labels: Vec<u32>,
+}
+
+impl<'a> PellegDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, tree: Arc<KdTree>) -> PellegDriver<'a> {
+        PellegDriver { data, tree, labels: vec![u32::MAX; data.rows()] }
+    }
+
+    fn pass(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let mut changed = 0usize;
+        let all: Vec<u32> = (0..centers.rows() as u32).collect();
+        descend(
+            self.data,
+            &self.tree.root,
+            centers,
+            &all,
+            &mut self.labels,
+            acc,
+            dist,
+            &mut changed,
+        );
+        changed
+    }
+}
+
+impl KMeansDriver for PellegDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::PellegMoore
+    }
+
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive blacklisting through the shared loop, reusing (or
+/// building) the workspace's k-d tree.
 pub fn run(
     data: &Matrix,
     init: &Matrix,
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let d = data.cols();
-    let k = init.rows();
-
-    let fresh = ws.kd.as_ref().map(|t| t.params != params.kd).unwrap_or(true);
-    let tree = ws.kd_tree(data, params.kd);
-    let build_time = if fresh { tree.build_time } else { std::time::Duration::ZERO };
-
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
-    let mut centers = init.clone();
-    let mut labels = vec![u32::MAX; data.rows()];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
-
-    for iter in 1..=params.max_iter {
-        iterations = iter;
-        acc.clear();
-        let mut changed = 0usize;
-        let all: Vec<u32> = (0..k as u32).collect();
-        descend(
-            data, &tree.root, &centers, &all, &mut labels, &mut acc, &mut dist,
-            &mut changed,
-        );
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
-    }
-
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist: 0,
-        time: sw.elapsed(),
-        build_time,
-        log,
-        converged,
-    }
+    let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
+    let build_time = if fresh { tree.build_time } else { Duration::ZERO };
+    Fit::from_driver(
+        data,
+        Box::new(PellegDriver::new(data, tree)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .with_build_cost(0, build_time)
+    .run()
 }
 
 #[allow(clippy::too_many_arguments)]

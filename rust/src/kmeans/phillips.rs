@@ -7,29 +7,38 @@
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{CentroidAccum, InterCenter};
-use crate::kmeans::KMeansParams;
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::metrics::{DistCounter, RunResult};
 
-pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
+/// Memoryless Eq. 5 driver: only the labels persist between iterations.
+pub(crate) struct PhillipsDriver<'a> {
+    data: &'a Matrix,
+    labels: Vec<u32>,
+}
 
-    let mut centers = init.clone();
-    let mut labels = vec![0u32; n];
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-    let mut converged = false;
-    let mut iterations = 0;
+impl<'a> PhillipsDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix) -> PhillipsDriver<'a> {
+        PhillipsDriver { data, labels: vec![0u32; data.rows()] }
+    }
+}
 
-    // Iteration 1: plain full scan (no previous assignment to seed Eq. 5).
-    {
-        acc.clear();
+impl KMeansDriver for PhillipsDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Phillips
+    }
+
+    /// Iteration 1: plain full scan (no previous assignment to seed Eq. 5).
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let n = self.data.rows();
+        let k = centers.rows();
         for i in 0..n {
-            let p = data.row(i);
+            let p = self.data.row(i);
             let mut best = 0u32;
             let mut best_d = f64::INFINITY;
             for c in 0..k {
@@ -39,23 +48,26 @@ pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
                     best = c as u32;
                 }
             }
-            labels[i] = best;
+            self.labels[i] = best;
             acc.add_point(best as usize, p);
         }
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        iterations = 1;
-        log.push(1, dist.count(), sw.elapsed(), n);
+        n
     }
 
-    for iter in 2..=params.max_iter {
-        iterations = iter;
-        let ic = InterCenter::compute(&centers, &mut dist);
-        acc.clear();
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let k = centers.rows();
+        let ic = InterCenter::compute(centers, dist);
         let mut changed = 0usize;
 
-        for i in 0..n {
-            let p = data.row(i);
-            let a = labels[i] as usize;
+        for i in 0..self.data.rows() {
+            let p = self.data.row(i);
+            let a = self.labels[i] as usize;
             // Tighten the anchor distance, then Eq. 5 filter against it.
             let mut best = a as u32;
             let mut best_d = dist.d(p, centers.row(a));
@@ -74,32 +86,34 @@ pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
                     best = j as u32;
                 }
             }
-            if labels[i] != best {
-                labels[i] = best;
+            if self.labels[i] != best {
+                self.labels[i] = best;
                 changed += 1;
             }
             acc.add_point(best as usize, p);
         }
-
-        acc.update_centers(&mut centers, &mut dist, &mut movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
-        }
+        changed
     }
 
-    RunResult {
-        labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist: 0,
-        time: sw.elapsed(),
-        build_time: std::time::Duration::ZERO,
-        log,
-        converged,
+    fn labels(&self) -> &[u32] {
+        &self.labels
     }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive compare-means through the shared loop.
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    Fit::from_driver(
+        data,
+        Box::new(PhillipsDriver::new(data)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .run()
 }
 
 #[cfg(test)]

@@ -16,9 +16,10 @@
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::hamerly::update_bounds;
-use crate::kmeans::KMeansParams;
-use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::metrics::{DistCounter, RunResult};
 
 /// Per-point stored state seeded either by the first full scan or by the
 /// cover tree hand-off (paper Eqs. 15-18).
@@ -31,122 +32,146 @@ pub struct ShallotState {
     pub lower: Vec<f64>,
 }
 
-pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
-    let n = data.rows();
-    let d = data.cols();
-    let k = init.rows();
-    let sw = Stopwatch::start();
-    let mut dist = DistCounter::new();
-
-    let mut centers = init.clone();
-    let mut state = ShallotState {
-        labels: vec![0u32; n],
-        second: vec![0u32; n],
-        upper: vec![0.0f64; n],
-        lower: vec![0.0f64; n],
-    };
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut log = IterationLog::new();
-
-    // Iteration 1: full scan.
-    acc.clear();
-    for i in 0..n {
-        let p = data.row(i);
-        let (c1, d1, c2, d2) =
-            crate::kmeans::bounds::nearest_two(p, &centers, &mut dist);
-        state.labels[i] = c1;
-        state.second[i] = c2;
-        state.upper[i] = d1;
-        state.lower[i] = d2;
-        acc.add_point(c1 as usize, p);
+impl ShallotState {
+    /// Zeroed state for a cold start (labels 0, bounds 0).
+    pub fn zeroed(n: usize) -> ShallotState {
+        ShallotState {
+            labels: vec![0u32; n],
+            second: vec![0u32; n],
+            upper: vec![0.0f64; n],
+            lower: vec![0.0f64; n],
+        }
     }
-    acc.update_centers(&mut centers, &mut dist, &mut movement);
-    update_bounds(&mut state.upper, &mut state.lower, &state.labels, &movement);
-    log.push(1, dist.count(), sw.elapsed(), n);
 
-    let (iterations, converged) = run_from_state(
-        data,
-        &mut centers,
-        &mut state,
-        params,
-        2,
-        &mut dist,
-        &sw,
-        &mut log,
-    );
-
-    RunResult {
-        labels: state.labels,
-        centers,
-        iterations,
-        distances: dist.count(),
-        build_dist: 0,
-        time: sw.elapsed(),
-        build_time: std::time::Duration::ZERO,
-        log,
-        converged,
+    /// Unassigned state for a tree-seeded start (labels `u32::MAX`, to be
+    /// overwritten by the first cover pass).
+    pub fn unassigned(n: usize) -> ShallotState {
+        ShallotState { labels: vec![u32::MAX; n], ..ShallotState::zeroed(n) }
     }
 }
 
-/// The Shallot iteration loop, starting at `first_iter` from an existing
-/// bounded state. Shared with the Hybrid algorithm (§3.4), which seeds
-/// `state` from the cover tree instead of a full first scan.
-///
-/// Returns `(iterations_total, converged)` where `iterations_total` is the
-/// last iteration index executed (continuing the caller's numbering).
-#[allow(clippy::too_many_arguments)]
-pub fn run_from_state(
+/// One Shallot iteration over an existing bounded state: inter-center
+/// distances, the `(u, l)` filter per point, shrinking-ball searches on
+/// failure. Shared between [`ShallotDriver`] and the Hybrid driver, which
+/// seeds `state` from the cover tree instead of a full first scan.
+pub(crate) fn iterate_pass(
     data: &Matrix,
-    centers: &mut Matrix,
+    centers: &Matrix,
     state: &mut ShallotState,
-    params: &KMeansParams,
-    first_iter: usize,
+    neighbors: &mut [Option<Vec<(f64, u32)>>],
+    acc: &mut CentroidAccum,
     dist: &mut DistCounter,
-    sw: &Stopwatch,
-    log: &mut IterationLog,
-) -> (usize, bool) {
-    let n = data.rows();
-    let d = data.cols();
-    let k = centers.rows();
-    let mut acc = CentroidAccum::new(k, d);
-    let mut movement: Vec<f64> = Vec::with_capacity(k);
-    let mut neighbors: Vec<Option<Vec<(f64, u32)>>> = vec![None; k];
-    let mut iterations = first_iter.saturating_sub(1);
-    let mut converged = false;
+) -> usize {
+    let ic = InterCenter::compute(centers, dist);
+    for nb in neighbors.iter_mut() {
+        *nb = None;
+    }
+    let mut changed = 0usize;
 
-    for iter in first_iter..=params.max_iter {
-        iterations = iter;
-        let ic = InterCenter::compute(centers, dist);
-        for nb in neighbors.iter_mut() {
-            *nb = None;
-        }
-        acc.clear();
-        let mut changed = 0usize;
-
-        for i in 0..n {
-            let p = data.row(i);
-            let a = state.labels[i] as usize;
-            let m = ic.s[a].max(state.lower[i]);
+    for i in 0..data.rows() {
+        let p = data.row(i);
+        let a = state.labels[i] as usize;
+        let m = ic.s[a].max(state.lower[i]);
+        if state.upper[i] > m {
+            // Tighten u.
+            state.upper[i] = dist.d(p, centers.row(a));
             if state.upper[i] > m {
-                // Tighten u.
-                state.upper[i] = dist.d(p, centers.row(a));
-                if state.upper[i] > m {
-                    search(p, i, centers, &ic, &mut neighbors, state, dist, &mut changed);
-                }
+                search(p, i, centers, &ic, neighbors, state, dist, &mut changed);
             }
-            acc.add_point(state.labels[i] as usize, p);
         }
+        acc.add_point(state.labels[i] as usize, p);
+    }
+    changed
+}
 
-        acc.update_centers(centers, dist, &mut movement);
-        update_bounds(&mut state.upper, &mut state.lower, &state.labels, &movement);
-        log.push(iter, dist.count(), sw.elapsed(), changed);
-        if changed == 0 {
-            converged = true;
-            break;
+/// Stored-bounds driver with second-nearest identity memory.
+pub(crate) struct ShallotDriver<'a> {
+    data: &'a Matrix,
+    state: ShallotState,
+    neighbors: Vec<Option<Vec<(f64, u32)>>>,
+}
+
+impl<'a> ShallotDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, k: usize) -> ShallotDriver<'a> {
+        ShallotDriver {
+            data,
+            state: ShallotState::zeroed(data.rows()),
+            neighbors: vec![None; k],
         }
     }
-    (iterations, converged)
+}
+
+impl KMeansDriver for ShallotDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Shallot
+    }
+
+    /// Iteration 1: full scan.
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let n = self.data.rows();
+        for i in 0..n {
+            let p = self.data.row(i);
+            let (c1, d1, c2, d2) =
+                crate::kmeans::bounds::nearest_two(p, centers, dist);
+            self.state.labels[i] = c1;
+            self.state.second[i] = c2;
+            self.state.upper[i] = d1;
+            self.state.lower[i] = d2;
+            acc.add_point(c1 as usize, p);
+        }
+        n
+    }
+
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        iterate_pass(
+            self.data,
+            centers,
+            &mut self.state,
+            &mut self.neighbors,
+            acc,
+            dist,
+        )
+    }
+
+    fn post_update(&mut self, _iter: usize, movement: &[f64]) {
+        update_bounds(
+            &mut self.state.upper,
+            &mut self.state.lower,
+            &self.state.labels,
+            movement,
+        );
+    }
+
+    fn labels(&self) -> &[u32] {
+        &self.state.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.state.labels
+    }
+}
+
+/// Legacy shim: drive Shallot through the shared loop.
+pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
+    Fit::from_driver(
+        data,
+        Box::new(ShallotDriver::new(data, init.rows())),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .run()
 }
 
 /// The shrinking-ball search for one point whose bounds failed.

@@ -4,12 +4,19 @@
 //! Cover Trees* (DOI 10.1007/978-3-031-46994-7_13), as a three-layer
 //! Rust + JAX + Pallas system:
 //!
-//! * **L3 (this crate)** — the paper's algorithms: a cover tree with node
-//!   aggregates, Cover-means (tree-at-once assignment with triangle-
-//!   inequality pruning, §3), the Hybrid hand-off to Shallot (§3.4), and
-//!   every baseline of the evaluation (Lloyd, Elkan, Hamerly, Exponion,
-//!   Shallot, Kanungo's k-d-tree filter), plus the sweep coordinator and
-//!   benchmark harness that regenerate the paper's tables and figures.
+//! * **L3 (this crate)** — the paper's algorithm family behind one
+//!   unified API: every exact variant (Lloyd, Elkan, Hamerly, Exponion,
+//!   Shallot, Kanungo/Pelleg-Moore k-d-tree filters, Phillips, Cover-means
+//!   §3, and the Hybrid hand-off to Shallot §3.4) is a
+//!   [`kmeans::KMeansDriver`] — an interchangeable per-iteration strategy
+//!   under the shared [`kmeans::Fit`] outer loop, which owns convergence,
+//!   logging, and center recomputation. Runs are configured through the
+//!   fluent [`kmeans::KMeans`] builder (typed per-algorithm knobs, warm
+//!   starts, movement tolerance, per-iteration observers, stepwise
+//!   `fit_step()` iteration), backed by the cover tree with node
+//!   aggregates and the sweep coordinator / benchmark harness that
+//!   regenerate the paper's tables and figures — including warm-started
+//!   parameter sweeps that reuse centers across k.
 //! * **L2/L1 (python/, build-time only)** — the dense assign-step
 //!   (distance matrix + top-2 + centroid partials) as a Pallas kernel in a
 //!   JAX graph, AOT-lowered to HLO text in `artifacts/`.
@@ -27,6 +34,7 @@ pub mod data;
 pub mod kmeans;
 pub mod metrics;
 pub mod rng;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod testutil;
 pub mod tree;

@@ -18,7 +18,6 @@ use covermeans::coordinator::{report, run_experiment, sweep, Experiment};
 use covermeans::data::registry;
 use covermeans::kmeans::{self, Algorithm, Workspace};
 use covermeans::metrics::DistCounter;
-use covermeans::runtime::{lloyd_xla, AssignExecutor};
 
 const HELP: &str = "\
 covermeans — Accelerating k-Means Clustering with Cover Trees (reproduction)
@@ -30,7 +29,8 @@ COMMANDS:
   run        single clustering run
              --dataset NAME --k K --algorithm NAME --scale S --seed N
              --backend native|xla   (xla: Standard algorithm only)
-  table      --id 2|3|4 [--scale S] [--restarts N] — paper tables
+  table      --id 2|3|4 [--scale S] [--restarts N] [--warm true] — paper
+             tables (--warm: id 4 with warm-started sweep restarts)
   fig1       [--scale S] [--k K] — Fig. 1 cumulative series (ALOI-64)
   fig2       --axis d|k [--scale S] [--restarts N] — Fig. 2 series
   ablate     [--scale S] [--restarts N] — design-choice ablations
@@ -39,8 +39,9 @@ COMMANDS:
   help       this text
 
 CONFIG KEYS (also accepted in --config files as `key = value`):
-  dataset scale data_seed k restarts seed threads out_dir max_iter
+  dataset scale data_seed k restarts seed threads out_dir max_iter tol
   switch_at scale_factor min_node_size kd_leaf_size algorithms
+  mb_batch mb_tol mb_seed
 ";
 
 fn main() {
@@ -133,18 +134,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let params = kmeans::KMeansParams { algorithm: alg, ..cfg.params };
     let result = match backend {
         "native" => kmeans::run(&data, &init, &params, &mut Workspace::new()),
-        "xla" => {
-            if alg != Algorithm::Standard {
-                bail!(
-                    "--backend xla drives the dense assign step (Standard \
-                     algorithm); use native for {}",
-                    alg.name()
-                );
-            }
-            let mut exec = AssignExecutor::load_default()?;
-            eprintln!("PJRT platform: {}", exec.platform());
-            lloyd_xla(&data, &init, &params, &mut exec)?
-        }
+        "xla" => run_xla(&data, &init, &params, alg)?,
         other => bail!("unknown backend {other:?}"),
     };
 
@@ -167,6 +157,38 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The `--backend xla` path: Standard algorithm with the assign step on
+/// the compiled PJRT artifacts. Compiled in only with the `xla` feature.
+#[cfg(feature = "xla")]
+fn run_xla(
+    data: &covermeans::data::Matrix,
+    init: &covermeans::data::Matrix,
+    params: &kmeans::KMeansParams,
+    alg: Algorithm,
+) -> Result<covermeans::metrics::RunResult> {
+    use covermeans::runtime::{lloyd_xla, AssignExecutor};
+    if alg != Algorithm::Standard {
+        bail!(
+            "--backend xla drives the dense assign step (Standard \
+             algorithm); use native for {}",
+            alg.name()
+        );
+    }
+    let mut exec = AssignExecutor::load_default()?;
+    eprintln!("PJRT platform: {}", exec.platform());
+    lloyd_xla(data, init, params, &mut exec)
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(
+    _data: &covermeans::data::Matrix,
+    _init: &covermeans::data::Matrix,
+    _params: &kmeans::KMeansParams,
+    _alg: Algorithm,
+) -> Result<covermeans::metrics::RunResult> {
+    bail!("this binary was built without the `xla` feature; rebuild with `--features xla`")
+}
+
 fn experiment_from_cfg(cfg: &RunConfig, mut exp: Experiment) -> Experiment {
     exp.threads = cfg.threads;
     exp.params = cfg.params;
@@ -178,8 +200,10 @@ fn cmd_table(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let extras = parse_overrides(args, &mut cfg)?;
     let id: u32 = extra(&extras, "id").unwrap_or("2").parse().context("--id")?;
+    let warm = matches!(extra(&extras, "warm"), Some("true") | Some("1"));
     let exp = match id {
         2 | 3 => experiment_from_cfg(&cfg, sweep::tables23(cfg.scale, cfg.restarts)),
+        4 if warm => experiment_from_cfg(&cfg, sweep::table4_warm(cfg.scale, cfg.restarts)),
         4 => experiment_from_cfg(&cfg, sweep::table4(cfg.scale, cfg.restarts)),
         other => bail!("no table {other}; expected 2, 3 or 4"),
     };
@@ -316,7 +340,16 @@ fn cmd_datasets() -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
 fn cmd_info() -> Result<()> {
+    println!("runtime unavailable: built without the `xla` feature");
+    println!("rebuild with `cargo build --features xla` (needs xla_extension)");
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn cmd_info() -> Result<()> {
+    use covermeans::runtime::AssignExecutor;
     match AssignExecutor::load_default() {
         Ok(exec) => {
             println!("PJRT platform : {}", exec.platform());

@@ -118,6 +118,17 @@ impl Default for Stopwatch {
     }
 }
 
+/// SSE of an assignment against its centers — the single implementation
+/// behind `RunResult::sse` and the driver API's snapshot inertia
+/// (uncounted: evaluation work, not algorithm work).
+pub fn sse(data: &crate::data::Matrix, labels: &[u32], centers: &crate::data::Matrix) -> f64 {
+    let mut sse = 0.0;
+    for (i, &l) in labels.iter().enumerate() {
+        sse += matrix::sqdist(data.row(i), centers.row(l as usize));
+    }
+    sse
+}
+
 /// Outcome of one k-means run (all algorithms return this shape).
 #[derive(Debug, Clone)]
 pub struct RunResult {
@@ -147,11 +158,7 @@ impl RunResult {
     /// Sum of squared errors of the final clustering, computed fresh
     /// (not counted: it is an evaluation quantity, not algorithm work).
     pub fn sse(&self, data: &crate::data::Matrix) -> f64 {
-        let mut sse = 0.0;
-        for (i, &l) in self.labels.iter().enumerate() {
-            sse += matrix::sqdist(data.row(i), self.centers.row(l as usize));
-        }
-        sse
+        sse(data, &self.labels, &self.centers)
     }
 
     /// Total time including index construction (Tables 3-4 include it).

@@ -1,0 +1,213 @@
+//! Integration tests of the unified driver API: the fluent [`KMeans`]
+//! builder, the stepwise [`Fit`] loop, observers, warm starts, and their
+//! byte-for-byte agreement with the legacy free-function shims.
+
+use covermeans::data::synth;
+use covermeans::kmeans::{
+    self, init, Algorithm, AlgorithmSpec, KMeans, KMeansError, KMeansParams,
+    Signal, StepView, Workspace,
+};
+use covermeans::metrics::DistCounter;
+
+/// The builder must replicate the legacy `kmeans::run` dispatch exactly —
+/// same labels, iterations, distance counts — for every exact variant.
+#[test]
+fn builder_replicates_legacy_dispatch() {
+    let data = synth::istanbul(0.0015, 3);
+    let k = 15;
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, k, 7, &mut dc);
+    for alg in Algorithm::EXTENDED {
+        if !alg.is_exact() {
+            continue;
+        }
+        let params = KMeansParams { algorithm: alg, ..KMeansParams::default() };
+        let legacy = kmeans::run(&data, &init_c, &params, &mut Workspace::new());
+        let fluent = KMeans::new(k)
+            .algorithm(alg)
+            .warm_start(init_c.clone())
+            .fit(&data)
+            .unwrap();
+        assert_eq!(fluent.labels, legacy.labels, "{}", alg.name());
+        assert_eq!(fluent.iterations, legacy.iterations, "{}", alg.name());
+        assert_eq!(fluent.distances, legacy.distances, "{}", alg.name());
+        assert_eq!(fluent.converged, legacy.converged, "{}", alg.name());
+    }
+}
+
+/// Stepping by hand visits exactly the iterations `fit` runs, with
+/// monotone cumulative distance counts and a consistent final snapshot.
+#[test]
+fn fit_step_exposes_every_iteration() {
+    let data = synth::gaussian_blobs(400, 3, 5, 0.8, 11);
+    let k = 5;
+    let one_shot = KMeans::new(k)
+        .algorithm(Algorithm::CoverMeans)
+        .seed(2)
+        .fit(&data)
+        .unwrap();
+
+    let mut fit = KMeans::new(k)
+        .algorithm(Algorithm::CoverMeans)
+        .seed(2)
+        .fit_step(&data)
+        .unwrap();
+    let mut iters = 0usize;
+    let mut last_dist = 0u64;
+    while let Some(info) = fit.step() {
+        iters += 1;
+        assert_eq!(info.iter, iters);
+        assert!(info.distances >= last_dist, "distance counts are cumulative");
+        last_dist = info.distances;
+        assert_eq!(fit.labels().len(), data.rows());
+        assert_eq!(fit.centers().rows(), k);
+    }
+    assert!(fit.is_done());
+    let stepped = fit.finish();
+    assert_eq!(iters, one_shot.iterations);
+    assert_eq!(stepped.labels, one_shot.labels);
+    assert_eq!(stepped.distances, one_shot.distances);
+    assert_eq!(stepped.converged, one_shot.converged);
+}
+
+/// An observer watching the inertia can stop the run early; the result is
+/// a valid (if unconverged) clustering with fewer iterations.
+#[test]
+fn observer_early_stops_on_inertia_plateau() {
+    let data = synth::kdd04(0.001, 9);
+    let k = 12;
+    let full = KMeans::new(k).algorithm(Algorithm::Shallot).seed(5).fit(&data).unwrap();
+    assert!(full.iterations > 3, "need a long run for the plateau to bite");
+
+    let obs_data = data.clone();
+    let mut prev = f64::INFINITY;
+    let early = KMeans::new(k)
+        .algorithm(Algorithm::Shallot)
+        .seed(5)
+        .observer(move |view: &StepView<'_>| {
+            let sse = view.sse(&obs_data);
+            let flat = (prev - sse) / prev.max(f64::MIN_POSITIVE) < 1e-3;
+            prev = sse;
+            if flat && view.info.iter >= 2 { Signal::Stop } else { Signal::Continue }
+        })
+        .fit(&data)
+        .unwrap();
+    assert!(early.iterations <= full.iterations);
+    assert_eq!(early.labels.len(), data.rows());
+    // The early snapshot is a coherent assignment: every label in range.
+    assert!(early.labels.iter().all(|&l| (l as usize) < k));
+}
+
+/// Warm-starting from a converged solution reconfirms the fixpoint in the
+/// minimum number of iterations (1 to reassign, 1 to confirm).
+#[test]
+fn warm_start_resumes_from_prior_solution() {
+    let data = synth::gaussian_blobs(500, 3, 6, 0.5, 21);
+    let k = 6;
+    let first = KMeans::new(k).algorithm(Algorithm::Hybrid).seed(4).fit(&data).unwrap();
+    assert!(first.converged);
+    let resumed = KMeans::new(k)
+        .algorithm(Algorithm::Hybrid)
+        .warm_start(first.centers.clone())
+        .fit(&data)
+        .unwrap();
+    assert!(resumed.converged);
+    assert_eq!(resumed.iterations, 2, "converged centers must be a fixpoint");
+    assert_eq!(resumed.labels, first.labels);
+}
+
+/// Sweep-style center reuse: growing k from a smaller solution via
+/// `extend_centers` keeps refining the inertia.
+#[test]
+fn extend_centers_sweep_monotone_sse() {
+    let data = synth::istanbul(0.001, 31);
+    let mut ws = Workspace::new();
+    let mut prev: Option<covermeans::data::Matrix> = None;
+    let mut last_sse = f64::INFINITY;
+    for k in [5usize, 10, 20] {
+        let mut dc = DistCounter::new();
+        let init_c = match prev.as_ref() {
+            Some(c) => init::extend_centers(&data, c, k, 17, &mut dc),
+            None => init::kmeans_plus_plus(&data, k, 17, &mut dc),
+        };
+        let r = KMeans::new(k)
+            .algorithm(Algorithm::Hybrid)
+            .warm_start(init_c)
+            .fit_with(&data, &mut ws)
+            .unwrap();
+        let sse = r.sse(&data);
+        assert!(
+            sse <= last_sse,
+            "k={k}: warm-extended sweep must not regress (sse {sse} > {last_sse})"
+        );
+        last_sse = sse;
+        prev = Some(r.centers.clone());
+    }
+}
+
+/// Validation failures surface as typed errors, not panics.
+#[test]
+fn builder_validation_is_result_based() {
+    let data = synth::gaussian_blobs(30, 2, 2, 0.5, 1);
+    assert!(matches!(KMeans::new(0).fit(&data), Err(KMeansError::ZeroK)));
+    assert!(matches!(
+        KMeans::new(31).fit(&data),
+        Err(KMeansError::KExceedsN { k: 31, n: 30 })
+    ));
+    let wrong_d = covermeans::data::Matrix::zeros(2, 7);
+    assert!(matches!(
+        KMeans::new(2).warm_start(wrong_d).fit(&data),
+        Err(KMeansError::DimMismatch { expected: 2, got: 7 })
+    ));
+    let wrong_k = covermeans::data::Matrix::zeros(5, 2);
+    assert!(matches!(
+        KMeans::new(2).warm_start(wrong_k).fit(&data),
+        Err(KMeansError::WarmStartK { expected: 2, got: 5 })
+    ));
+}
+
+/// Typed per-algorithm knobs actually reach the run.
+#[test]
+fn algorithm_spec_carries_typed_knobs() {
+    let data = synth::istanbul(0.001, 41);
+    let k = 10;
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, k, 1, &mut dc);
+
+    // A 1-point min_node_size builds a much deeper tree than the default
+    // (100): the two configurations must count differently.
+    let deep = KMeans::new(k)
+        .algorithm(AlgorithmSpec::CoverMeans {
+            cover: covermeans::tree::CoverTreeParams { scale_factor: 1.2, min_node_size: 1 },
+        })
+        .warm_start(init_c.clone())
+        .fit(&data)
+        .unwrap();
+    let flat = KMeans::new(k)
+        .algorithm(Algorithm::CoverMeans)
+        .warm_start(init_c.clone())
+        .fit(&data)
+        .unwrap();
+    assert_eq!(deep.labels, flat.labels, "both exact");
+    assert_ne!(
+        deep.total_distances(),
+        flat.total_distances(),
+        "tree knobs must change the cost profile"
+    );
+
+    // Hybrid switch_at = 1 vs default 7 changes the iteration cost series.
+    let sw1 = KMeans::new(k)
+        .algorithm(AlgorithmSpec::Hybrid {
+            cover: Default::default(),
+            switch_at: 1,
+        })
+        .warm_start(init_c.clone())
+        .fit(&data)
+        .unwrap();
+    let sw7 = KMeans::new(k)
+        .algorithm(Algorithm::Hybrid)
+        .warm_start(init_c)
+        .fit(&data)
+        .unwrap();
+    assert_eq!(sw1.labels, sw7.labels, "switch point never breaks exactness");
+}
