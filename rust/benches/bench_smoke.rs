@@ -1,0 +1,260 @@
+//! Bench: CI perf-trajectory smoke gate.
+//!
+//! Runs the paper's eight-algorithm family at tiny scale (`REPRO_SCALE`,
+//! default 0.05; CI uses 0.01) with 1 and 4 intra-fit threads, then:
+//!
+//!   * asserts the determinism contract end-to-end (threads=4 must
+//!     reproduce threads=1 exactly: labels, iterations, distances);
+//!   * measures the Lloyd assignment-phase speedup at 4 threads on a
+//!     larger synthetic blob set;
+//!   * emits `BENCH_2.json` (per-algorithm wall time at both thread
+//!     counts, counted distances, and ratios vs the Standard run);
+//!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
+//!     (override path via `BENCH_BASELINE`): any `dist_rel` / `time_rel`
+//!     more than 25% above its baseline value fails the run.
+//!
+//! `BENCH_ENFORCE_SPEEDUP=1` additionally requires >= 1.5x Lloyd
+//! assignment speedup at 4 threads, measured best-of-N on both sides (set
+//! in CI, where 4 cores are guaranteed; skipped by default so laptops
+//! with fewer cores don't fail spuriously). `BENCH_GATE_WARN_ONLY=1`
+//! downgrades every gate failure to a warning for noisy local machines.
+//!
+//!     REPRO_SCALE=0.01 cargo bench --bench bench_smoke
+
+use std::time::Duration;
+
+use covermeans::benchutil::{bench_repeats, bench_scale, fmt_duration, measure, median};
+use covermeans::data::{synth, Matrix};
+use covermeans::kmeans::{init, Algorithm, KMeans};
+use covermeans::metrics::{DistCounter, RunResult};
+
+/// Regression threshold vs the baseline ceilings: fail above 125%.
+const REGRESSION_FACTOR: f64 = 1.25;
+
+struct AlgRow {
+    name: &'static str,
+    time_ms_t1: f64,
+    time_ms_t4: f64,
+    distances: u64,
+    dist_rel: f64,
+    time_rel: f64,
+}
+
+/// Returns the sorted per-repeat wall times and the last run's result.
+fn timed_fit(
+    repeats: usize,
+    data: &Matrix,
+    init_c: &Matrix,
+    alg: Algorithm,
+    threads: usize,
+    max_iter: usize,
+) -> (Vec<Duration>, RunResult) {
+    let mut last: Option<RunResult> = None;
+    let times = measure(repeats, || {
+        let r = KMeans::new(init_c.rows())
+            .algorithm(alg)
+            .threads(threads)
+            .max_iter(max_iter)
+            .warm_start(init_c.clone())
+            .fit(data)
+            .expect("valid bench configuration");
+        last = Some(r);
+    });
+    (times, last.expect("at least one measured run"))
+}
+
+/// Minimal flat-JSON number extractor for the baseline file. The file is
+/// written one `"key": value` pair per line; lines whose value is not a
+/// bare number (schema/comment strings, braces) are skipped.
+fn parse_flat_json(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let Some((key, after)) = rest.split_once('"') else { continue };
+        let Some((_, val)) = after.split_once(':') else { continue };
+        if let Ok(v) = val.trim().trim_end_matches('}').trim().parse::<f64>() {
+            out.push((key.to_string(), v));
+        }
+    }
+    out
+}
+
+fn write_bench_json(path: &str, scale: f64, speedup: f64, rows: &[AlgRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"bench-smoke-v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str("  \"threads_compared\": [1, 4],\n");
+    s.push_str(&format!(
+        "  \"lloyd_assignment_speedup_4t\": {speedup:.3},\n"
+    ));
+    s.push_str("  \"algorithms\": {\n");
+    for (i, row) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    \"{}\": {{\"time_ms_t1\": {:.3}, \"time_ms_t4\": {:.3}, \
+             \"distances\": {}, \"dist_rel\": {:.6}, \"time_rel\": {:.6}}}{comma}\n",
+            row.name, row.time_ms_t1, row.time_ms_t4, row.distances, row.dist_rel,
+            row.time_rel,
+        ));
+    }
+    s.push_str("  }\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("[json] failed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let scale = bench_scale();
+    let repeats = bench_repeats();
+    let mut failures: Vec<String> = Vec::new();
+
+    // --- per-algorithm smoke at 1 vs 4 threads (scaled istanbul analog).
+    let data = synth::istanbul(scale.max(0.002), 11);
+    let k = 50usize.clamp(2, data.rows() / 4);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, k, 7, &mut dc);
+    println!(
+        "bench-smoke: istanbul n={} d={} k={k} (scale {scale}), {repeats} repeats",
+        data.rows(),
+        data.cols()
+    );
+
+    let mut rows: Vec<AlgRow> = Vec::new();
+    let mut std_time = f64::NAN;
+    let mut std_dist = 0u64;
+    for alg in Algorithm::ALL {
+        let (times1, r1) = timed_fit(repeats, &data, &init_c, alg, 1, 40);
+        let (times4, r4) = timed_fit(repeats, &data, &init_c, alg, 4, 40);
+        let (t1, t4) = (median(&times1), median(&times4));
+        if r1.labels != r4.labels
+            || r1.iterations != r4.iterations
+            || r1.distances != r4.distances
+            || r1.build_dist != r4.build_dist
+        {
+            failures.push(format!(
+                "{}: threads=4 diverged from threads=1 (iters {} vs {}, dists {} vs {})",
+                alg.name(),
+                r4.iterations,
+                r1.iterations,
+                r4.distances,
+                r1.distances,
+            ));
+        }
+        // Measured wall time of the whole fit; construction is included
+        // because every run starts from a fresh workspace (the Tables 3-4
+        // convention).
+        let secs1 = t1.as_secs_f64();
+        let dists = r1.total_distances();
+        if alg == Algorithm::Standard {
+            std_time = secs1;
+            std_dist = dists;
+        }
+        // Algorithm::ALL lists Standard first; the ratios below rely on it.
+        assert!(
+            std_time.is_finite() && std_dist > 0,
+            "Standard must be measured before any ratio is computed"
+        );
+        let dist_rel = dists as f64 / std_dist as f64;
+        let time_rel = secs1 / std_time;
+        println!(
+            "  {:<12} t1 {:>9} | t4 {:>9} | dists {:>10} | dist_rel {:.3} | time_rel {:.3}",
+            alg.name(),
+            fmt_duration(t1),
+            fmt_duration(t4),
+            dists,
+            dist_rel,
+            time_rel,
+        );
+        rows.push(AlgRow {
+            name: alg.name(),
+            time_ms_t1: secs1 * 1e3,
+            time_ms_t4: t4.as_secs_f64() * 1e3,
+            distances: dists,
+            dist_rel,
+            time_rel,
+        });
+    }
+
+    // --- Lloyd assignment-phase speedup at 4 threads. Fixed-size blobs
+    // (clamped so even CI's 0.01 scale measures real parallel work).
+    let n_speed = ((400_000.0 * scale) as usize).clamp(20_000, 200_000);
+    let big = synth::gaussian_blobs(n_speed, 8, 16, 1.0, 5);
+    let mut dc = DistCounter::new();
+    let big_init = init::kmeans_plus_plus(&big, 64, 3, &mut dc);
+    let (times_s1, rs1) = timed_fit(repeats, &big, &big_init, Algorithm::Standard, 1, 3);
+    let (times_s4, rs4) = timed_fit(repeats, &big, &big_init, Algorithm::Standard, 4, 3);
+    if rs1.labels != rs4.labels || rs1.distances != rs4.distances {
+        failures.push("Lloyd speedup fixture: threads=4 diverged".to_string());
+    }
+    // Best-of-N on both sides: minimum wall time is the standard
+    // noise-robust estimator for speedup ratios on shared runners.
+    let (ts1, ts4) = (times_s1[0], times_s4[0]);
+    let speedup = ts1.as_secs_f64() / ts4.as_secs_f64().max(1e-12);
+    println!(
+        "lloyd assignment phase (n={n_speed}, k=64, 3 iters): t1 {} | t4 {} | speedup {speedup:.2}x",
+        fmt_duration(ts1),
+        fmt_duration(ts4),
+    );
+    if std::env::var_os("BENCH_ENFORCE_SPEEDUP").is_some() && speedup < 1.5 {
+        failures.push(format!(
+            "Lloyd 4-thread assignment speedup {speedup:.2}x below the 1.5x floor"
+        ));
+    }
+
+    // --- emit the artifact.
+    write_bench_json("BENCH_2.json", scale, speedup, &rows);
+
+    // --- perf-trajectory gate vs the checked-in ceilings.
+    let baseline_path = std::env::var("BENCH_BASELINE")
+        .unwrap_or_else(|_| "ci/bench_baseline.json".to_string());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            println!("[gate] baseline {baseline_path} (fail above {REGRESSION_FACTOR}x)");
+            for (key, ceiling) in parse_flat_json(&text) {
+                let Some((alg_name, metric)) = key.rsplit_once('.') else {
+                    continue;
+                };
+                let Some(row) = rows.iter().find(|r| r.name == alg_name) else {
+                    continue;
+                };
+                let current = match metric {
+                    "dist_rel" => row.dist_rel,
+                    "time_rel" => row.time_rel,
+                    _ => continue,
+                };
+                if current > ceiling * REGRESSION_FACTOR {
+                    failures.push(format!(
+                        "{key}: {current:.3} exceeds baseline {ceiling:.3} x {REGRESSION_FACTOR}"
+                    ));
+                } else {
+                    println!("  ok {key}: {current:.3} <= {ceiling:.3} x {REGRESSION_FACTOR}");
+                }
+            }
+        }
+        Err(e) => {
+            println!("[gate] no baseline at {baseline_path} ({e}); gate skipped");
+        }
+    }
+
+    if failures.is_empty() {
+        println!("bench-smoke: PASS");
+    } else {
+        eprintln!("bench-smoke: FAIL");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        eprintln!(
+            "(to refresh ceilings after an intentional change, copy the \
+             dist_rel/time_rel values from BENCH_2.json into {baseline_path})"
+        );
+        // Escape hatch for noisy local machines: report but don't fail.
+        if std::env::var_os("BENCH_GATE_WARN_ONLY").is_some() {
+            eprintln!("BENCH_GATE_WARN_ONLY set: exiting 0 despite failures");
+        } else {
+            std::process::exit(1);
+        }
+    }
+}

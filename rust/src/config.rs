@@ -32,8 +32,10 @@ pub struct RunConfig {
     pub algorithms: Vec<Algorithm>,
     /// Shared algorithm parameters.
     pub params: KMeansParams,
-    /// Worker threads for the sweep coordinator (jobs in parallel; each
-    /// job stays single-threaded like the paper's runs).
+    /// Total worker-thread budget for the sweep coordinator. Cells run on
+    /// `threads / fit_threads` workers, so cell-level and intra-fit
+    /// parallelism share one budget. With `fit_threads = 1` (the default)
+    /// every job stays single-threaded like the paper's runs.
     pub threads: usize,
     /// Output directory for CSV results.
     pub out_dir: String,
@@ -74,6 +76,10 @@ impl RunConfig {
             "restarts" => self.restarts = v.parse().context("restarts")?,
             "seed" => self.seed = v.parse().context("seed")?,
             "threads" => self.threads = v.parse().context("threads")?,
+            // Intra-fit threads (assignment-phase sharding + tree build);
+            // 0 = all cores. Exactness-preserving: any value reproduces
+            // the single-threaded results byte for byte.
+            "fit_threads" => self.params.threads = v.parse().context("fit_threads")?,
             "out_dir" => self.out_dir = v.to_string(),
             "max_iter" => self.params.max_iter = v.parse().context("max_iter")?,
             "tol" => self.params.tol = v.parse().context("tol")?,
@@ -138,6 +144,7 @@ impl RunConfig {
         m.insert("restarts", self.restarts.to_string());
         m.insert("seed", self.seed.to_string());
         m.insert("threads", self.threads.to_string());
+        m.insert("fit_threads", self.params.threads.to_string());
         m.insert("out_dir", self.out_dir.clone());
         m.insert("max_iter", self.params.max_iter.to_string());
         m.insert("tol", self.params.tol.to_string());
@@ -187,6 +194,8 @@ mod tests {
         c.set("mb_batch", "256").unwrap();
         c.set("mb_tol", "0.001").unwrap();
         c.set("mb_seed", "99").unwrap();
+        c.set("fit_threads", "4").unwrap();
+        assert_eq!(c.params.threads, 4);
         assert_eq!(c.dataset, "istanbul");
         assert_eq!(c.k, 42);
         assert_eq!(c.algorithms, vec![Algorithm::Shallot, Algorithm::Hybrid]);
@@ -200,6 +209,7 @@ mod tests {
         assert!(dump.contains("algorithms = Shallot,Hybrid"));
         assert!(dump.contains("mb_batch = 256"));
         assert!(dump.contains("tol = 0.000001"));
+        assert!(dump.contains("fit_threads = 4"));
     }
 
     #[test]

@@ -3,12 +3,18 @@
 //!
 //! The unit of scheduling is a **cell** — one `(dataset, algorithm)` pair
 //! covering all `(k, restart)` combinations of an experiment. Cells run in
-//! parallel on a work-stealing queue of OS threads, while everything
-//! *inside* a cell is strictly single-threaded (the paper benchmarks
-//! single-core runs; cross-job parallelism does not touch per-run timers
-//! or counters). Initial centers are derived from `(dataset, k, restart)`
-//! only, so every algorithm sees byte-identical k-means++ seeds — the
-//! paper's "same 10 random initializations for each algorithm".
+//! parallel on a work-stealing queue of OS threads. The total thread
+//! budget ([`Experiment::threads`]) is split between cell-level workers
+//! and intra-fit threads ([`KMeansParams::threads`], config key
+//! `fit_threads`): the coordinator spawns `threads / fit_threads` cell
+//! workers, each fit sharding its assignment phase over `fit_threads`
+//! workers. With `fit_threads = 1` (the default) everything inside a cell
+//! is strictly single-threaded, matching the paper's single-core runs —
+//! and because the intra-fit reductions are exactness-preserving, raising
+//! `fit_threads` changes wall time only, never a counted metric. Initial
+//! centers are derived from `(dataset, k, restart)` only, so every
+//! algorithm sees byte-identical k-means++ seeds — the paper's "same 10
+//! random initializations for each algorithm".
 //!
 //! Tree amortization: with [`Experiment::amortize_tree`] (the Table 4
 //! parameter-sweep protocol) a cell keeps one [`Workspace`] across all its
@@ -50,6 +56,9 @@ pub struct Experiment {
     /// seed. Off by default — it changes the optimization trajectory, so
     /// the paper-replication protocols never enable it.
     pub warm_restarts: bool,
+    /// Total worker-thread budget, split between cell-level workers and
+    /// the intra-fit threads configured in `params.threads` (see
+    /// [`Experiment::cell_workers`]).
     pub threads: usize,
 }
 
@@ -69,6 +78,25 @@ impl Experiment {
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
         }
     }
+
+    /// Intra-fit threads each run uses (`params.threads`; 0 = all cores).
+    pub fn fit_threads(&self) -> usize {
+        thread_split(self.threads, self.params.threads).1
+    }
+
+    /// Cell-level workers after splitting the total budget with the
+    /// intra-fit threads: `threads / fit_threads`, at least 1.
+    pub fn cell_workers(&self) -> usize {
+        thread_split(self.threads, self.params.threads).0
+    }
+}
+
+/// Split a total thread budget into `(cell_workers, fit_threads)`:
+/// `fit_threads` resolves 0 to all cores, and the cell level gets
+/// `total / fit_threads` workers (each side at least 1).
+pub fn thread_split(total: usize, fit_threads: usize) -> (usize, usize) {
+    let fit = crate::parallel::resolve_threads(fit_threads);
+    ((total.max(1) / fit).max(1), fit)
 }
 
 /// Summary of a single run within a cell.
@@ -174,7 +202,9 @@ pub fn run_experiment(exp: &Experiment, keep_logs: bool) -> Result<ExperimentRes
             .collect(),
     );
     let results: Mutex<ExperimentResult> = Mutex::new(ExperimentResult::default());
-    let threads = exp.threads.max(1);
+    // Cell-level × intra-fit budget split: fits that shard internally get
+    // proportionally fewer concurrent cells.
+    let threads = exp.cell_workers();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -230,6 +260,7 @@ fn run_cell(
                 .algorithm(spec)
                 .max_iter(exp.params.max_iter)
                 .tol(exp.params.tol)
+                .threads(exp.params.threads)
                 .warm_start(init);
             // fit_with routes MiniBatch to its own runner and drives the
             // exact algorithms through the stepwise fit_step_with loop.
@@ -307,6 +338,43 @@ mod tests {
             })
             .unwrap();
         assert!((r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thread_budget_splits_between_cells_and_fits() {
+        let mut exp = tiny_experiment();
+        exp.threads = 8;
+        exp.params.threads = 4;
+        assert_eq!(exp.fit_threads(), 4);
+        assert_eq!(exp.cell_workers(), 2);
+        exp.params.threads = 16;
+        assert_eq!(exp.cell_workers(), 1, "fit threads exhaust the budget");
+        exp.params.threads = 1;
+        assert_eq!(exp.cell_workers(), 8);
+    }
+
+    #[test]
+    fn intra_fit_threads_reproduce_sequential_results() {
+        let mut exp_seq = tiny_experiment();
+        exp_seq.params.threads = 1;
+        let res_seq = run_experiment(&exp_seq, false).unwrap();
+
+        let mut exp_par = tiny_experiment();
+        exp_par.threads = 4;
+        exp_par.params.threads = 4;
+        let res_par = run_experiment(&exp_par, false).unwrap();
+
+        assert_eq!(res_par.cells.len(), res_seq.cells.len());
+        for (key, cell) in &res_par.cells {
+            let cell_seq = res_seq.cells.get(key).unwrap();
+            assert_eq!(cell.distances, cell_seq.distances, "{key:?}");
+            assert_eq!(cell.build_dist, cell_seq.build_dist, "{key:?}");
+            for (a, b) in cell.runs.iter().zip(&cell_seq.runs) {
+                assert_eq!(a.iterations, b.iterations, "{key:?}");
+                assert_eq!(a.distances, b.distances, "{key:?}");
+                assert_eq!(a.sse.to_bits(), b.sse.to_bits(), "{key:?}");
+            }
+        }
     }
 
     #[test]

@@ -6,6 +6,27 @@ use std::fmt::Write as _;
 use crate::coordinator::{CellResult, Experiment, ExperimentResult};
 use crate::kmeans::Algorithm;
 
+/// Provenance comment rows for CSV outputs: the thread topology a result
+/// was produced under. Earlier revisions implicitly reported every run as
+/// single-threaded; now the *actual* cell-level worker count and intra-fit
+/// thread count are routed through from the experiment. (Thanks to the
+/// exactness-preserving reductions, the counted metrics are identical at
+/// any `fit_threads`; the wall-clock columns are what the topology
+/// contextualizes.)
+pub fn provenance_rows(exp: &Experiment) -> Vec<String> {
+    provenance_rows_for(exp.cell_workers(), exp.fit_threads())
+}
+
+/// [`provenance_rows`] from bare counts — the single source of the header
+/// format (`write_csv` in the CLI routes through this with the thread
+/// split derived from the run config).
+pub fn provenance_rows_for(cell_threads: usize, fit_threads: usize) -> Vec<String> {
+    vec![
+        format!("# cell_threads = {cell_threads}"),
+        format!("# fit_threads = {fit_threads}"),
+    ]
+}
+
 /// Which metric a table reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Metric {
@@ -188,6 +209,16 @@ mod tests {
         };
         let res = run_experiment(&exp, true).unwrap();
         (exp, res)
+    }
+
+    #[test]
+    fn provenance_reports_actual_thread_split() {
+        let mut exp = Experiment::new("prov");
+        exp.threads = 8;
+        exp.params.threads = 2;
+        let rows = provenance_rows(&exp);
+        assert_eq!(rows[0], "# cell_threads = 4");
+        assert_eq!(rows[1], "# fit_threads = 2");
     }
 
     #[test]

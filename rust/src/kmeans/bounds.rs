@@ -111,6 +111,26 @@ impl CentroidAccum {
         self.counts[c] += weight;
     }
 
+    /// Fold another accumulator into this one (the per-task reduction of
+    /// the parallel tree passes). Callers must merge in a deterministic
+    /// order — floating-point summation order affects the low bits, and
+    /// the determinism contract requires the order to be a function of
+    /// the data only, never of the thread count.
+    pub fn merge(&mut self, other: &CentroidAccum) {
+        debug_assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self
+            .sums
+            .as_mut_slice()
+            .iter_mut()
+            .zip(other.sums.as_slice())
+        {
+            *a += b;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
     #[inline]
     pub fn remove_aggregate(&mut self, c: usize, sum: &[f64], weight: f64) {
         let row = self.sums.row_mut(c);
@@ -148,6 +168,21 @@ impl CentroidAccum {
                 movement.push(0.0);
             }
         }
+    }
+}
+
+/// Fill `acc` with the center sums of `labels` in canonical point order
+/// (ascending index). This is the single accumulation convention behind
+/// the per-point drivers' parallel passes: the chunk workers only compute
+/// labels, and this sequential pass reproduces the sums bit-identically
+/// at every thread count.
+pub(crate) fn accumulate_in_order(
+    data: &crate::data::Matrix,
+    labels: &[u32],
+    acc: &mut CentroidAccum,
+) {
+    for (i, &l) in labels.iter().enumerate() {
+        acc.add_point(l as usize, data.row(i));
     }
 }
 

@@ -22,6 +22,12 @@
 //! Cover-means, `switch_at` for Hybrid, batch/tol/seed for MiniBatch),
 //! replacing the flat [`KMeansParams`] bag and the bolted-on
 //! `MiniBatchParams` side channel.
+//!
+//! A single fit can use the whole machine: `KMeans::new(k).threads(n)`
+//! shards the assignment phase (and cover tree construction) over `n`
+//! workers with exactness-preserving reductions — any thread count
+//! reproduces the sequential fit byte for byte, so the counted distance
+//! metrics of the paper's evaluation are unaffected.
 
 use std::fmt;
 
@@ -165,13 +171,15 @@ pub struct KMeans {
     max_iter: usize,
     tol: f64,
     seed: u64,
+    threads: usize,
     warm: Option<Matrix>,
     observer: Option<Observer>,
 }
 
 impl KMeans {
     /// Start configuring a fit with `k` clusters. Defaults: Standard
-    /// algorithm, `max_iter` 200, exact convergence (`tol` 0), seed 0.
+    /// algorithm, `max_iter` 200, exact convergence (`tol` 0), seed 0,
+    /// single-threaded.
     pub fn new(k: usize) -> KMeans {
         let d = KMeansParams::default();
         KMeans {
@@ -180,6 +188,7 @@ impl KMeans {
             max_iter: d.max_iter,
             tol: d.tol,
             seed: 0,
+            threads: d.threads,
             warm: None,
             observer: None,
         }
@@ -211,6 +220,21 @@ impl KMeans {
         self
     }
 
+    /// Intra-fit worker threads (0 = all cores; default 1) for the
+    /// assignment phase and cover tree construction.
+    ///
+    /// **Determinism guarantee:** the parallel reductions are
+    /// exactness-preserving, so any thread count produces byte-identical
+    /// results — same assignments, same iteration count, same counted
+    /// `distances`, same centers — as the sequential fit
+    /// (`rust/tests/parallel_exactness.rs`). MiniBatch and the k-d-tree
+    /// variants (Kanungo, Pelleg-Moore) currently ignore the knob and run
+    /// single-threaded.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// Start from these centers instead of k-means++ — prior results,
     /// sweep reuse, or an explicit shared init for cross-algorithm
     /// comparisons. Must be `k x d`.
@@ -236,6 +260,7 @@ impl KMeans {
         let mut p = KMeansParams {
             max_iter: self.max_iter,
             tol: self.tol,
+            threads: self.threads,
             ..KMeansParams::default()
         };
         self.spec.apply(&mut p);

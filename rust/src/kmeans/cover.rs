@@ -30,17 +30,64 @@ use crate::kmeans::bounds::{CentroidAccum, InterCenter};
 use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::Parallelism;
 use crate::tree::covertree::{CoverTree, Node};
 
-/// Mutable per-iteration view shared by the traversal.
+/// Raw-pointer view of the per-point outputs (labels and the Eqs. 15-18
+/// hand-off bounds). The cover tree partitions the point set across
+/// subtrees, so concurrent tasks write disjoint indices; the borrow
+/// checker cannot see that, hence the unsafe accessors.
+#[derive(Clone, Copy)]
+struct PointSink {
+    labels: *mut u32,
+    upper: *mut f64,
+    lower: *mut f64,
+    second: *mut u32,
+}
+
+unsafe impl Send for PointSink {}
+unsafe impl Sync for PointSink {}
+
+impl PointSink {
+    fn new(
+        labels: &mut [u32],
+        upper: &mut [f64],
+        lower: &mut [f64],
+        second: &mut [u32],
+    ) -> PointSink {
+        PointSink {
+            labels: labels.as_mut_ptr(),
+            upper: upper.as_mut_ptr(),
+            lower: lower.as_mut_ptr(),
+            second: second.as_mut_ptr(),
+        }
+    }
+
+    /// # Safety: `i` must be owned by the calling task (disjoint subtrees).
+    #[inline]
+    unsafe fn label(&self, i: usize) -> u32 {
+        *self.labels.add(i)
+    }
+
+    /// # Safety: `i` must be owned by the calling task (disjoint subtrees).
+    #[inline]
+    unsafe fn set(&self, i: usize, label: u32, u: f64, l: f64, sec: u32) {
+        *self.labels.add(i) = label;
+        *self.upper.add(i) = u;
+        *self.lower.add(i) = l;
+        *self.second.add(i) = sec;
+    }
+}
+
+/// Mutable per-iteration view shared by the traversal. Each task of the
+/// parallel decomposition owns one `Ctx` with its own accumulator and
+/// distance counter; the per-point writes go through the shared
+/// [`PointSink`].
 struct Ctx<'a> {
     data: &'a Matrix,
     centers: &'a Matrix,
     ic: &'a InterCenter,
-    labels: &'a mut [u32],
-    upper: &'a mut [f64],
-    lower: &'a mut [f64],
-    second: &'a mut [u32],
+    sink: PointSink,
     acc: &'a mut CentroidAccum,
     dist: &'a mut DistCounter,
     changed: usize,
@@ -97,8 +144,31 @@ struct Cand {
     d: f64,
 }
 
+/// One unit of the parallel decomposition: a subtree visit with its
+/// already-computed candidate set and inherited lower bound.
+struct Task<'t> {
+    node: &'t Node,
+    cands: Vec<Cand>,
+    lb: f64,
+}
+
+/// The expansion stops splitting once this many tasks exist. Fixed (never
+/// derived from the thread count) so the task list — and therefore the
+/// accumulator merge order — is a function of the tree and centers only.
+const TASK_TARGET: usize = 64;
+/// Subtrees lighter than this are not worth splitting further.
+const MIN_TASK_WEIGHT: u32 = 256;
+
 /// Run one full assignment pass over the tree. Returns the number of
 /// points whose assignment changed. Exposed for the Hybrid algorithm.
+///
+/// The pass always runs the same two phases regardless of thread count:
+/// a sequential expansion that peels the top of the tree into at most
+/// ~[`TASK_TARGET`] subtree tasks (charging its distances to the caller's
+/// counter), then the tasks themselves — concurrently when `par` has the
+/// budget, inline otherwise — each filling a private accumulator that is
+/// merged back in task order. `threads = N` is therefore byte-identical
+/// to `threads = 1`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn assign_pass(
     data: &Matrix,
@@ -111,31 +181,81 @@ pub(crate) fn assign_pass(
     second: &mut [u32],
     acc: &mut CentroidAccum,
     dist: &mut DistCounter,
+    par: &Parallelism,
 ) -> usize {
-    let mut ctx = Ctx {
-        data,
-        centers,
-        ic,
-        labels,
-        upper,
-        lower,
-        second,
-        acc,
-        dist,
-        changed: 0,
-        cand_pool: Vec::new(),
-        id_pool: Vec::new(),
-    };
-    // Root candidates: compute distances with the Eq. 9 running filter.
+    let k = centers.rows();
+    let d = data.cols();
+    let sink = PointSink::new(labels, upper, lower, second);
     let root = &tree.root;
-    let all: Vec<u32> = (0..centers.rows() as u32).collect();
-    let p = data.row(root.routing as usize);
-    let mut lb = f64::INFINITY;
-    let mut cands = ctx.take_cands();
-    compute_candidates(&mut ctx, p, root.radius, &all, None, &mut lb, &mut cands);
-    assign_node(&mut ctx, root, &cands, lb);
-    ctx.put_cands(cands);
-    ctx.changed
+    let mut changed;
+    let tasks = {
+        let mut ctx = Ctx {
+            data,
+            centers,
+            ic,
+            sink,
+            acc,
+            dist,
+            changed: 0,
+            cand_pool: Vec::new(),
+            id_pool: Vec::new(),
+        };
+        // Root candidates: compute distances with the Eq. 9 running
+        // filter.
+        let all: Vec<u32> = (0..k as u32).collect();
+        let p = data.row(root.routing as usize);
+        let mut lb = f64::INFINITY;
+        let mut cands = Vec::new();
+        compute_candidates(&mut ctx, p, root.radius, &all, None, &mut lb, &mut cands);
+        // Expansion: repeatedly visit the heaviest splittable task's node
+        // (assigning what Eqs. 10-13 settle outright) and spill the
+        // children that still need a recursive visit back into the list.
+        let mut tasks: Vec<Task> = vec![Task { node: root, cands, lb }];
+        while tasks.len() < TASK_TARGET {
+            let mut best: Option<(usize, u32)> = None;
+            for (i, t) in tasks.iter().enumerate() {
+                if !t.node.children.is_empty() && t.node.weight >= MIN_TASK_WEIGHT {
+                    let heavier = match best {
+                        None => true,
+                        Some((_, w)) => t.node.weight > w,
+                    };
+                    if heavier {
+                        best = Some((i, t.node.weight));
+                    }
+                }
+            }
+            let Some((idx, _)) = best else { break };
+            let t = tasks.remove(idx);
+            assign_node(&mut ctx, t.node, &t.cands, t.lb, Some(&mut tasks));
+        }
+        changed = ctx.changed;
+        tasks
+    };
+    // Task phase: private accumulators, merged in task order below.
+    let results = par.run_tasks(tasks, |task| {
+        let mut task_acc = CentroidAccum::new(k, d);
+        let mut dc = DistCounter::new();
+        let mut ctx = Ctx {
+            data,
+            centers,
+            ic,
+            sink,
+            acc: &mut task_acc,
+            dist: &mut dc,
+            changed: 0,
+            cand_pool: Vec::new(),
+            id_pool: Vec::new(),
+        };
+        assign_node(&mut ctx, task.node, &task.cands, task.lb, None);
+        let task_changed = ctx.changed;
+        (task_acc, dc.count(), task_changed)
+    });
+    for (task_acc, count, task_changed) in results {
+        acc.merge(&task_acc);
+        dist.add_bulk(count);
+        changed += task_changed;
+    }
+    changed
 }
 
 /// Compute distances from routing object `p` to the given candidate ids,
@@ -204,20 +324,18 @@ fn top2(cands: &[Cand]) -> (Cand, Option<Cand>) {
 /// and recording the hand-off bounds (u, l, second) for every point.
 fn assign_subtree(ctx: &mut Ctx, node: &Node, c1: u32, u: f64, l: f64, sec: u32) {
     ctx.acc.add_aggregate(c1 as usize, &node.sum, node.weight as f64);
-    let labels = &mut *ctx.labels;
-    let upper = &mut *ctx.upper;
-    let lower = &mut *ctx.lower;
-    let secv = &mut *ctx.second;
+    let sink = ctx.sink;
     let mut changed = 0usize;
     node.for_each_point(&mut |pi| {
         let i = pi as usize;
-        if labels[i] != c1 {
-            labels[i] = c1;
-            changed += 1;
+        // Safety: every point index occurs in exactly one subtree, and
+        // tasks are disjoint subtrees.
+        unsafe {
+            if sink.label(i) != c1 {
+                changed += 1;
+            }
+            sink.set(i, c1, u, l, sec);
         }
-        upper[i] = u;
-        lower[i] = l;
-        secv[i] = sec;
     });
     ctx.changed += changed;
 }
@@ -226,20 +344,31 @@ fn assign_subtree(ctx: &mut Ctx, node: &Node, c1: u32, u: f64, l: f64, sec: u32)
 fn assign_point(ctx: &mut Ctx, pi: u32, c1: u32, u: f64, l: f64, sec: u32) {
     let i = pi as usize;
     ctx.acc.add_point(c1 as usize, ctx.data.row(i));
-    if ctx.labels[i] != c1 {
-        ctx.labels[i] = c1;
-        ctx.changed += 1;
+    // Safety: singletons belong to exactly one node; tasks are disjoint.
+    unsafe {
+        if ctx.sink.label(i) != c1 {
+            ctx.changed += 1;
+        }
+        ctx.sink.set(i, c1, u, l, sec);
     }
-    ctx.upper[i] = u;
-    ctx.lower[i] = l;
-    ctx.second[i] = sec;
 }
 
 /// Recursive node assignment. `cands` are the computed (and Eq. 9
 /// filtered) candidate distances at this node's routing object;
 /// `inherited_lb` is a valid lower bound on the distance from any point in
 /// this subtree to every candidate dropped along the path from the root.
-fn assign_node(ctx: &mut Ctx, node: &Node, cands: &[Cand], inherited_lb: f64) {
+///
+/// With `spill == None` children are visited by direct recursion. During
+/// the expansion phase `spill` collects the children that would recurse
+/// as [`Task`]s instead — the node's own work (Eqs. 10-13 settlements and
+/// singleton assignment) happens identically either way.
+fn assign_node<'t>(
+    ctx: &mut Ctx,
+    node: &'t Node,
+    cands: &[Cand],
+    inherited_lb: f64,
+    mut spill: Option<&mut Vec<Task<'t>>>,
+) {
     let (c1, c2) = top2(cands);
     let r = node.radius;
     let (d2, sec) = match c2 {
@@ -278,7 +407,10 @@ fn assign_node(ctx: &mut Ctx, node: &Node, cands: &[Cand], inherited_lb: f64) {
         if child.routing == node.routing {
             // Self-child: identical routing object, distances carry over;
             // only the radius shrank. Re-run the tests on the same cands.
-            assign_node(ctx, child, &pruned, lb);
+            match spill.as_deref_mut() {
+                Some(out) => out.push(Task { node: child, cands: pruned.clone(), lb }),
+                None => assign_node(ctx, child, &pruned, lb, None),
+            }
             continue;
         }
 
@@ -324,8 +456,13 @@ fn assign_node(ctx: &mut Ctx, node: &Node, cands: &[Cand], inherited_lb: f64) {
             &mut child_cands,
         );
         ctx.put_ids(survivor_ids);
-        assign_node(ctx, child, &child_cands, child_lb);
-        ctx.put_cands(child_cands);
+        match spill.as_deref_mut() {
+            Some(out) => out.push(Task { node: child, cands: child_cands, lb: child_lb }),
+            None => {
+                assign_node(ctx, child, &child_cands, child_lb, None);
+                ctx.put_cands(child_cands);
+            }
+        }
     }
     ctx.put_cands(pruned);
 }
@@ -404,9 +541,12 @@ pub(crate) fn iterate_pass(
     second: &mut [u32],
     acc: &mut CentroidAccum,
     dist: &mut DistCounter,
+    par: &Parallelism,
 ) -> usize {
     let ic = InterCenter::compute(centers, dist);
-    assign_pass(data, tree, centers, &ic, labels, upper, lower, second, acc, dist)
+    assign_pass(
+        data, tree, centers, &ic, labels, upper, lower, second, acc, dist, par,
+    )
 }
 
 /// The tree-at-once driver: the cover tree plus per-point labels and the
@@ -418,10 +558,15 @@ pub(crate) struct CoverDriver<'a> {
     upper: Vec<f64>,
     lower: Vec<f64>,
     second: Vec<u32>,
+    par: Parallelism,
 }
 
 impl<'a> CoverDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix, tree: Arc<CoverTree>) -> CoverDriver<'a> {
+    pub(crate) fn new(
+        data: &'a Matrix,
+        tree: Arc<CoverTree>,
+        par: Parallelism,
+    ) -> CoverDriver<'a> {
         let n = data.rows();
         CoverDriver {
             data,
@@ -430,6 +575,7 @@ impl<'a> CoverDriver<'a> {
             upper: vec![0.0f64; n],
             lower: vec![0.0f64; n],
             second: vec![0u32; n],
+            par,
         }
     }
 
@@ -449,6 +595,7 @@ impl<'a> CoverDriver<'a> {
             &mut self.second,
             acc,
             dist,
+            &self.par,
         )
     }
 }
@@ -494,7 +641,7 @@ pub fn run(
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
+    let (tree, fresh) = ws.cover_tree_arc_threads(data, params.cover, params.threads);
     let (build_dist, build_time) = if fresh {
         (tree.build_distances, tree.build_time)
     } else {
@@ -502,7 +649,7 @@ pub fn run(
     };
     Fit::from_driver(
         data,
-        Box::new(CoverDriver::new(data, tree)),
+        Box::new(CoverDriver::new(data, tree, Parallelism::new(params.threads))),
         init,
         params.max_iter,
         params.tol,
@@ -600,8 +747,17 @@ mod tests {
             let ic = InterCenter::compute(&centers, &mut dist);
             acc.clear();
             assign_pass(
-                &data, &tree, &centers, &ic, &mut labels, &mut upper,
-                &mut lower, &mut second, &mut acc, &mut dist,
+                &data,
+                &tree,
+                &centers,
+                &ic,
+                &mut labels,
+                &mut upper,
+                &mut lower,
+                &mut second,
+                &mut acc,
+                &mut dist,
+                &Parallelism::sequential(),
             );
             // Validate against the *current* centers (before movement).
             for i in 0..n {

@@ -312,28 +312,35 @@ impl<'a> Fit<'a> {
 
 /// Construct the driver for `params.algorithm`, charging a fresh tree
 /// build (when the workspace misses) to the returned build cost pair.
-/// Panics on [`Algorithm::MiniBatch`], which is approximate and does not
-/// run the exact outer loop.
+/// `params.threads` selects the intra-fit thread budget (assignment-phase
+/// sharding and cover tree construction; the k-d-tree drivers currently
+/// ignore it). Panics on [`Algorithm::MiniBatch`], which is approximate
+/// and does not run the exact outer loop.
 pub(crate) fn new_driver<'a>(
     data: &'a Matrix,
     k: usize,
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> (Box<dyn KMeansDriver + 'a>, u64, Duration) {
+    let par = crate::parallel::Parallelism::new(params.threads);
     match params.algorithm {
-        Algorithm::Standard => (Box::new(lloyd::LloydDriver::new(data)), 0, Duration::ZERO),
-        Algorithm::Elkan => (Box::new(elkan::ElkanDriver::new(data, k)), 0, Duration::ZERO),
+        Algorithm::Standard => {
+            (Box::new(lloyd::LloydDriver::new(data, par)), 0, Duration::ZERO)
+        }
+        Algorithm::Elkan => {
+            (Box::new(elkan::ElkanDriver::new(data, k, par)), 0, Duration::ZERO)
+        }
         Algorithm::Hamerly => {
-            (Box::new(hamerly::HamerlyDriver::new(data)), 0, Duration::ZERO)
+            (Box::new(hamerly::HamerlyDriver::new(data, par)), 0, Duration::ZERO)
         }
         Algorithm::Exponion => {
-            (Box::new(exponion::ExponionDriver::new(data, k)), 0, Duration::ZERO)
+            (Box::new(exponion::ExponionDriver::new(data, par)), 0, Duration::ZERO)
         }
         Algorithm::Shallot => {
-            (Box::new(shallot::ShallotDriver::new(data, k)), 0, Duration::ZERO)
+            (Box::new(shallot::ShallotDriver::new(data, par)), 0, Duration::ZERO)
         }
         Algorithm::Phillips => {
-            (Box::new(phillips::PhillipsDriver::new(data)), 0, Duration::ZERO)
+            (Box::new(phillips::PhillipsDriver::new(data, par)), 0, Duration::ZERO)
         }
         Algorithm::Kanungo => {
             let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
@@ -346,23 +353,25 @@ pub(crate) fn new_driver<'a>(
             (Box::new(pelleg::PellegDriver::new(data, tree)), 0, bt)
         }
         Algorithm::CoverMeans => {
-            let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
+            let (tree, fresh) =
+                ws.cover_tree_arc_threads(data, params.cover, params.threads);
             let (bd, bt) = if fresh {
                 (tree.build_distances, tree.build_time)
             } else {
                 (0, Duration::ZERO)
             };
-            (Box::new(cover::CoverDriver::new(data, tree)), bd, bt)
+            (Box::new(cover::CoverDriver::new(data, tree, par)), bd, bt)
         }
         Algorithm::Hybrid => {
-            let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
+            let (tree, fresh) =
+                ws.cover_tree_arc_threads(data, params.cover, params.threads);
             let (bd, bt) = if fresh {
                 (tree.build_distances, tree.build_time)
             } else {
                 (0, Duration::ZERO)
             };
             (
-                Box::new(hybrid::HybridDriver::new(data, tree, params.switch_at)),
+                Box::new(hybrid::HybridDriver::new(data, tree, params.switch_at, par)),
                 bd,
                 bt,
             )

@@ -5,10 +5,11 @@
 //! the paper's Fig. 1b/Table 3 shows dominating on low-d data.
 
 use crate::data::Matrix;
-use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum, InterCenter};
 use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, SharedSlices};
 
 /// Stored-bounds driver: `u` per point, `l` per (point, center).
 pub(crate) struct ElkanDriver<'a> {
@@ -18,10 +19,11 @@ pub(crate) struct ElkanDriver<'a> {
     upper: Vec<f64>,
     /// Row-major n x k lower bounds.
     lower: Vec<f64>,
+    par: Parallelism,
 }
 
 impl<'a> ElkanDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix, k: usize) -> ElkanDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, k: usize, par: Parallelism) -> ElkanDriver<'a> {
         let n = data.rows();
         ElkanDriver {
             data,
@@ -29,8 +31,10 @@ impl<'a> ElkanDriver<'a> {
             labels: vec![0u32; n],
             upper: vec![0.0f64; n],
             lower: vec![0.0f64; n * k],
+            par,
         }
     }
+
 }
 
 impl KMeansDriver for ElkanDriver<'_> {
@@ -46,25 +50,41 @@ impl KMeansDriver for ElkanDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let n = self.data.rows();
+        let data = self.data;
+        let n = data.rows();
         let k = self.k;
-        for i in 0..n {
-            let p = self.data.row(i);
-            let lrow = &mut self.lower[i * k..(i + 1) * k];
-            let mut best = 0u32;
-            let mut best_d = f64::INFINITY;
-            for c in 0..k {
-                let dd = dist.d(p, centers.row(c));
-                lrow[c] = dd;
-                if dd < best_d {
-                    best_d = dd;
-                    best = c as u32;
+        {
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let upper_sh = SharedSlices::new(&mut self.upper);
+            let lower_sh = SharedSlices::new(&mut self.lower);
+            let counts = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let upper = unsafe { upper_sh.range(r.clone()) };
+                let lower = unsafe { lower_sh.range(r.start * k..r.end * k) };
+                let mut dc = DistCounter::new();
+                for (j, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let lrow = &mut lower[j * k..(j + 1) * k];
+                    let mut best = 0u32;
+                    let mut best_d = f64::INFINITY;
+                    for c in 0..k {
+                        let dd = dc.d(p, centers.row(c));
+                        lrow[c] = dd;
+                        if dd < best_d {
+                            best_d = dd;
+                            best = c as u32;
+                        }
+                    }
+                    labels[j] = best;
+                    upper[j] = best_d;
                 }
+                dc.count()
+            });
+            for count in counts {
+                dist.add_bulk(count);
             }
-            self.labels[i] = best;
-            self.upper[i] = best_d;
-            acc.add_point(best as usize, p);
         }
+        accumulate_in_order(data, &self.labels, acc);
         n
     }
 
@@ -75,50 +95,69 @@ impl KMeansDriver for ElkanDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let n = self.data.rows();
+        let data = self.data;
+        let n = data.rows();
         let k = self.k;
         let ic = InterCenter::compute(centers, dist);
         let mut changed = 0usize;
-
-        for i in 0..n {
-            let p = self.data.row(i);
-            let mut a = self.labels[i] as usize;
-            // Global filter: u <= s(a) means no other center can win.
-            if self.upper[i] > ic.s[a] {
-                let lrow = &mut self.lower[i * k..(i + 1) * k];
-                let mut tight = false;
-                for j in 0..k {
-                    if j == a {
-                        continue;
-                    }
-                    // Elkan's two per-center filters (Eqs. 4-5).
-                    if self.upper[i] <= lrow[j] || self.upper[i] <= 0.5 * ic.d(a, j) {
-                        continue;
-                    }
-                    if !tight {
-                        // Tighten the upper bound to the true distance.
-                        self.upper[i] = dist.d(p, centers.row(a));
-                        lrow[a] = self.upper[i];
-                        tight = true;
-                        if self.upper[i] <= lrow[j] || self.upper[i] <= 0.5 * ic.d(a, j)
-                        {
-                            continue;
+        {
+            let ic = &ic;
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let upper_sh = SharedSlices::new(&mut self.upper);
+            let lower_sh = SharedSlices::new(&mut self.lower);
+            let results = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let upper = unsafe { upper_sh.range(r.clone()) };
+                let lower = unsafe { lower_sh.range(r.start * k..r.end * k) };
+                let mut dc = DistCounter::new();
+                let mut changed = 0usize;
+                for (jj, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let mut a = labels[jj] as usize;
+                    // Global filter: u <= s(a) means no other center wins.
+                    if upper[jj] > ic.s[a] {
+                        let lrow = &mut lower[jj * k..(jj + 1) * k];
+                        let mut tight = false;
+                        for j in 0..k {
+                            if j == a {
+                                continue;
+                            }
+                            // Elkan's two per-center filters (Eqs. 4-5).
+                            if upper[jj] <= lrow[j] || upper[jj] <= 0.5 * ic.d(a, j) {
+                                continue;
+                            }
+                            if !tight {
+                                // Tighten the upper bound to the truth.
+                                upper[jj] = dc.d(p, centers.row(a));
+                                lrow[a] = upper[jj];
+                                tight = true;
+                                if upper[jj] <= lrow[j]
+                                    || upper[jj] <= 0.5 * ic.d(a, j)
+                                {
+                                    continue;
+                                }
+                            }
+                            let dj = dc.d(p, centers.row(j));
+                            lrow[j] = dj;
+                            if dj < upper[jj] {
+                                a = j;
+                                upper[jj] = dj;
+                            }
                         }
                     }
-                    let dj = dist.d(p, centers.row(j));
-                    lrow[j] = dj;
-                    if dj < self.upper[i] {
-                        a = j;
-                        self.upper[i] = dj;
+                    if labels[jj] != a as u32 {
+                        labels[jj] = a as u32;
+                        changed += 1;
                     }
                 }
+                (changed, dc.count())
+            });
+            for (ch, count) in results {
+                changed += ch;
+                dist.add_bulk(count);
             }
-            if self.labels[i] != a as u32 {
-                self.labels[i] = a as u32;
-                changed += 1;
-            }
-            acc.add_point(a, p);
         }
+        accumulate_in_order(data, &self.labels, acc);
         changed
     }
 
@@ -139,7 +178,11 @@ impl KMeansDriver for ElkanDriver<'_> {
 pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
     Fit::from_driver(
         data,
-        Box::new(ElkanDriver::new(data, init.rows())),
+        Box::new(ElkanDriver::new(
+            data,
+            init.rows(),
+            Parallelism::new(params.threads),
+        )),
         init,
         params.max_iter,
         params.tol,

@@ -7,37 +7,44 @@
 //! lower bound we search the slightly larger radius `R = 2u + delta_a`
 //! (`delta_a` = distance from `c_a` to its nearest other center), walking
 //! the centers in increasing distance from `c_a` via per-center sorted
-//! neighbor lists (built lazily once per iteration). Centers outside the
-//! ball are at distance > R - u from the point, which caps the new lower
-//! bound for them.
+//! neighbor lists (built lazily once per iteration, shared across chunk
+//! workers — they are a pure function of the inter-center matrix, so
+//! sharding changes no outcome). Centers outside the ball are at distance
+//! > R - u from the point, which caps the new lower bound for them.
+
+use std::sync::OnceLock;
 
 use crate::data::Matrix;
-use crate::kmeans::bounds::{nearest_two, CentroidAccum, InterCenter};
+use crate::kmeans::bounds::{accumulate_in_order, nearest_two, CentroidAccum, InterCenter};
 use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::hamerly::update_bounds;
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, SharedSlices};
 
-/// Hamerly bounds plus lazily-built sorted neighbor lists per iteration.
+/// Hamerly bounds; the sorted neighbor lists live in a per-iteration
+/// cache shared across chunk workers (they are a pure function of the
+/// inter-center matrix, so who initializes one changes no outcome).
 pub(crate) struct ExponionDriver<'a> {
     data: &'a Matrix,
     labels: Vec<u32>,
     upper: Vec<f64>,
     lower: Vec<f64>,
-    neighbors: Vec<Option<Vec<(f64, u32)>>>,
+    par: Parallelism,
 }
 
 impl<'a> ExponionDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix, k: usize) -> ExponionDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, par: Parallelism) -> ExponionDriver<'a> {
         let n = data.rows();
         ExponionDriver {
             data,
             labels: vec![0u32; n],
             upper: vec![0.0f64; n],
             lower: vec![0.0f64; n],
-            neighbors: vec![None; k],
+            par,
         }
     }
+
 }
 
 impl KMeansDriver for ExponionDriver<'_> {
@@ -52,15 +59,31 @@ impl KMeansDriver for ExponionDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let n = self.data.rows();
-        for i in 0..n {
-            let p = self.data.row(i);
-            let (c1, d1, _c2, d2) = nearest_two(p, centers, dist);
-            self.labels[i] = c1;
-            self.upper[i] = d1;
-            self.lower[i] = d2;
-            acc.add_point(c1 as usize, p);
+        let data = self.data;
+        let n = data.rows();
+        {
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let upper_sh = SharedSlices::new(&mut self.upper);
+            let lower_sh = SharedSlices::new(&mut self.lower);
+            let counts = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let upper = unsafe { upper_sh.range(r.clone()) };
+                let lower = unsafe { lower_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                for (j, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let (c1, d1, _c2, d2) = nearest_two(p, centers, &mut dc);
+                    labels[j] = c1;
+                    upper[j] = d1;
+                    lower[j] = d2;
+                }
+                dc.count()
+            });
+            for count in counts {
+                dist.add_bulk(count);
+            }
         }
+        accumulate_in_order(data, &self.labels, acc);
         n
     }
 
@@ -72,57 +95,80 @@ impl KMeansDriver for ExponionDriver<'_> {
         dist: &mut DistCounter,
     ) -> usize {
         let ic = InterCenter::compute(centers, dist);
-        for nb in self.neighbors.iter_mut() {
-            *nb = None;
-        }
+        let data = self.data;
+        let n = data.rows();
+        let k = centers.rows();
         let mut changed = 0usize;
+        {
+            let ic = &ic;
+            // Sorted neighbor lists, built lazily once per iteration and
+            // shared across chunks (pure functions of the inter-center
+            // matrix, so which worker initializes one is immaterial).
+            let neighbors: Vec<OnceLock<Vec<(f64, u32)>>> =
+                (0..k).map(|_| OnceLock::new()).collect();
+            let neighbors = &neighbors;
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let upper_sh = SharedSlices::new(&mut self.upper);
+            let lower_sh = SharedSlices::new(&mut self.lower);
+            let results = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let upper = unsafe { upper_sh.range(r.clone()) };
+                let lower = unsafe { lower_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                let mut changed = 0usize;
+                for (jj, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let a = labels[jj] as usize;
+                    let m = ic.s[a].max(lower[jj]);
+                    if upper[jj] > m {
+                        upper[jj] = dc.d(p, centers.row(a));
+                        if upper[jj] > m {
+                            // Annulus search around c_a.
+                            let u = upper[jj];
+                            let delta = 2.0 * ic.s[a]; // d(c_a, nearest other)
+                            let radius = 2.0 * u + delta;
+                            let nb =
+                                neighbors[a].get_or_init(|| ic.sorted_neighbors(a));
 
-        for i in 0..self.data.rows() {
-            let p = self.data.row(i);
-            let a = self.labels[i] as usize;
-            let m = ic.s[a].max(self.lower[i]);
-            if self.upper[i] > m {
-                self.upper[i] = dist.d(p, centers.row(a));
-                if self.upper[i] > m {
-                    // Annulus search around c_a.
-                    let u = self.upper[i];
-                    let delta = 2.0 * ic.s[a]; // d(c_a, nearest other)
-                    let radius = 2.0 * u + delta;
-                    let nb = self.neighbors[a]
-                        .get_or_insert_with(|| ic.sorted_neighbors(a));
-
-                    let mut c1 = a as u32;
-                    let mut d1 = u;
-                    let mut c2 = c1;
-                    let mut d2 = f64::INFINITY;
-                    for &(cc_dist, j) in nb.iter() {
-                        if cc_dist > radius {
-                            break;
-                        }
-                        let dj = dist.d(p, centers.row(j as usize));
-                        if dj < d1 || (dj == d1 && j < c1) {
-                            c2 = c1;
-                            d2 = d1;
-                            c1 = j;
-                            d1 = dj;
-                        } else if dj < d2 {
-                            c2 = j;
-                            d2 = dj;
+                            let mut c1 = a as u32;
+                            let mut d1 = u;
+                            let mut c2 = c1;
+                            let mut d2 = f64::INFINITY;
+                            for &(cc_dist, j) in nb.iter() {
+                                if cc_dist > radius {
+                                    break;
+                                }
+                                let dj = dc.d(p, centers.row(j as usize));
+                                if dj < d1 || (dj == d1 && j < c1) {
+                                    c2 = c1;
+                                    d2 = d1;
+                                    c1 = j;
+                                    d1 = dj;
+                                } else if dj < d2 {
+                                    c2 = j;
+                                    d2 = dj;
+                                }
+                            }
+                            let _ = c2;
+                            // Excluded centers are farther than radius - u.
+                            let excluded_lb = radius - u;
+                            if c1 != labels[jj] {
+                                labels[jj] = c1;
+                                changed += 1;
+                            }
+                            upper[jj] = d1;
+                            lower[jj] = d2.min(excluded_lb);
                         }
                     }
-                    let _ = c2;
-                    // Excluded centers are farther than radius - u.
-                    let excluded_lb = radius - u;
-                    if c1 != self.labels[i] {
-                        self.labels[i] = c1;
-                        changed += 1;
-                    }
-                    self.upper[i] = d1;
-                    self.lower[i] = d2.min(excluded_lb);
                 }
+                (changed, dc.count())
+            });
+            for (ch, count) in results {
+                changed += ch;
+                dist.add_bulk(count);
             }
-            acc.add_point(self.labels[i] as usize, p);
         }
+        accumulate_in_order(data, &self.labels, acc);
         changed
     }
 
@@ -143,7 +189,7 @@ impl KMeansDriver for ExponionDriver<'_> {
 pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
     Fit::from_driver(
         data,
-        Box::new(ExponionDriver::new(data, init.rows())),
+        Box::new(ExponionDriver::new(data, Parallelism::new(params.threads))),
         init,
         params.max_iter,
         params.tol,

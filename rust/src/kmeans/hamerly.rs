@@ -5,10 +5,11 @@
 //! Fig. 1a, where Hamerly computes the most distances of the bounds family).
 
 use crate::data::Matrix;
-use crate::kmeans::bounds::{nearest_two, CentroidAccum, InterCenter};
+use crate::kmeans::bounds::{accumulate_in_order, nearest_two, CentroidAccum, InterCenter};
 use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, SharedSlices};
 
 /// Merged-bounds driver: `(u, l)` per point.
 pub(crate) struct HamerlyDriver<'a> {
@@ -16,18 +17,21 @@ pub(crate) struct HamerlyDriver<'a> {
     labels: Vec<u32>,
     upper: Vec<f64>,
     lower: Vec<f64>,
+    par: Parallelism,
 }
 
 impl<'a> HamerlyDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix) -> HamerlyDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, par: Parallelism) -> HamerlyDriver<'a> {
         let n = data.rows();
         HamerlyDriver {
             data,
             labels: vec![0u32; n],
             upper: vec![0.0f64; n],
             lower: vec![0.0f64; n],
+            par,
         }
     }
+
 }
 
 impl KMeansDriver for HamerlyDriver<'_> {
@@ -42,15 +46,31 @@ impl KMeansDriver for HamerlyDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let n = self.data.rows();
-        for i in 0..n {
-            let p = self.data.row(i);
-            let (c1, d1, _c2, d2) = nearest_two(p, centers, dist);
-            self.labels[i] = c1;
-            self.upper[i] = d1;
-            self.lower[i] = d2;
-            acc.add_point(c1 as usize, p);
+        let data = self.data;
+        let n = data.rows();
+        {
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let upper_sh = SharedSlices::new(&mut self.upper);
+            let lower_sh = SharedSlices::new(&mut self.lower);
+            let counts = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let upper = unsafe { upper_sh.range(r.clone()) };
+                let lower = unsafe { lower_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                for (j, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let (c1, d1, _c2, d2) = nearest_two(p, centers, &mut dc);
+                    labels[j] = c1;
+                    upper[j] = d1;
+                    lower[j] = d2;
+                }
+                dc.count()
+            });
+            for count in counts {
+                dist.add_bulk(count);
+            }
         }
+        accumulate_in_order(data, &self.labels, acc);
         n
     }
 
@@ -62,27 +82,47 @@ impl KMeansDriver for HamerlyDriver<'_> {
         dist: &mut DistCounter,
     ) -> usize {
         let ic = InterCenter::compute(centers, dist);
+        let data = self.data;
+        let n = data.rows();
         let mut changed = 0usize;
-        for i in 0..self.data.rows() {
-            let p = self.data.row(i);
-            let a = self.labels[i] as usize;
-            let m = ic.s[a].max(self.lower[i]);
-            if self.upper[i] > m {
-                // Tighten u to the true distance and re-test.
-                self.upper[i] = dist.d(p, centers.row(a));
-                if self.upper[i] > m {
-                    // Full rescan: recompute the two nearest centers.
-                    let (c1, d1, _c2, d2) = nearest_two(p, centers, dist);
-                    if c1 != self.labels[i] {
-                        self.labels[i] = c1;
-                        changed += 1;
+        {
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let upper_sh = SharedSlices::new(&mut self.upper);
+            let lower_sh = SharedSlices::new(&mut self.lower);
+            let ic = &ic;
+            let results = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let upper = unsafe { upper_sh.range(r.clone()) };
+                let lower = unsafe { lower_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                let mut changed = 0usize;
+                for (j, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let a = labels[j] as usize;
+                    let m = ic.s[a].max(lower[j]);
+                    if upper[j] > m {
+                        // Tighten u to the true distance and re-test.
+                        upper[j] = dc.d(p, centers.row(a));
+                        if upper[j] > m {
+                            // Full rescan: recompute the two nearest.
+                            let (c1, d1, _c2, d2) = nearest_two(p, centers, &mut dc);
+                            if c1 != labels[j] {
+                                labels[j] = c1;
+                                changed += 1;
+                            }
+                            upper[j] = d1;
+                            lower[j] = d2;
+                        }
                     }
-                    self.upper[i] = d1;
-                    self.lower[i] = d2;
                 }
+                (changed, dc.count())
+            });
+            for (ch, count) in results {
+                changed += ch;
+                dist.add_bulk(count);
             }
-            acc.add_point(self.labels[i] as usize, p);
         }
+        accumulate_in_order(data, &self.labels, acc);
         changed
     }
 
@@ -103,7 +143,7 @@ impl KMeansDriver for HamerlyDriver<'_> {
 pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
     Fit::from_driver(
         data,
-        Box::new(HamerlyDriver::new(data)),
+        Box::new(HamerlyDriver::new(data, Parallelism::new(params.threads))),
         init,
         params.max_iter,
         params.tol,

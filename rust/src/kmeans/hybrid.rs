@@ -17,18 +17,19 @@ use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::shallot::ShallotState;
 use crate::kmeans::{cover, hamerly, shallot, Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::Parallelism;
 use crate::tree::CoverTree;
 
 /// Phase-switching driver: Cover-means passes for iterations
 /// `1..=switch_at`, Shallot passes afterwards, with the bound hand-off in
-/// [`KMeansDriver::post_update`] at the switch iteration.
+/// [`KMeansDriver::post_update`] at the switch iteration. Both phases
+/// shard over `par`'s thread budget with exactness-preserving reductions.
 pub(crate) struct HybridDriver<'a> {
     data: &'a Matrix,
     tree: Arc<CoverTree>,
     switch_at: usize,
     state: ShallotState,
-    /// Shallot-phase sorted neighbor cache, sized on first use.
-    neighbors: Vec<Option<Vec<(f64, u32)>>>,
+    par: Parallelism,
 }
 
 impl<'a> HybridDriver<'a> {
@@ -36,13 +37,14 @@ impl<'a> HybridDriver<'a> {
         data: &'a Matrix,
         tree: Arc<CoverTree>,
         switch_at: usize,
+        par: Parallelism,
     ) -> HybridDriver<'a> {
         HybridDriver {
             data,
             tree,
             switch_at,
             state: ShallotState::unassigned(data.rows()),
-            neighbors: Vec::new(),
+            par,
         }
     }
 
@@ -64,18 +66,16 @@ impl<'a> HybridDriver<'a> {
                 &mut self.state.second,
                 acc,
                 dist,
+                &self.par,
             )
         } else {
-            if self.neighbors.len() != centers.rows() {
-                self.neighbors = vec![None; centers.rows()];
-            }
             shallot::iterate_pass(
                 self.data,
                 centers,
                 &mut self.state,
-                &mut self.neighbors,
                 acc,
                 dist,
+                &self.par,
             )
         }
     }
@@ -138,7 +138,7 @@ pub fn run(
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let (tree, fresh) = ws.cover_tree_arc(data, params.cover);
+    let (tree, fresh) = ws.cover_tree_arc_threads(data, params.cover, params.threads);
     let (build_dist, build_time) = if fresh {
         (tree.build_distances, tree.build_time)
     } else {
@@ -146,7 +146,12 @@ pub fn run(
     };
     Fit::from_driver(
         data,
-        Box::new(HybridDriver::new(data, tree, params.switch_at)),
+        Box::new(HybridDriver::new(
+            data,
+            tree,
+            params.switch_at,
+            Parallelism::new(params.threads),
+        )),
         init,
         params.max_iter,
         params.tol,

@@ -8,20 +8,22 @@
 //! in `crate::runtime::lloyd_xla` (behind the `xla` feature).
 
 use crate::data::Matrix;
-use crate::kmeans::bounds::CentroidAccum;
+use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum};
 use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, SharedSlices};
 
 /// The dense full-scan driver: no state beyond the labels.
 pub(crate) struct LloydDriver<'a> {
     data: &'a Matrix,
     labels: Vec<u32>,
+    par: Parallelism,
 }
 
 impl<'a> LloydDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix) -> LloydDriver<'a> {
-        LloydDriver { data, labels: vec![u32::MAX; data.rows()] }
+    pub(crate) fn new(data: &'a Matrix, par: Parallelism) -> LloydDriver<'a> {
+        LloydDriver { data, labels: vec![u32::MAX; data.rows()], par }
     }
 
     fn scan(
@@ -30,26 +32,46 @@ impl<'a> LloydDriver<'a> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
+        let data = self.data;
+        let n = data.rows();
         let k = centers.rows();
         let mut changed = 0usize;
-        for i in 0..self.data.rows() {
-            let p = self.data.row(i);
-            // Nearest center, ties to the lowest index (strict <).
-            let mut best = 0u32;
-            let mut best_d = f64::INFINITY;
-            for c in 0..k {
-                let dd = dist.d(p, centers.row(c));
-                if dd < best_d {
-                    best_d = dd;
-                    best = c as u32;
+        {
+            // Parallel label pass: chunk workers write disjoint label
+            // ranges; each point's result depends only on its own prior
+            // label, so any chunk layout reproduces the sequential scan.
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let results = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                let mut changed = 0usize;
+                for (j, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    // Nearest center, ties to the lowest index (strict <).
+                    let mut best = 0u32;
+                    let mut best_d = f64::INFINITY;
+                    for c in 0..k {
+                        let dd = dc.d(p, centers.row(c));
+                        if dd < best_d {
+                            best_d = dd;
+                            best = c as u32;
+                        }
+                    }
+                    if labels[j] != best {
+                        labels[j] = best;
+                        changed += 1;
+                    }
                 }
+                (changed, dc.count())
+            });
+            for (ch, count) in results {
+                changed += ch;
+                dist.add_bulk(count);
             }
-            if self.labels[i] != best {
-                self.labels[i] = best;
-                changed += 1;
-            }
-            acc.add_point(best as usize, p);
         }
+        // Center sums in canonical point order: bit-identical to the
+        // sequential accumulation at every thread count.
+        accumulate_in_order(data, &self.labels, acc);
         changed
     }
 }
@@ -91,7 +113,7 @@ impl KMeansDriver for LloydDriver<'_> {
 pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
     Fit::from_driver(
         data,
-        Box::new(LloydDriver::new(data)),
+        Box::new(LloydDriver::new(data, Parallelism::new(params.threads))),
         init,
         params.max_iter,
         params.tol,

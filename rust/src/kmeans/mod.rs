@@ -19,7 +19,10 @@
 //! Standard algorithm's assignment sequence (ties broken by the lowest
 //! center index), differing only in how many distance computations it
 //! spends. That invariant is enforced by the property tests in
-//! `rust/tests/exactness.rs`.
+//! `rust/tests/exactness.rs`. A second invariant rides on top: with
+//! `.threads(n)` the assignment phase shards over `n` workers using
+//! exactness-preserving reductions, and any thread count reproduces the
+//! sequential fit byte for byte (`rust/tests/parallel_exactness.rs`).
 //!
 //! | variant      | driver in   | paper ref |
 //! |--------------|-------------|-----------|
@@ -185,6 +188,15 @@ pub struct KMeansParams {
     pub switch_at: usize,
     /// Mini-batch knobs (consumed only by [`Algorithm::MiniBatch`]).
     pub minibatch: MiniBatchParams,
+    /// Intra-fit worker threads for the assignment phase and tree
+    /// construction (config key `fit_threads`; 0 = all cores). The
+    /// reductions are exactness-preserving — any thread count reproduces
+    /// the sequential run byte for byte (same assignments, same counted
+    /// distances) — so 1 (the default) keeps the paper's single-core
+    /// measurement protocol without changing any result. MiniBatch and the
+    /// k-d-tree drivers (Kanungo, Pelleg-Moore) currently run
+    /// single-threaded regardless.
+    pub threads: usize,
 }
 
 impl Default for KMeansParams {
@@ -197,6 +209,7 @@ impl Default for KMeansParams {
             kd: KdTreeParams::default(),
             switch_at: 7,
             minibatch: MiniBatchParams::default(),
+            threads: 1,
         }
     }
 }
@@ -288,13 +301,30 @@ impl Workspace {
         data: &Matrix,
         params: CoverTreeParams,
     ) -> (Arc<CoverTree>, bool) {
+        self.cover_tree_arc_threads(data, params, 1)
+    }
+
+    /// Like [`Workspace::cover_tree_arc`], building any fresh tree with
+    /// `threads` workers. The thread count is *not* part of the cache key:
+    /// parallel construction yields a byte-identical tree (structure,
+    /// aggregates, and counted build distances), so a tree built with any
+    /// thread count serves every caller.
+    pub fn cover_tree_arc_threads(
+        &mut self,
+        data: &Matrix,
+        params: CoverTreeParams,
+        threads: usize,
+    ) -> (Arc<CoverTree>, bool) {
         let key = DataKey::of(data);
         let stale = match &self.cover {
             Some((k, t)) => *k != key || t.params != params,
             None => true,
         };
         if stale {
-            self.cover = Some((key, Arc::new(CoverTree::build(data, params))));
+            self.cover = Some((
+                key,
+                Arc::new(CoverTree::build_with_threads(data, params, threads)),
+            ));
         }
         (self.cover.as_ref().unwrap().1.clone(), stale)
     }

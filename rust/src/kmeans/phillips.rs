@@ -6,21 +6,24 @@
 //! node-level filter in Cover-means.
 
 use crate::data::Matrix;
-use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum, InterCenter};
 use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, SharedSlices};
 
 /// Memoryless Eq. 5 driver: only the labels persist between iterations.
 pub(crate) struct PhillipsDriver<'a> {
     data: &'a Matrix,
     labels: Vec<u32>,
+    par: Parallelism,
 }
 
 impl<'a> PhillipsDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix) -> PhillipsDriver<'a> {
-        PhillipsDriver { data, labels: vec![0u32; data.rows()] }
+    pub(crate) fn new(data: &'a Matrix, par: Parallelism) -> PhillipsDriver<'a> {
+        PhillipsDriver { data, labels: vec![0u32; data.rows()], par }
     }
+
 }
 
 impl KMeansDriver for PhillipsDriver<'_> {
@@ -35,22 +38,34 @@ impl KMeansDriver for PhillipsDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let n = self.data.rows();
+        let data = self.data;
+        let n = data.rows();
         let k = centers.rows();
-        for i in 0..n {
-            let p = self.data.row(i);
-            let mut best = 0u32;
-            let mut best_d = f64::INFINITY;
-            for c in 0..k {
-                let dd = dist.d(p, centers.row(c));
-                if dd < best_d {
-                    best_d = dd;
-                    best = c as u32;
+        {
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let counts = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                for (j, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let mut best = 0u32;
+                    let mut best_d = f64::INFINITY;
+                    for c in 0..k {
+                        let dd = dc.d(p, centers.row(c));
+                        if dd < best_d {
+                            best_d = dd;
+                            best = c as u32;
+                        }
+                    }
+                    labels[j] = best;
                 }
+                dc.count()
+            });
+            for count in counts {
+                dist.add_bulk(count);
             }
-            self.labels[i] = best;
-            acc.add_point(best as usize, p);
         }
+        accumulate_in_order(data, &self.labels, acc);
         n
     }
 
@@ -63,35 +78,51 @@ impl KMeansDriver for PhillipsDriver<'_> {
     ) -> usize {
         let k = centers.rows();
         let ic = InterCenter::compute(centers, dist);
+        let data = self.data;
+        let n = data.rows();
         let mut changed = 0usize;
-
-        for i in 0..self.data.rows() {
-            let p = self.data.row(i);
-            let a = self.labels[i] as usize;
-            // Tighten the anchor distance, then Eq. 5 filter against it.
-            let mut best = a as u32;
-            let mut best_d = dist.d(p, centers.row(a));
-            for j in 0..k {
-                if j == a {
-                    continue;
+        {
+            let ic = &ic;
+            let labels_sh = SharedSlices::new(&mut self.labels);
+            let results = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                let mut changed = 0usize;
+                for (jj, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let a = labels[jj] as usize;
+                    // Tighten the anchor distance, then Eq. 5 filter.
+                    let mut best = a as u32;
+                    let mut best_d = dc.d(p, centers.row(a));
+                    for j in 0..k {
+                        if j == a {
+                            continue;
+                        }
+                        // Filter against the *current* best (a running
+                        // variant of Eq. 5, strictly stronger than
+                        // anchoring on a alone).
+                        if ic.d(best as usize, j) >= 2.0 * best_d {
+                            continue;
+                        }
+                        let dj = dc.d(p, centers.row(j));
+                        if dj < best_d || (dj == best_d && (j as u32) < best) {
+                            best_d = dj;
+                            best = j as u32;
+                        }
+                    }
+                    if labels[jj] != best {
+                        labels[jj] = best;
+                        changed += 1;
+                    }
                 }
-                // Filter against the *current* best (a running variant of
-                // Eq. 5, strictly stronger than anchoring on a alone).
-                if ic.d(best as usize, j) >= 2.0 * best_d {
-                    continue;
-                }
-                let dj = dist.d(p, centers.row(j));
-                if dj < best_d || (dj == best_d && (j as u32) < best) {
-                    best_d = dj;
-                    best = j as u32;
-                }
+                (changed, dc.count())
+            });
+            for (ch, count) in results {
+                changed += ch;
+                dist.add_bulk(count);
             }
-            if self.labels[i] != best {
-                self.labels[i] = best;
-                changed += 1;
-            }
-            acc.add_point(best as usize, p);
         }
+        accumulate_in_order(data, &self.labels, acc);
         changed
     }
 
@@ -108,7 +139,7 @@ impl KMeansDriver for PhillipsDriver<'_> {
 pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
     Fit::from_driver(
         data,
-        Box::new(PhillipsDriver::new(data)),
+        Box::new(PhillipsDriver::new(data, Parallelism::new(params.threads))),
         init,
         params.max_iter,
         params.tol,

@@ -14,12 +14,15 @@
 //! go stale; correctness only needs `l` to lower-bound every non-assigned
 //! center, which the shrinking-ball argument preserves.
 
+use std::sync::OnceLock;
+
 use crate::data::Matrix;
-use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum, InterCenter};
 use crate::kmeans::driver::{Fit, KMeansDriver};
 use crate::kmeans::hamerly::update_bounds;
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, SharedSlices};
 
 /// Per-point stored state seeded either by the first full scan or by the
 /// cover tree hand-off (paper Eqs. 15-18).
@@ -54,33 +57,72 @@ impl ShallotState {
 /// distances, the `(u, l)` filter per point, shrinking-ball searches on
 /// failure. Shared between [`ShallotDriver`] and the Hybrid driver, which
 /// seeds `state` from the cover tree instead of a full first scan.
+/// Sharded over point chunks; the sorted-neighbor cache is built lazily
+/// once per iteration and shared across chunk workers (pure functions of
+/// the inter-center matrix), so any thread count reproduces the
+/// sequential pass exactly.
 pub(crate) fn iterate_pass(
     data: &Matrix,
     centers: &Matrix,
     state: &mut ShallotState,
-    neighbors: &mut [Option<Vec<(f64, u32)>>],
     acc: &mut CentroidAccum,
     dist: &mut DistCounter,
+    par: &Parallelism,
 ) -> usize {
     let ic = InterCenter::compute(centers, dist);
-    for nb in neighbors.iter_mut() {
-        *nb = None;
-    }
+    let n = data.rows();
+    let k = centers.rows();
     let mut changed = 0usize;
-
-    for i in 0..data.rows() {
-        let p = data.row(i);
-        let a = state.labels[i] as usize;
-        let m = ic.s[a].max(state.lower[i]);
-        if state.upper[i] > m {
-            // Tighten u.
-            state.upper[i] = dist.d(p, centers.row(a));
-            if state.upper[i] > m {
-                search(p, i, centers, &ic, neighbors, state, dist, &mut changed);
+    {
+        let ic = &ic;
+        let neighbors: Vec<OnceLock<Vec<(f64, u32)>>> =
+            (0..k).map(|_| OnceLock::new()).collect();
+        let neighbors = &neighbors;
+        let labels_sh = SharedSlices::new(&mut state.labels);
+        let second_sh = SharedSlices::new(&mut state.second);
+        let upper_sh = SharedSlices::new(&mut state.upper);
+        let lower_sh = SharedSlices::new(&mut state.lower);
+        let results = par.map_chunks(n, |r| {
+            let labels = unsafe { labels_sh.range(r.clone()) };
+            let second = unsafe { second_sh.range(r.clone()) };
+            let upper = unsafe { upper_sh.range(r.clone()) };
+            let lower = unsafe { lower_sh.range(r.clone()) };
+            let mut dc = DistCounter::new();
+            let mut changed = 0usize;
+            for (j, i) in r.clone().enumerate() {
+                let p = data.row(i);
+                let a = labels[j] as usize;
+                let m = ic.s[a].max(lower[j]);
+                if upper[j] > m {
+                    // Tighten u.
+                    upper[j] = dc.d(p, centers.row(a));
+                    if upper[j] > m
+                        && search(
+                            p,
+                            centers,
+                            ic,
+                            neighbors,
+                            &mut labels[j],
+                            &mut second[j],
+                            &mut upper[j],
+                            &mut lower[j],
+                            &mut dc,
+                        )
+                    {
+                        changed += 1;
+                    }
+                }
             }
+            (changed, dc.count())
+        });
+        for (ch, count) in results {
+            changed += ch;
+            dist.add_bulk(count);
         }
-        acc.add_point(state.labels[i] as usize, p);
     }
+    // Center sums in canonical point order (bit-identical at every
+    // thread count).
+    accumulate_in_order(data, &state.labels, acc);
     changed
 }
 
@@ -88,15 +130,15 @@ pub(crate) fn iterate_pass(
 pub(crate) struct ShallotDriver<'a> {
     data: &'a Matrix,
     state: ShallotState,
-    neighbors: Vec<Option<Vec<(f64, u32)>>>,
+    par: Parallelism,
 }
 
 impl<'a> ShallotDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix, k: usize) -> ShallotDriver<'a> {
+    pub(crate) fn new(data: &'a Matrix, par: Parallelism) -> ShallotDriver<'a> {
         ShallotDriver {
             data,
             state: ShallotState::zeroed(data.rows()),
-            neighbors: vec![None; k],
+            par,
         }
     }
 }
@@ -113,17 +155,35 @@ impl KMeansDriver for ShallotDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let n = self.data.rows();
-        for i in 0..n {
-            let p = self.data.row(i);
-            let (c1, d1, c2, d2) =
-                crate::kmeans::bounds::nearest_two(p, centers, dist);
-            self.state.labels[i] = c1;
-            self.state.second[i] = c2;
-            self.state.upper[i] = d1;
-            self.state.lower[i] = d2;
-            acc.add_point(c1 as usize, p);
+        let data = self.data;
+        let n = data.rows();
+        {
+            let labels_sh = SharedSlices::new(&mut self.state.labels);
+            let second_sh = SharedSlices::new(&mut self.state.second);
+            let upper_sh = SharedSlices::new(&mut self.state.upper);
+            let lower_sh = SharedSlices::new(&mut self.state.lower);
+            let counts = self.par.map_chunks(n, |r| {
+                let labels = unsafe { labels_sh.range(r.clone()) };
+                let second = unsafe { second_sh.range(r.clone()) };
+                let upper = unsafe { upper_sh.range(r.clone()) };
+                let lower = unsafe { lower_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                for (j, i) in r.clone().enumerate() {
+                    let p = data.row(i);
+                    let (c1, d1, c2, d2) =
+                        crate::kmeans::bounds::nearest_two(p, centers, &mut dc);
+                    labels[j] = c1;
+                    second[j] = c2;
+                    upper[j] = d1;
+                    lower[j] = d2;
+                }
+                dc.count()
+            });
+            for count in counts {
+                dist.add_bulk(count);
+            }
         }
+        accumulate_in_order(data, &self.state.labels, acc);
         n
     }
 
@@ -134,14 +194,7 @@ impl KMeansDriver for ShallotDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        iterate_pass(
-            self.data,
-            centers,
-            &mut self.state,
-            &mut self.neighbors,
-            acc,
-            dist,
-        )
+        iterate_pass(self.data, centers, &mut self.state, acc, dist, &self.par)
     }
 
     fn post_update(&mut self, _iter: usize, movement: &[f64]) {
@@ -166,7 +219,7 @@ impl KMeansDriver for ShallotDriver<'_> {
 pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
     Fit::from_driver(
         data,
-        Box::new(ShallotDriver::new(data, init.rows())),
+        Box::new(ShallotDriver::new(data, Parallelism::new(params.threads))),
         init,
         params.max_iter,
         params.tol,
@@ -174,26 +227,30 @@ pub fn run(data: &Matrix, init: &Matrix, params: &KMeansParams) -> RunResult {
     .run()
 }
 
-/// The shrinking-ball search for one point whose bounds failed.
+/// The shrinking-ball search for one point whose bounds failed. Operates
+/// on the point's own stored state (`label`/`second`/`upper`/`lower`), so
+/// chunk workers can run it concurrently on disjoint points. Returns
+/// whether the assignment changed.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn search(
     p: &[f64],
-    i: usize,
     centers: &Matrix,
     ic: &InterCenter,
-    neighbors: &mut [Option<Vec<(f64, u32)>>],
-    state: &mut ShallotState,
+    neighbors: &[OnceLock<Vec<(f64, u32)>>],
+    label: &mut u32,
+    second: &mut u32,
+    upper: &mut f64,
+    lower: &mut f64,
     dist: &mut DistCounter,
-    changed: &mut usize,
-) {
-    let a_orig = state.labels[i];
-    let u_orig = state.upper[i];
+) -> bool {
+    let a_orig = *label;
+    let u_orig = *upper;
 
     // Probe the remembered second-nearest first.
     let mut c1 = a_orig;
     let mut d1 = u_orig;
-    let mut b = state.second[i];
+    let mut b = *second;
     if b == c1 {
         // Degenerate memory (k == 1 hand-off); pick any other center.
         b = if c1 == 0 { (centers.rows() - 1) as u32 } else { 0 };
@@ -208,7 +265,7 @@ fn search(
     // Walk neighbors of the original assigned center (the annulus anchor)
     // while the shrinking radius allows.
     let anchor = a_orig as usize;
-    let nb = neighbors[anchor].get_or_insert_with(|| ic.sorted_neighbors(anchor));
+    let nb = neighbors[anchor].get_or_init(|| ic.sorted_neighbors(anchor));
     for &(cc_dist, j) in nb.iter() {
         // Shrinking ball: any center with d(x, c_j) < d2 must satisfy
         // d(c_anchor, c_j) <= d(x, c_anchor) + d(x, c_j) < u_orig + d2.
@@ -233,13 +290,12 @@ fn search(
     // Centers never probed satisfy d(x,c_j) >= cc(anchor, j) - u_orig >
     // (u_orig + d2) - u_orig = d2 at the moment the walk stopped, so `d2`
     // is a valid merged lower bound.
-    if c1 != state.labels[i] {
-        state.labels[i] = c1;
-        *changed += 1;
-    }
-    state.second[i] = c2;
-    state.upper[i] = d1;
-    state.lower[i] = d2;
+    let changed = c1 != *label;
+    *label = c1;
+    *second = c2;
+    *upper = d1;
+    *lower = d2;
+    changed
 }
 
 #[cfg(test)]

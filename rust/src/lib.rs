@@ -17,6 +17,17 @@
 //!   aggregates and the sweep coordinator / benchmark harness that
 //!   regenerate the paper's tables and figures — including warm-started
 //!   parameter sweeps that reuse centers across k.
+//! * **Intra-fit parallelism** — a single fit can shard its assignment
+//!   phase (and the cover tree construction) over OS threads via
+//!   `KMeans::new(k).threads(n)` (config key `fit_threads`; 0 = all
+//!   cores). The [`parallel`] module's reductions are
+//!   exactness-preserving: `threads = N` reproduces `threads = 1` byte
+//!   for byte — same assignments, same counted `distances`, same centers
+//!   — so the paper's per-algorithm distance counts are unaffected by the
+//!   thread count (`rust/tests/parallel_exactness.rs`). The sweep
+//!   coordinator splits its total thread budget between cell-level
+//!   workers and intra-fit threads (`threads` / `fit_threads` config
+//!   keys).
 //! * **L2/L1 (python/, build-time only)** — the dense assign-step
 //!   (distance matrix + top-2 + centroid partials) as a Pallas kernel in a
 //!   JAX graph, AOT-lowered to HLO text in `artifacts/`.
@@ -33,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod kmeans;
 pub mod metrics;
+pub mod parallel;
 pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -39,9 +39,16 @@ COMMANDS:
   help       this text
 
 CONFIG KEYS (also accepted in --config files as `key = value`):
-  dataset scale data_seed k restarts seed threads out_dir max_iter tol
-  switch_at scale_factor min_node_size kd_leaf_size algorithms
-  mb_batch mb_tol mb_seed
+  dataset scale data_seed k restarts seed threads fit_threads out_dir
+  max_iter tol switch_at scale_factor min_node_size kd_leaf_size
+  algorithms mb_batch mb_tol mb_seed
+
+THREADS:
+  `threads` is the total worker budget; `fit_threads` (default 1, 0 = all
+  cores) shards each fit's assignment phase and tree build. The split is
+  cell_workers = threads / fit_threads. Intra-fit parallelism is
+  exactness-preserving: any fit_threads value reproduces the
+  single-threaded assignments and distance counts byte for byte.
 ";
 
 fn main() {
@@ -140,6 +147,10 @@ fn cmd_run(args: &[String]) -> Result<()> {
 
     println!("algorithm   : {}", alg.name());
     println!("backend     : {backend}");
+    println!(
+        "fit_threads : {}",
+        covermeans::parallel::resolve_threads(params.threads)
+    );
     println!(
         "iterations  : {} (converged: {})",
         result.iterations, result.converged
@@ -302,8 +313,11 @@ fn cmd_ablate(args: &[String]) -> Result<()> {
     let _ = parse_overrides(args, &mut cfg)?;
     let mut rows = vec!["knob,dataset,algorithm,dist_rel,time_rel".to_string()];
     for (label, mut exp) in sweep::ablations(cfg.scale, cfg.restarts.min(3)) {
-        // Keep the ablated knob; adopt only the orthogonal settings.
+        // Keep the ablated knob; adopt only the orthogonal settings
+        // (including fit_threads, so the provenance header written by
+        // write_csv matches what actually ran).
         exp.threads = cfg.threads;
+        exp.params.threads = cfg.params.threads;
         exp.data_seed = cfg.data_seed;
         let res = run_experiment(&exp, false)?;
         for ds in &exp.datasets.clone() {
@@ -385,7 +399,13 @@ fn write_csv(cfg: &RunConfig, name: &str, rows: &[String]) -> Result<()> {
     let dir = Path::new(&cfg.out_dir);
     std::fs::create_dir_all(dir)?;
     let path = dir.join(name);
-    std::fs::write(&path, rows.join("\n") + "\n")?;
+    // Provenance header: the actual thread topology (the reports used to
+    // imply every run was single-threaded).
+    let (cell_threads, fit_threads) =
+        covermeans::coordinator::thread_split(cfg.threads, cfg.params.threads);
+    let mut all = report::provenance_rows_for(cell_threads, fit_threads);
+    all.extend_from_slice(rows);
+    std::fs::write(&path, all.join("\n") + "\n")?;
     eprintln!("wrote {}", path.display());
     Ok(())
 }

@@ -1,0 +1,275 @@
+//! Intra-fit data parallelism with exactness-preserving reductions.
+//!
+//! The paper's entire algorithm family has embarrassingly parallel
+//! assignment phases: each point's (or subtree's) new assignment depends
+//! only on its own stored state, the current centers, and the inter-center
+//! matrix — never on another point's in-flight update. This module
+//! exploits that with plain `std::thread::scope` workers (no external
+//! dependencies) while keeping the repo's central invariant intact:
+//!
+//! **Determinism contract.** A fit with `threads = N` produces *byte
+//! identical* results to `threads = 1` — same assignments, same iteration
+//! count, same counted `distances`, same centers bit for bit. Three rules
+//! enforce it:
+//!
+//! 1. **Per-point passes** ([`Parallelism::map_chunks`]) shard the point
+//!    range into disjoint chunks. Chunk workers only write point-local
+//!    state (labels, stored bounds) through [`SharedSlices`]; the integer
+//!    reductions (changed counts, distance tallies) are order-free sums,
+//!    and the floating-point center sums are *not* reduced per chunk at
+//!    all — every driver accumulates them sequentially in canonical point
+//!    order after the parallel pass, so the sums match the sequential
+//!    implementation bit for bit at any thread count.
+//! 2. **Tree passes** (Cover-means assignment, cover tree construction)
+//!    are decomposed into a task list by a *thread-count-independent*
+//!    expansion policy; per-task partial accumulators are merged in task
+//!    order. Thread count only affects scheduling, never the task list or
+//!    the merge order.
+//! 3. Every distance computation a worker performs goes into a private
+//!    [`crate::metrics::DistCounter`] whose total is folded back with
+//!    integer addition, so counted distances stay exact.
+//!
+//! `rust/tests/parallel_exactness.rs` asserts the contract for every
+//! algorithm on the synthetic datasets.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Thread budget for one fit (or one tree build).
+///
+/// `Parallelism::new(0)` resolves to the machine's available parallelism;
+/// any other value is used as-is. The default is sequential execution,
+/// which keeps the paper-replication protocols single-threaded unless a
+/// caller opts in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// A budget of `threads` workers; 0 means "all available cores".
+    pub fn new(threads: usize) -> Parallelism {
+        Parallelism { threads: resolve_threads(threads) }
+    }
+
+    /// Strictly sequential execution.
+    pub fn sequential() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// The resolved worker count (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task, returning the results **in task order**. Tasks are
+    /// claimed work-stealing style by up to `threads` scoped workers; with
+    /// one thread (or one task) everything runs inline on the caller.
+    ///
+    /// The closure must be deterministic per task: result `i` may be
+    /// computed by any worker, but the returned vector is always ordered
+    /// by task index, so order-sensitive reductions stay reproducible.
+    pub fn run_tasks<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        if self.threads <= 1 || tasks.len() <= 1 {
+            return tasks.into_iter().map(f).collect();
+        }
+        let n = tasks.len();
+        let slots: Vec<Mutex<Option<T>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(n);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let task = slots[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("task claimed twice");
+                    let r = f(task);
+                    *results[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
+            .collect()
+    }
+
+    /// The chunk layout for a per-point pass over `0..n`: one chunk when
+    /// sequential, otherwise `threads * 4` roughly equal chunks (bounded
+    /// below so tiny inputs are not shredded). Per-point passes are
+    /// invariant to the layout — each point's outcome depends only on its
+    /// own prior state — so the layout may (and does) depend on the thread
+    /// count without breaking the determinism contract.
+    pub fn chunk_ranges(&self, n: usize) -> Vec<Range<usize>> {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.threads <= 1 {
+            return vec![0..n];
+        }
+        const MIN_CHUNK: usize = 256;
+        let target = self.threads * 4;
+        let size = n.div_ceil(target).max(MIN_CHUNK);
+        let mut out = Vec::with_capacity(n.div_ceil(size));
+        let mut start = 0;
+        while start < n {
+            let end = (start + size).min(n);
+            out.push(start..end);
+            start = end;
+        }
+        out
+    }
+
+    /// Shard `0..n` with [`Parallelism::chunk_ranges`] and run `f` on every
+    /// chunk, returning per-chunk results in chunk order.
+    pub fn map_chunks<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+    {
+        self.run_tasks(self.chunk_ranges(n), f)
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::sequential()
+    }
+}
+
+/// Resolve a configured thread count: 0 = all available cores, otherwise
+/// the value itself (minimum 1).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Hands out disjoint mutable subranges of one slice to chunk workers.
+///
+/// The borrow checker cannot see that chunk ranges are disjoint across
+/// worker closures, so the split goes through a raw pointer. All uses in
+/// this crate derive the ranges from [`Parallelism::chunk_ranges`] (or a
+/// spatial-tree partition), which never overlap.
+pub struct SharedSlices<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedSlices<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlices<'_, T> {}
+
+impl<'a, T> SharedSlices<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SharedSlices<'a, T> {
+        SharedSlices {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    /// Concurrent callers must use pairwise-disjoint ranges; the range
+    /// must lie within the original slice.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(
+            self.ptr.add(range.start),
+            range.end - range.start,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(Parallelism::new(1).threads(), 1);
+        assert_eq!(Parallelism::sequential().threads(), 1);
+    }
+
+    #[test]
+    fn run_tasks_preserves_order() {
+        for t in [1usize, 2, 4] {
+            let par = Parallelism::new(t);
+            let tasks: Vec<usize> = (0..37).collect();
+            let out = par.run_tasks(tasks, |i| i * 10);
+            assert_eq!(out.len(), 37);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * 10, "threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for t in [1usize, 2, 4, 8] {
+            let par = Parallelism::new(t);
+            for n in [0usize, 1, 255, 256, 1000, 4097] {
+                let ranges = par.chunk_ranges(n);
+                let mut next = 0usize;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "threads={t} n={n}");
+                    assert!(r.end > r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, n, "threads={t} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_is_single_chunk() {
+        assert_eq!(Parallelism::sequential().chunk_ranges(10_000), vec![0..10_000]);
+    }
+
+    #[test]
+    fn map_chunks_results_in_chunk_order() {
+        let par = Parallelism::new(4);
+        let sums = par.map_chunks(10_000, |r| r.sum::<usize>());
+        let total: usize = sums.into_iter().sum();
+        assert_eq!(total, (0..10_000).sum::<usize>());
+    }
+
+    #[test]
+    fn shared_slices_disjoint_writes() {
+        let mut v = vec![0u32; 1000];
+        let par = Parallelism::new(4);
+        {
+            let sh = SharedSlices::new(&mut v);
+            par.map_chunks(1000, |r| {
+                let s = unsafe { sh.range(r.clone()) };
+                for (off, i) in r.enumerate() {
+                    s[off] = i as u32 + 1;
+                }
+            });
+        }
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32 + 1);
+        }
+    }
+}

@@ -23,6 +23,7 @@
 
 use crate::data::matrix::Matrix;
 use crate::metrics::DistCounter;
+use crate::parallel::Parallelism;
 
 /// A cover tree node. `children[0]` is always the self-child (same routing
 /// object, smaller radius) when children exist.
@@ -80,10 +81,27 @@ pub struct CoverTree {
 }
 
 impl CoverTree {
-    /// Build over all rows of `data`.
+    /// Build over all rows of `data` (single-threaded).
     pub fn build(data: &Matrix, params: CoverTreeParams) -> CoverTree {
+        CoverTree::build_with_threads(data, params, 1)
+    }
+
+    /// Build with up to `threads` workers (0 = all cores).
+    ///
+    /// Parallel construction expands the top of the tree sequentially into
+    /// subtree tasks via a thread-count-independent policy and builds the
+    /// tasks concurrently, merging their distance tallies in task order —
+    /// so the resulting tree (structure, aggregates, and counted
+    /// `build_distances`) is byte-identical to the sequential build at
+    /// every thread count.
+    pub fn build_with_threads(
+        data: &Matrix,
+        params: CoverTreeParams,
+        threads: usize,
+    ) -> CoverTree {
         assert!(params.scale_factor > 1.0, "scale factor must be > 1");
         assert!(data.rows() > 0, "empty dataset");
+        let par = Parallelism::new(threads);
         let sw = std::time::Instant::now();
         let mut dist = DistCounter::new();
 
@@ -95,7 +113,11 @@ impl CoverTree {
             let d = dist.d(data.row(root_pt as usize), data.row(i as usize));
             elems.push((i, d));
         }
-        let root = build_node(data, &params, &mut dist, root_pt, 0.0, elems, true);
+        let root = if par.threads() > 1 && elems.len() >= PAR_MIN_SPLIT {
+            build_root_parallel(data, &params, &mut dist, root_pt, elems, &par)
+        } else {
+            build_node(data, &params, &mut dist, root_pt, 0.0, elems, true)
+        };
 
         let mut tree = CoverTree {
             root,
@@ -128,43 +150,66 @@ impl CoverTree {
     }
 }
 
-/// Recursive greedy construction.
-///
-/// `elems` holds `(index, distance to p)` for every point this node must
-/// cover (excluding `p` itself iff `owns_routing`; the routing object is
-/// carried implicitly and emitted as a singleton exactly once, at the node
-/// where recursion stops).
-fn build_node(
+/// Everything needed to build one (sub)tree node: the routing object, its
+/// distance to the parent routing object, the covered elements
+/// `(index, distance to routing)`, and whether this subtree emits the
+/// routing object as a singleton.
+struct ChildSpec {
+    p: u32,
+    parent_dist: f64,
+    /// Max element distance (the node's cover radius), precomputed so the
+    /// expansion policy can rank specs without rescanning.
+    radius: f64,
+    elems: Vec<(u32, f64)>,
+    owns_routing: bool,
+}
+
+impl ChildSpec {
+    /// Mirrors the leaf test in [`build_node`]: this spec would split.
+    fn splits(&self, params: &CoverTreeParams) -> bool {
+        self.elems.len() >= params.min_node_size && self.radius > 0.0
+    }
+}
+
+/// Assemble a leaf node over `elems`.
+fn build_leaf(
+    data: &Matrix,
+    p: u32,
+    parent_dist: f64,
+    radius: f64,
+    mut elems: Vec<(u32, f64)>,
+    owns_routing: bool,
+) -> Node {
+    let mut node = Node {
+        routing: p,
+        parent_dist,
+        radius,
+        sum: vec![0.0; data.cols()],
+        weight: 0,
+        children: Vec::new(),
+        singletons: Vec::new(),
+    };
+    if owns_routing {
+        node.singletons.push((p, 0.0));
+    }
+    node.singletons.append(&mut elems);
+    finish_aggregates(data, &mut node);
+    node
+}
+
+/// Partition a splitting node's elements into child specs: the self-child
+/// (points within `cov` of `p`) first, then promoted routing objects in
+/// promotion order (farthest-point heuristic). All counted distance
+/// computations of the node body happen here, in a fixed order.
+fn partition_children(
     data: &Matrix,
     params: &CoverTreeParams,
     dist: &mut DistCounter,
     p: u32,
-    parent_dist: f64,
-    mut elems: Vec<(u32, f64)>,
+    radius: f64,
+    elems: Vec<(u32, f64)>,
     owns_routing: bool,
-) -> Node {
-    let d = data.cols();
-    let radius = elems.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
-
-    // Leaf: small enough, or all points coincide with the routing object.
-    if elems.len() < params.min_node_size || radius <= 0.0 {
-        let mut node = Node {
-            routing: p,
-            parent_dist,
-            radius,
-            sum: vec![0.0; d],
-            weight: 0,
-            children: Vec::new(),
-            singletons: Vec::new(),
-        };
-        if owns_routing {
-            node.singletons.push((p, 0.0));
-        }
-        node.singletons.append(&mut elems);
-        finish_aggregates(data, &mut node);
-        return node;
-    }
-
+) -> Vec<ChildSpec> {
     // Children cover radius: shrink by the scaling factor.
     let cov = radius / params.scale_factor;
 
@@ -179,19 +224,16 @@ fn build_node(
         }
     }
 
-    let mut node = Node {
-        routing: p,
-        parent_dist,
-        radius,
-        sum: vec![0.0; d],
-        weight: 0,
-        children: Vec::new(),
-        singletons: Vec::new(),
-    };
-
+    let mut specs = Vec::new();
     // Self-child: same routing object, radius <= cov, dist-to-parent 0.
-    node.children
-        .push(build_node(data, params, dist, p, 0.0, near, owns_routing));
+    let near_radius = near.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
+    specs.push(ChildSpec {
+        p,
+        parent_dist: 0.0,
+        radius: near_radius,
+        elems: near,
+        owns_routing,
+    });
 
     // Remaining far points: repeatedly promote the farthest point to a new
     // routing object and give it everything within `cov` of it
@@ -221,12 +263,249 @@ fn build_node(
             }
         }
         far = rest;
-        node.children
-            .push(build_node(data, params, dist, q, q_pdist, q_elems, true));
+        let q_radius = q_elems.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
+        specs.push(ChildSpec {
+            p: q,
+            parent_dist: q_pdist,
+            radius: q_radius,
+            elems: q_elems,
+            owns_routing: true,
+        });
+    }
+    specs
+}
+
+/// Recursive greedy construction.
+///
+/// `elems` holds `(index, distance to p)` for every point this node must
+/// cover (excluding `p` itself iff `owns_routing`; the routing object is
+/// carried implicitly and emitted as a singleton exactly once, at the node
+/// where recursion stops).
+fn build_node(
+    data: &Matrix,
+    params: &CoverTreeParams,
+    dist: &mut DistCounter,
+    p: u32,
+    parent_dist: f64,
+    elems: Vec<(u32, f64)>,
+    owns_routing: bool,
+) -> Node {
+    let radius = elems.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
+
+    // Leaf: small enough, or all points coincide with the routing object.
+    if elems.len() < params.min_node_size || radius <= 0.0 {
+        return build_leaf(data, p, parent_dist, radius, elems, owns_routing);
     }
 
+    let specs = partition_children(data, params, dist, p, radius, elems, owns_routing);
+    let mut node = Node {
+        routing: p,
+        parent_dist,
+        radius,
+        sum: vec![0.0; data.cols()],
+        weight: 0,
+        children: Vec::with_capacity(specs.len()),
+        singletons: Vec::new(),
+    };
+    for s in specs {
+        node.children.push(build_node(
+            data,
+            params,
+            dist,
+            s.p,
+            s.parent_dist,
+            s.elems,
+            s.owns_routing,
+        ));
+    }
     finish_aggregates(data, &mut node);
     node
+}
+
+/// Expansion stops once this many build tasks exist (fixed, never derived
+/// from the thread count, so the task list and the order the per-task
+/// distance tallies fold back in are functions of the data only).
+const PAR_TASK_TARGET: usize = 64;
+/// Specs smaller than this are not worth splitting during expansion.
+const PAR_MIN_SPLIT: usize = 512;
+
+/// Partially-built tree used by the parallel construction: expanded
+/// interior nodes hold slots; unexpanded subtrees are either inline specs
+/// (`Todo`) or handles into the parallel task list (`Task`).
+enum Slot {
+    Todo(ChildSpec),
+    Task(usize),
+    Open {
+        routing: u32,
+        parent_dist: f64,
+        radius: f64,
+        children: Vec<Slot>,
+    },
+}
+
+fn count_todo(slot: &Slot) -> usize {
+    match slot {
+        Slot::Todo(_) => 1,
+        Slot::Task(_) => 0,
+        Slot::Open { children, .. } => children.iter().map(count_todo).sum(),
+    }
+}
+
+/// Largest element count among still-splittable `Todo` specs.
+fn max_splittable(slot: &Slot, params: &CoverTreeParams) -> Option<usize> {
+    match slot {
+        Slot::Todo(spec) => {
+            (spec.splits(params) && spec.elems.len() >= PAR_MIN_SPLIT)
+                .then_some(spec.elems.len())
+        }
+        Slot::Task(_) => None,
+        Slot::Open { children, .. } => {
+            children.iter().filter_map(|c| max_splittable(c, params)).max()
+        }
+    }
+}
+
+/// Expand (pre-order) the first splittable `Todo` with exactly `len`
+/// elements into an `Open` node of child specs. Returns whether one was
+/// expanded.
+fn expand_one(
+    slot: &mut Slot,
+    len: usize,
+    data: &Matrix,
+    params: &CoverTreeParams,
+    dist: &mut DistCounter,
+) -> bool {
+    match slot {
+        Slot::Todo(spec) => {
+            if !(spec.splits(params)
+                && spec.elems.len() >= PAR_MIN_SPLIT
+                && spec.elems.len() == len)
+            {
+                return false;
+            }
+            let ChildSpec { p, parent_dist, radius, elems, owns_routing } =
+                match std::mem::replace(slot, Slot::Task(usize::MAX)) {
+                    Slot::Todo(spec) => spec,
+                    _ => unreachable!(),
+                };
+            let specs =
+                partition_children(data, params, dist, p, radius, elems, owns_routing);
+            *slot = Slot::Open {
+                routing: p,
+                parent_dist,
+                radius,
+                children: specs.into_iter().map(Slot::Todo).collect(),
+            };
+            true
+        }
+        Slot::Task(_) => false,
+        Slot::Open { children, .. } => {
+            for c in children.iter_mut() {
+                if expand_one(c, len, data, params, dist) {
+                    return true;
+                }
+            }
+            false
+        }
+    }
+}
+
+/// Replace every `Todo` (pre-order) with a `Task` handle, collecting the
+/// specs in handle order.
+fn collect_tasks(slot: &mut Slot, out: &mut Vec<ChildSpec>) {
+    match slot {
+        Slot::Todo(_) => {
+            let spec = match std::mem::replace(slot, Slot::Task(out.len())) {
+                Slot::Todo(spec) => spec,
+                _ => unreachable!(),
+            };
+            out.push(spec);
+        }
+        Slot::Task(_) => {}
+        Slot::Open { children, .. } => {
+            for c in children.iter_mut() {
+                collect_tasks(c, out);
+            }
+        }
+    }
+}
+
+/// Fold the slot tree back into real nodes, consuming the built task
+/// results and recomputing the expanded interiors' aggregates bottom-up
+/// (the same child-order summation the sequential build performs).
+fn resolve_slots(slot: Slot, built: &mut [Option<Node>], data: &Matrix) -> Node {
+    match slot {
+        Slot::Task(i) => built[i].take().expect("task node consumed twice"),
+        Slot::Open { routing, parent_dist, radius, children } => {
+            let mut node = Node {
+                routing,
+                parent_dist,
+                radius,
+                sum: vec![0.0; data.cols()],
+                weight: 0,
+                children: children
+                    .into_iter()
+                    .map(|c| resolve_slots(c, built, data))
+                    .collect(),
+                singletons: Vec::new(),
+            };
+            finish_aggregates(data, &mut node);
+            node
+        }
+        Slot::Todo(_) => unreachable!("todo specs collected before resolve"),
+    }
+}
+
+/// Parallel construction driver: sequential expansion of the heaviest
+/// specs (charging partition distances to the caller's counter in a fixed
+/// order), concurrent subtree builds with private counters, then a
+/// deterministic reassembly. Byte-identical to [`build_node`] on the same
+/// input for any thread count.
+fn build_root_parallel(
+    data: &Matrix,
+    params: &CoverTreeParams,
+    dist: &mut DistCounter,
+    root_pt: u32,
+    elems: Vec<(u32, f64)>,
+    par: &Parallelism,
+) -> Node {
+    let radius = elems.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
+    let mut root = Slot::Todo(ChildSpec {
+        p: root_pt,
+        parent_dist: 0.0,
+        radius,
+        elems,
+        owns_routing: true,
+    });
+    while count_todo(&root) < PAR_TASK_TARGET {
+        let Some(len) = max_splittable(&root, params) else { break };
+        let expanded = expand_one(&mut root, len, data, params, dist);
+        debug_assert!(expanded);
+        if !expanded {
+            break;
+        }
+    }
+    let mut specs = Vec::new();
+    collect_tasks(&mut root, &mut specs);
+    let results = par.run_tasks(specs, |spec| {
+        let mut dc = DistCounter::new();
+        let node = build_node(
+            data,
+            params,
+            &mut dc,
+            spec.p,
+            spec.parent_dist,
+            spec.elems,
+            spec.owns_routing,
+        );
+        (node, dc.count())
+    });
+    let mut built: Vec<Option<Node>> = Vec::with_capacity(results.len());
+    for (node, count) in results {
+        dist.add_bulk(count);
+        built.push(Some(node));
+    }
+    resolve_slots(root, &mut built, data)
 }
 
 /// Bottom-up aggregation of `S_x` and `w_x` (paper §2.3).

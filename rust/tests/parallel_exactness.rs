@@ -1,0 +1,169 @@
+//! The determinism contract of the intra-fit parallel layer: for every
+//! algorithm, a fit with `threads ∈ {2, 4}` must be **byte-identical** to
+//! the same fit with `threads = 1` — same assignments, same iteration
+//! count, same counted `distances`, same centers bit for bit, same
+//! inertia. The reductions in `covermeans::parallel` are designed to make
+//! this hold exactly (integer tallies, canonical-order center sums,
+//! thread-count-independent tree task decomposition); these tests pin it.
+
+use covermeans::data::{synth, Matrix};
+use covermeans::kmeans::{init, Algorithm, KMeans, KMeansParams};
+use covermeans::metrics::{DistCounter, RunResult};
+use covermeans::tree::covertree::Node;
+use covermeans::tree::{CoverTree, CoverTreeParams};
+
+fn fit_with_threads(
+    data: &Matrix,
+    init_c: &Matrix,
+    alg: Algorithm,
+    threads: usize,
+) -> RunResult {
+    KMeans::new(init_c.rows())
+        .algorithm(alg)
+        .threads(threads)
+        .max_iter(60)
+        .warm_start(init_c.clone())
+        .fit(data)
+        .unwrap()
+}
+
+fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.labels, b.labels, "{what}: labels diverged");
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+    assert_eq!(a.converged, b.converged, "{what}: convergence");
+    assert_eq!(a.distances, b.distances, "{what}: counted distances");
+    assert_eq!(a.build_dist, b.build_dist, "{what}: build distances");
+    let ca = a.centers.as_slice();
+    let cb = b.centers.as_slice();
+    assert_eq!(ca.len(), cb.len(), "{what}: center shape");
+    for (i, (x, y)) in ca.iter().zip(cb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: center value {i}");
+    }
+}
+
+fn datasets() -> Vec<(Matrix, usize, u64)> {
+    vec![
+        // (data, k, init seed): clustered geo data, generic blobs, and
+        // higher-dimensional digits — the synthetic families the
+        // exactness suite uses.
+        (synth::istanbul(0.001, 31), 20, 7),
+        (synth::gaussian_blobs(700, 4, 6, 1.0, 32), 6, 8),
+        (synth::mnist(10, 0.005, 33), 12, 9),
+    ]
+}
+
+#[test]
+fn every_exact_algorithm_is_thread_invariant() {
+    for (data, k, seed) in datasets() {
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, k, seed, &mut dc);
+        for alg in Algorithm::EXTENDED {
+            if !alg.is_exact() {
+                continue; // MiniBatch: covered separately below
+            }
+            let r1 = fit_with_threads(&data, &init_c, alg, 1);
+            for threads in [2usize, 4] {
+                let rt = fit_with_threads(&data, &init_c, alg, threads);
+                assert_identical(
+                    &rt,
+                    &r1,
+                    &format!("{} (threads={threads}, n={})", alg.name(), data.rows()),
+                );
+                assert_eq!(
+                    rt.sse(&data).to_bits(),
+                    r1.sse(&data).to_bits(),
+                    "{}: inertia (threads={threads})",
+                    alg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn minibatch_is_thread_invariant() {
+    // MiniBatch runs single-threaded regardless of the knob; the knob must
+    // be accepted and change nothing (its sampling is seed-driven).
+    let data = synth::gaussian_blobs(500, 3, 4, 0.6, 40);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 4, 11, &mut dc);
+    let r1 = fit_with_threads(&data, &init_c, Algorithm::MiniBatch, 1);
+    let r4 = fit_with_threads(&data, &init_c, Algorithm::MiniBatch, 4);
+    assert_eq!(r1.labels, r4.labels);
+    assert_eq!(r1.distances, r4.distances);
+}
+
+fn assert_same_tree(a: &Node, b: &Node) {
+    assert_eq!(a.routing, b.routing);
+    assert_eq!(a.weight, b.weight);
+    assert_eq!(a.parent_dist.to_bits(), b.parent_dist.to_bits());
+    assert_eq!(a.radius.to_bits(), b.radius.to_bits());
+    assert_eq!(a.singletons.len(), b.singletons.len());
+    for ((ia, da), (ib, db)) in a.singletons.iter().zip(&b.singletons) {
+        assert_eq!(ia, ib);
+        assert_eq!(da.to_bits(), db.to_bits());
+    }
+    assert_eq!(a.sum.len(), b.sum.len());
+    for (x, y) in a.sum.iter().zip(&b.sum) {
+        assert_eq!(x.to_bits(), y.to_bits(), "aggregate sums must match bitwise");
+    }
+    assert_eq!(a.children.len(), b.children.len());
+    for (ca, cb) in a.children.iter().zip(&b.children) {
+        assert_same_tree(ca, cb);
+    }
+}
+
+#[test]
+fn cover_tree_build_is_thread_invariant() {
+    for (scale_factor, min_node_size) in [(1.2, 100), (1.3, 10)] {
+        let data = synth::istanbul(0.003, 50);
+        let params = CoverTreeParams { scale_factor, min_node_size };
+        let t1 = CoverTree::build_with_threads(&data, params, 1);
+        for threads in [2usize, 4] {
+            let tn = CoverTree::build_with_threads(&data, params, threads);
+            assert_eq!(tn.node_count, t1.node_count, "threads={threads}");
+            assert_eq!(tn.singleton_count, t1.singleton_count, "threads={threads}");
+            assert_eq!(
+                tn.build_distances, t1.build_distances,
+                "counted build distances must not depend on threads={threads}"
+            );
+            assert_same_tree(&tn.root, &t1.root);
+        }
+    }
+}
+
+#[test]
+fn zero_threads_means_auto_and_stays_exact() {
+    let data = synth::gaussian_blobs(400, 3, 5, 0.8, 60);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 5, 13, &mut dc);
+    let r1 = fit_with_threads(&data, &init_c, Algorithm::Hybrid, 1);
+    let r_auto = fit_with_threads(&data, &init_c, Algorithm::Hybrid, 0);
+    assert_identical(&r_auto, &r1, "Hybrid (threads=0 auto)");
+}
+
+#[test]
+fn legacy_run_shim_routes_fit_threads() {
+    // The flat-params path must honor `threads` too (config `fit_threads`).
+    let data = synth::istanbul(0.0008, 70);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 15, 3, &mut dc);
+    let seq = KMeansParams {
+        algorithm: Algorithm::CoverMeans,
+        ..KMeansParams::default()
+    };
+    let par = KMeansParams { threads: 4, ..seq };
+    let r_seq = covermeans::kmeans::run(
+        &data,
+        &init_c,
+        &seq,
+        &mut covermeans::kmeans::Workspace::new(),
+    );
+    let r_par = covermeans::kmeans::run(
+        &data,
+        &init_c,
+        &par,
+        &mut covermeans::kmeans::Workspace::new(),
+    );
+    assert_identical(&r_par, &r_seq, "CoverMeans via kmeans::run");
+}
