@@ -7,17 +7,26 @@
 //!     reproduce threads=1 exactly: labels, iterations, distances);
 //!   * measures the Lloyd assignment-phase speedup at 4 threads on a
 //!     larger synthetic blob set;
-//!   * emits `BENCH_2.json` (per-algorithm wall time at both thread
-//!     counts, counted distances, and ratios vs the Standard run);
+//!   * measures the per-iteration **dispatch overhead** of the persistent
+//!     worker pool against the old scoped-spawn baseline
+//!     (`parallel::run_tasks_scoped`) — the pool must be cheaper;
+//!   * measures the k-d-tree drivers (Kanungo, Pelleg-Moore) at 1 and 4
+//!     threads over an amortized tree (the filtering pass is the object
+//!     under test, not the sequential build);
+//!   * measures pruned k-means++ seeding at 1 and 4 threads;
+//!   * emits `BENCH_4.json` (all of the above plus the per-algorithm
+//!     table);
 //!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
 //!     (override path via `BENCH_BASELINE`): any `dist_rel` / `time_rel`
 //!     more than 25% above its baseline value fails the run.
 //!
 //! `BENCH_ENFORCE_SPEEDUP=1` additionally requires >= 1.5x Lloyd
-//! assignment speedup at 4 threads, measured best-of-N on both sides (set
-//! in CI, where 4 cores are guaranteed; skipped by default so laptops
-//! with fewer cores don't fail spuriously). `BENCH_GATE_WARN_ONLY=1`
-//! downgrades every gate failure to a warning for noisy local machines.
+//! assignment speedup at 4 threads, >= 1.5x on at least one k-d-tree
+//! driver, and pool dispatch below the scoped-spawn baseline, measured
+//! best-of-N on both sides (set in CI, where 4 cores are guaranteed;
+//! skipped by default so laptops with fewer cores don't fail spuriously).
+//! `BENCH_GATE_WARN_ONLY=1` downgrades every gate failure to a warning
+//! for noisy local machines.
 //!
 //!     REPRO_SCALE=0.01 cargo bench --bench bench_smoke
 
@@ -25,8 +34,10 @@ use std::time::Duration;
 
 use covermeans::benchutil::{bench_repeats, bench_scale, fmt_duration, measure, median};
 use covermeans::data::{synth, Matrix};
-use covermeans::kmeans::{init, Algorithm, KMeans};
+use covermeans::kmeans::{init, Algorithm, KMeans, Workspace};
 use covermeans::metrics::{DistCounter, RunResult};
+use covermeans::parallel::{run_tasks_scoped, Parallelism};
+use covermeans::tree::KdTreeParams;
 
 /// Regression threshold vs the baseline ceilings: fail above 125%.
 const REGRESSION_FACTOR: f64 = 1.25;
@@ -38,6 +49,13 @@ struct AlgRow {
     distances: u64,
     dist_rel: f64,
     time_rel: f64,
+}
+
+struct KdRow {
+    name: &'static str,
+    time_ms_t1: f64,
+    time_ms_t4: f64,
+    speedup: f64,
 }
 
 /// Returns the sorted per-repeat wall times and the last run's result.
@@ -80,14 +98,47 @@ fn parse_flat_json(text: &str) -> Vec<(String, f64)> {
     out
 }
 
-fn write_bench_json(path: &str, scale: f64, speedup: f64, rows: &[AlgRow]) {
+struct Extras {
+    dispatch_us_pool: f64,
+    dispatch_us_scoped: f64,
+    kd: Vec<KdRow>,
+    seed_ms_t1: f64,
+    seed_ms_t4: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_bench_json(
+    path: &str,
+    scale: f64,
+    speedup: f64,
+    rows: &[AlgRow],
+    extras: &Extras,
+) {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"bench-smoke-v1\",\n");
+    s.push_str("  \"schema\": \"bench-smoke-v2\",\n");
     s.push_str(&format!("  \"scale\": {scale},\n"));
     s.push_str("  \"threads_compared\": [1, 4],\n");
     s.push_str(&format!(
         "  \"lloyd_assignment_speedup_4t\": {speedup:.3},\n"
+    ));
+    s.push_str(&format!(
+        "  \"dispatch_us_pool\": {:.3},\n  \"dispatch_us_scoped\": {:.3},\n",
+        extras.dispatch_us_pool, extras.dispatch_us_scoped,
+    ));
+    s.push_str("  \"kd_drivers\": {\n");
+    for (i, row) in extras.kd.iter().enumerate() {
+        let comma = if i + 1 < extras.kd.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    \"{}\": {{\"time_ms_t1\": {:.3}, \"time_ms_t4\": {:.3}, \
+             \"speedup_4t\": {:.3}}}{comma}\n",
+            row.name, row.time_ms_t1, row.time_ms_t4, row.speedup,
+        ));
+    }
+    s.push_str("  },\n");
+    s.push_str(&format!(
+        "  \"seeding\": {{\"time_ms_t1\": {:.3}, \"time_ms_t4\": {:.3}}},\n",
+        extras.seed_ms_t1, extras.seed_ms_t4,
     ));
     s.push_str("  \"algorithms\": {\n");
     for (i, row) in rows.iter().enumerate() {
@@ -109,6 +160,7 @@ fn write_bench_json(path: &str, scale: f64, speedup: f64, rows: &[AlgRow]) {
 fn main() {
     let scale = bench_scale();
     let repeats = bench_repeats();
+    let enforce = std::env::var_os("BENCH_ENFORCE_SPEEDUP").is_some();
     let mut failures: Vec<String> = Vec::new();
 
     // --- per-algorithm smoke at 1 vs 4 threads (scaled istanbul analog).
@@ -198,14 +250,141 @@ fn main() {
         fmt_duration(ts1),
         fmt_duration(ts4),
     );
-    if std::env::var_os("BENCH_ENFORCE_SPEEDUP").is_some() && speedup < 1.5 {
+    if enforce && speedup < 1.5 {
         failures.push(format!(
             "Lloyd 4-thread assignment speedup {speedup:.2}x below the 1.5x floor"
         ));
     }
 
+    // --- per-iteration dispatch overhead: persistent pool vs the old
+    // scoped-spawn design, on a small-fit-shaped batch (a handful of
+    // trivial chunk tasks per dispatch).
+    const DISPATCHES: usize = 200;
+    const TASKS_PER_DISPATCH: usize = 16;
+    let pool4 = Parallelism::new(4);
+    let tiny = |i: usize| i.wrapping_mul(2_654_435_761);
+    let pool_times = measure(repeats, || {
+        for _ in 0..DISPATCHES {
+            let out =
+                pool4.run_tasks((0..TASKS_PER_DISPATCH).collect::<Vec<_>>(), tiny);
+            std::hint::black_box(out);
+        }
+    });
+    let scoped_times = measure(repeats, || {
+        for _ in 0..DISPATCHES {
+            let out =
+                run_tasks_scoped(4, (0..TASKS_PER_DISPATCH).collect::<Vec<_>>(), tiny);
+            std::hint::black_box(out);
+        }
+    });
+    let dispatch_us_pool = pool_times[0].as_secs_f64() * 1e6 / DISPATCHES as f64;
+    let dispatch_us_scoped = scoped_times[0].as_secs_f64() * 1e6 / DISPATCHES as f64;
+    println!(
+        "dispatch overhead ({TASKS_PER_DISPATCH} trivial tasks, 4 threads): \
+         pool {dispatch_us_pool:.1}us | scoped-spawn {dispatch_us_scoped:.1}us"
+    );
+    if enforce && dispatch_us_pool >= dispatch_us_scoped {
+        failures.push(format!(
+            "pool dispatch {dispatch_us_pool:.1}us not below the scoped-spawn \
+             baseline {dispatch_us_scoped:.1}us"
+        ));
+    }
+
+    // --- k-d-tree driver speedup at 4 threads over an amortized tree
+    // (k-d construction is sequential and identical on both sides; the
+    // parallel filtering pass is what this fixture isolates).
+    let kd_data = synth::istanbul(scale.max(0.08), 12);
+    let kd_k = 50usize.clamp(2, kd_data.rows() / 4);
+    let mut dc = DistCounter::new();
+    let kd_init = init::kmeans_plus_plus(&kd_data, kd_k, 9, &mut dc);
+    let mut kd_rows: Vec<KdRow> = Vec::new();
+    for alg in [Algorithm::Kanungo, Algorithm::PellegMoore] {
+        let mut t_ms = [0.0f64; 2];
+        let mut results: Vec<RunResult> = Vec::new();
+        for (slot, threads) in [1usize, 4].into_iter().enumerate() {
+            let mut ws = Workspace::new();
+            ws.kd_tree_arc(&kd_data, KdTreeParams::default()); // warm build
+            let mut last: Option<RunResult> = None;
+            let times = measure(repeats, || {
+                let r = KMeans::new(kd_k)
+                    .algorithm(alg)
+                    .threads(threads)
+                    .max_iter(15)
+                    .warm_start(kd_init.clone())
+                    .fit_with(&kd_data, &mut ws)
+                    .expect("valid kd bench configuration");
+                last = Some(r);
+            });
+            t_ms[slot] = times[0].as_secs_f64() * 1e3;
+            results.push(last.expect("at least one measured run"));
+        }
+        if results[0].labels != results[1].labels
+            || results[0].iterations != results[1].iterations
+            || results[0].distances != results[1].distances
+        {
+            failures.push(format!(
+                "{}: kd speedup fixture diverged across thread counts",
+                alg.name()
+            ));
+        }
+        let sp = t_ms[0] / t_ms[1].max(1e-9);
+        println!(
+            "{} filtering (n={}, k={kd_k}, 15 iters, warm tree): t1 {:.2}ms | t4 {:.2}ms | speedup {sp:.2}x",
+            alg.name(),
+            kd_data.rows(),
+            t_ms[0],
+            t_ms[1],
+        );
+        kd_rows.push(KdRow {
+            name: alg.name(),
+            time_ms_t1: t_ms[0],
+            time_ms_t4: t_ms[1],
+            speedup: sp,
+        });
+    }
+    let best_kd = kd_rows.iter().map(|r| r.speedup).fold(0.0f64, f64::max);
+    if enforce && best_kd < 1.5 {
+        failures.push(format!(
+            "no kd-tree driver reached the 1.5x 4-thread floor (best {best_kd:.2}x)"
+        ));
+    }
+
+    // --- pruned k-means++ seeding at 1 vs 4 threads (reuses the blob
+    // fixture; the weighted draws stay sequential, so this reports the
+    // end-to-end seeding wall time, not a pure map speedup).
+    let par1 = Parallelism::new(1);
+    let par4 = Parallelism::new(4);
+    let mut seed_ms = [0.0f64; 2];
+    let mut seed_out: Vec<(Matrix, u64)> = Vec::new();
+    for (slot, par) in [&par1, &par4].into_iter().enumerate() {
+        let mut last: Option<(Matrix, u64)> = None;
+        let times = measure(repeats, || {
+            let mut dc = DistCounter::new();
+            let c = init::kmeans_plus_plus_par(&big, 64, 3, &mut dc, par);
+            last = Some((c, dc.count()));
+        });
+        seed_ms[slot] = times[0].as_secs_f64() * 1e3;
+        seed_out.push(last.expect("at least one measured run"));
+    }
+    if seed_out[0] != seed_out[1] {
+        failures.push("seeding fixture: threads=4 diverged from threads=1".to_string());
+    }
+    println!(
+        "k-means++ seeding (n={n_speed}, k=64, pruned): t1 {:.2}ms | t4 {:.2}ms | speedup {:.2}x",
+        seed_ms[0],
+        seed_ms[1],
+        seed_ms[0] / seed_ms[1].max(1e-9),
+    );
+
     // --- emit the artifact.
-    write_bench_json("BENCH_2.json", scale, speedup, &rows);
+    let extras = Extras {
+        dispatch_us_pool,
+        dispatch_us_scoped,
+        kd: kd_rows,
+        seed_ms_t1: seed_ms[0],
+        seed_ms_t4: seed_ms[1],
+    };
+    write_bench_json("BENCH_4.json", scale, speedup, &rows, &extras);
 
     // --- perf-trajectory gate vs the checked-in ceilings.
     let baseline_path = std::env::var("BENCH_BASELINE")
@@ -248,7 +427,7 @@ fn main() {
         }
         eprintln!(
             "(to refresh ceilings after an intentional change, copy the \
-             dist_rel/time_rel values from BENCH_2.json into {baseline_path})"
+             dist_rel/time_rel values from BENCH_4.json into {baseline_path})"
         );
         // Escape hatch for noisy local machines: report but don't fail.
         if std::env::var_os("BENCH_GATE_WARN_ONLY").is_some() {

@@ -76,9 +76,12 @@ impl RunConfig {
             "restarts" => self.restarts = v.parse().context("restarts")?,
             "seed" => self.seed = v.parse().context("seed")?,
             "threads" => self.threads = v.parse().context("threads")?,
-            // Intra-fit threads (assignment-phase sharding + tree build);
-            // 0 = all cores. Exactness-preserving: any value reproduces
-            // the single-threaded results byte for byte.
+            // Intra-fit threads (0 = all cores), served by one persistent
+            // worker pool per fit/cell: assignment-phase sharding for
+            // every driver (including the k-d-tree filters and
+            // MiniBatch), tree construction, and k-means++ seeding.
+            // Exactness-preserving: any value reproduces the
+            // single-threaded results byte for byte.
             "fit_threads" => self.params.threads = v.parse().context("fit_threads")?,
             "out_dir" => self.out_dir = v.to_string(),
             "max_iter" => self.params.max_iter = v.parse().context("max_iter")?,

@@ -4,6 +4,31 @@
 
 use crate::data::Matrix;
 use crate::metrics::DistCounter;
+use crate::parallel::{Parallelism, ScatterSlice};
+
+/// Below this k the parallel inter-center path is not worth the dispatch:
+/// the whole matrix is cheaper than waking the pool.
+const PAR_MIN_K: usize = 64;
+
+/// Split rows `0..k` of the upper triangle into ranges of roughly equal
+/// *pair* count (row i owns the k-1-i pairs (i, j>i); a naive equal-row
+/// split would give the first range almost all the work).
+fn triangle_ranges(k: usize, target: usize) -> Vec<std::ops::Range<usize>> {
+    let total = k * (k - 1) / 2;
+    let per = total.div_ceil(target.max(1)).max(1);
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for i in 0..k {
+        acc += k - 1 - i;
+        if (acc >= per || i + 1 == k) && start <= i {
+            out.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    out
+}
 
 /// Inter-center distance matrix plus `s_i = 1/2 min_{j != i} d(c_i, c_j)`,
 /// recomputed at the start of each iteration (paper §2.2: "computed and
@@ -40,6 +65,61 @@ impl InterCenter {
         InterCenter { k, cc, s }
     }
 
+    /// Like [`InterCenter::compute`], sharding the O(k²d) upper-triangle
+    /// distance work over `par` — the dominant per-iteration cost of
+    /// large-k fits. Byte-identical to the sequential path at every thread
+    /// count: every cell (i, j) holds the same single distance evaluation
+    /// (the cell's owner is its smaller coordinate, so writes are
+    /// disjoint), per-shard distance tallies fold back as integer sums,
+    /// and `nearest` is a row-wise minimum — order-free over f64s — merged
+    /// deterministically after the shards complete. Small k (or a
+    /// sequential budget) falls through to the classic pair loop, which
+    /// produces identical bits.
+    pub fn compute_par(
+        centers: &Matrix,
+        dist: &mut DistCounter,
+        par: &Parallelism,
+    ) -> InterCenter {
+        let k = centers.rows();
+        if par.threads() <= 1 || k < PAR_MIN_K {
+            return InterCenter::compute(centers, dist);
+        }
+        let mut cc = vec![0.0; k * k];
+        {
+            let cc_sc = ScatterSlice::new(&mut cc);
+            let ranges = triangle_ranges(k, par.threads() * 4);
+            let counts = par.run_tasks(ranges, |rows| {
+                let mut dc = DistCounter::new();
+                for i in rows {
+                    for j in (i + 1)..k {
+                        let d = dc.d(centers.row(i), centers.row(j));
+                        // Safety: cell (i, j) and its mirror (j, i) are
+                        // written only by the task owning row i (i < j),
+                        // so all writes are pairwise disjoint.
+                        unsafe {
+                            cc_sc.write(i * k + j, d);
+                            cc_sc.write(j * k + i, d);
+                        }
+                    }
+                }
+                dc.count()
+            });
+            for c in counts {
+                dist.add_bulk(c);
+            }
+        }
+        let mut nearest = vec![f64::INFINITY; k];
+        for i in 0..k {
+            for j in 0..k {
+                if j != i && cc[i * k + j] < nearest[i] {
+                    nearest[i] = cc[i * k + j];
+                }
+            }
+        }
+        let s = nearest.iter().map(|&d| 0.5 * d).collect();
+        InterCenter { k, cc, s }
+    }
+
     #[inline]
     pub fn d(&self, i: usize, j: usize) -> f64 {
         self.cc[i * self.k + j]
@@ -58,10 +138,24 @@ impl InterCenter {
         out.clear();
         for j in 0..self.k {
             if j != i {
-                out.push((self.d(i, j), j as u32));
+                let d = self.d(i, j);
+                // A NaN here means an upstream center update produced a
+                // NaN coordinate (e.g. an empty-cluster edge case). Fail
+                // with a diagnosable message in every build profile —
+                // pruning against a garbage neighbor order would silently
+                // corrupt the fit — instead of the former opaque panic
+                // inside a sort comparator. The check is O(k) per list,
+                // trivial next to the sort, and the total-order sort
+                // below itself never panics.
+                assert!(
+                    !d.is_nan(),
+                    "NaN inter-center distance between centers {i} and {j} \
+                     (an upstream center update produced a NaN coordinate)"
+                );
+                out.push((d, j as u32));
             }
         }
-        out.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
     }
 }
 
@@ -232,6 +326,44 @@ mod tests {
         assert_eq!(ic.d(0, 2), 3.0);
         assert_eq!(ic.s[0], 1.5); // half of min(4, 3)
         assert_eq!(ic.d(1, 1), 0.0); // diagonal zero
+    }
+
+    #[test]
+    fn triangle_ranges_cover_all_rows() {
+        for k in [2usize, 64, 100, 257] {
+            for target in [1usize, 4, 16] {
+                let ranges = triangle_ranges(k, target);
+                let mut next = 0usize;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "k={k} target={target}");
+                    assert!(r.end > r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, k, "k={k} target={target}");
+            }
+        }
+    }
+
+    #[test]
+    fn compute_par_is_bit_identical_to_sequential() {
+        // Above the PAR_MIN_K gate so the sharded path actually runs.
+        let k = 80;
+        let data = crate::data::synth::gaussian_blobs(k, 6, 8, 1.0, 77);
+        let mut d_seq = DistCounter::new();
+        let seq = InterCenter::compute(&data, &mut d_seq);
+        for threads in [1usize, 2, 4] {
+            let par = crate::parallel::Parallelism::new(threads);
+            let mut d_par = DistCounter::new();
+            let p = InterCenter::compute_par(&data, &mut d_par, &par);
+            assert_eq!(d_par.count(), d_seq.count(), "threads={threads}");
+            assert_eq!(p.k, seq.k);
+            for (i, (a, b)) in p.cc.iter().zip(&seq.cc).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "cc[{i}] threads={threads}");
+            }
+            for (i, (a, b)) in p.s.iter().zip(&seq.s).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "s[{i}] threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -220,16 +220,18 @@ impl KMeans {
         self
     }
 
-    /// Intra-fit worker threads (0 = all cores; default 1) for the
-    /// assignment phase and cover tree construction.
+    /// Intra-fit worker threads (0 = all cores; default 1), served by one
+    /// persistent worker pool per fit (shared across fits when the
+    /// workspace is reused via [`KMeans::fit_with`]). Covers every phase:
+    /// the assignment passes of all drivers — including the k-d-tree
+    /// variants (Kanungo, Pelleg-Moore) and MiniBatch — plus cover tree
+    /// construction and the k-means++ seeding.
     ///
     /// **Determinism guarantee:** the parallel reductions are
     /// exactness-preserving, so any thread count produces byte-identical
     /// results — same assignments, same iteration count, same counted
     /// `distances`, same centers — as the sequential fit
-    /// (`rust/tests/parallel_exactness.rs`). MiniBatch and the k-d-tree
-    /// variants (Kanungo, Pelleg-Moore) currently ignore the knob and run
-    /// single-threaded.
+    /// (`rust/tests/parallel_exactness.rs`).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
@@ -267,8 +269,13 @@ impl KMeans {
         p
     }
 
-    /// Validate against `data` and produce the initial centers.
-    fn make_init(&mut self, data: &Matrix) -> Result<Matrix, KMeansError> {
+    /// Validate against `data` and produce the initial centers (seeding
+    /// shards over `par`; byte-identical at every thread count).
+    fn make_init(
+        &mut self,
+        data: &Matrix,
+        par: &crate::parallel::Parallelism,
+    ) -> Result<Matrix, KMeansError> {
         if self.k == 0 {
             return Err(KMeansError::ZeroK);
         }
@@ -293,7 +300,13 @@ impl KMeans {
         // Init distances stay outside the run counters (paper protocol:
         // identical seeds are generated once, not charged per algorithm).
         let mut counter = DistCounter::new();
-        Ok(init::kmeans_plus_plus(data, self.k, self.seed, &mut counter))
+        Ok(init::kmeans_plus_plus_par(
+            data,
+            self.k,
+            self.seed,
+            &mut counter,
+            par,
+        ))
     }
 
     /// Fit to completion with a fresh workspace.
@@ -313,8 +326,15 @@ impl KMeans {
                 return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
             }
             let params = self.params();
-            let init_c = self.make_init(data)?;
-            return Ok(minibatch::run(data, &init_c, &params, &params.minibatch));
+            let par = ws.parallelism(params.threads);
+            let init_c = self.make_init(data, &par)?;
+            return Ok(minibatch::run_par(
+                data,
+                &init_c,
+                &params,
+                &params.minibatch,
+                &par,
+            ));
         }
         let fit = self.fit_step_with(data, ws)?;
         Ok(fit.run())
@@ -339,7 +359,8 @@ impl KMeans {
             return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
         }
         let params = self.params();
-        let init_c = self.make_init(data)?;
+        let par = ws.parallelism(params.threads);
+        let init_c = self.make_init(data, &par)?;
         let (drv, build_dist, build_time) =
             driver::new_driver(data, init_c.rows(), &params, ws);
         Ok(Fit::from_driver(data, drv, &init_c, params.max_iter, params.tol)

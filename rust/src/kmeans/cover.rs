@@ -528,8 +528,9 @@ fn assign_singleton(
     assign_point(ctx, pi, best.c, best.d, l, second_c);
 }
 
-/// One full Cover-means iteration: inter-center distances, then the tree
-/// assignment pass. Shared with the Hybrid driver's tree phase.
+/// One full Cover-means iteration: inter-center distances (sharded over
+/// the pool at large k), then the tree assignment pass. Shared with the
+/// Hybrid driver's tree phase.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn iterate_pass(
     data: &Matrix,
@@ -543,7 +544,7 @@ pub(crate) fn iterate_pass(
     dist: &mut DistCounter,
     par: &Parallelism,
 ) -> usize {
-    let ic = InterCenter::compute(centers, dist);
+    let ic = InterCenter::compute_par(centers, dist, par);
     assign_pass(
         data, tree, centers, &ic, labels, upper, lower, second, acc, dist, par,
     )
@@ -641,7 +642,8 @@ pub fn run(
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let (tree, fresh) = ws.cover_tree_arc_threads(data, params.cover, params.threads);
+    let par = ws.parallelism(params.threads);
+    let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);
     let (build_dist, build_time) = if fresh {
         (tree.build_distances, tree.build_time)
     } else {
@@ -649,7 +651,7 @@ pub fn run(
     };
     Fit::from_driver(
         data,
-        Box::new(CoverDriver::new(data, tree, Parallelism::new(params.threads))),
+        Box::new(CoverDriver::new(data, tree, par)),
         init,
         params.max_iter,
         params.tol,

@@ -312,17 +312,19 @@ impl<'a> Fit<'a> {
 
 /// Construct the driver for `params.algorithm`, charging a fresh tree
 /// build (when the workspace misses) to the returned build cost pair.
-/// `params.threads` selects the intra-fit thread budget (assignment-phase
-/// sharding and cover tree construction; the k-d-tree drivers currently
-/// ignore it). Panics on [`Algorithm::MiniBatch`], which is approximate
-/// and does not run the exact outer loop.
+/// `params.threads` selects the intra-fit thread budget; the pool behind
+/// it comes from the workspace ([`Workspace::parallelism`]), so repeated
+/// fits against one workspace reuse the same long-lived workers for the
+/// assignment passes, tree construction, and the k-d-tree filtering
+/// recursions alike. Panics on [`Algorithm::MiniBatch`], which is
+/// approximate and does not run the exact outer loop.
 pub(crate) fn new_driver<'a>(
     data: &'a Matrix,
     k: usize,
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> (Box<dyn KMeansDriver + 'a>, u64, Duration) {
-    let par = crate::parallel::Parallelism::new(params.threads);
+    let par = ws.parallelism(params.threads);
     match params.algorithm {
         Algorithm::Standard => {
             (Box::new(lloyd::LloydDriver::new(data, par)), 0, Duration::ZERO)
@@ -345,16 +347,15 @@ pub(crate) fn new_driver<'a>(
         Algorithm::Kanungo => {
             let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
             let bt = if fresh { tree.build_time } else { Duration::ZERO };
-            (Box::new(kanungo::KanungoDriver::new(data, tree)), 0, bt)
+            (Box::new(kanungo::KanungoDriver::new(data, tree, par)), 0, bt)
         }
         Algorithm::PellegMoore => {
             let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
             let bt = if fresh { tree.build_time } else { Duration::ZERO };
-            (Box::new(pelleg::PellegDriver::new(data, tree)), 0, bt)
+            (Box::new(pelleg::PellegDriver::new(data, tree, par)), 0, bt)
         }
         Algorithm::CoverMeans => {
-            let (tree, fresh) =
-                ws.cover_tree_arc_threads(data, params.cover, params.threads);
+            let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);
             let (bd, bt) = if fresh {
                 (tree.build_distances, tree.build_time)
             } else {
@@ -363,8 +364,7 @@ pub(crate) fn new_driver<'a>(
             (Box::new(cover::CoverDriver::new(data, tree, par)), bd, bt)
         }
         Algorithm::Hybrid => {
-            let (tree, fresh) =
-                ws.cover_tree_arc_threads(data, params.cover, params.threads);
+            let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);
             let (bd, bt) = if fresh {
                 (tree.build_distances, tree.build_time)
             } else {

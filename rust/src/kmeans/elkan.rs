@@ -98,7 +98,7 @@ impl KMeansDriver for ElkanDriver<'_> {
         let data = self.data;
         let n = data.rows();
         let k = self.k;
-        let ic = InterCenter::compute(centers, dist);
+        let ic = InterCenter::compute_par(centers, dist, &self.par);
         let mut changed = 0usize;
         {
             let ic = &ic;

@@ -94,7 +94,7 @@ impl KMeansDriver for ExponionDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let ic = InterCenter::compute(centers, dist);
+        let ic = InterCenter::compute_par(centers, dist, &self.par);
         let data = self.data;
         let n = data.rows();
         let k = centers.rows();

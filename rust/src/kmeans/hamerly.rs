@@ -81,7 +81,7 @@ impl KMeansDriver for HamerlyDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let ic = InterCenter::compute(centers, dist);
+        let ic = InterCenter::compute_par(centers, dist, &self.par);
         let data = self.data;
         let n = data.rows();
         let mut changed = 0usize;

@@ -138,7 +138,8 @@ pub fn run(
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let (tree, fresh) = ws.cover_tree_arc_threads(data, params.cover, params.threads);
+    let par = ws.parallelism(params.threads);
+    let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);
     let (build_dist, build_time) = if fresh {
         (tree.build_distances, tree.build_time)
     } else {
@@ -146,12 +147,7 @@ pub fn run(
     };
     Fit::from_driver(
         data,
-        Box::new(HybridDriver::new(
-            data,
-            tree,
-            params.switch_at,
-            Parallelism::new(params.threads),
-        )),
+        Box::new(HybridDriver::new(data, tree, params.switch_at, par)),
         init,
         params.max_iter,
         params.tol,

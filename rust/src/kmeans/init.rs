@@ -5,19 +5,71 @@
 //! coordinator generates the centers once per `(dataset, k, restart)` and
 //! hands identical copies to each algorithm. The `DistCounter` passed here
 //! is therefore a separate "init" counter, not an algorithm counter.
+//!
+//! # Parallel, pruned D² sampling
+//!
+//! Both seeders keep one invariant sacred: the chosen centers are a
+//! function of `(data, k, seed)` only. Two accelerations ride under it:
+//!
+//! * **Sharding** ([`kmeans_plus_plus_par`]): the per-point `d2`/`near`
+//!   updates of a round are element-wise independent, so they shard over
+//!   point chunks with disjoint writes; the weighted draw itself sums `d2`
+//!   sequentially in canonical point order on the calling thread. Any
+//!   thread count therefore reproduces the sequential seeding byte for
+//!   byte — same centers, same counted distances.
+//! * **Triangle-inequality pruning** (Raff, "Exact Acceleration of
+//!   K-Means++ and K-Means||"): when candidate `q` is drawn, one distance
+//!   per already-chosen center `c_j` is computed up front; a point `x`
+//!   whose current nearest center `c` satisfies `d(c, q) >= 2 d(x, c)`
+//!   cannot be improved by `q` (`d(x, q) >= d(c, q) - d(x, c) >= d(x,
+//!   c)`), so its point-side evaluation is skipped. The skip is *exact*:
+//!   every `d2` value — and hence the sampled sequence — is bit-identical
+//!   to the unpruned loop; only the counted distance work shrinks. The
+//!   real-arithmetic argument is made robust to floating point by
+//!   [`prune_slack`]: the prune only fires when the margin also covers
+//!   the worst-case relative rounding of the three squared distances
+//!   involved, so a skipped evaluation provably could not have changed
+//!   the stored (computed) `d2` value.
 
 use crate::data::Matrix;
 use crate::metrics::DistCounter;
+use crate::parallel::{Parallelism, SharedSlices};
 use crate::rng::Rng;
+
+/// Multiplicative safety factor for the triangle prune: skip only when
+/// `cc2 >= 4 * d2 * slack`. Each of the three squared distances in the
+/// argument is a d-term sum of non-negative squares, so its relative
+/// error is at most ~(d+3) ulps; a 16x cushion on top makes the prune
+/// conservatively sound — a fired prune implies even the *computed*
+/// point-side distance could not have been below the stored `d2` — at
+/// the cost of a vanishing fraction of the pruning opportunities. A pure
+/// function of the dimension, so it is identical at every thread count.
+fn prune_slack(d: usize) -> f64 {
+    1.0 + 16.0 * (d as f64 + 4.0) * f64::EPSILON
+}
 
 /// k-means++ seeding (Arthur & Vassilvitskii): first center uniform, each
 /// subsequent center sampled proportionally to the squared distance to the
-/// nearest already-chosen center.
+/// nearest already-chosen center. Sequential convenience wrapper over
+/// [`kmeans_plus_plus_par`].
 pub fn kmeans_plus_plus(
     data: &Matrix,
     k: usize,
     seed: u64,
     dist: &mut DistCounter,
+) -> Matrix {
+    kmeans_plus_plus_par(data, k, seed, dist, &Parallelism::sequential())
+}
+
+/// k-means++ seeding over `par`'s thread budget, with Raff-style
+/// triangle-inequality pruning. Byte-identical centers to
+/// [`kmeans_plus_plus`] at every thread count (see the module docs).
+pub fn kmeans_plus_plus_par(
+    data: &Matrix,
+    k: usize,
+    seed: u64,
+    dist: &mut DistCounter,
+    par: &Parallelism,
 ) -> Matrix {
     assert!(k >= 1 && k <= data.rows(), "k={k} out of range");
     let n = data.rows();
@@ -27,11 +79,31 @@ pub fn kmeans_plus_plus(
     let first = rng.below(n);
     chosen.push(first);
 
-    // Squared distance to the nearest chosen center, updated incrementally.
-    let mut d2: Vec<f64> = (0..n)
-        .map(|i| dist.sq(data.row(i), data.row(first)))
-        .collect();
+    // Squared distance to the nearest chosen center, updated
+    // incrementally, plus that center's identity (which feeds the
+    // triangle pruning).
+    let mut d2 = vec![0.0f64; n];
+    let mut near = vec![0u32; n];
+    {
+        let d2_sh = SharedSlices::new(&mut d2);
+        let tallies = par.map_chunks(n, |r| {
+            let d2c = unsafe { d2_sh.range(r.clone()) };
+            let mut dc = DistCounter::new();
+            for (j, i) in r.clone().enumerate() {
+                d2c[j] = dc.sq(data.row(i), data.row(first));
+            }
+            dc.count()
+        });
+        for t in tallies {
+            dist.add_bulk(t);
+        }
+    }
 
+    // Squared distances from every already-chosen center to the newest
+    // one — the O(k) pruning precomputation that saves O(n) point-side
+    // evaluations per round.
+    let mut cc2 = vec![0.0f64; k];
+    let slack = prune_slack(data.cols());
     while chosen.len() < k {
         let next = match rng.choose_weighted(&d2) {
             Some(i) => i,
@@ -39,13 +111,40 @@ pub fn kmeans_plus_plus(
             // fall back to an unchosen index to keep k centers.
             None => (0..n).find(|i| !chosen.contains(i)).unwrap_or(0),
         };
+        for (j, &c) in chosen.iter().enumerate() {
+            cc2[j] = dist.sq(data.row(c), data.row(next));
+        }
+        let new_id = chosen.len() as u32;
         chosen.push(next);
-        for i in 0..n {
-            if d2[i] > 0.0 {
-                let nd = dist.sq(data.row(i), data.row(next));
-                if nd < d2[i] {
-                    d2[i] = nd;
+        {
+            let cc2 = &cc2;
+            let d2_sh = SharedSlices::new(&mut d2);
+            let near_sh = SharedSlices::new(&mut near);
+            let tallies = par.map_chunks(n, |r| {
+                let d2c = unsafe { d2_sh.range(r.clone()) };
+                let nearc = unsafe { near_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                for (j, i) in r.clone().enumerate() {
+                    if d2c[j] <= 0.0 {
+                        continue;
+                    }
+                    // Triangle pruning (exact; see module docs): in
+                    // squares, d(c,q)² >= 4 d(x,c)² ⇔ d(c,q) >= 2 d(x,c),
+                    // with `slack` absorbing the rounding of the computed
+                    // squared distances.
+                    if cc2[nearc[j] as usize] >= 4.0 * d2c[j] * slack {
+                        continue;
+                    }
+                    let nd = dc.sq(data.row(i), data.row(next));
+                    if nd < d2c[j] {
+                        d2c[j] = nd;
+                        nearc[j] = new_id;
+                    }
                 }
+                dc.count()
+            });
+            for t in tallies {
+                dist.add_bulk(t);
             }
         }
     }
@@ -56,12 +155,27 @@ pub fn kmeans_plus_plus(
 /// protocol: keep `base` (a previous, smaller-k solution) and add the
 /// missing centers by the same D² sampling k-means++ uses, measured
 /// against the current set. `base.rows()` may equal `k` (returns a copy).
+/// Sequential convenience wrapper over [`extend_centers_par`].
 pub fn extend_centers(
     data: &Matrix,
     base: &Matrix,
     k: usize,
     seed: u64,
     dist: &mut DistCounter,
+) -> Matrix {
+    extend_centers_par(data, base, k, seed, dist, &Parallelism::sequential())
+}
+
+/// [`extend_centers`] over `par`'s thread budget with the same pruned D²
+/// rounds as [`kmeans_plus_plus_par`]; byte-identical to the sequential
+/// version at every thread count.
+pub fn extend_centers_par(
+    data: &Matrix,
+    base: &Matrix,
+    k: usize,
+    seed: u64,
+    dist: &mut DistCounter,
+    par: &Parallelism,
 ) -> Matrix {
     assert!(base.rows() <= k, "cannot shrink {} centers to k={k}", base.rows());
     assert!(k <= data.rows(), "k={k} out of range");
@@ -71,19 +185,38 @@ pub fn extend_centers(
     let mut rows: Vec<Vec<f64>> = base.iter_rows().map(|r| r.to_vec()).collect();
     let mut chosen: Vec<usize> = Vec::new();
 
-    let mut d2: Vec<f64> = (0..n)
-        .map(|i| {
-            let mut best = f64::INFINITY;
-            for c in 0..base.rows() {
-                let nd = dist.sq(data.row(i), base.row(c));
-                if nd < best {
-                    best = nd;
+    // Nearest base center per point (distance² and identity).
+    let mut d2 = vec![f64::INFINITY; n];
+    let mut near = vec![0u32; n];
+    {
+        let d2_sh = SharedSlices::new(&mut d2);
+        let near_sh = SharedSlices::new(&mut near);
+        let tallies = par.map_chunks(n, |r| {
+            let d2c = unsafe { d2_sh.range(r.clone()) };
+            let nearc = unsafe { near_sh.range(r.clone()) };
+            let mut dc = DistCounter::new();
+            for (j, i) in r.clone().enumerate() {
+                let mut best = f64::INFINITY;
+                let mut bi = 0u32;
+                for c in 0..base.rows() {
+                    let nd = dc.sq(data.row(i), base.row(c));
+                    if nd < best {
+                        best = nd;
+                        bi = c as u32;
+                    }
                 }
+                d2c[j] = best;
+                nearc[j] = bi;
             }
-            best
-        })
-        .collect();
+            dc.count()
+        });
+        for t in tallies {
+            dist.add_bulk(t);
+        }
+    }
 
+    let mut cc2 = vec![0.0f64; k];
+    let slack = prune_slack(data.cols());
     while rows.len() < k {
         let next = match rng.choose_weighted(&d2) {
             Some(i) => i,
@@ -91,13 +224,36 @@ pub fn extend_centers(
             None => (0..n).find(|i| !chosen.contains(i)).unwrap_or(0),
         };
         chosen.push(next);
+        for (j, row) in rows.iter().enumerate() {
+            cc2[j] = dist.sq(row, data.row(next));
+        }
+        let new_id = rows.len() as u32;
         rows.push(data.row(next).to_vec());
-        for i in 0..n {
-            if d2[i] > 0.0 {
-                let nd = dist.sq(data.row(i), data.row(next));
-                if nd < d2[i] {
-                    d2[i] = nd;
+        {
+            let cc2 = &cc2;
+            let d2_sh = SharedSlices::new(&mut d2);
+            let near_sh = SharedSlices::new(&mut near);
+            let tallies = par.map_chunks(n, |r| {
+                let d2c = unsafe { d2_sh.range(r.clone()) };
+                let nearc = unsafe { near_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                for (j, i) in r.clone().enumerate() {
+                    if d2c[j] <= 0.0 {
+                        continue;
+                    }
+                    if cc2[nearc[j] as usize] >= 4.0 * d2c[j] * slack {
+                        continue;
+                    }
+                    let nd = dc.sq(data.row(i), data.row(next));
+                    if nd < d2c[j] {
+                        d2c[j] = nd;
+                        nearc[j] = new_id;
+                    }
                 }
+                dc.count()
+            });
+            for t in tallies {
+                dist.add_bulk(t);
             }
         }
     }
@@ -120,6 +276,37 @@ mod tests {
     use super::*;
     use crate::data::synth;
 
+    /// The textbook unpruned D² loop, kept as the reference the pruned
+    /// implementation must reproduce center-for-center. Returns the
+    /// centers and the unpruned distance-evaluation count.
+    fn naive_kmeans_plus_plus(data: &Matrix, k: usize, seed: u64) -> (Matrix, u64) {
+        let n = data.rows();
+        let mut rng = Rng::derive(seed, "init/kmeans++");
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        let mut dist = DistCounter::new();
+        let first = rng.below(n);
+        chosen.push(first);
+        let mut d2: Vec<f64> = (0..n)
+            .map(|i| dist.sq(data.row(i), data.row(first)))
+            .collect();
+        while chosen.len() < k {
+            let next = match rng.choose_weighted(&d2) {
+                Some(i) => i,
+                None => (0..n).find(|i| !chosen.contains(i)).unwrap_or(0),
+            };
+            chosen.push(next);
+            for i in 0..n {
+                if d2[i] > 0.0 {
+                    let nd = dist.sq(data.row(i), data.row(next));
+                    if nd < d2[i] {
+                        d2[i] = nd;
+                    }
+                }
+            }
+        }
+        (data.select_rows(&chosen), dist.count())
+    }
+
     #[test]
     fn kpp_returns_k_distinct_centers_from_data() {
         let data = synth::gaussian_blobs(200, 3, 4, 0.3, 1);
@@ -136,7 +323,45 @@ mod tests {
                 assert_ne!(c.row(i), c.row(j));
             }
         }
-        assert!(dist.count() >= 200 * 3);
+        // At least the first full scan is always paid; later rounds are
+        // triangle-pruned, so the pre-pruning n*(k-1) floor no longer
+        // applies.
+        assert!(dist.count() >= 200);
+    }
+
+    #[test]
+    fn kpp_pruning_matches_naive_and_saves_work() {
+        for seed in [7u64, 42, 1000] {
+            // Well-separated blobs: most points sit far closer to their
+            // blob's chosen center than to any newly drawn candidate, so
+            // the triangle test prunes heavily.
+            let data = synth::gaussian_blobs(400, 3, 5, 0.1, seed);
+            let mut pruned_dist = DistCounter::new();
+            let pruned = kmeans_plus_plus(&data, 5, seed, &mut pruned_dist);
+            let (naive, naive_count) = naive_kmeans_plus_plus(&data, 5, seed);
+            assert_eq!(pruned, naive, "seed {seed}: pruning changed the centers");
+            // The pruned run pays k²/2 extra center-center evals but must
+            // still come out well ahead of the unpruned point-side cost.
+            assert!(
+                pruned_dist.count() < naive_count,
+                "seed {seed}: pruned {} >= naive {naive_count}",
+                pruned_dist.count()
+            );
+        }
+    }
+
+    #[test]
+    fn kpp_parallel_is_byte_identical() {
+        let data = synth::gaussian_blobs(700, 4, 6, 0.5, 9);
+        let mut d_seq = DistCounter::new();
+        let seq = kmeans_plus_plus(&data, 10, 3, &mut d_seq);
+        for threads in [2usize, 4] {
+            let par = Parallelism::new(threads);
+            let mut d_par = DistCounter::new();
+            let p = kmeans_plus_plus_par(&data, 10, 3, &mut d_par, &par);
+            assert_eq!(p, seq, "threads={threads}");
+            assert_eq!(d_par.count(), d_seq.count(), "threads={threads}");
+        }
     }
 
     #[test]
@@ -193,6 +418,22 @@ mod tests {
         // k == base.rows() is an identity.
         let same = extend_centers(&data, &base, 3, 9, &mut dist);
         assert_eq!(same, base);
+    }
+
+    #[test]
+    fn extend_centers_parallel_is_byte_identical() {
+        let data = synth::gaussian_blobs(500, 3, 5, 0.4, 6);
+        let mut dist = DistCounter::new();
+        let base = kmeans_plus_plus(&data, 4, 1, &mut dist);
+        let mut d_seq = DistCounter::new();
+        let seq = extend_centers(&data, &base, 9, 2, &mut d_seq);
+        for threads in [2usize, 4] {
+            let par = Parallelism::new(threads);
+            let mut d_par = DistCounter::new();
+            let p = extend_centers_par(&data, &base, 9, 2, &mut d_par, &par);
+            assert_eq!(p, seq, "threads={threads}");
+            assert_eq!(d_par.count(), d_seq.count(), "threads={threads}");
+        }
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! dominance test costs two d-dimensional distance evaluations, which we
 //! count — this is why Kanungo can exceed the Standard algorithm's count
 //! on overlap-heavy data (the paper's KDD04 column: 1.450).
+//!
+//! The traversal itself — task decomposition, leaf scans, whole-subtree
+//! settlement, and the parallel execution with its determinism contract —
+//! lives in [`crate::kmeans::kdfilter`]; this module contributes only the
+//! dominance prune rule.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -18,10 +23,63 @@ use std::time::Duration;
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
 use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::kdfilter::{self, PruneRule};
 use crate::kmeans::{Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::Parallelism;
 use crate::tree::kdtree::{is_farther, KdNode};
 use crate::tree::KdTree;
+
+/// The hyperplane dominance prune of Kanungo et al.: find the candidate
+/// closest to the cell midpoint, then drop every candidate the midpoint
+/// winner dominates over the whole box.
+pub(crate) struct DominancePrune;
+
+impl PruneRule for DominancePrune {
+    fn prune(
+        &self,
+        node: &KdNode,
+        candidates: &[u32],
+        centers: &Matrix,
+        dist: &mut DistCounter,
+        scratch: &mut [f64],
+    ) -> Vec<u32> {
+        // z* = candidate closest to the cell midpoint (ties: lowest index,
+        // which the scan order provides).
+        for (j, m) in scratch.iter_mut().enumerate() {
+            *m = 0.5 * (node.bbox_min[j] + node.bbox_max[j]);
+        }
+        let mut z_star = candidates[0];
+        let mut z_star_d = f64::INFINITY;
+        for &z in candidates {
+            let dd = dist.d(scratch, centers.row(z as usize));
+            if dd < z_star_d {
+                z_star_d = dd;
+                z_star = z;
+            }
+        }
+
+        // Prune candidates dominated by z* over the whole box. The corner
+        // test evaluates two d-dim squared distances; count both.
+        let mut remaining: Vec<u32> = Vec::with_capacity(candidates.len());
+        for &z in candidates {
+            if z == z_star {
+                remaining.push(z);
+                continue;
+            }
+            dist.add_bulk(2);
+            if !is_farther(
+                centers.row(z as usize),
+                centers.row(z_star as usize),
+                &node.bbox_min,
+                &node.bbox_max,
+            ) {
+                remaining.push(z);
+            }
+        }
+        remaining
+    }
+}
 
 /// The filtering driver: the k-d tree plus the labels. The tree is shared
 /// out of the [`Workspace`] cache, so sweeps amortize construction.
@@ -29,16 +87,20 @@ pub(crate) struct KanungoDriver<'a> {
     data: &'a Matrix,
     tree: Arc<KdTree>,
     labels: Vec<u32>,
-    scratch_mid: Vec<f64>,
+    par: Parallelism,
 }
 
 impl<'a> KanungoDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix, tree: Arc<KdTree>) -> KanungoDriver<'a> {
+    pub(crate) fn new(
+        data: &'a Matrix,
+        tree: Arc<KdTree>,
+        par: Parallelism,
+    ) -> KanungoDriver<'a> {
         KanungoDriver {
             data,
             tree,
             labels: vec![u32::MAX; data.rows()],
-            scratch_mid: vec![0.0; data.cols()],
+            par,
         }
     }
 
@@ -48,20 +110,16 @@ impl<'a> KanungoDriver<'a> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let mut changed = 0usize;
-        let all: Vec<u32> = (0..centers.rows() as u32).collect();
-        filter(
+        kdfilter::filter_pass(
+            &DominancePrune,
             self.data,
-            &self.tree.root,
+            &self.tree,
             centers,
-            &all,
             &mut self.labels,
             acc,
             dist,
-            &mut changed,
-            &mut self.scratch_mid,
-        );
-        changed
+            &self.par,
+        )
     }
 }
 
@@ -109,121 +167,16 @@ pub fn run(
     let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
     // k-d construction computes no distances; only the time is charged.
     let build_time = if fresh { tree.build_time } else { Duration::ZERO };
+    let par = ws.parallelism(params.threads);
     Fit::from_driver(
         data,
-        Box::new(KanungoDriver::new(data, tree)),
+        Box::new(KanungoDriver::new(data, tree, par)),
         init,
         params.max_iter,
         params.tol,
     )
     .with_build_cost(0, build_time)
     .run()
-}
-
-/// Recursive filtering step.
-#[allow(clippy::too_many_arguments)]
-fn filter(
-    data: &Matrix,
-    node: &KdNode,
-    centers: &Matrix,
-    candidates: &[u32],
-    labels: &mut [u32],
-    acc: &mut CentroidAccum,
-    dist: &mut DistCounter,
-    changed: &mut usize,
-    scratch_mid: &mut [f64],
-) {
-    if node.is_leaf() {
-        // Scan the remaining candidates per point.
-        for &pi in &node.points {
-            let p = data.row(pi as usize);
-            let mut best = candidates[0];
-            let mut best_d = f64::INFINITY;
-            for &z in candidates {
-                let dd = dist.d(p, centers.row(z as usize));
-                if dd < best_d || (dd == best_d && z < best) {
-                    best_d = dd;
-                    best = z;
-                }
-            }
-            if labels[pi as usize] != best {
-                labels[pi as usize] = best;
-                *changed += 1;
-            }
-            acc.add_point(best as usize, p);
-        }
-        return;
-    }
-
-    // z* = candidate closest to the cell midpoint (ties: lowest index,
-    // which the scan order provides).
-    for (j, m) in scratch_mid.iter_mut().enumerate() {
-        *m = 0.5 * (node.bbox_min[j] + node.bbox_max[j]);
-    }
-    let mut z_star = candidates[0];
-    let mut z_star_d = f64::INFINITY;
-    for &z in candidates {
-        let dd = dist.d(scratch_mid, centers.row(z as usize));
-        if dd < z_star_d {
-            z_star_d = dd;
-            z_star = z;
-        }
-    }
-
-    // Prune candidates dominated by z* over the whole box. The corner
-    // test evaluates two d-dim squared distances; count both.
-    let mut remaining: Vec<u32> = Vec::with_capacity(candidates.len());
-    for &z in candidates {
-        if z == z_star {
-            remaining.push(z);
-            continue;
-        }
-        dist.add_bulk(2);
-        if !is_farther(
-            centers.row(z as usize),
-            centers.row(z_star as usize),
-            &node.bbox_min,
-            &node.bbox_max,
-        ) {
-            remaining.push(z);
-        }
-    }
-
-    if remaining.len() == 1 {
-        // Assign the whole subtree to z* using the aggregates.
-        let z = remaining[0] as usize;
-        acc.add_aggregate(z, &node.sum, node.weight as f64);
-        node.for_each_point(&mut |pi| {
-            if labels[pi as usize] != z as u32 {
-                labels[pi as usize] = z as u32;
-                *changed += 1;
-            }
-        });
-        return;
-    }
-
-    filter(
-        data,
-        node.left.as_ref().unwrap(),
-        centers,
-        &remaining,
-        labels,
-        acc,
-        dist,
-        changed,
-        scratch_mid,
-    );
-    filter(
-        data,
-        node.right.as_ref().unwrap(),
-        centers,
-        &remaining,
-        labels,
-        acc,
-        dist,
-        changed,
-        scratch_mid,
-    );
 }
 
 #[cfg(test)]

@@ -1,0 +1,260 @@
+//! Shared parallel engine of the two k-d-tree drivers — Kanungo et al.'s
+//! filtering [8] and Pelleg & Moore's blacklisting [14].
+//!
+//! Both algorithms are the same top-down candidate-narrowing recursion and
+//! differ only in the geometric test that prunes candidates at an internal
+//! node (the [`PruneRule`]): the hyperplane dominance test for Kanungo,
+//! the box min/max blacklist for Pelleg-Moore. Leaves scan the surviving
+//! candidates per point; a node whose candidate set collapses to one
+//! center assigns its whole subtree at once via the stored aggregates.
+//!
+//! # Parallel decomposition
+//!
+//! The recursion decomposes into independent subtree tasks exactly like
+//! the cover tree pass (`kmeans::cover`): a **sequential expansion** peels
+//! the top of the tree into at most ~[`TASK_TARGET`] subtree tasks by
+//! repeatedly visiting the heaviest splittable task's node — running its
+//! prune test (charged to the caller's counter in a fixed order), settling
+//! single-survivor subtrees outright, and spilling the two children as new
+//! tasks. The expansion policy depends only on the tree and the centers,
+//! never on the thread count, so the task list — and therefore the
+//! accumulator merge order — is a function of the data alone. The **task
+//! phase** then runs each task's recursion with a private
+//! [`CentroidAccum`] and [`crate::metrics::DistCounter`]; labels are
+//! written through a [`ScatterSlice`] (a k-d tree partitions the point
+//! indices across subtrees, so concurrent tasks touch disjoint indices),
+//! and the per-task accumulators/tallies fold back **in task order**.
+//! `threads = N` is therefore byte-identical to `threads = 1`.
+//!
+//! Like the cover pass (PR 2), running the task decomposition at every
+//! thread count means the center-sum association differs from the old
+//! depth-first recursion by low-order bits; counted distances and (with
+//! assignment margins dwarfing ulps) labels are unaffected.
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::CentroidAccum;
+use crate::metrics::DistCounter;
+use crate::parallel::{Parallelism, ScatterSlice};
+use crate::tree::kdtree::{KdNode, KdTree};
+
+/// The per-node candidate pruning rule — the only thing that differs
+/// between the filtering and blacklisting algorithms. Implementations
+/// must be pure functions of `(node, candidates, centers)`: the engine
+/// may evaluate a node from any worker, and determinism relies on the
+/// survivors (and the counted work charged to `dist`) depending on
+/// nothing else. `scratch` is a reusable d-vector for midpoint tests.
+pub(crate) trait PruneRule: Sync {
+    fn prune(
+        &self,
+        node: &KdNode,
+        candidates: &[u32],
+        centers: &Matrix,
+        dist: &mut DistCounter,
+        scratch: &mut [f64],
+    ) -> Vec<u32>;
+}
+
+/// One unit of the parallel decomposition: a subtree visit with the
+/// candidate set that survived the path from the root.
+struct KdTask<'t> {
+    node: &'t KdNode,
+    cands: Vec<u32>,
+}
+
+/// The expansion stops splitting once this many tasks exist. Fixed (never
+/// derived from the thread count) so the task list — and therefore the
+/// accumulator merge order — is a function of the tree and centers only.
+const TASK_TARGET: usize = 64;
+/// Subtrees lighter than this are not worth splitting further.
+const MIN_TASK_WEIGHT: u32 = 256;
+
+/// Scan a leaf's points against the surviving candidates (ties to the
+/// lowest center index, as everywhere in the exact family).
+#[allow(clippy::too_many_arguments)]
+fn scan_leaf(
+    data: &Matrix,
+    centers: &Matrix,
+    node: &KdNode,
+    candidates: &[u32],
+    labels: &ScatterSlice<'_, u32>,
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+    changed: &mut usize,
+) {
+    for &pi in &node.points {
+        let p = data.row(pi as usize);
+        let mut best = candidates[0];
+        let mut best_d = f64::INFINITY;
+        for &z in candidates {
+            let dd = dist.d(p, centers.row(z as usize));
+            if dd < best_d || (dd == best_d && z < best) {
+                best_d = dd;
+                best = z;
+            }
+        }
+        // Safety: every point index lives in exactly one subtree, and
+        // concurrent tasks own disjoint subtrees.
+        unsafe {
+            if labels.read(pi as usize) != best {
+                labels.write(pi as usize, best);
+                *changed += 1;
+            }
+        }
+        acc.add_point(best as usize, p);
+    }
+}
+
+/// Assign the whole subtree under `node` to the sole survivor `z` using
+/// the stored aggregates (the O(d) whole-cell reassignment both papers
+/// are built around).
+fn assign_subtree(
+    node: &KdNode,
+    z: u32,
+    labels: &ScatterSlice<'_, u32>,
+    acc: &mut CentroidAccum,
+    changed: &mut usize,
+) {
+    acc.add_aggregate(z as usize, &node.sum, node.weight as f64);
+    let mut delta = 0usize;
+    node.for_each_point(&mut |pi| {
+        // Safety: disjoint subtrees, as in `scan_leaf`.
+        unsafe {
+            if labels.read(pi as usize) != z {
+                labels.write(pi as usize, z);
+                delta += 1;
+            }
+        }
+    });
+    *changed += delta;
+}
+
+/// Visit one node: leaf scan, prune test, single-survivor settlement, or
+/// recursion into the children. During the expansion phase `spill`
+/// collects the children that would recurse as [`KdTask`]s instead — the
+/// node's own work happens identically either way.
+#[allow(clippy::too_many_arguments)]
+fn visit<'t, P: PruneRule>(
+    rule: &P,
+    data: &Matrix,
+    centers: &Matrix,
+    node: &'t KdNode,
+    candidates: &[u32],
+    labels: &ScatterSlice<'_, u32>,
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+    changed: &mut usize,
+    scratch: &mut [f64],
+    spill: Option<&mut Vec<KdTask<'t>>>,
+) {
+    if node.is_leaf() {
+        scan_leaf(data, centers, node, candidates, labels, acc, dist, changed);
+        return;
+    }
+    let remaining = rule.prune(node, candidates, centers, dist, scratch);
+    debug_assert!(!remaining.is_empty(), "prune rules always keep a survivor");
+    if remaining.len() == 1 {
+        assign_subtree(node, remaining[0], labels, acc, changed);
+        return;
+    }
+    let left: &'t KdNode = node.left.as_ref().unwrap();
+    let right: &'t KdNode = node.right.as_ref().unwrap();
+    match spill {
+        Some(out) => {
+            out.push(KdTask { node: left, cands: remaining.clone() });
+            out.push(KdTask { node: right, cands: remaining });
+        }
+        None => {
+            visit(
+                rule, data, centers, left, &remaining, labels, acc, dist, changed,
+                scratch, None,
+            );
+            visit(
+                rule, data, centers, right, &remaining, labels, acc, dist, changed,
+                scratch, None,
+            );
+        }
+    }
+}
+
+/// Run one full filtering pass over the tree: thread-count-independent
+/// expansion, then the parallel task phase with per-task accumulators
+/// merged in task order. Returns the number of points whose assignment
+/// changed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn filter_pass<P: PruneRule>(
+    rule: &P,
+    data: &Matrix,
+    tree: &KdTree,
+    centers: &Matrix,
+    labels: &mut [u32],
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+    par: &Parallelism,
+) -> usize {
+    let k = centers.rows();
+    let d = data.cols();
+    let sink = ScatterSlice::new(labels);
+    let mut changed = 0usize;
+    let mut scratch = vec![0.0f64; d];
+    let all: Vec<u32> = (0..k as u32).collect();
+    // Expansion: repeatedly visit the heaviest splittable task's node
+    // (settling what the prune test decides outright) and spill the
+    // children that still need a recursive visit back into the list.
+    let mut tasks: Vec<KdTask<'_>> = vec![KdTask { node: &tree.root, cands: all }];
+    while tasks.len() < TASK_TARGET {
+        let mut best: Option<(usize, u32)> = None;
+        for (i, t) in tasks.iter().enumerate() {
+            if !t.node.is_leaf() && t.node.weight >= MIN_TASK_WEIGHT {
+                let heavier = match best {
+                    None => true,
+                    Some((_, w)) => t.node.weight > w,
+                };
+                if heavier {
+                    best = Some((i, t.node.weight));
+                }
+            }
+        }
+        let Some((idx, _)) = best else { break };
+        let t = tasks.remove(idx);
+        visit(
+            rule,
+            data,
+            centers,
+            t.node,
+            &t.cands,
+            &sink,
+            acc,
+            dist,
+            &mut changed,
+            &mut scratch,
+            Some(&mut tasks),
+        );
+    }
+    // Task phase: private accumulators and counters, merged in task order.
+    let results = par.run_tasks(tasks, |task| {
+        let mut task_acc = CentroidAccum::new(k, d);
+        let mut dc = DistCounter::new();
+        let mut task_changed = 0usize;
+        let mut task_scratch = vec![0.0f64; d];
+        visit(
+            rule,
+            data,
+            centers,
+            task.node,
+            &task.cands,
+            &sink,
+            &mut task_acc,
+            &mut dc,
+            &mut task_changed,
+            &mut task_scratch,
+            None,
+        );
+        (task_acc, dc.count(), task_changed)
+    });
+    for (task_acc, count, task_changed) in results {
+        acc.merge(&task_acc);
+        dist.add_bulk(count);
+        changed += task_changed;
+    }
+    changed
+}

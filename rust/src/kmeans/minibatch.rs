@@ -9,10 +9,21 @@
 //!
 //! Not exact: the convergence criterion is center movement below `tol`
 //! rather than an assignment fixpoint.
+//!
+//! The runner follows Sculley's two-phase formulation: each step first
+//! caches the nearest center of every batch sample against the centers
+//! *as they stood at the start of the step*, then applies the online
+//! per-sample updates. The cached-assignment phase is a pure map over the
+//! batch, so it shards over the worker pool — disjoint per-sample result
+//! slots, private integer distance tallies — and the update phase replays
+//! in canonical batch order, making `threads = N` byte-identical to
+//! `threads = 1` (the sampling stream is seed-driven and drawn up front,
+//! so it never depends on scheduling).
 
 use crate::data::Matrix;
 use crate::kmeans::KMeansParams;
 use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+use crate::parallel::{Parallelism, SharedSlices};
 use crate::rng::Rng;
 
 /// Mini-batch specific knobs. Reaches the runner through
@@ -39,6 +50,18 @@ pub fn run(
     params: &KMeansParams,
     mb: &MiniBatchParams,
 ) -> RunResult {
+    run_par(data, init, params, mb, &Parallelism::new(params.threads))
+}
+
+/// Pool-sharing variant of [`run`] (the builder and `kmeans::run` route
+/// their workspace-cached pool here).
+pub(crate) fn run_par(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    mb: &MiniBatchParams,
+    par: &Parallelism,
+) -> RunResult {
     let n = data.rows();
     let k = init.rows();
     let sw = Stopwatch::start();
@@ -52,23 +75,50 @@ pub fn run(
     let mut iterations = 0;
     let batch = mb.batch.min(n);
 
+    let mut batch_idx = vec![0usize; batch];
+    let mut batch_best = vec![0u32; batch];
     for iter in 1..=params.max_iter {
         iterations = iter;
-        let mut max_move_sq = 0.0f64;
-        for _ in 0..batch {
-            let i = rng.below(n);
-            let p = data.row(i);
-            // Nearest center (k counted distances).
-            let mut best = 0usize;
-            let mut best_d = f64::INFINITY;
-            for c in 0..k {
-                let dd = dist.d(p, centers.row(c));
-                if dd < best_d {
-                    best_d = dd;
-                    best = c;
+        // Draw the whole batch up front (consumes the RNG stream in the
+        // same per-sample order at every thread count).
+        for s in batch_idx.iter_mut() {
+            *s = rng.below(n);
+        }
+        // Assignment phase: nearest center per sample (k counted
+        // distances each) against the start-of-step snapshot, sharded
+        // over batch positions.
+        {
+            let idx = &batch_idx;
+            let snapshot = &centers;
+            let best_sh = SharedSlices::new(&mut batch_best);
+            let tallies = par.map_chunks(batch, |r| {
+                let best = unsafe { best_sh.range(r.clone()) };
+                let mut dc = DistCounter::new();
+                for (j, s) in r.clone().enumerate() {
+                    let p = data.row(idx[s]);
+                    let mut b = 0u32;
+                    let mut best_d = f64::INFINITY;
+                    for c in 0..k {
+                        let dd = dc.d(p, snapshot.row(c));
+                        if dd < best_d {
+                            best_d = dd;
+                            b = c as u32;
+                        }
+                    }
+                    best[j] = b;
                 }
+                dc.count()
+            });
+            for t in tallies {
+                dist.add_bulk(t);
             }
-            // Online update with decaying rate (Sculley's update).
+        }
+        // Update phase: online moves with decaying rate (Sculley's
+        // update), replayed sequentially in batch order.
+        let mut max_move_sq = 0.0f64;
+        for (pos, &s) in batch_idx.iter().enumerate() {
+            let best = batch_best[pos] as usize;
+            let p = data.row(s);
             counts[best] += 1.0;
             let eta = 1.0 / counts[best];
             let row = centers.row_mut(best);
@@ -88,20 +138,32 @@ pub fn run(
     }
 
     // Final full assignment for reporting (counted: it is real work a user
-    // needs to obtain labels).
+    // needs to obtain labels), sharded over point chunks.
     let mut labels = vec![0u32; n];
-    for i in 0..n {
-        let p = data.row(i);
-        let mut best = 0u32;
-        let mut best_d = f64::INFINITY;
-        for c in 0..k {
-            let dd = dist.d(p, centers.row(c));
-            if dd < best_d {
-                best_d = dd;
-                best = c as u32;
+    {
+        let snapshot = &centers;
+        let labels_sh = SharedSlices::new(&mut labels);
+        let tallies = par.map_chunks(n, |r| {
+            let l = unsafe { labels_sh.range(r.clone()) };
+            let mut dc = DistCounter::new();
+            for (j, i) in r.clone().enumerate() {
+                let p = data.row(i);
+                let mut best = 0u32;
+                let mut best_d = f64::INFINITY;
+                for c in 0..k {
+                    let dd = dc.d(p, snapshot.row(c));
+                    if dd < best_d {
+                        best_d = dd;
+                        best = c as u32;
+                    }
+                }
+                l[j] = best;
             }
+            dc.count()
+        });
+        for t in tallies {
+            dist.add_bulk(t);
         }
-        labels[i] = best;
     }
 
     RunResult {
@@ -168,5 +230,24 @@ mod tests {
         let a = run(&data, &init_c, &params, &MiniBatchParams::default());
         let b = run(&data, &init_c, &params, &MiniBatchParams::default());
         assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn snapshot_assignment_is_thread_invariant() {
+        // The two-phase step must make any thread count replay the
+        // sequential trajectory bit for bit.
+        let data = synth::gaussian_blobs(1500, 3, 4, 0.5, 41);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 4, 33, &mut dc);
+        let params = KMeansParams { max_iter: 25, ..KMeansParams::default() };
+        let mb = MiniBatchParams { batch: 600, ..MiniBatchParams::default() };
+        let r1 = run_par(&data, &init_c, &params, &mb, &Parallelism::sequential());
+        let r4 = run_par(&data, &init_c, &params, &mb, &Parallelism::new(4));
+        assert_eq!(r1.labels, r4.labels);
+        assert_eq!(r1.iterations, r4.iterations);
+        assert_eq!(r1.distances, r4.distances);
+        for (a, b) in r1.centers.as_slice().iter().zip(r4.centers.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

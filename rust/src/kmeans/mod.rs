@@ -53,6 +53,7 @@ pub mod hamerly;
 pub mod hybrid;
 pub mod init;
 pub mod kanungo;
+pub(crate) mod kdfilter;
 pub mod lloyd;
 pub mod minibatch;
 pub mod pelleg;
@@ -63,6 +64,7 @@ use std::sync::Arc;
 
 use crate::data::Matrix;
 use crate::metrics::RunResult;
+use crate::parallel::Parallelism;
 use crate::tree::{CoverTree, CoverTreeParams, KdTree, KdTreeParams};
 
 pub use builder::{AlgorithmSpec, KMeans, KMeansError};
@@ -189,13 +191,15 @@ pub struct KMeansParams {
     /// Mini-batch knobs (consumed only by [`Algorithm::MiniBatch`]).
     pub minibatch: MiniBatchParams,
     /// Intra-fit worker threads for the assignment phase and tree
-    /// construction (config key `fit_threads`; 0 = all cores). The
-    /// reductions are exactness-preserving — any thread count reproduces
-    /// the sequential run byte for byte (same assignments, same counted
-    /// distances) — so 1 (the default) keeps the paper's single-core
-    /// measurement protocol without changing any result. MiniBatch and the
-    /// k-d-tree drivers (Kanungo, Pelleg-Moore) currently run
-    /// single-threaded regardless.
+    /// construction (config key `fit_threads`; 0 = all cores), served by
+    /// one persistent worker pool per fit (shared across fits when a
+    /// [`Workspace`] is reused). The reductions are exactness-preserving —
+    /// any thread count reproduces the sequential run byte for byte (same
+    /// assignments, same counted distances) — so 1 (the default) keeps the
+    /// paper's single-core measurement protocol without changing any
+    /// result. Every runner honors the knob: the per-point drivers, the
+    /// tree drivers (Cover-means, Hybrid, Kanungo, Pelleg-Moore),
+    /// MiniBatch, and k-means++ seeding.
     pub threads: usize,
 }
 
@@ -261,25 +265,55 @@ impl DataKey {
     }
 }
 
-/// Reusable per-dataset state: the spatial indexes. The parameter-sweep
-/// protocol of Table 4 amortizes tree construction across 10 restarts x 16
-/// values of k by reusing one `Workspace`; Tables 3 and E6 build fresh
-/// trees per run (construction cost included in the reported time).
+/// Reusable per-dataset state: the spatial indexes and the worker pool.
+/// The parameter-sweep protocol of Table 4 amortizes tree construction
+/// across 10 restarts x 16 values of k by reusing one `Workspace`; Tables
+/// 3 and E6 build fresh trees per run (construction cost included in the
+/// reported time).
 ///
-/// The cache is keyed on *(data identity, construction params)*: calling
-/// with a different matrix — or the same matrix after reallocation — or
-/// different params rebuilds instead of silently serving a stale tree.
-/// Trees are stored behind [`Arc`] so stepwise [`Fit`] handles can hold
-/// the index while the workspace moves on to the next run.
+/// The tree cache is keyed on *(data identity, construction params)*:
+/// calling with a different matrix — or the same matrix after reallocation
+/// — or different params rebuilds instead of silently serving a stale
+/// tree. Trees are stored behind [`Arc`] so stepwise [`Fit`] handles can
+/// hold the index while the workspace moves on to the next run.
+///
+/// The pool cache ([`Workspace::parallelism`]) is keyed on the resolved
+/// thread count only — the pool carries no per-fit state, so one pool
+/// serves every fit a workspace drives (the coordinator keeps one per
+/// cell via [`Workspace::clear_trees`]). Thread count is not part of any
+/// result: the parallel reductions are exactness-preserving.
 #[derive(Default)]
 pub struct Workspace {
     cover: Option<(DataKey, Arc<CoverTree>)>,
     kd: Option<(DataKey, Arc<KdTree>)>,
+    par: Option<Parallelism>,
 }
 
 impl Workspace {
     pub fn new() -> Self {
         Workspace::default()
+    }
+
+    /// The workspace's persistent worker pool for `threads` (0 = all
+    /// cores), created on first use and reused across fits. Requesting a
+    /// different resolved thread count replaces the pool.
+    pub fn parallelism(&mut self, threads: usize) -> Parallelism {
+        let resolved = crate::parallel::resolve_threads(threads);
+        if let Some(p) = &self.par {
+            if p.threads() == resolved {
+                return p.clone();
+            }
+        }
+        let p = Parallelism::new(threads);
+        self.par = Some(p.clone());
+        p
+    }
+
+    /// Drop the cached spatial indexes but keep the worker pool — the
+    /// fresh-tree-per-run protocol of Tables 2-3 under a per-cell pool.
+    pub fn clear_trees(&mut self) {
+        self.cover = None;
+        self.kd = None;
     }
 
     /// Get or build the cover tree (build cost charged only on the miss).
@@ -305,15 +339,28 @@ impl Workspace {
     }
 
     /// Like [`Workspace::cover_tree_arc`], building any fresh tree with
-    /// `threads` workers. The thread count is *not* part of the cache key:
-    /// parallel construction yields a byte-identical tree (structure,
-    /// aggregates, and counted build distances), so a tree built with any
-    /// thread count serves every caller.
+    /// `threads` workers (drawn from the workspace's pool). The thread
+    /// count is *not* part of the cache key: parallel construction yields
+    /// a byte-identical tree (structure, aggregates, and counted build
+    /// distances), so a tree built with any thread count serves every
+    /// caller.
     pub fn cover_tree_arc_threads(
         &mut self,
         data: &Matrix,
         params: CoverTreeParams,
         threads: usize,
+    ) -> (Arc<CoverTree>, bool) {
+        let par = self.parallelism(threads);
+        self.cover_tree_arc_par(data, params, &par)
+    }
+
+    /// [`Workspace::cover_tree_arc_threads`] with an explicit (pooled)
+    /// thread budget.
+    pub fn cover_tree_arc_par(
+        &mut self,
+        data: &Matrix,
+        params: CoverTreeParams,
+        par: &Parallelism,
     ) -> (Arc<CoverTree>, bool) {
         let key = DataKey::of(data);
         let stale = match &self.cover {
@@ -323,7 +370,7 @@ impl Workspace {
         if stale {
             self.cover = Some((
                 key,
-                Arc::new(CoverTree::build_with_threads(data, params, threads)),
+                Arc::new(CoverTree::build_with_parallelism(data, params, par)),
             ));
         }
         (self.cover.as_ref().unwrap().1.clone(), stale)
@@ -376,7 +423,8 @@ pub fn run(
         "more centers than points"
     );
     if params.algorithm == Algorithm::MiniBatch {
-        return minibatch::run(data, init, params, &params.minibatch);
+        let par = ws.parallelism(params.threads);
+        return minibatch::run_par(data, init, params, &params.minibatch, &par);
     }
     driver::run_exact(data, init, params, ws)
 }

@@ -9,6 +9,11 @@
 //! subtree. A single survivor owns the node and is assigned via the
 //! aggregates. Each candidate's min/max box distance costs one
 //! d-dimensional pass, counted as one distance computation each.
+//!
+//! The traversal — task decomposition, leaf scans, whole-subtree
+//! settlement, and the parallel execution with its determinism contract —
+//! lives in [`crate::kmeans::kdfilter`]; this module contributes only the
+//! blacklist prune rule.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -16,8 +21,10 @@ use std::time::Duration;
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
 use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::kdfilter::{self, PruneRule};
 use crate::kmeans::{Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::Parallelism;
 use crate::tree::kdtree::KdNode;
 use crate::tree::KdTree;
 
@@ -37,16 +44,64 @@ fn box_dist_sq(z: &[f64], lo: &[f64], hi: &[f64]) -> (f64, f64) {
     (dmin, dmax)
 }
 
+/// The box min/max blacklist prune: candidates whose minimum box distance
+/// exceeds the best maximum cannot win anywhere in the cell.
+pub(crate) struct BlacklistPrune;
+
+impl PruneRule for BlacklistPrune {
+    fn prune(
+        &self,
+        node: &KdNode,
+        candidates: &[u32],
+        centers: &Matrix,
+        dist: &mut DistCounter,
+        _scratch: &mut [f64],
+    ) -> Vec<u32> {
+        // Blacklist: min/max box distances per candidate (one counted pass
+        // each, analogous to a distance computation over d dims).
+        let mut h_star = f64::INFINITY;
+        let mut mins: Vec<f64> = Vec::with_capacity(candidates.len());
+        for &z in candidates {
+            dist.add_bulk(1);
+            let (dmin, dmax) = box_dist_sq(
+                centers.row(z as usize),
+                &node.bbox_min,
+                &node.bbox_max,
+            );
+            mins.push(dmin);
+            if dmax < h_star {
+                h_star = dmax;
+            }
+        }
+        candidates
+            .iter()
+            .zip(&mins)
+            .filter(|&(_, &dmin)| dmin <= h_star)
+            .map(|(&z, _)| z)
+            .collect()
+    }
+}
+
 /// The blacklisting driver: the k-d tree plus the labels.
 pub(crate) struct PellegDriver<'a> {
     data: &'a Matrix,
     tree: Arc<KdTree>,
     labels: Vec<u32>,
+    par: Parallelism,
 }
 
 impl<'a> PellegDriver<'a> {
-    pub(crate) fn new(data: &'a Matrix, tree: Arc<KdTree>) -> PellegDriver<'a> {
-        PellegDriver { data, tree, labels: vec![u32::MAX; data.rows()] }
+    pub(crate) fn new(
+        data: &'a Matrix,
+        tree: Arc<KdTree>,
+        par: Parallelism,
+    ) -> PellegDriver<'a> {
+        PellegDriver {
+            data,
+            tree,
+            labels: vec![u32::MAX; data.rows()],
+            par,
+        }
     }
 
     fn pass(
@@ -55,19 +110,16 @@ impl<'a> PellegDriver<'a> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let mut changed = 0usize;
-        let all: Vec<u32> = (0..centers.rows() as u32).collect();
-        descend(
+        kdfilter::filter_pass(
+            &BlacklistPrune,
             self.data,
-            &self.tree.root,
+            &self.tree,
             centers,
-            &all,
             &mut self.labels,
             acc,
             dist,
-            &mut changed,
-        );
-        changed
+            &self.par,
+        )
     }
 }
 
@@ -114,86 +166,16 @@ pub fn run(
 ) -> RunResult {
     let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
     let build_time = if fresh { tree.build_time } else { Duration::ZERO };
+    let par = ws.parallelism(params.threads);
     Fit::from_driver(
         data,
-        Box::new(PellegDriver::new(data, tree)),
+        Box::new(PellegDriver::new(data, tree, par)),
         init,
         params.max_iter,
         params.tol,
     )
     .with_build_cost(0, build_time)
     .run()
-}
-
-#[allow(clippy::too_many_arguments)]
-fn descend(
-    data: &Matrix,
-    node: &KdNode,
-    centers: &Matrix,
-    candidates: &[u32],
-    labels: &mut [u32],
-    acc: &mut CentroidAccum,
-    dist: &mut DistCounter,
-    changed: &mut usize,
-) {
-    if node.is_leaf() {
-        for &pi in &node.points {
-            let p = data.row(pi as usize);
-            let mut best = candidates[0];
-            let mut best_d = f64::INFINITY;
-            for &z in candidates {
-                let dd = dist.d(p, centers.row(z as usize));
-                if dd < best_d || (dd == best_d && z < best) {
-                    best_d = dd;
-                    best = z;
-                }
-            }
-            if labels[pi as usize] != best {
-                labels[pi as usize] = best;
-                *changed += 1;
-            }
-            acc.add_point(best as usize, p);
-        }
-        return;
-    }
-
-    // Blacklist: min/max box distances per candidate (one counted pass
-    // each, analogous to a distance computation over d dims).
-    let mut h_star = f64::INFINITY;
-    let mut mins: Vec<f64> = Vec::with_capacity(candidates.len());
-    for &z in candidates {
-        dist.add_bulk(1);
-        let (dmin, dmax) = box_dist_sq(
-            centers.row(z as usize),
-            &node.bbox_min,
-            &node.bbox_max,
-        );
-        mins.push(dmin);
-        if dmax < h_star {
-            h_star = dmax;
-        }
-    }
-    let remaining: Vec<u32> = candidates
-        .iter()
-        .zip(&mins)
-        .filter(|&(_, &dmin)| dmin <= h_star)
-        .map(|(&z, _)| z)
-        .collect();
-
-    if remaining.len() == 1 {
-        let z = remaining[0] as usize;
-        acc.add_aggregate(z, &node.sum, node.weight as f64);
-        node.for_each_point(&mut |pi| {
-            if labels[pi as usize] != z as u32 {
-                labels[pi as usize] = z as u32;
-                *changed += 1;
-            }
-        });
-        return;
-    }
-
-    descend(data, node.left.as_ref().unwrap(), centers, &remaining, labels, acc, dist, changed);
-    descend(data, node.right.as_ref().unwrap(), centers, &remaining, labels, acc, dist, changed);
 }
 
 #[cfg(test)]

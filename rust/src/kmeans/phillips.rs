@@ -77,7 +77,7 @@ impl KMeansDriver for PhillipsDriver<'_> {
         dist: &mut DistCounter,
     ) -> usize {
         let k = centers.rows();
-        let ic = InterCenter::compute(centers, dist);
+        let ic = InterCenter::compute_par(centers, dist, &self.par);
         let data = self.data;
         let n = data.rows();
         let mut changed = 0usize;

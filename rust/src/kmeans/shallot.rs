@@ -69,7 +69,7 @@ pub(crate) fn iterate_pass(
     dist: &mut DistCounter,
     par: &Parallelism,
 ) -> usize {
-    let ic = InterCenter::compute(centers, dist);
+    let ic = InterCenter::compute_par(centers, dist, par);
     let n = data.rows();
     let k = centers.rows();
     let mut changed = 0usize;

@@ -17,17 +17,22 @@
 //!   aggregates and the sweep coordinator / benchmark harness that
 //!   regenerate the paper's tables and figures — including warm-started
 //!   parameter sweeps that reuse centers across k.
-//! * **Intra-fit parallelism** — a single fit can shard its assignment
-//!   phase (and the cover tree construction) over OS threads via
+//! * **Intra-fit parallelism** — a single fit shards every hot path
+//!   (the assignment phases of all drivers including the k-d-tree
+//!   filters and MiniBatch, tree construction, the inter-center matrix,
+//!   and k-means++ seeding) over a **persistent worker pool** via
 //!   `KMeans::new(k).threads(n)` (config key `fit_threads`; 0 = all
-//!   cores). The [`parallel`] module's reductions are
-//!   exactness-preserving: `threads = N` reproduces `threads = 1` byte
-//!   for byte — same assignments, same counted `distances`, same centers
-//!   — so the paper's per-algorithm distance counts are unaffected by the
-//!   thread count (`rust/tests/parallel_exactness.rs`). The sweep
-//!   coordinator splits its total thread budget between cell-level
-//!   workers and intra-fit threads (`threads` / `fit_threads` config
-//!   keys).
+//!   cores). The pool is spawned once per fit — and shared across fits
+//!   when a `kmeans::Workspace` is reused — so iterations pay two
+//!   condvar handshakes instead of thread spawns. The [`parallel`]
+//!   module's reductions are exactness-preserving: `threads = N`
+//!   reproduces `threads = 1` byte for byte — same assignments, same
+//!   counted `distances`, same centers — so the paper's per-algorithm
+//!   distance counts are unaffected by the thread count
+//!   (`rust/tests/parallel_exactness.rs`, also run in release mode in
+//!   CI). The sweep coordinator splits its total thread budget between
+//!   cell-level workers and intra-fit threads (`threads` /
+//!   `fit_threads` config keys) and keeps one pool per cell.
 //! * **L2/L1 (python/, build-time only)** — the dense assign-step
 //!   (distance matrix + top-2 + centroid partials) as a Pallas kernel in a
 //!   JAX graph, AOT-lowered to HLO text in `artifacts/`.

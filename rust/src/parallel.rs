@@ -1,11 +1,12 @@
-//! Intra-fit data parallelism with exactness-preserving reductions.
+//! Intra-fit data parallelism with exactness-preserving reductions over a
+//! **persistent worker pool**.
 //!
 //! The paper's entire algorithm family has embarrassingly parallel
 //! assignment phases: each point's (or subtree's) new assignment depends
 //! only on its own stored state, the current centers, and the inter-center
 //! matrix — never on another point's in-flight update. This module
-//! exploits that with plain `std::thread::scope` workers (no external
-//! dependencies) while keeping the repo's central invariant intact:
+//! exploits that with plain `std` threads (no external dependencies) while
+//! keeping the repo's central invariant intact:
 //!
 //! **Determinism contract.** A fit with `threads = N` produces *byte
 //! identical* results to `threads = 1` — same assignments, same iteration
@@ -20,7 +21,8 @@
 //!    all — every driver accumulates them sequentially in canonical point
 //!    order after the parallel pass, so the sums match the sequential
 //!    implementation bit for bit at any thread count.
-//! 2. **Tree passes** (Cover-means assignment, cover tree construction)
+//! 2. **Tree passes** (Cover-means assignment, cover tree construction,
+//!    and the k-d-tree filtering recursions of Kanungo and Pelleg-Moore)
 //!    are decomposed into a task list by a *thread-count-independent*
 //!    expansion policy; per-task partial accumulators are merged in task
 //!    order. Thread count only affects scheduling, never the task list or
@@ -29,33 +31,229 @@
 //!    [`crate::metrics::DistCounter`] whose total is folded back with
 //!    integer addition, so counted distances stay exact.
 //!
+//! # Pool architecture
+//!
+//! A [`Parallelism`] with a budget of `N > 1` threads owns `N - 1`
+//! long-lived OS workers (the caller is the N-th executor), created once
+//! when the budget is constructed — by [`crate::kmeans::Workspace`] once
+//! per fit, and shared across fits when the workspace is reused (the
+//! coordinator keeps one per cell). Each [`Parallelism::run_tasks`] call
+//! publishes a single *batch job* — the work-stealing claim loop over the
+//! task list — to the pool through a condvar-guarded slot; workers and the
+//! caller race to claim task indices and the caller blocks until every
+//! participant has finished before returning. Dispatch is therefore two
+//! mutex/condvar handshakes instead of `N - 1` thread spawns+joins per
+//! pass, which is what used to dominate small fits (PR 2 spawned scoped
+//! threads in every iteration; `bench_smoke` tracks the per-dispatch cost
+//! of both designs).
+//!
+//! Scheduling is still work-stealing and nondeterministic — determinism
+//! comes solely from rules 1-3 above, which make the *results* independent
+//! of which worker computed what. Cloning a `Parallelism` shares the same
+//! pool (the handle is an `Arc`); the workers exit when the last handle
+//! drops. A pool handle must only be dispatched from one thread at a time
+//! (every use in this crate dispatches from the thread driving the fit),
+//! and task closures must never dispatch on their own pool — both are
+//! debug-asserted.
+//!
 //! `rust/tests/parallel_exactness.rs` asserts the contract for every
-//! algorithm on the synthetic datasets.
+//! algorithm — including the k-d-tree drivers, MiniBatch, and k-means++
+//! seeding — on the synthetic datasets, in debug and (via CI) release
+//! builds.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Thread budget for one fit (or one tree build).
+/// What the pool's job slot holds: the current batch's claim loop with its
+/// lifetime erased. Soundness: the dispatching thread blocks until
+/// `running == 0` and the slot is cleared before the pointee's stack frame
+/// unwinds, so no worker can observe a dangling reference.
+type ErasedJob = &'static (dyn Fn() + Sync);
+
+struct PoolState {
+    /// Current batch job, if a dispatch is in flight.
+    job: Option<ErasedJob>,
+    /// Batch sequence number; workers remember the last one they joined so
+    /// a still-published batch is never re-entered by the same worker.
+    seq: u64,
+    /// Workers currently executing the batch job.
+    running: usize,
+    /// A worker task panicked during the current batch (re-raised on the
+    /// dispatching thread once the batch drains).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new batch (or shutdown).
+    work_cv: Condvar,
+    /// The dispatcher waits here for `running` to reach zero.
+    done_cv: Condvar,
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut last_seq = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(f) = st.job {
+                    if st.seq != last_seq {
+                        last_seq = st.seq;
+                        st.running += 1;
+                        break f;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Run the claim loop; a panicking task must not wedge the pool, so
+        // catch it and re-raise on the dispatcher.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        let mut st = shared.state.lock().unwrap();
+        st.running -= 1;
+        if result.is_err() {
+            st.panicked = true;
+        }
+        if st.running == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// The long-lived worker set behind a multi-threaded [`Parallelism`].
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                seq: 0,
+                running: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("covermeans-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Publish `f` to every worker and run it on the calling thread too;
+    /// returns once all participants finished. Panics raised by worker
+    /// tasks are re-raised here after the batch drains.
+    fn dispatch(&self, f: &(dyn Fn() + Sync)) {
+        // Clears the job slot and waits out in-flight workers even when
+        // the caller's own inline run unwinds, so the erased reference
+        // never outlives its frame.
+        struct Finish<'p>(&'p PoolShared);
+        impl Drop for Finish<'_> {
+            fn drop(&mut self) {
+                let mut st = self.0.state.lock().unwrap();
+                st.job = None;
+                while st.running > 0 {
+                    st = self.0.done_cv.wait(st).unwrap();
+                }
+            }
+        }
+
+        // Safety: see `ErasedJob` — the guard below blocks until no worker
+        // holds the reference before this frame can unwind or return.
+        let erased = unsafe {
+            std::mem::transmute::<&(dyn Fn() + Sync), ErasedJob>(f)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(
+                st.job.is_none(),
+                "nested or concurrent dispatch on one worker pool"
+            );
+            st.seq = st.seq.wrapping_add(1);
+            st.panicked = false;
+            st.job = Some(erased);
+            self.shared.work_cv.notify_all();
+        }
+        let guard = Finish(&self.shared);
+        f(); // the caller is a participant, not an idle waiter
+        drop(guard);
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            std::mem::take(&mut st.panicked)
+        };
+        if panicked {
+            panic!("a worker task panicked during a parallel pass");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Thread budget for one fit (or one tree build), backed by a persistent
+/// worker pool when the budget exceeds one.
 ///
 /// `Parallelism::new(0)` resolves to the machine's available parallelism;
 /// any other value is used as-is. The default is sequential execution,
 /// which keeps the paper-replication protocols single-threaded unless a
-/// caller opts in.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// caller opts in. Construction spawns the pool workers (`threads - 1`
+/// of them); [`Clone`] shares the same pool, so one budget can serve a
+/// whole sweep of fits without respawning (see
+/// [`crate::kmeans::Workspace::parallelism`]).
+#[derive(Clone)]
 pub struct Parallelism {
     threads: usize,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl std::fmt::Debug for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Parallelism")
+            .field("threads", &self.threads)
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
 }
 
 impl Parallelism {
     /// A budget of `threads` workers; 0 means "all available cores".
+    /// Spawns the persistent pool when the resolved budget exceeds one.
     pub fn new(threads: usize) -> Parallelism {
-        Parallelism { threads: resolve_threads(threads) }
+        let threads = resolve_threads(threads);
+        let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads - 1)));
+        Parallelism { threads, pool }
     }
 
-    /// Strictly sequential execution.
+    /// Strictly sequential execution (no pool).
     pub fn sequential() -> Parallelism {
-        Parallelism { threads: 1 }
+        Parallelism { threads: 1, pool: None }
     }
 
     /// The resolved worker count (>= 1).
@@ -64,8 +262,8 @@ impl Parallelism {
     }
 
     /// Run every task, returning the results **in task order**. Tasks are
-    /// claimed work-stealing style by up to `threads` scoped workers; with
-    /// one thread (or one task) everything runs inline on the caller.
+    /// claimed work-stealing style by the pool workers plus the caller;
+    /// with one thread (or one task) everything runs inline on the caller.
     ///
     /// The closure must be deterministic per task: result `i` may be
     /// computed by any worker, but the returned vector is always ordered
@@ -76,32 +274,28 @@ impl Parallelism {
         R: Send,
         F: Fn(T) -> R + Sync,
     {
-        if self.threads <= 1 || tasks.len() <= 1 {
-            return tasks.into_iter().map(f).collect();
-        }
         let n = tasks.len();
+        let Some(pool) = self.pool.as_ref().filter(|_| n > 1) else {
+            return tasks.into_iter().map(f).collect();
+        };
         let slots: Vec<Mutex<Option<T>>> =
             tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
         let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let next = AtomicUsize::new(0);
-        let workers = self.threads.min(n);
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let task = slots[i]
-                        .lock()
-                        .unwrap()
-                        .take()
-                        .expect("task claimed twice");
-                    let r = f(task);
-                    *results[i].lock().unwrap() = Some(r);
-                });
+        let claim_loop = || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
             }
-        });
+            let task = slots[i]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("task claimed twice");
+            let r = f(task);
+            *results[i].lock().unwrap() = Some(r);
+        };
+        pool.dispatch(&claim_loop);
         results
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
@@ -161,6 +355,50 @@ pub fn resolve_threads(threads: usize) -> usize {
     }
 }
 
+/// The pre-pool dispatcher: run every task on up to `threads` *freshly
+/// spawned* scoped workers, results in task order. Kept only as the
+/// spawn-overhead baseline for `bench_smoke` (the pool must beat this on
+/// per-iteration dispatch cost); library code always goes through
+/// [`Parallelism::run_tasks`].
+#[doc(hidden)]
+pub fn run_tasks_scoped<T, R, F>(threads: usize, tasks: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if threads <= 1 || tasks.len() <= 1 {
+        return tasks.into_iter().map(f).collect();
+    }
+    let n = tasks.len();
+    let slots: Vec<Mutex<Option<T>>> =
+        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = slots[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("task claimed twice");
+                let r = f(task);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
+        .collect()
+}
+
 /// Hands out disjoint mutable subranges of one slice to chunk workers.
 ///
 /// The borrow checker cannot see that chunk ranges are disjoint across
@@ -200,6 +438,59 @@ impl<'a, T> SharedSlices<'a, T> {
     }
 }
 
+/// Raw-pointer view of one slice for *scattered* disjoint-index writes —
+/// the tree passes' per-subtree label updates (a spatial tree partitions
+/// point indices across subtrees, but not into contiguous ranges) and the
+/// inter-center matrix's mirrored pair writes. Unlike [`SharedSlices`],
+/// ownership is per index: concurrent users must touch pairwise-disjoint
+/// index sets.
+pub struct ScatterSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for ScatterSlice<'_, T> {}
+unsafe impl<T: Send> Sync for ScatterSlice<'_, T> {}
+
+impl<T> Clone for ScatterSlice<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for ScatterSlice<'_, T> {}
+
+impl<'a, T> ScatterSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> ScatterSlice<'a, T> {
+        ScatterSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// # Safety
+    /// `i` must be in bounds and owned by the calling task (no concurrent
+    /// reader or writer of the same index).
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// # Safety
+    /// `i` must be in bounds and owned by the calling task (no concurrent
+    /// writer of the same index).
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +514,54 @@ mod tests {
                 assert_eq!(*v, i * 10, "threads={t}");
             }
         }
+    }
+
+    #[test]
+    fn pool_survives_many_dispatches() {
+        // The point of the persistent pool: one Parallelism, many batches
+        // (one per iteration in a fit), no respawn. Also exercises reuse
+        // after empty and single-task batches, which bypass the pool.
+        let par = Parallelism::new(4);
+        for round in 0..100usize {
+            let tasks: Vec<usize> = (0..round % 7).collect();
+            let out = par.run_tasks(tasks, |i| i + round);
+            assert_eq!(out.len(), round % 7);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i + round, "round={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn cloned_handles_share_one_pool() {
+        let a = Parallelism::new(3);
+        let b = a.clone();
+        drop(a); // workers must stay alive for the surviving handle
+        let out = b.run_tasks((0..10).collect::<Vec<usize>>(), |i| i * 2);
+        assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_baseline_matches_pool() {
+        let par = Parallelism::new(4);
+        let a = par.run_tasks((0..23).collect::<Vec<usize>>(), |i| i * i);
+        let b = run_tasks_scoped(4, (0..23).collect::<Vec<usize>>(), |i| i * i);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_recovers() {
+        let par = Parallelism::new(4);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par.run_tasks((0..64).collect::<Vec<usize>>(), |i| {
+                assert!(i != 13, "injected failure");
+                i
+            })
+        }));
+        assert!(boom.is_err(), "task panic must surface to the dispatcher");
+        // The pool must stay usable after a failed batch.
+        let out = par.run_tasks((0..8).collect::<Vec<usize>>(), |i| i + 1);
+        assert_eq!(out, (1..9).collect::<Vec<_>>());
     }
 
     #[test]
@@ -265,6 +604,29 @@ mod tests {
                 let s = unsafe { sh.range(r.clone()) };
                 for (off, i) in r.enumerate() {
                     s[off] = i as u32 + 1;
+                }
+            });
+        }
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn scatter_slice_disjoint_indices() {
+        let mut v = vec![0u32; 512];
+        let par = Parallelism::new(4);
+        {
+            let sc = ScatterSlice::new(&mut v);
+            // Strided index sets: task t owns indices i with i % 4 == t.
+            par.run_tasks((0..4usize).collect(), |t| {
+                let mut i = t;
+                while i < 512 {
+                    unsafe {
+                        sc.write(i, i as u32 + 1);
+                        assert_eq!(sc.read(i), i as u32 + 1);
+                    }
+                    i += 4;
                 }
             });
         }

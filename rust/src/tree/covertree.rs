@@ -86,7 +86,19 @@ impl CoverTree {
         CoverTree::build_with_threads(data, params, 1)
     }
 
-    /// Build with up to `threads` workers (0 = all cores).
+    /// Build with up to `threads` workers (0 = all cores), spawning a
+    /// fresh pool for the build. Callers with a long-lived pool (the
+    /// workspace cache) should prefer
+    /// [`CoverTree::build_with_parallelism`].
+    pub fn build_with_threads(
+        data: &Matrix,
+        params: CoverTreeParams,
+        threads: usize,
+    ) -> CoverTree {
+        CoverTree::build_with_parallelism(data, params, &Parallelism::new(threads))
+    }
+
+    /// Build over `par`'s (persistent) worker pool.
     ///
     /// Parallel construction expands the top of the tree sequentially into
     /// subtree tasks via a thread-count-independent policy and builds the
@@ -94,14 +106,13 @@ impl CoverTree {
     /// so the resulting tree (structure, aggregates, and counted
     /// `build_distances`) is byte-identical to the sequential build at
     /// every thread count.
-    pub fn build_with_threads(
+    pub fn build_with_parallelism(
         data: &Matrix,
         params: CoverTreeParams,
-        threads: usize,
+        par: &Parallelism,
     ) -> CoverTree {
         assert!(params.scale_factor > 1.0, "scale factor must be > 1");
         assert!(data.rows() > 0, "empty dataset");
-        let par = Parallelism::new(threads);
         let sw = std::time::Instant::now();
         let mut dist = DistCounter::new();
 
@@ -114,7 +125,7 @@ impl CoverTree {
             elems.push((i, d));
         }
         let root = if par.threads() > 1 && elems.len() >= PAR_MIN_SPLIT {
-            build_root_parallel(data, &params, &mut dist, root_pt, elems, &par)
+            build_root_parallel(data, &params, &mut dist, root_pt, elems, par)
         } else {
             build_node(data, &params, &mut dist, root_pt, 0.0, elems, true)
         };

@@ -4,11 +4,16 @@
 //! count, same counted `distances`, same centers bit for bit, same
 //! inertia. The reductions in `covermeans::parallel` are designed to make
 //! this hold exactly (integer tallies, canonical-order center sums,
-//! thread-count-independent tree task decomposition); these tests pin it.
+//! thread-count-independent tree task decomposition); these tests pin it
+//! — now including the k-d-tree drivers (Kanungo, Pelleg-Moore), the
+//! MiniBatch runner, k-means++ seeding, and pool reuse across fits. CI
+//! additionally runs this suite in release mode so the contract is
+//! verified under full optimization.
 
 use covermeans::data::{synth, Matrix};
-use covermeans::kmeans::{init, Algorithm, KMeans, KMeansParams};
+use covermeans::kmeans::{init, Algorithm, KMeans, KMeansParams, Workspace};
 use covermeans::metrics::{DistCounter, RunResult};
+use covermeans::parallel::Parallelism;
 use covermeans::tree::covertree::Node;
 use covermeans::tree::{CoverTree, CoverTreeParams};
 
@@ -82,15 +87,105 @@ fn every_exact_algorithm_is_thread_invariant() {
 
 #[test]
 fn minibatch_is_thread_invariant() {
-    // MiniBatch runs single-threaded regardless of the knob; the knob must
-    // be accepted and change nothing (its sampling is seed-driven).
+    // MiniBatch shards its per-step batch assignment over the pool; the
+    // sampling stream is seed-driven and drawn up front, and the online
+    // updates replay in batch order, so every thread count must reproduce
+    // the sequential trajectory byte for byte.
     let data = synth::gaussian_blobs(500, 3, 4, 0.6, 40);
     let mut dc = DistCounter::new();
     let init_c = init::kmeans_plus_plus(&data, 4, 11, &mut dc);
     let r1 = fit_with_threads(&data, &init_c, Algorithm::MiniBatch, 1);
-    let r4 = fit_with_threads(&data, &init_c, Algorithm::MiniBatch, 4);
-    assert_eq!(r1.labels, r4.labels);
-    assert_eq!(r1.distances, r4.distances);
+    for threads in [2usize, 4] {
+        let rt = fit_with_threads(&data, &init_c, Algorithm::MiniBatch, threads);
+        assert_eq!(r1.labels, rt.labels, "threads={threads}");
+        assert_eq!(r1.iterations, rt.iterations, "threads={threads}");
+        assert_eq!(r1.distances, rt.distances, "threads={threads}");
+        for (i, (a, b)) in r1
+            .centers
+            .as_slice()
+            .iter()
+            .zip(rt.centers.as_slice())
+            .enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "center value {i} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn kmeans_plus_plus_seeding_is_thread_invariant() {
+    // Seeding shards its d2/near updates and prunes point-side distance
+    // evaluations via the triangle inequality; both must leave the chosen
+    // centers AND the counted init distances byte-identical at every
+    // thread count.
+    for (data, k, seed) in datasets() {
+        let mut d1 = DistCounter::new();
+        let seq = Parallelism::sequential();
+        let c1 = init::kmeans_plus_plus_par(&data, k, seed, &mut d1, &seq);
+        for threads in [2usize, 4] {
+            let par = Parallelism::new(threads);
+            let mut dt = DistCounter::new();
+            let ct = init::kmeans_plus_plus_par(&data, k, seed, &mut dt, &par);
+            assert_eq!(
+                dt.count(),
+                d1.count(),
+                "init distances (threads={threads}, n={})",
+                data.rows()
+            );
+            let a = c1.as_slice();
+            let b = ct.as_slice();
+            assert_eq!(a.len(), b.len());
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "seed center value {i} (threads={threads})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_reuse_across_fits_matches_fresh_pools() {
+    // Two sequential fits driven through one Workspace (one persistent
+    // pool, trees cleared between runs) must equal two fits with fresh
+    // pools — the pool carries no state between batches.
+    let data = synth::istanbul(0.001, 90);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 15, 5, &mut dc);
+    for alg in [Algorithm::Kanungo, Algorithm::Hybrid] {
+        let fresh_a = fit_with_threads(&data, &init_c, alg, 4);
+        let fresh_b = fit_with_threads(&data, &init_c, alg, 4);
+        assert_identical(&fresh_b, &fresh_a, &format!("{} fresh/fresh", alg.name()));
+
+        let mut ws = Workspace::new();
+        let shared_a = KMeans::new(init_c.rows())
+            .algorithm(alg)
+            .threads(4)
+            .max_iter(60)
+            .warm_start(init_c.clone())
+            .fit_with(&data, &mut ws)
+            .unwrap();
+        ws.clear_trees(); // rebuild the tree, keep the pool
+        let shared_b = KMeans::new(init_c.rows())
+            .algorithm(alg)
+            .threads(4)
+            .max_iter(60)
+            .warm_start(init_c.clone())
+            .fit_with(&data, &mut ws)
+            .unwrap();
+        assert_identical(
+            &shared_a,
+            &fresh_a,
+            &format!("{} pooled fit 1", alg.name()),
+        );
+        assert_identical(
+            &shared_b,
+            &fresh_b,
+            &format!("{} pooled fit 2 (reused pool)", alg.name()),
+        );
+    }
 }
 
 fn assert_same_tree(a: &Node, b: &Node) {
