@@ -13,7 +13,7 @@
 //!     make artifacts && cargo run --release --example end_to_end
 
 use covermeans::data::synth;
-use covermeans::kmeans::{self, Algorithm, KMeans, KMeansParams};
+use covermeans::kmeans::{self, Algorithm, KMeans, KMeansModel, KMeansParams};
 use covermeans::metrics::DistCounter;
 use covermeans::runtime::{lloyd_xla, AssignExecutor};
 
@@ -99,6 +99,31 @@ fn main() -> anyhow::Result<()> {
         );
         assert_eq!(r.iterations, native.iterations, "exactness");
     }
+
+    // --- Serving round-trip: the fit leaves as a model, survives disk,
+    // and `predict` reproduces the training assignment exactly — no
+    // hand-rolled nearest-center re-derivation.
+    let model = KMeansModel::from_run(&data, &native, Algorithm::Standard, 3);
+    let path = std::env::temp_dir().join("covermeans_end_to_end.kmm");
+    model.save(&path)?;
+    let served = KMeansModel::load(&path)?;
+    std::fs::remove_file(&path).ok();
+    let predicted = served.predict(&data);
+    anyhow::ensure!(
+        native.converged,
+        "training run hit the iteration cap; labels are not a fixpoint"
+    );
+    anyhow::ensure!(
+        predicted == native.labels,
+        "round-tripped model must reproduce the converged training labels"
+    );
+    println!(
+        "\nmodel round-trip: save -> load -> predict reproduced all {} labels \
+         (k={}, inertia {:.4e})",
+        predicted.len(),
+        served.k(),
+        served.inertia()
+    );
 
     // Throughput headline for the dense path.
     let evals = (data.rows() * k * xla.iterations) as f64;

@@ -1,6 +1,7 @@
 //! Quickstart: cluster a small synthetic dataset with every algorithm of
-//! the paper and print their relative cost — a 30-second tour of the
-//! fluent [`KMeans`] builder API.
+//! the paper, print their relative cost, then turn the winner into a
+//! servable model — a 30-second tour of the fluent [`KMeans`] builder
+//! and the [`KMeansModel`] serving layer.
 //!
 //!     cargo run --release --example quickstart
 
@@ -48,5 +49,30 @@ fn main() {
          The tree methods (Cover-means, Hybrid) also pay a one-off build cost\n\
          included above; amortize it across runs by holding a\n\
          kmeans::Workspace and fitting with KMeans::fit_with."
+    );
+
+    // From fit to serving: capture the fit as a model and let `predict`
+    // assign fresh points — no hand-rolled nearest-center loop needed. At
+    // this k (50 < 64) the auto strategy answers with the Elkan-pruned
+    // scan; at k >= 64 it switches to a cover tree built over the centers.
+    let model = KMeans::new(k)
+        .algorithm(Algorithm::Hybrid)
+        .warm_start(init)
+        .fit_model(&data)
+        .expect("valid configuration");
+    let fresh = synth::istanbul(0.001, 43);
+    let labels = model.predict(&fresh);
+    let mut sizes = vec![0usize; model.k()];
+    for &l in &labels {
+        sizes[l as usize] += 1;
+    }
+    let busiest = sizes.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();
+    println!(
+        "\nserving: {} fresh points assigned; busiest cluster {} took {} of them\n\
+         (persist with model.save(path) and reload with KMeansModel::load —\n\
+         see examples/train_then_serve.rs for the full loop)",
+        fresh.rows(),
+        busiest.0,
+        busiest.1
     );
 }

@@ -1,0 +1,86 @@
+//! Train once, serve many: the full life of a [`KMeansModel`].
+//!
+//! Fits a high-k model on a clustered dataset, persists it to the
+//! checksummed `.kmm` format, reloads it as a fresh serving process
+//! would, and batch-assigns a stream of out-of-sample points — comparing
+//! the cover-tree query path (built over the centers) against the
+//! Elkan-pruned scan and the naive n·k scan it replaces, at 1 and at all
+//! available worker threads.
+//!
+//!     cargo run --release --example train_then_serve
+
+use covermeans::data::synth;
+use covermeans::kmeans::{
+    Algorithm, KMeans, KMeansModel, PredictMode, PredictOptions,
+};
+
+fn main() -> anyhow::Result<()> {
+    // --- train ----------------------------------------------------------
+    let train = synth::istanbul(0.02, 42);
+    let k = 128;
+    println!(
+        "train: istanbul analog, n={} d={} k={k} (Hybrid)",
+        train.rows(),
+        train.cols()
+    );
+    let model = KMeans::new(k)
+        .algorithm(Algorithm::Hybrid)
+        .seed(7)
+        .threads(0) // all cores; byte-identical to threads(1)
+        .fit_model(&train)
+        .expect("valid configuration");
+    println!(
+        "fit: {} iterations (converged {}), inertia {:.4e}",
+        model.iterations(),
+        model.converged(),
+        model.inertia()
+    );
+
+    // --- persist --------------------------------------------------------
+    let path = std::env::temp_dir().join("covermeans_train_then_serve.kmm");
+    model.save(&path)?;
+    let bytes = std::fs::metadata(&path)?.len();
+    println!("saved: {} ({bytes} bytes)", path.display());
+
+    // --- serve (as a fresh process would: load from disk) ---------------
+    let served = KMeansModel::load(&path)?;
+    let queries = synth::istanbul(0.01, 99); // out-of-sample traffic
+    let naive = queries.rows() as u64 * served.k() as u64;
+    println!(
+        "\nserve: {} fresh points against k={} centers (naive scan: {naive} distance evals)",
+        queries.rows(),
+        served.k()
+    );
+    println!(
+        "{:<18} {:>9} {:>12} {:>10} {:>12}",
+        "strategy", "threads", "query evals", "time ms", "points/s"
+    );
+    for mode in [PredictMode::Tree, PredictMode::Scan] {
+        for threads in [1usize, 0] {
+            let sw = std::time::Instant::now();
+            let p = served.predict_opts(&queries, &PredictOptions { mode, threads });
+            let secs = sw.elapsed().as_secs_f64();
+            println!(
+                "{:<18} {:>9} {:>12} {:>10.2} {:>12.0}",
+                p.mode.name(),
+                if threads == 0 { "all".to_string() } else { threads.to_string() },
+                p.query_evals,
+                secs * 1e3,
+                queries.rows() as f64 / secs.max(1e-12)
+            );
+        }
+    }
+
+    // The contract, demonstrated: loaded model ≡ in-memory model, every
+    // strategy ≡ the naive scan, labels identical.
+    let a = model.predict(&queries);
+    let b = served.predict(&queries);
+    assert_eq!(a, b, "load must not change a single label");
+    let (with_dist, dists) = served.predict_with_distances(&queries);
+    assert_eq!(a, with_dist);
+    let mean: f64 = dists.iter().sum::<f64>() / dists.len() as f64;
+    println!("\nmean distance to assigned center: {mean:.5}");
+    std::fs::remove_file(&path).ok();
+    println!("train_then_serve OK");
+    Ok(())
+}

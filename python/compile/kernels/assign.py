@@ -17,7 +17,7 @@ chunks up to the compiled lattice shape); it also directly supports
 *weighted* points, which is how cover-tree node aggregates (S_x, w_x) are
 clustered when running Lloyd over tree leaves.
 
-TPU mapping (see DESIGN.md §Hardware-Adaptation): the points chunk is tiled
+TPU mapping: the points chunk is tiled
 into ``block_c``-row blocks streamed HBM->VMEM by the BlockSpec grid; the
 full center matrix stays VMEM-resident across the grid (k <= 1024, d <= 128
 => <= 512 KiB f32).  The distance expansion ||x||^2 + ||c||^2 - 2 x.C^T puts
@@ -132,8 +132,9 @@ def assign_pallas(x: jnp.ndarray, w: jnp.ndarray, centers: jnp.ndarray,
 def vmem_estimate_bytes(block_c: int, d: int, k: int) -> int:
     """Static VMEM footprint estimate for one grid step (f32).
 
-    Used by DESIGN.md/EXPERIMENTS.md §Perf: inputs (x, w, centers), the
-    (block_c, k) distance tile, and the accumulators all co-resident.
+    Recorded in the artifact manifest (``covermeans info``): inputs
+    (x, w, centers), the (block_c, k) distance tile, and the accumulators
+    all co-resident.
     """
     f = 4
     return f * (

@@ -1,4 +1,4 @@
-//! Bench: design-choice ablations (DESIGN.md E8) — the cover tree scaling
+//! Bench: design-choice ablations — the cover tree scaling
 //! factor, the minimum node size, and the hybrid switch iteration, each
 //! varied alone on a tree-friendly (istanbul) and a tree-hostile (kdd04)
 //! dataset.

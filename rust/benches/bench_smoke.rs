@@ -14,6 +14,10 @@
 //!     threads over an amortized tree (the filtering pass is the object
 //!     under test, not the sequential build);
 //!   * measures pruned k-means++ seeding at 1 and 4 threads;
+//!   * measures serving-layer batch predict (cover tree over the centers
+//!     vs the Elkan-pruned scan, small vs large k, 1 vs 4 threads),
+//!     asserts predict thread-invariance plus the tree's counted-work win
+//!     over the naive n*k scan at k=64, and emits `BENCH_5.json`;
 //!   * emits `BENCH_4.json` (all of the above plus the per-algorithm
 //!     table);
 //!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
@@ -34,7 +38,7 @@ use std::time::Duration;
 
 use covermeans::benchutil::{bench_repeats, bench_scale, fmt_duration, measure, median};
 use covermeans::data::{synth, Matrix};
-use covermeans::kmeans::{init, Algorithm, KMeans, Workspace};
+use covermeans::kmeans::{init, Algorithm, KMeans, PredictMode, Workspace};
 use covermeans::metrics::{DistCounter, RunResult};
 use covermeans::parallel::{run_tasks_scoped, Parallelism};
 use covermeans::tree::KdTreeParams;
@@ -104,6 +108,54 @@ struct Extras {
     kd: Vec<KdRow>,
     seed_ms_t1: f64,
     seed_ms_t4: f64,
+}
+
+/// One (k, strategy) cell of the serving-layer predict measurement.
+struct PredictRow {
+    k: usize,
+    mode: &'static str,
+    ms_t1: f64,
+    ms_t4: f64,
+    pps_t1: f64,
+    pps_t4: f64,
+    query_evals: u64,
+    prep_evals: u64,
+    naive_evals: u64,
+}
+
+/// Emit `BENCH_5.json`: predict throughput (points/s at 1 and 4 threads)
+/// and counted evaluations for the cover-tree and pruned-scan strategies
+/// at small and large k, so the crossover is visible from the artifact.
+fn write_predict_json(path: &str, scale: f64, q_n: usize, rows: &[PredictRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"bench-smoke-predict-v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str(&format!("  \"queries\": {q_n},\n"));
+    s.push_str("  \"threads_compared\": [1, 4],\n");
+    s.push_str("  \"predict\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"k\": {}, \"mode\": \"{}\", \"ms_t1\": {:.3}, \"ms_t4\": {:.3}, \
+             \"points_per_s_t1\": {:.0}, \"points_per_s_t4\": {:.0}, \
+             \"query_evals\": {}, \"prep_evals\": {}, \"naive_evals\": {}}}{comma}\n",
+            r.k,
+            r.mode,
+            r.ms_t1,
+            r.ms_t4,
+            r.pps_t1,
+            r.pps_t4,
+            r.query_evals,
+            r.prep_evals,
+            r.naive_evals,
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("[json] failed to write {path}: {e}"),
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -375,6 +427,86 @@ fn main() {
         seed_ms[1],
         seed_ms[0] / seed_ms[1].max(1e-9),
     );
+
+    // --- serving-layer predict throughput (BENCH_5.json): tree vs
+    // Elkan-pruned scan at small and large k, 1 vs 4 threads, over warm
+    // model indexes (the first call pays index prep, the timed calls
+    // measure steady-state serving).
+    let q_n = (n_speed / 4).clamp(5_000, 50_000);
+    let queries = synth::gaussian_blobs(q_n, 8, 16, 1.3, 77);
+    // Long-lived pools: the timed calls must measure serving, not
+    // per-call pool spawn/teardown (the dispatch benchmark above is where
+    // that cost is tracked).
+    let serve_pools = [Parallelism::new(1), Parallelism::new(4)];
+    let mut predict_rows: Vec<PredictRow> = Vec::new();
+    for pk in [8usize, 64] {
+        let mut dc = DistCounter::new();
+        let p_init = init::kmeans_plus_plus(&big, pk, 13, &mut dc);
+        let model = KMeans::new(pk)
+            .algorithm(Algorithm::Standard)
+            .threads(4)
+            .max_iter(5)
+            .warm_start(p_init)
+            .fit_model(&big)
+            .expect("valid predict-bench configuration");
+        let naive = q_n as u64 * pk as u64;
+        for mode in [PredictMode::Tree, PredictMode::Scan] {
+            // Cold call: charges index prep, and is the reference for the
+            // thread-invariance check.
+            let cold = model.predict_par(&queries, mode, &serve_pools[0]);
+            let p4 = model.predict_par(&queries, mode, &serve_pools[1]);
+            if cold.labels != p4.labels || cold.query_evals != p4.query_evals {
+                failures.push(format!(
+                    "predict k={pk} {}: threads=4 diverged from threads=1",
+                    mode.name()
+                ));
+            }
+            let mut ms = [0.0f64; 2];
+            for (slot, par) in serve_pools.iter().enumerate() {
+                let times = measure(repeats, || {
+                    let p = model.predict_par(&queries, mode, par);
+                    std::hint::black_box(p.labels.len());
+                });
+                ms[slot] = times[0].as_secs_f64() * 1e3;
+            }
+            println!(
+                "predict k={pk:<3} {:<5} (n={q_n}): t1 {:>8.2}ms | t4 {:>8.2}ms | \
+                 {:>9.0} pts/s t4 | evals {} (naive {naive})",
+                mode.name(),
+                ms[0],
+                ms[1],
+                q_n as f64 / (ms[1] / 1e3).max(1e-12),
+                cold.query_evals,
+            );
+            predict_rows.push(PredictRow {
+                k: pk,
+                mode: mode.name(),
+                ms_t1: ms[0],
+                ms_t4: ms[1],
+                pps_t1: q_n as f64 / (ms[0] / 1e3).max(1e-12),
+                pps_t4: q_n as f64 / (ms[1] / 1e3).max(1e-12),
+                query_evals: cold.query_evals,
+                prep_evals: cold.prep_evals,
+                naive_evals: naive,
+            });
+        }
+        // Counted-work gate (deterministic, so always enforced): at large
+        // k the tree must answer with strictly fewer evaluations than the
+        // naive n*k scan — the serving layer's acceptance bar.
+        if pk >= 64 {
+            let tree_row = predict_rows
+                .iter()
+                .rfind(|r| r.k == pk && r.mode == "tree")
+                .expect("tree row recorded");
+            if tree_row.query_evals >= naive {
+                failures.push(format!(
+                    "predict k={pk}: tree spent {} evals, not below naive {naive}",
+                    tree_row.query_evals
+                ));
+            }
+        }
+    }
+    write_predict_json("BENCH_5.json", scale, q_n, &predict_rows);
 
     // --- emit the artifact.
     let extras = Extras {

@@ -4,8 +4,8 @@
 //!     cargo bench --bench table2
 //!     REPRO_SCALE=0.2 REPRO_RESTARTS=10 cargo bench --bench table2
 //!
-//! Paper reference values (Table 2) are printed alongside for the shape
-//! comparison recorded in EXPERIMENTS.md.
+//! Paper reference values (Table 2) are printed alongside so the measured
+//! ratios can be shape-compared against the paper's.
 
 use covermeans::benchutil::{bench_scale, CsvSink};
 use covermeans::coordinator::{report, run_experiment, sweep};

@@ -10,7 +10,8 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Dataset scale factor for benches: `REPRO_SCALE` env var, default 0.05.
-/// (Scale 1.0 = the paper's dataset sizes; see DESIGN.md §3.)
+/// (Scale 1.0 = the paper's dataset sizes; see the `scale` row of the
+/// config-key table in docs/GUIDE.md.)
 pub fn bench_scale() -> f64 {
     std::env::var("REPRO_SCALE")
         .ok()

@@ -2,15 +2,44 @@
 //!
 //! The offline crate set has no serde, so the launcher uses a minimal,
 //! forgiving format: one `key = value` per line, `#` comments. The same
-//! keys are accepted as `--key value` CLI overrides (see `cli.rs`), CLI
+//! keys are accepted as `--key value` CLI overrides (see `main.rs`), CLI
 //! taking precedence over file, file over defaults.
+//!
+//! # Config keys
+//!
+//! Every key [`RunConfig::set`] accepts, in one place (the prose
+//! walkthrough lives in `docs/GUIDE.md`):
+//!
+//! | key | default | meaning |
+//! |-----|---------|---------|
+//! | `dataset` | `aloi64` | Registry name (`covermeans datasets`) or `blobs:<n>:<d>:<k>`. |
+//! | `scale` | `0.05` | Dataset size relative to the paper's (1.0 = full size). |
+//! | `data_seed` | `1` | Seed for the synthetic dataset generators. |
+//! | `k` | `100` | Number of clusters. |
+//! | `restarts` | `10` | k-means++ restarts per cell (paper protocol). |
+//! | `seed` | `1000` | First init seed; restart `r` uses `seed + r`. |
+//! | `threads` | all cores | **Total** worker budget of the sweep coordinator; cells run on `threads / fit_threads` workers. |
+//! | `fit_threads` | `1` | Intra-fit worker threads (0 = all cores) for assignment passes, tree builds, seeding, and batch predict. Exactness-preserving: any value reproduces the single-threaded results byte for byte. |
+//! | `out_dir` | `results` | Output directory for CSV reports. |
+//! | `max_iter` | `200` | Iteration cap (the paper runs to convergence; this is a guard). |
+//! | `tol` | `0` | Convergence tolerance on the largest center movement; 0 keeps the exact assignment-fixpoint criterion. |
+//! | `switch_at` | `7` | Hybrid: iterations of Cover-means before handing off to Shallot. |
+//! | `scale_factor` | `1.2` | Cover tree radius scaling factor `b` (> 1). |
+//! | `min_node_size` | `100` | Cover tree: stop splitting below this many points. |
+//! | `kd_leaf_size` | `100` | k-d tree leaf size (Kanungo / Pelleg-Moore). |
+//! | `algorithms` | paper table order | Comma-separated algorithm list (see [`Algorithm::parse`]). |
+//! | `mb_batch` | `1024` | MiniBatch: points per batch. |
+//! | `mb_tol` | `1e-4` | MiniBatch: center-movement stopping tolerance. |
+//! | `mb_seed` | `0xB47C4` | MiniBatch: batch-sampling seed. |
+//! | `model_out` | *(empty)* | `covermeans run`: save the fitted [`crate::kmeans::KMeansModel`] to this `.kmm` path (empty = don't). |
+//! | `predict_mode` | `auto` | `covermeans predict`: query strategy — `auto`, `tree` (cover tree over the centers), or `scan` (Elkan-pruned linear scan). |
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::kmeans::{Algorithm, KMeansParams};
+use crate::kmeans::{Algorithm, KMeansParams, PredictMode};
 use crate::tree::{CoverTreeParams, KdTreeParams};
 
 /// Everything a single experiment run needs.
@@ -39,6 +68,11 @@ pub struct RunConfig {
     pub threads: usize,
     /// Output directory for CSV results.
     pub out_dir: String,
+    /// `covermeans run`: path to save the fitted model (`.kmm`); empty
+    /// disables saving.
+    pub model_out: String,
+    /// `covermeans predict`: batch-query strategy (auto / tree / scan).
+    pub predict_mode: PredictMode,
 }
 
 impl Default for RunConfig {
@@ -54,6 +88,8 @@ impl Default for RunConfig {
             params: KMeansParams::default(),
             threads: default_threads(),
             out_dir: "results".to_string(),
+            model_out: String::new(),
+            predict_mode: PredictMode::Auto,
         }
     }
 }
@@ -84,6 +120,12 @@ impl RunConfig {
             // single-threaded results byte for byte.
             "fit_threads" => self.params.threads = v.parse().context("fit_threads")?,
             "out_dir" => self.out_dir = v.to_string(),
+            "model_out" => self.model_out = v.to_string(),
+            "predict_mode" => {
+                self.predict_mode = PredictMode::parse(v).with_context(|| {
+                    format!("predict_mode {v:?} (expected auto, tree or scan)")
+                })?
+            }
             "max_iter" => self.params.max_iter = v.parse().context("max_iter")?,
             "tol" => self.params.tol = v.parse().context("tol")?,
             "switch_at" => self.params.switch_at = v.parse().context("switch_at")?,
@@ -149,6 +191,8 @@ impl RunConfig {
         m.insert("threads", self.threads.to_string());
         m.insert("fit_threads", self.params.threads.to_string());
         m.insert("out_dir", self.out_dir.clone());
+        m.insert("model_out", self.model_out.clone());
+        m.insert("predict_mode", self.predict_mode.name().to_string());
         m.insert("max_iter", self.params.max_iter.to_string());
         m.insert("tol", self.params.tol.to_string());
         m.insert("switch_at", self.params.switch_at.to_string());
@@ -221,6 +265,21 @@ mod tests {
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("algorithms", "quantum").is_err());
         assert!(c.set("algorithms", "").is_err());
+        assert!(c.set("predict_mode", "psychic").is_err());
+    }
+
+    #[test]
+    fn model_and_predict_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.model_out, "");
+        assert_eq!(c.predict_mode, PredictMode::Auto);
+        c.set("model_out", "out/best.kmm").unwrap();
+        c.set("predict_mode", "tree").unwrap();
+        assert_eq!(c.model_out, "out/best.kmm");
+        assert_eq!(c.predict_mode, PredictMode::Tree);
+        let dump = c.dump();
+        assert!(dump.contains("model_out = out/best.kmm"));
+        assert!(dump.contains("predict_mode = tree"));
     }
 
     #[test]

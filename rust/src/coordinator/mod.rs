@@ -34,7 +34,9 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::data::{registry, Matrix};
-use crate::kmeans::{self, Algorithm, AlgorithmSpec, KMeans, KMeansParams, Workspace};
+use crate::kmeans::{
+    self, Algorithm, AlgorithmSpec, KMeans, KMeansModel, KMeansParams, Workspace,
+};
 use crate::metrics::{DistCounter, IterationLog};
 
 /// One experiment specification.
@@ -62,6 +64,12 @@ pub struct Experiment {
     /// the intra-fit threads configured in `params.threads` (see
     /// [`Experiment::cell_workers`]).
     pub threads: usize,
+    /// When set, each cell persists its best run (lowest SSE across every
+    /// `(k, restart)`) as a servable [`KMeansModel`] at
+    /// `<model_dir>/<dataset>_<algorithm>.kmm` — the train-once /
+    /// serve-many hand-off from a sweep. `None` (the default) keeps the
+    /// paper-replication protocols free of I/O.
+    pub model_dir: Option<std::path::PathBuf>,
 }
 
 impl Experiment {
@@ -78,6 +86,7 @@ impl Experiment {
             amortize_tree: false,
             warm_restarts: false,
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            model_dir: None,
         }
     }
 
@@ -169,11 +178,7 @@ impl ExperimentResult {
 /// Deterministic init seed shared by all algorithms for a
 /// `(dataset, k, restart)` triple.
 pub fn init_seed(dataset: &str, k: usize, restart: usize) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in dataset.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
+    let mut h = crate::data::io::fnv1a(dataset.as_bytes());
     h ^= (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     h ^= (restart as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
     h
@@ -245,6 +250,9 @@ fn run_cell(
     let spec = AlgorithmSpec::from_params(alg, &exp.params);
     // Previous-k solution per restart, for the warm-started sweep.
     let mut prev_centers: Vec<Option<Matrix>> = vec![None; exp.restarts];
+    // Best run of the cell so far (lowest SSE), kept only when the
+    // experiment persists models.
+    let mut best: Option<(f64, KMeansModel)> = None;
 
     for &k in &exp.ks {
         let k = k.min(data.rows());
@@ -289,6 +297,14 @@ fn run_cell(
             if exp.warm_restarts {
                 prev_centers[restart] = Some(r.centers.clone());
             }
+            let sse = r.sse(data);
+            let improves = match &best {
+                Some((b, _)) => sse < *b,
+                None => true,
+            };
+            if exp.model_dir.is_some() && improves {
+                best = Some((sse, KMeansModel::from_run(data, &r, alg, seed)));
+            }
             out.distances += r.distances;
             out.build_dist += r.build_dist;
             out.time += r.time;
@@ -301,10 +317,21 @@ fn run_cell(
                 build_dist: r.build_dist,
                 time: r.time,
                 build_time: r.build_time,
-                sse: r.sse(data),
+                sse,
                 converged: r.converged,
                 log: keep_logs.then(|| r.log.clone()),
             });
+        }
+    }
+    if let (Some(dir), Some((_, model))) = (&exp.model_dir, &best) {
+        let path = dir.join(format!("{dataset}_{}.kmm", alg.name()));
+        // A failed save must not poison the sweep results; report and
+        // carry on (the CSV/Table outputs are the primary artifact).
+        if let Err(e) = std::fs::create_dir_all(dir)
+            .map_err(anyhow::Error::from)
+            .and_then(|()| model.save(&path))
+        {
+            eprintln!("warning: could not persist cell model {path:?}: {e:#}");
         }
     }
     out
@@ -442,6 +469,38 @@ mod tests {
         let sse2: f64 = cell.runs.iter().filter(|r| r.k == 2).map(|r| r.sse).sum();
         let sse4: f64 = cell.runs.iter().filter(|r| r.k == 4).map(|r| r.sse).sum();
         assert!(sse4 < sse2, "k=4 warm sse {sse4} vs k=2 sse {sse2}");
+    }
+
+    #[test]
+    fn model_dir_persists_best_cell_models() {
+        let dir = std::env::temp_dir().join(format!(
+            "covermeans_cell_models_{}",
+            std::process::id()
+        ));
+        let mut exp = tiny_experiment();
+        exp.algorithms = vec![Algorithm::Standard, Algorithm::Hybrid];
+        exp.model_dir = Some(dir.clone());
+        let res = run_experiment(&exp, false).unwrap();
+        for alg in [Algorithm::Standard, Algorithm::Hybrid] {
+            let path = dir.join(format!("blobs:200:3:4_{}.kmm", alg.name()));
+            let model = KMeansModel::load(&path)
+                .unwrap_or_else(|e| panic!("missing cell model {path:?}: {e:#}"));
+            assert_eq!(model.k(), 4);
+            assert_eq!(model.dim(), 3);
+            assert_eq!(model.algorithm(), alg);
+            // The persisted model is the best run: its inertia matches
+            // the cell's minimum recorded SSE.
+            let cell = res.cell("blobs:200:3:4", alg).unwrap();
+            let best = cell.runs.iter().map(|r| r.sse).fold(f64::INFINITY, f64::min);
+            assert!(
+                (model.inertia() - best).abs() < 1e-9 * (1.0 + best),
+                "{}: persisted inertia {} vs best sse {best}",
+                alg.name(),
+                model.inertia()
+            );
+            std::fs::remove_file(&path).ok();
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Each function returns an [`Experiment`] sized by a `scale` knob (1.0 =
 //! the paper's dataset sizes); the CLI and benches pass smaller scales so
-//! the full matrix completes in minutes. See DESIGN.md §4 for the index.
+//! the full matrix completes in minutes. See docs/GUIDE.md §7 for the
+//! CLI commands that drive each protocol.
 
 use crate::coordinator::Experiment;
 use crate::kmeans::Algorithm;

@@ -1,8 +1,10 @@
-//! Dataset and result I/O: CSV matrices and a small binary format.
+//! Dataset and result I/O: CSV matrices and small binary formats.
 //!
 //! CSV is used for interchange (results/, external data); the binary `.fmat`
 //! format caches generated datasets between benchmark runs (a header
-//! `FMAT1\n<rows> <cols>\n` followed by little-endian f64 rows).
+//! `FMAT1\n<rows> <cols>\n` followed by little-endian f64 rows). The
+//! little-endian primitives in [`bin`] are shared with the trained-model
+//! format of [`crate::kmeans::KMeansModel`] (`.kmm` files).
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -11,6 +13,86 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::data::matrix::Matrix;
+
+/// Little-endian binary primitives shared by the `.fmat` dataset cache and
+/// the `.kmm` trained-model format: append-style writers over a `Vec<u8>`
+/// and a bounds-checked [`bin::Reader`] whose every read fails cleanly on
+/// truncated input instead of panicking.
+pub mod bin {
+    use anyhow::{bail, Result};
+
+    pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Writes the exact bit pattern (`to_bits`), so round-trips are
+    /// bit-identical for every value including -0.0 and NaNs.
+    pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Forward-only bounds-checked reader over a byte slice.
+    pub struct Reader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        pub fn new(buf: &'a [u8]) -> Reader<'a> {
+            Reader { buf, pos: 0 }
+        }
+
+        /// Bytes not yet consumed.
+        pub fn remaining(&self) -> usize {
+            self.buf.len() - self.pos
+        }
+
+        /// Consume exactly `n` bytes.
+        pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+            if self.remaining() < n {
+                bail!(
+                    "truncated input: wanted {n} bytes at offset {}, {} left",
+                    self.pos,
+                    self.remaining()
+                );
+            }
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        pub fn u32(&mut self) -> Result<u32> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+
+        pub fn u64(&mut self) -> Result<u64> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        pub fn f64(&mut self) -> Result<f64> {
+            Ok(f64::from_bits(self.u64()?))
+        }
+    }
+}
+
+/// FNV-1a over a byte buffer — the crate's one string/byte hash: the
+/// `.kmm` model checksum, the RNG stream-label derivation, and the
+/// coordinator's per-cell init seeds all use it. (The workspace cache
+/// fingerprint keeps a private running-hash variant: it samples
+/// non-contiguous matrix elements, so a buffer-at-once helper doesn't
+/// fit.)
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
 
 /// Write a matrix as CSV (no header).
 pub fn write_csv(path: &Path, m: &Matrix) -> Result<()> {
@@ -173,6 +255,32 @@ mod tests {
         let p = tmpdir().join("t.fmat");
         write_fmat(&p, &m).unwrap();
         assert_eq!(read_fmat(&p).unwrap(), m);
+    }
+
+    #[test]
+    fn bin_roundtrip_and_truncation() {
+        let mut buf = Vec::new();
+        bin::put_u32(&mut buf, 7);
+        bin::put_u64(&mut buf, u64::MAX - 3);
+        bin::put_f64(&mut buf, -0.0);
+        bin::put_f64(&mut buf, f64::NAN);
+        let mut r = bin::Reader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        assert_eq!(r.remaining(), 0);
+        assert!(r.u32().is_err(), "reads past the end must fail, not panic");
+        // Truncated mid-field.
+        let mut r = bin::Reader::new(&buf[..6]);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn fnv1a_discriminates() {
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
     }
 
     #[test]

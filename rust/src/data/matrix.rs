@@ -132,8 +132,8 @@ pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     // Four *independent* accumulators break the serial add dependency
     // chain, and `chunks_exact` removes the bounds checks that blocked
-    // vectorization (§Perf: together +88% over the single-accumulator
-    // indexed unroll on d=30; see EXPERIMENTS.md §Perf).
+    // vectorization (measured together at +88% over the
+    // single-accumulator indexed unroll on d=30).
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
     let ca = a.chunks_exact(4);
     let cb = b.chunks_exact(4);

@@ -3,7 +3,7 @@
 //! The real datasets (ALOI, autoencoded MNIST, CovType, Istanbul tweets,
 //! UK traffic accidents, KDD04-bio) are not available in this environment,
 //! so each generator reproduces the *statistical character that drives the
-//! relative algorithm performance* the paper reports (see DESIGN.md §3):
+//! relative algorithm performance* the paper reports:
 //!
 //! * `aloi`     — many tight micro-clusters (object views): tree-friendly,
 //!               moderate dimension, non-negative normalized histograms.

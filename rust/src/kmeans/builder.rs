@@ -2,12 +2,12 @@
 //! hands back either a finished [`RunResult`] (`fit`) or a stepwise
 //! [`Fit`] handle (`fit_step`).
 //!
-//! ```no_run
+//! ```
 //! use covermeans::data::synth;
 //! use covermeans::kmeans::{Algorithm, KMeans};
 //!
-//! let data = synth::istanbul(0.01, 42);
-//! let result = KMeans::new(50)
+//! let data = synth::istanbul(0.002, 42);
+//! let result = KMeans::new(20)
 //!     .algorithm(Algorithm::Hybrid)
 //!     .tol(1e-6)
 //!     .max_iter(200)
@@ -34,6 +34,7 @@ use std::fmt;
 use crate::data::Matrix;
 use crate::kmeans::driver::{Fit, Observer, Signal, StepView};
 use crate::kmeans::minibatch::MiniBatchParams;
+use crate::kmeans::model::KMeansModel;
 use crate::kmeans::{driver, init, minibatch, Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
 use crate::tree::{CoverTreeParams, KdTreeParams};
@@ -340,6 +341,43 @@ impl KMeans {
         Ok(fit.run())
     }
 
+    /// Fit to completion and capture the result as a servable, persistable
+    /// [`KMeansModel`] (centers, per-cluster counts/inertia, and the
+    /// builder's algorithm/seed as provenance) — the train-once /
+    /// serve-many entry point.
+    ///
+    /// ```
+    /// use covermeans::data::synth;
+    /// use covermeans::kmeans::{Algorithm, KMeans};
+    ///
+    /// let train = synth::gaussian_blobs(300, 3, 4, 0.5, 1);
+    /// let fresh = synth::gaussian_blobs(50, 3, 4, 0.5, 2);
+    /// let model = KMeans::new(4)
+    ///     .algorithm(Algorithm::Elkan)
+    ///     .seed(9)
+    ///     .fit_model(&train)
+    ///     .unwrap();
+    /// let labels = model.predict(&fresh); // out-of-sample assignment
+    /// assert_eq!(labels.len(), 50);
+    /// ```
+    pub fn fit_model(self, data: &Matrix) -> Result<KMeansModel, KMeansError> {
+        let mut ws = Workspace::new();
+        self.fit_model_with(data, &mut ws)
+    }
+
+    /// [`KMeans::fit_model`] against a caller-owned workspace (tree and
+    /// worker-pool reuse across fits).
+    pub fn fit_model_with(
+        self,
+        data: &Matrix,
+        ws: &mut Workspace,
+    ) -> Result<KMeansModel, KMeansError> {
+        let algorithm = self.spec.kind();
+        let seed = self.seed;
+        let run = self.fit_with(data, ws)?;
+        Ok(KMeansModel::from_run(data, &run, algorithm, seed))
+    }
+
     /// Begin a stepwise fit with a fresh workspace: returns a [`Fit`]
     /// whose `step()` exposes every iteration boundary.
     pub fn fit_step(self, data: &Matrix) -> Result<Fit<'_>, KMeansError> {
@@ -394,6 +432,20 @@ mod tests {
         );
         // Errors render human-readable messages.
         assert!(KMeansError::ZeroK.to_string().contains("k"));
+    }
+
+    #[test]
+    fn fit_model_propagates_validation_errors() {
+        let data = synth::gaussian_blobs(40, 2, 2, 0.5, 9);
+        assert_eq!(
+            KMeans::new(0).fit_model(&data).unwrap_err(),
+            KMeansError::ZeroK
+        );
+        let m = KMeans::new(3).seed(5).fit_model(&data).unwrap();
+        assert_eq!(m.k(), 3);
+        assert_eq!(m.seed(), 5);
+        assert_eq!(m.algorithm(), Algorithm::Standard);
+        assert_eq!(m.counts().iter().sum::<u64>(), 40);
     }
 
     #[test]

@@ -98,9 +98,9 @@ struct Ctx<'a> {
     id_pool: Vec<Vec<u32>>,
 }
 
-/// §Perf A/B switch: `COVERMEANS_NO_POOL=1` disables scratch recycling so
-/// the allocation cost of the naive traversal can be measured (see
-/// EXPERIMENTS.md §Perf).
+/// Perf A/B switch: `COVERMEANS_NO_POOL=1` disables scratch recycling so
+/// the allocation cost of the naive traversal can be measured against the
+/// pooled default.
 fn pool_disabled() -> bool {
     static DISABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *DISABLED.get_or_init(|| std::env::var_os("COVERMEANS_NO_POOL").is_some())

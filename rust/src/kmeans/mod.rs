@@ -8,11 +8,11 @@
 //! logging, and center recomputation. Configure and launch runs through
 //! the fluent [`KMeans`] builder:
 //!
-//! ```no_run
+//! ```
 //! # use covermeans::data::synth;
 //! # use covermeans::kmeans::{Algorithm, KMeans};
-//! # let data = synth::istanbul(0.01, 1);
-//! let r = KMeans::new(50).algorithm(Algorithm::Hybrid).seed(7).fit(&data).unwrap();
+//! # let data = synth::istanbul(0.002, 1);
+//! let r = KMeans::new(20).algorithm(Algorithm::Hybrid).seed(7).fit(&data).unwrap();
 //! ```
 //!
 //! Given the same initial centers every exact variant replicates the
@@ -42,6 +42,12 @@
 //! [`KMeansParams`] struct are kept as thin shims over the driver loop so
 //! existing callers and the exactness suite pin behavior across the
 //! refactor; new code should prefer the builder.
+//!
+//! A fit no longer dead-ends at [`RunResult`]: [`KMeans::fit_model`]
+//! captures the trained centers (plus per-cluster stats and provenance)
+//! as a [`KMeansModel`] — persistable via a versioned binary format and
+//! able to answer batch out-of-sample `predict` queries through a cover
+//! tree built over the centers (see the [`model`] module).
 
 pub mod bounds;
 pub mod builder;
@@ -56,6 +62,7 @@ pub mod kanungo;
 pub(crate) mod kdfilter;
 pub mod lloyd;
 pub mod minibatch;
+pub mod model;
 pub mod pelleg;
 pub mod phillips;
 pub mod shallot;
@@ -70,6 +77,7 @@ use crate::tree::{CoverTree, CoverTreeParams, KdTree, KdTreeParams};
 pub use builder::{AlgorithmSpec, KMeans, KMeansError};
 pub use driver::{Fit, KMeansDriver, Observer, Signal, StepInfo, StepView};
 pub use minibatch::MiniBatchParams;
+pub use model::{KMeansModel, PredictMode, PredictOptions, Prediction};
 
 /// Which algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -1,0 +1,735 @@
+//! The serving layer: a persistable trained model with batch prediction.
+//!
+//! A fit used to dead-end at [`RunResult`] — labels and centers for the
+//! training set, nothing for out-of-sample points and nothing to put on
+//! disk. [`KMeansModel`] closes that gap: it captures everything a serving
+//! process needs (centers, per-cluster sizes and inertia, algorithm/seed
+//! provenance), round-trips through a small self-describing binary format
+//! (`.kmm`), and answers batch nearest-center queries through the paper's
+//! own index — a cover tree built **over the centers** — with an
+//! Elkan-style pruned scan as the small-`k` fallback where tree overhead
+//! loses (see [`PredictMode`]).
+//!
+//! ```
+//! use covermeans::data::synth;
+//! use covermeans::kmeans::{Algorithm, KMeans, KMeansModel};
+//!
+//! let data = synth::gaussian_blobs(200, 3, 4, 0.5, 1);
+//! let model = KMeans::new(4)
+//!     .algorithm(Algorithm::Hybrid)
+//!     .seed(7)
+//!     .fit_model(&data)
+//!     .unwrap();
+//! let labels = model.predict(&data);
+//!
+//! let path = std::env::temp_dir().join("covermeans_model_doc.kmm");
+//! model.save(&path).unwrap();
+//! let served = KMeansModel::load(&path).unwrap();
+//! assert_eq!(served.predict(&data), labels);
+//! # std::fs::remove_file(&path).ok();
+//! ```
+//!
+//! **Determinism.** Prediction shards query rows over the same persistent
+//! worker pool the fit uses ([`crate::parallel::Parallelism`]); each query
+//! is independent, per-chunk distance tallies fold back as integer sums,
+//! and the serving indexes are built sequentially once — so `threads = N`
+//! reproduces `threads = 1` byte for byte, the same contract every other
+//! parallel pass in this crate honors. Labels are additionally guaranteed
+//! to match a naive lowest-index nearest-center scan label for label, at
+//! every thread count and in every [`PredictMode`]
+//! (`rust/tests/model.rs`, `rust/tests/parallel_exactness.rs`).
+
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::io::{bin, fnv1a};
+use crate::data::{matrix, Matrix};
+use crate::kmeans::bounds::InterCenter;
+use crate::kmeans::Algorithm;
+use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, SharedSlices};
+use crate::tree::{search, CoverTree, CoverTreeParams};
+
+/// `.kmm` file magic.
+const MAGIC: &[u8; 4] = b"CMKM";
+/// Current `.kmm` format version.
+const FORMAT_VERSION: u32 = 1;
+
+/// Below this `k`, [`PredictMode::Auto`] resolves to the pruned scan: the
+/// center tree's per-query descent overhead (child ordering, recursion)
+/// only pays off once the scan's `O(k)` per query dominates. The
+/// `bench_smoke` harness measures the actual crossover (`BENCH_5.json`).
+const AUTO_TREE_MIN_K: usize = 64;
+
+/// Cover tree construction parameters for the *centers* index. Centers
+/// matrices are tiny next to datasets, so the node floor is far below the
+/// paper's data-side default of 100 — with that default, any `k < 100`
+/// would collapse into one leaf and degenerate to a linear scan.
+const CENTER_TREE_PARAMS: CoverTreeParams =
+    CoverTreeParams { scale_factor: 1.2, min_node_size: 8 };
+
+/// How [`KMeansModel::predict_opts`] answers nearest-center queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictMode {
+    /// Pick per model: the cover tree for `k >= 64`, the pruned scan
+    /// below (the small-`k` regime where tree overhead loses).
+    Auto,
+    /// 1-NN descent of a cover tree built over the centers
+    /// ([`crate::tree::nearest`]), reusing the node radii and parent
+    /// distances for pruning.
+    Tree,
+    /// Elkan-style pruned linear scan: center `j` is skipped whenever
+    /// `d(c_best, c_j) >= 2 * d(x, c_best)` (triangle inequality over the
+    /// cached inter-center matrix), so it cannot strictly beat the
+    /// incumbent.
+    Scan,
+}
+
+impl PredictMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredictMode::Auto => "auto",
+            PredictMode::Tree => "tree",
+            PredictMode::Scan => "scan",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PredictMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(PredictMode::Auto),
+            "tree" | "cover" => Some(PredictMode::Tree),
+            "scan" | "pruned" | "elkan" => Some(PredictMode::Scan),
+            _ => None,
+        }
+    }
+}
+
+/// Batch-predict configuration: the query-answering strategy and the
+/// worker-thread budget (0 = all cores; any value reproduces the
+/// single-threaded labels byte for byte).
+#[derive(Debug, Clone, Copy)]
+pub struct PredictOptions {
+    pub mode: PredictMode,
+    pub threads: usize,
+}
+
+impl Default for PredictOptions {
+    fn default() -> Self {
+        PredictOptions { mode: PredictMode::Auto, threads: 1 }
+    }
+}
+
+/// Outcome of one batch predict, with the counted-distance accounting the
+/// repo's evaluation protocol uses everywhere else: `query_evals` is what
+/// the strategy spent answering, `prep_evals` what this call spent
+/// building a serving index (0 once the model's lazy index cache is warm),
+/// mirroring the `distances` / `build_dist` split of [`RunResult`].
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// Nearest-center index per query row.
+    pub labels: Vec<u32>,
+    /// Distance to that center per query row.
+    pub distances: Vec<f64>,
+    /// Distance evaluations spent answering the queries (a naive scan
+    /// spends exactly `n * k`).
+    pub query_evals: u64,
+    /// Distance evaluations spent building the serving index in this call.
+    pub prep_evals: u64,
+    /// The strategy that actually ran ([`PredictMode::Auto`] resolved).
+    pub mode: PredictMode,
+}
+
+/// A trained k-means model: the artifact `fit` hands to serving.
+///
+/// Produced by [`crate::kmeans::KMeans::fit_model`] (or
+/// [`KMeansModel::from_run`] for an existing [`RunResult`]); persisted
+/// with [`KMeansModel::save`] / [`KMeansModel::load`]; queried with
+/// [`KMeansModel::predict`] and friends. The serving indexes (center
+/// cover tree, inter-center matrix) are built lazily on first use and
+/// cached — they are *not* persisted, so a loaded model rebuilds them on
+/// its first predict (charged to [`Prediction::prep_evals`]).
+#[derive(Debug, Clone)]
+pub struct KMeansModel {
+    centers: Matrix,
+    counts: Vec<u64>,
+    cluster_sse: Vec<f64>,
+    algorithm: Algorithm,
+    seed: u64,
+    iterations: u64,
+    converged: bool,
+    center_tree: OnceLock<Arc<CoverTree>>,
+    inter_center: OnceLock<Arc<InterCenter>>,
+}
+
+impl KMeansModel {
+    /// Capture a finished run as a servable model. `data` must be the
+    /// matrix the run was fit on (per-cluster counts and inertia are
+    /// derived from its labels); `algorithm` and `seed` record provenance.
+    pub fn from_run(
+        data: &Matrix,
+        run: &RunResult,
+        algorithm: Algorithm,
+        seed: u64,
+    ) -> KMeansModel {
+        assert_eq!(
+            data.rows(),
+            run.labels.len(),
+            "data/labels length mismatch: the run was not fit on this matrix"
+        );
+        assert_eq!(data.cols(), run.centers.cols(), "data/centers dimension mismatch");
+        let k = run.centers.rows();
+        let mut counts = vec![0u64; k];
+        let mut cluster_sse = vec![0.0f64; k];
+        for (i, &l) in run.labels.iter().enumerate() {
+            counts[l as usize] += 1;
+            cluster_sse[l as usize] +=
+                matrix::sqdist(data.row(i), run.centers.row(l as usize));
+        }
+        KMeansModel {
+            centers: run.centers.clone(),
+            counts,
+            cluster_sse,
+            algorithm,
+            seed,
+            iterations: run.iterations as u64,
+            converged: run.converged,
+            center_tree: OnceLock::new(),
+            inter_center: OnceLock::new(),
+        }
+    }
+
+    /// Number of clusters.
+    pub fn k(&self) -> usize {
+        self.centers.rows()
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.centers.cols()
+    }
+
+    /// The cluster centers (`k x d`).
+    pub fn centers(&self) -> &Matrix {
+        &self.centers
+    }
+
+    /// Training-set points per cluster.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Training-set sum of squared errors per cluster.
+    pub fn cluster_sse(&self) -> &[f64] {
+        &self.cluster_sse
+    }
+
+    /// Total training-set inertia (sum of [`KMeansModel::cluster_sse`]).
+    pub fn inertia(&self) -> f64 {
+        self.cluster_sse.iter().sum()
+    }
+
+    /// The algorithm that produced the model.
+    pub fn algorithm(&self) -> Algorithm {
+        self.algorithm
+    }
+
+    /// The seeding seed the fit was configured with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Iterations the fit ran.
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    /// Whether the fit reached its convergence criterion.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    // ----- prediction ---------------------------------------------------
+
+    /// Nearest-center label per query row (defaults: [`PredictMode::Auto`],
+    /// single-threaded). Panics if `data`'s dimensionality differs from
+    /// the model's.
+    pub fn predict(&self, data: &Matrix) -> Vec<u32> {
+        self.predict_opts(data, &PredictOptions::default()).labels
+    }
+
+    /// Labels plus the distance to the assigned center per query row.
+    pub fn predict_with_distances(&self, data: &Matrix) -> (Vec<u32>, Vec<f64>) {
+        let p = self.predict_opts(data, &PredictOptions::default());
+        (p.labels, p.distances)
+    }
+
+    /// Batch predict with explicit strategy and thread budget, spawning a
+    /// fresh pool when `opts.threads > 1`. Callers holding a long-lived
+    /// pool (sweeps, serving loops) should prefer
+    /// [`KMeansModel::predict_par`].
+    pub fn predict_opts(&self, data: &Matrix, opts: &PredictOptions) -> Prediction {
+        self.predict_par(data, opts.mode, &Parallelism::new(opts.threads))
+    }
+
+    /// Batch predict over an existing worker pool. Every query row is
+    /// independent and the per-chunk distance tallies are integer sums, so
+    /// any thread count produces byte-identical labels, distances, and
+    /// counted evaluations.
+    pub fn predict_par(
+        &self,
+        data: &Matrix,
+        mode: PredictMode,
+        par: &Parallelism,
+    ) -> Prediction {
+        assert_eq!(
+            data.cols(),
+            self.dim(),
+            "query dimension {} does not match model dimension {}",
+            data.cols(),
+            self.dim()
+        );
+        let n = data.rows();
+        let mode = match mode {
+            PredictMode::Auto if self.k() >= AUTO_TREE_MIN_K => PredictMode::Tree,
+            PredictMode::Auto => PredictMode::Scan,
+            m => m,
+        };
+
+        // Serving indexes are built once, sequentially, on the dispatching
+        // thread — never under the pool — so their bits (and the charged
+        // prep evaluations) cannot depend on the thread count.
+        let mut prep_evals = 0u64;
+        #[derive(Clone, Copy)]
+        enum Index<'m> {
+            Tree(&'m CoverTree),
+            Scan(&'m InterCenter),
+        }
+        let index = match mode {
+            PredictMode::Tree => {
+                let tree = self.center_tree.get_or_init(|| {
+                    let t = CoverTree::build(&self.centers, CENTER_TREE_PARAMS);
+                    prep_evals = t.build_distances;
+                    Arc::new(t)
+                });
+                Index::Tree(tree.as_ref())
+            }
+            _ => {
+                let ic = self.inter_center.get_or_init(|| {
+                    let mut dc = DistCounter::new();
+                    let ic = InterCenter::compute(&self.centers, &mut dc);
+                    prep_evals = dc.count();
+                    Arc::new(ic)
+                });
+                Index::Scan(ic.as_ref())
+            }
+        };
+
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f64; n];
+        let query_evals: u64 = {
+            let lab = SharedSlices::new(&mut labels);
+            let dst = SharedSlices::new(&mut dists);
+            par.map_chunks(n, |range| {
+                // Safety: `map_chunks` hands out pairwise-disjoint ranges.
+                let l = unsafe { lab.range(range.clone()) };
+                let d = unsafe { dst.range(range.clone()) };
+                let mut dc = DistCounter::new();
+                for (off, i) in range.enumerate() {
+                    let q = data.row(i);
+                    let (label, dist) = match index {
+                        Index::Tree(tree) => {
+                            let nb = search::nearest(tree, &self.centers, q, &mut dc);
+                            (nb.index, nb.dist)
+                        }
+                        Index::Scan(ic) => scan_one(q, &self.centers, ic, &mut dc),
+                    };
+                    l[off] = label;
+                    d[off] = dist;
+                }
+                dc.count()
+            })
+            .into_iter()
+            .sum()
+        };
+
+        Prediction { labels, distances: dists, query_evals, prep_evals, mode }
+    }
+
+    // ----- persistence --------------------------------------------------
+
+    /// Serialize to the `.kmm` byte format: a `CMKM` magic, a format
+    /// version, the model header (k, dim, algorithm name, seed,
+    /// iterations, convergence flag), per-cluster counts and inertia, the
+    /// centers' exact f64 bit patterns, and a trailing FNV-1a checksum
+    /// over everything before it. Round-trips bit-identically.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let k = self.k();
+        let name = self.algorithm.name().as_bytes();
+        let mut out = Vec::with_capacity(64 + name.len() + k * 16 + k * self.dim() * 8);
+        out.extend_from_slice(MAGIC);
+        bin::put_u32(&mut out, FORMAT_VERSION);
+        bin::put_u32(&mut out, k as u32);
+        bin::put_u32(&mut out, self.dim() as u32);
+        bin::put_u32(&mut out, name.len() as u32);
+        out.extend_from_slice(name);
+        bin::put_u64(&mut out, self.seed);
+        bin::put_u64(&mut out, self.iterations);
+        out.push(self.converged as u8);
+        for &c in &self.counts {
+            bin::put_u64(&mut out, c);
+        }
+        for &s in &self.cluster_sse {
+            bin::put_f64(&mut out, s);
+        }
+        for &v in self.centers.as_slice() {
+            bin::put_f64(&mut out, v);
+        }
+        let sum = fnv1a(&out);
+        bin::put_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse the `.kmm` byte format, verifying the magic, version,
+    /// structural length, and checksum — a truncated or bit-flipped file
+    /// fails with a diagnosable error instead of yielding a silently
+    /// corrupt model.
+    pub fn from_bytes(buf: &[u8]) -> Result<KMeansModel> {
+        if buf.len() < MAGIC.len() + 4 {
+            bail!("not a covermeans model: {} bytes is too short", buf.len());
+        }
+        if &buf[..MAGIC.len()] != MAGIC {
+            bail!("not a covermeans model: bad magic {:?}", &buf[..MAGIC.len()]);
+        }
+        if buf.len() < 8 + MAGIC.len() {
+            bail!("truncated model file: no room for a checksum");
+        }
+        let (body, tail) = buf.split_at(buf.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual = fnv1a(body);
+        if stored != actual {
+            bail!(
+                "model checksum mismatch (stored {stored:#018x}, computed \
+                 {actual:#018x}): the file is truncated or corrupt"
+            );
+        }
+        let mut r = bin::Reader::new(&body[MAGIC.len()..]);
+        let version = r.u32()?;
+        if version != FORMAT_VERSION {
+            bail!("unsupported model format version {version} (this build reads {FORMAT_VERSION})");
+        }
+        let k = r.u32()? as usize;
+        let dim = r.u32()? as usize;
+        if k == 0 || dim == 0 {
+            bail!("corrupt model header: k={k}, dim={dim}");
+        }
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .context("algorithm name is not UTF-8")?;
+        let algorithm = Algorithm::parse(name)
+            .with_context(|| format!("unknown algorithm {name:?} in model header"))?;
+        let seed = r.u64()?;
+        let iterations = r.u64()?;
+        let converged = match r.take(1)?[0] {
+            0 => false,
+            1 => true,
+            other => bail!("corrupt convergence flag {other}"),
+        };
+        // Structural check before any k-sized allocation: the payload must
+        // hold exactly k counts + k SSEs + k*dim center coordinates.
+        let need = k
+            .checked_mul(16)
+            .and_then(|a| a.checked_add(k.checked_mul(dim)?.checked_mul(8)?))
+            .context("model dimensions overflow")?;
+        if r.remaining() != need {
+            bail!(
+                "model payload is {} bytes, expected {need} for k={k} dim={dim}",
+                r.remaining()
+            );
+        }
+        let mut counts = Vec::with_capacity(k);
+        for _ in 0..k {
+            counts.push(r.u64()?);
+        }
+        let mut cluster_sse = Vec::with_capacity(k);
+        for _ in 0..k {
+            cluster_sse.push(r.f64()?);
+        }
+        let mut centers = Vec::with_capacity(k * dim);
+        for _ in 0..k * dim {
+            centers.push(r.f64()?);
+        }
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after the centers block", r.remaining());
+        }
+        Ok(KMeansModel {
+            centers: Matrix::from_vec(centers, k, dim),
+            counts,
+            cluster_sse,
+            algorithm,
+            seed,
+            iterations,
+            converged,
+            center_tree: OnceLock::new(),
+            inter_center: OnceLock::new(),
+        })
+    }
+
+    /// Write the `.kmm` format to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write model {path:?}"))
+    }
+
+    /// Read a `.kmm` file back. The result predicts (and re-serializes)
+    /// bit-identically to the saved model.
+    pub fn load(path: &Path) -> Result<KMeansModel> {
+        let buf =
+            std::fs::read(path).with_context(|| format!("read model {path:?}"))?;
+        KMeansModel::from_bytes(&buf)
+            .with_context(|| format!("parse model {path:?}"))
+    }
+
+    /// Export the centers as a plain CSV (`k` rows x `d` columns) for
+    /// interchange with external tooling. Rust's shortest-round-trip float
+    /// formatting means re-reading the CSV reproduces the exact values.
+    pub fn export_centers_csv(&self, path: &Path) -> Result<()> {
+        crate::data::io::write_csv(path, &self.centers)
+    }
+
+    /// Export the whole model as a single self-describing JSON object
+    /// (header fields, per-cluster stats, centers as nested arrays). For
+    /// inspection and interchange; the `.kmm` binary remains the
+    /// round-trip format.
+    pub fn export_json(&self, path: &Path) -> Result<()> {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"format\": \"covermeans-kmeans-model\",\n");
+        s.push_str(&format!("  \"version\": {FORMAT_VERSION},\n"));
+        s.push_str(&format!("  \"k\": {},\n", self.k()));
+        s.push_str(&format!("  \"dim\": {},\n", self.dim()));
+        s.push_str(&format!("  \"algorithm\": \"{}\",\n", self.algorithm.name()));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"iterations\": {},\n", self.iterations));
+        s.push_str(&format!("  \"converged\": {},\n", self.converged));
+        s.push_str(&format!("  \"inertia\": {},\n", self.inertia()));
+        let counts: Vec<String> = self.counts.iter().map(|c| c.to_string()).collect();
+        s.push_str(&format!("  \"counts\": [{}],\n", counts.join(", ")));
+        let sses: Vec<String> =
+            self.cluster_sse.iter().map(|v| v.to_string()).collect();
+        s.push_str(&format!("  \"cluster_sse\": [{}],\n", sses.join(", ")));
+        s.push_str("  \"centers\": [\n");
+        for i in 0..self.k() {
+            let row: Vec<String> =
+                self.centers.row(i).iter().map(|v| v.to_string()).collect();
+            let comma = if i + 1 < self.k() { "," } else { "" };
+            s.push_str(&format!("    [{}]{comma}\n", row.join(", ")));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s).with_context(|| format!("write model json {path:?}"))
+    }
+}
+
+/// One pruned-scan query: index-order scan with the Elkan center-center
+/// prune. A skipped center satisfies `d(c_best, c_j) >= 2 d(x, c_best)`,
+/// hence by the triangle inequality `d(x, c_j) >= d(x, c_best)` — it can
+/// tie but never strictly beat the incumbent, and a tie at a *later* index
+/// never wins under the lowest-index convention, so the result is
+/// label-identical to the naive full scan.
+#[inline]
+fn scan_one(
+    q: &[f64],
+    centers: &Matrix,
+    ic: &InterCenter,
+    dc: &mut DistCounter,
+) -> (u32, f64) {
+    let k = centers.rows();
+    let mut best = 0usize;
+    let mut d_best = dc.d(q, centers.row(0));
+    for j in 1..k {
+        if ic.d(best, j) >= 2.0 * d_best {
+            continue;
+        }
+        let dd = dc.d(q, centers.row(j));
+        if dd < d_best {
+            best = j;
+            d_best = dd;
+        }
+    }
+    (best as u32, d_best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::bounds::nearest_two;
+    use crate::kmeans::KMeans;
+
+    fn naive_labels(data: &Matrix, centers: &Matrix) -> (Vec<u32>, Vec<f64>) {
+        let mut dc = DistCounter::new();
+        let mut labels = Vec::with_capacity(data.rows());
+        let mut dists = Vec::with_capacity(data.rows());
+        for i in 0..data.rows() {
+            let (c1, d1, _, _) = nearest_two(data.row(i), centers, &mut dc);
+            labels.push(c1);
+            dists.push(d1);
+        }
+        (labels, dists)
+    }
+
+    fn fit_model(data: &Matrix, k: usize, seed: u64) -> KMeansModel {
+        KMeans::new(k)
+            .algorithm(Algorithm::Hamerly)
+            .seed(seed)
+            .max_iter(30)
+            .fit_model(data)
+            .unwrap()
+    }
+
+    #[test]
+    fn from_run_aggregates_counts_and_inertia() {
+        let data = synth::gaussian_blobs(300, 3, 5, 0.4, 2);
+        let model = fit_model(&data, 5, 3);
+        assert_eq!(model.k(), 5);
+        assert_eq!(model.dim(), 3);
+        assert_eq!(model.counts().iter().sum::<u64>(), 300);
+        assert_eq!(model.algorithm(), Algorithm::Hamerly);
+        assert_eq!(model.seed(), 3);
+        assert!(model.iterations() >= 1);
+        // Inertia equals the run's SSE (same labels, same centers).
+        let r = KMeans::new(5)
+            .algorithm(Algorithm::Hamerly)
+            .seed(3)
+            .max_iter(30)
+            .fit(&data)
+            .unwrap();
+        assert!((model.inertia() - r.sse(&data)).abs() < 1e-9 * (1.0 + model.inertia()));
+    }
+
+    #[test]
+    fn predict_matches_naive_scan_in_every_mode() {
+        let train = synth::gaussian_blobs(400, 4, 10, 0.6, 5);
+        let queries = synth::gaussian_blobs(150, 4, 10, 1.2, 6);
+        let model = fit_model(&train, 10, 7);
+        let (want_labels, want_dists) = naive_labels(&queries, model.centers());
+        for mode in [PredictMode::Auto, PredictMode::Tree, PredictMode::Scan] {
+            let p = model.predict_opts(
+                &queries,
+                &PredictOptions { mode, threads: 1 },
+            );
+            assert_eq!(p.labels, want_labels, "{}", mode.name());
+            for (i, (a, b)) in p.distances.iter().zip(&want_dists).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: distance {i}",
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_mode_resolves_by_k() {
+        let train = synth::gaussian_blobs(600, 3, 4, 0.5, 8);
+        let small = fit_model(&train, 4, 1);
+        let p = small.predict_opts(&train, &PredictOptions::default());
+        assert_eq!(p.mode, PredictMode::Scan);
+        let big = fit_model(&train, AUTO_TREE_MIN_K, 1);
+        let p = big.predict_opts(&train, &PredictOptions::default());
+        assert_eq!(p.mode, PredictMode::Tree);
+    }
+
+    #[test]
+    fn prep_evals_charged_once() {
+        let train = synth::gaussian_blobs(300, 3, 6, 0.5, 9);
+        let model = fit_model(&train, 6, 2);
+        let p1 = model.predict_opts(
+            &train,
+            &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+        );
+        assert_eq!(p1.prep_evals, (6 * 5 / 2) as u64, "k(k-1)/2 inter-center");
+        let p2 = model.predict_opts(
+            &train,
+            &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+        );
+        assert_eq!(p2.prep_evals, 0, "cached index must not be re-charged");
+        assert_eq!(p1.labels, p2.labels);
+    }
+
+    #[test]
+    fn bytes_roundtrip_is_bit_identical() {
+        let train = synth::gaussian_blobs(250, 5, 7, 0.5, 10);
+        let model = fit_model(&train, 7, 11);
+        let bytes = model.to_bytes();
+        let back = KMeansModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.k(), model.k());
+        assert_eq!(back.dim(), model.dim());
+        assert_eq!(back.counts(), model.counts());
+        assert_eq!(back.algorithm(), model.algorithm());
+        assert_eq!(back.seed(), model.seed());
+        assert_eq!(back.iterations(), model.iterations());
+        assert_eq!(back.converged(), model.converged());
+        for (a, b) in back
+            .centers()
+            .as_slice()
+            .iter()
+            .zip(model.centers().as_slice())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in back.cluster_sse().iter().zip(model.cluster_sse()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Re-serialization is byte-identical (stable format).
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_files_fail_loudly() {
+        let train = synth::gaussian_blobs(120, 2, 3, 0.5, 12);
+        let model = fit_model(&train, 3, 13);
+        let bytes = model.to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(KMeansModel::from_bytes(&bad).is_err());
+        // Any single bit flip in the body trips the checksum.
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        let err = KMeansModel::from_bytes(&flipped).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Truncation at every prefix length fails (never panics).
+        for len in [0, 3, 4, 11, 20, bytes.len() - 9, bytes.len() - 1] {
+            assert!(
+                KMeansModel::from_bytes(&bytes[..len]).is_err(),
+                "prefix of {len} bytes must not parse"
+            );
+        }
+        // Trailing garbage fails too.
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 16]);
+        assert!(KMeansModel::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn predict_mode_parse_roundtrip() {
+        for m in [PredictMode::Auto, PredictMode::Tree, PredictMode::Scan] {
+            assert_eq!(PredictMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PredictMode::parse("elkan"), Some(PredictMode::Scan));
+        assert!(PredictMode::parse("quantum").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "query dimension")]
+    fn predict_rejects_dimension_mismatch() {
+        let train = synth::gaussian_blobs(100, 3, 2, 0.5, 14);
+        let model = fit_model(&train, 2, 15);
+        let wrong = Matrix::zeros(5, 4);
+        model.predict(&wrong);
+    }
+}

@@ -17,6 +17,16 @@
 //!   aggregates and the sweep coordinator / benchmark harness that
 //!   regenerate the paper's tables and figures — including warm-started
 //!   parameter sweeps that reuse centers across k.
+//! * **Serving layer** — `KMeans::fit_model` captures a fit as a
+//!   [`kmeans::KMeansModel`]: persistable (versioned `.kmm` binary
+//!   format with checksum, plus CSV/JSON export) and able to answer
+//!   batch out-of-sample `predict` queries through a cover tree built
+//!   *over the centers* ([`tree::nearest`]), with an Elkan-style pruned
+//!   scan for small k; queries shard over the same worker pool under the
+//!   same byte-identity contract. The `covermeans run --model_out` /
+//!   `covermeans predict` CLI verbs and the coordinator's
+//!   `Experiment::model_dir` wire the train-once/serve-many loop
+//!   end to end.
 //! * **Intra-fit parallelism** — a single fit shards every hot path
 //!   (the assignment phases of all drivers including the k-d-tree
 //!   filters and MiniBatch, tree construction, the inter-center matrix,
@@ -40,8 +50,10 @@
 //!   crate) so the Standard baseline and the quickstart example can run
 //!   the dense step on the compiled path. Python is never on the run path.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! The guided tour — architecture walkthrough, algorithm-selection
+//! matrix, the determinism/byte-identity contract, the thread-budget
+//! split, and the full config-key table — lives in `docs/GUIDE.md` at
+//! the repository root; `README.md` is the five-minute version.
 
 pub mod benchutil;
 pub mod config;

@@ -15,9 +15,10 @@ use anyhow::{bail, Context, Result};
 
 use covermeans::config::RunConfig;
 use covermeans::coordinator::{report, run_experiment, sweep, Experiment};
-use covermeans::data::registry;
-use covermeans::kmeans::{self, Algorithm, Workspace};
+use covermeans::data::{io, registry};
+use covermeans::kmeans::{self, Algorithm, KMeansModel, Workspace};
 use covermeans::metrics::DistCounter;
+use covermeans::parallel::Parallelism;
 
 const HELP: &str = "\
 covermeans — Accelerating k-Means Clustering with Cover Trees (reproduction)
@@ -29,6 +30,10 @@ COMMANDS:
   run        single clustering run
              --dataset NAME --k K --algorithm NAME --scale S --seed N
              --backend native|xla   (xla: Standard algorithm only)
+             --model_out FILE.kmm   save the fitted model for serving
+  predict    batch nearest-center assignment from a saved model
+             --model FILE.kmm --input POINTS.csv|.fmat [--out LABELS.csv]
+             [--predict_mode auto|tree|scan] [--fit_threads N]
   table      --id 2|3|4 [--scale S] [--restarts N] [--warm true] — paper
              tables (--warm: id 4 with warm-started sweep restarts)
   fig1       [--scale S] [--k K] — Fig. 1 cumulative series (ALOI-64)
@@ -38,10 +43,11 @@ COMMANDS:
   info       artifacts manifest + PJRT platform
   help       this text
 
-CONFIG KEYS (also accepted in --config files as `key = value`):
+CONFIG KEYS (also accepted in --config files as `key = value`; the full
+table lives in docs/GUIDE.md and the config module rustdoc):
   dataset scale data_seed k restarts seed threads fit_threads out_dir
   max_iter tol switch_at scale_factor min_node_size kd_leaf_size
-  algorithms mb_batch mb_tol mb_seed
+  algorithms mb_batch mb_tol mb_seed model_out predict_mode
 
 THREADS:
   `threads` is the total worker budget; `fit_threads` (default 1, 0 = all
@@ -99,6 +105,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "predict" => cmd_predict(rest),
         "table" => cmd_table(rest),
         "fig1" => cmd_fig1(rest),
         "fig2" => cmd_fig2(rest),
@@ -165,6 +172,87 @@ fn cmd_run(args: &[String]) -> Result<()> {
         result.build_time.as_secs_f64()
     );
     println!("sse         : {:.6e}", result.sse(&data));
+    if !cfg.model_out.is_empty() {
+        let model = KMeansModel::from_run(&data, &result, alg, cfg.seed);
+        let path = Path::new(&cfg.model_out);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        model.save(path)?;
+        println!("model       : saved to {} ({} bytes)", path.display(), model.to_bytes().len());
+    }
+    Ok(())
+}
+
+/// The serving half of the train-once/serve-many loop: load a `.kmm`
+/// model and batch-assign a matrix of points to their nearest centers,
+/// through the cover tree over the centers (or the Elkan-pruned scan —
+/// `predict_mode`), sharded over `fit_threads` workers.
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let extras = parse_overrides(args, &mut cfg)?;
+    let model_path = extra(&extras, "model")
+        .context("predict needs --model <file.kmm> (write one with `covermeans run --model_out ...`)")?;
+    let input = extra(&extras, "input")
+        .context("predict needs --input <points.csv|points.fmat>")?;
+
+    let model = KMeansModel::load(Path::new(model_path))?;
+    let data = if input.ends_with(".fmat") {
+        io::read_fmat(Path::new(input))?
+    } else {
+        io::read_csv(Path::new(input))?
+    };
+    if data.cols() != model.dim() {
+        bail!(
+            "input dimension {} does not match the model's {} (model {} with k={})",
+            data.cols(),
+            model.dim(),
+            model.algorithm().name(),
+            model.k()
+        );
+    }
+
+    let par = Parallelism::new(cfg.params.threads);
+    let sw = std::time::Instant::now();
+    let p = model.predict_par(&data, cfg.predict_mode, &par);
+    let secs = sw.elapsed().as_secs_f64();
+    let naive = data.rows() as u64 * model.k() as u64;
+
+    println!(
+        "model       : {} (k={}, d={}, seed {}, {} iters, converged {})",
+        model.algorithm().name(),
+        model.k(),
+        model.dim(),
+        model.seed(),
+        model.iterations(),
+        model.converged()
+    );
+    println!("queries     : {} points from {input}", data.rows());
+    println!("mode        : {} ({} threads)", p.mode.name(), par.threads());
+    println!(
+        "distances   : {} (+{} index prep) vs naive {} ({:.2}x fewer)",
+        p.query_evals,
+        p.prep_evals,
+        naive,
+        naive as f64 / (p.query_evals.max(1)) as f64
+    );
+    println!(
+        "time        : {:.3}s ({:.0} points/s)",
+        secs,
+        data.rows() as f64 / secs.max(1e-12)
+    );
+
+    if let Some(out) = extra(&extras, "out") {
+        let mut rows = String::with_capacity(p.labels.len() * 8);
+        rows.push_str("# label,distance\n");
+        for (l, d) in p.labels.iter().zip(&p.distances) {
+            rows.push_str(&format!("{l},{d}\n"));
+        }
+        std::fs::write(Path::new(out), rows)?;
+        eprintln!("wrote {out}");
+    }
     Ok(())
 }
 

@@ -56,10 +56,17 @@
 //! and task closures must never dispatch on their own pool — both are
 //! debug-asserted.
 //!
+//! The same machinery serves reads as well as fits: the batch-predict
+//! pass of [`crate::kmeans::KMeansModel`] shards query rows over
+//! [`Parallelism::map_chunks`] (labels and distances through
+//! [`SharedSlices`], per-chunk distance tallies as integer sums), so
+//! serving inherits the contract unchanged — predict at `threads = N` is
+//! byte-identical to `threads = 1`.
+//!
 //! `rust/tests/parallel_exactness.rs` asserts the contract for every
-//! algorithm — including the k-d-tree drivers, MiniBatch, and k-means++
-//! seeding — on the synthetic datasets, in debug and (via CI) release
-//! builds.
+//! algorithm — including the k-d-tree drivers, MiniBatch, k-means++
+//! seeding, and model predict — on the synthetic datasets, in debug and
+//! (via CI) release builds.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -38,12 +38,7 @@ impl Rng {
     /// Derive a deterministic stream for a named sub-purpose
     /// (FNV-1a over the label, mixed into the seed).
     pub fn derive(seed: u64, label: &str) -> Self {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in label.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-        Rng::new(seed ^ h)
+        Rng::new(seed ^ crate::data::io::fnv1a(label.as_bytes()))
     }
 
     #[inline]

@@ -7,3 +7,4 @@ pub mod search;
 
 pub use covertree::{CoverTree, CoverTreeParams};
 pub use kdtree::{KdTree, KdTreeParams};
+pub use search::{knn, nearest, radius, Neighbor};

@@ -48,6 +48,91 @@ impl TopK {
     }
 }
 
+/// Single nearest-neighbor query, specialized for the serving path
+/// ([`crate::kmeans::KMeansModel::predict`] runs it against a cover tree
+/// built *over the centers*, so `Neighbor::index` is directly the cluster
+/// label). Semantically `knn(.., 1, ..)` without the `TopK` bookkeeping,
+/// with one extra guarantee the batch-predict contract needs: ties on the
+/// exact distance resolve to the **lowest point index**, matching a naive
+/// index-order scan label for label (the tree visits candidates in an
+/// order driven by the pruning bounds, so a plain `<` comparison would
+/// keep whichever tied point happened to be seen first).
+pub fn nearest(
+    tree: &CoverTree,
+    data: &Matrix,
+    query: &[f64],
+    dist: &mut DistCounter,
+) -> Neighbor {
+    let root = &tree.root;
+    let d_root = dist.d(query, data.row(root.routing as usize));
+    // The root routing object is a real dataset point: seed the bound with
+    // its true distance instead of +inf so pruning starts immediately.
+    let mut best = Neighbor { index: root.routing, dist: d_root };
+    descend_nearest(data, query, root, d_root, &mut best, dist);
+    best
+}
+
+/// Lowest-index tie-breaking: strictly closer always wins; an exact
+/// distance tie wins only with a smaller index.
+#[inline]
+fn improves(dd: f64, idx: u32, best: &Neighbor) -> bool {
+    dd < best.dist || (dd == best.dist && idx < best.index)
+}
+
+fn descend_nearest(
+    data: &Matrix,
+    query: &[f64],
+    node: &Node,
+    d_p: f64,
+    best: &mut Neighbor,
+    dist: &mut DistCounter,
+) {
+    // All prunes below use *strict* inequalities: a candidate whose lower
+    // bound equals the current best distance may still tie it with a
+    // lower index, so it must stay reachable.
+    for &(idx, pd) in &node.singletons {
+        if (d_p - pd).abs() > best.dist {
+            continue;
+        }
+        let dd = if idx == node.routing {
+            d_p
+        } else {
+            dist.d(query, data.row(idx as usize))
+        };
+        if improves(dd, idx, best) {
+            *best = Neighbor { index: idx, dist: dd };
+        }
+    }
+    let mut order: Vec<(f64, usize, f64)> = Vec::with_capacity(node.children.len());
+    for (ci, ch) in node.children.iter().enumerate() {
+        let d_c = if ch.routing == node.routing {
+            d_p
+        } else {
+            // Parent-distance bound: d(q, c) >= |d(q,p) - d(p,c)|; when
+            // even that exceeds best + radius the whole subtree (routing
+            // object included) is strictly farther than the current best.
+            if (d_p - ch.parent_dist).abs() > best.dist + ch.radius {
+                continue;
+            }
+            dist.d(query, data.row(ch.routing as usize))
+        };
+        // The routing object is itself a candidate; folding it in here
+        // (it also appears as a singleton deeper down) tightens the bound
+        // before any descent.
+        if improves(d_c, ch.routing, best) {
+            *best = Neighbor { index: ch.routing, dist: d_c };
+        }
+        order.push(((d_c - ch.radius).max(0.0), ci, d_c));
+    }
+    order.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (opt, ci, d_c) in order {
+        if opt > best.dist {
+            break; // sorted ascending: every later child is at least this far
+        }
+        descend_nearest(data, query, &node.children[ci], d_c, best, dist);
+    }
+}
+
 /// k-nearest-neighbor query. Distance evaluations are counted into `dist`.
 pub fn knn(
     tree: &CoverTree,
@@ -258,6 +343,67 @@ mod tests {
         for w in got.windows(2) {
             assert!(w[0].dist <= w[1].dist);
         }
+    }
+
+    #[test]
+    fn nearest_matches_naive_scan_with_ties() {
+        // Clustered data: the 1-NN specialization must agree with a naive
+        // index-order scan on both the distance and the index (ties break
+        // to the lowest index), and it must prune.
+        let data = synth::istanbul(0.001, 54);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 8 },
+        );
+        for qi in [0usize, 5, 50, 200] {
+            let q: Vec<f64> = data.row(qi).to_vec();
+            let mut dc = DistCounter::new();
+            let got = nearest(&tree, &data, &q, &mut dc);
+            let want = brute_knn(&data, &q, 1)[0];
+            assert_eq!(got.index, want.index, "query {qi}");
+            assert_eq!(got.dist.to_bits(), want.dist.to_bits(), "query {qi}");
+            assert!(dc.count() < data.rows() as u64, "no pruning for query {qi}");
+        }
+        // Off-sample queries too.
+        for q in [vec![29.0, 41.0], vec![28.6, 41.3], vec![0.0, 0.0]] {
+            let mut dc = DistCounter::new();
+            let got = nearest(&tree, &data, &q, &mut dc);
+            let want = brute_knn(&data, &q, 1)[0];
+            assert_eq!(got.index, want.index);
+            assert_eq!(got.dist.to_bits(), want.dist.to_bits());
+        }
+    }
+
+    #[test]
+    fn nearest_ties_break_to_lowest_index() {
+        // Duplicated points force exact distance ties; the naive scan
+        // convention (lowest index wins) must hold.
+        let rows: Vec<Vec<f64>> = vec![
+            vec![5.0, 5.0],
+            vec![0.0, 0.0],
+            vec![5.0, 5.0], // duplicate of row 0
+            vec![9.0, 9.0],
+            vec![0.0, 0.0], // duplicate of row 1
+        ];
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let data = Matrix::from_rows(&refs);
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 1 },
+        );
+        let mut dc = DistCounter::new();
+        assert_eq!(nearest(&tree, &data, &[5.1, 5.1], &mut dc).index, 0);
+        assert_eq!(nearest(&tree, &data, &[-0.1, 0.0], &mut dc).index, 1);
+    }
+
+    #[test]
+    fn nearest_single_point_tree() {
+        let data = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let tree = CoverTree::build(&data, CoverTreeParams::default());
+        let mut dc = DistCounter::new();
+        let nb = nearest(&tree, &data, &[1.0, 3.0], &mut dc);
+        assert_eq!(nb.index, 0);
+        assert!((nb.dist - 1.0).abs() < 1e-12);
     }
 
     #[test]

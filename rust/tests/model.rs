@@ -1,0 +1,259 @@
+//! Serving-layer properties: the trained-model subsystem must hand back
+//! exactly what the fit produced (save → load is bit-identical), answer
+//! out-of-sample queries exactly like a naive lowest-index nearest-center
+//! scan (in every [`PredictMode`], from a fresh or a loaded model), and do
+//! so with strictly fewer counted distance evaluations than the naive
+//! scan's `n * k` on a clustered k >= 64 workload — the acceptance bar of
+//! the serving layer. Corrupt and truncated model files must fail loudly.
+
+use covermeans::data::{synth, Matrix};
+use covermeans::kmeans::{
+    bounds, init, Algorithm, KMeans, KMeansModel, PredictMode, PredictOptions,
+    Workspace,
+};
+use covermeans::metrics::DistCounter;
+
+fn tmpdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("covermeans_model_test_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Naive reference: full scan per query, ties to the lowest index.
+fn naive_predict(queries: &Matrix, centers: &Matrix) -> (Vec<u32>, Vec<f64>, u64) {
+    let mut dc = DistCounter::new();
+    let mut labels = Vec::with_capacity(queries.rows());
+    let mut dists = Vec::with_capacity(queries.rows());
+    for i in 0..queries.rows() {
+        let (c1, d1, _, _) = bounds::nearest_two(queries.row(i), centers, &mut dc);
+        labels.push(c1);
+        dists.push(d1);
+    }
+    (labels, dists, dc.count())
+}
+
+#[test]
+fn save_load_predict_roundtrip_across_algorithms() {
+    let train = synth::istanbul(0.002, 60);
+    let queries = synth::istanbul(0.001, 61);
+    let dir = tmpdir();
+    for (i, alg) in [Algorithm::Standard, Algorithm::CoverMeans, Algorithm::Shallot]
+        .into_iter()
+        .enumerate()
+    {
+        let model = KMeans::new(24)
+            .algorithm(alg)
+            .seed(100 + i as u64)
+            .fit_model(&train)
+            .unwrap();
+        let path = dir.join(format!("roundtrip_{}.kmm", alg.name()));
+        model.save(&path).unwrap();
+        let loaded = KMeansModel::load(&path).unwrap();
+
+        // Centers round-trip bit for bit; so does every header field.
+        for (a, b) in loaded
+            .centers()
+            .as_slice()
+            .iter()
+            .zip(model.centers().as_slice())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", alg.name());
+        }
+        assert_eq!(loaded.counts(), model.counts());
+        assert_eq!(loaded.algorithm(), alg);
+        assert_eq!(loaded.seed(), model.seed());
+        assert_eq!(loaded.iterations(), model.iterations());
+        assert_eq!(loaded.converged(), model.converged());
+        for (a, b) in loaded.cluster_sse().iter().zip(model.cluster_sse()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // Prediction through the loaded model is indistinguishable from
+        // the fresh one — labels, distances, and counted evaluations —
+        // and both match the naive scan.
+        let (want_labels, want_dists, _) = naive_predict(&queries, model.centers());
+        for mode in [PredictMode::Tree, PredictMode::Scan] {
+            let opts = PredictOptions { mode, threads: 1 };
+            let fresh = model.predict_opts(&queries, &opts);
+            let served = loaded.predict_opts(&queries, &opts);
+            assert_eq!(fresh.labels, want_labels, "{} {}", alg.name(), mode.name());
+            assert_eq!(served.labels, want_labels, "{} {}", alg.name(), mode.name());
+            assert_eq!(fresh.query_evals, served.query_evals);
+            for (a, b) in fresh.distances.iter().zip(&want_dists) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn tree_predict_beats_naive_scan_at_high_k() {
+    // The acceptance bar: a k >= 64 clustered workload must be answered
+    // with strictly fewer counted distance evaluations than the naive
+    // scan's n * k — even charging the one-off center-index build.
+    let train = synth::istanbul(0.002, 62);
+    let queries = synth::istanbul(0.001, 63);
+    let k = 64;
+    let model = KMeans::new(k)
+        .algorithm(Algorithm::Hybrid)
+        .seed(7)
+        .fit_model(&train)
+        .unwrap();
+    let p = model.predict_opts(
+        &queries,
+        &PredictOptions { mode: PredictMode::Auto, threads: 1 },
+    );
+    assert_eq!(p.mode, PredictMode::Tree, "auto must pick the tree at k=64");
+    let naive = (queries.rows() * k) as u64;
+    assert!(
+        p.query_evals < naive,
+        "tree predict spent {} evals, naive scan spends {naive}",
+        p.query_evals
+    );
+    assert!(
+        p.query_evals + p.prep_evals < naive,
+        "even with index construction ({} + {}) the tree must beat {naive}",
+        p.query_evals,
+        p.prep_evals
+    );
+    // And the answers are still exact.
+    let (want, _, _) = naive_predict(&queries, model.centers());
+    assert_eq!(p.labels, want);
+
+    // The pruned scan also beats naive on clustered data (its prune uses
+    // the inter-center matrix, charged to prep once).
+    let scan = model.predict_opts(
+        &queries,
+        &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+    );
+    assert_eq!(scan.labels, want);
+    assert!(
+        scan.query_evals < naive,
+        "pruned scan spent {} evals, naive spends {naive}",
+        scan.query_evals
+    );
+}
+
+#[test]
+fn predict_reuses_fit_workspace_pool() {
+    // The serve path can ride the same persistent pool the fit used: the
+    // workspace hands out its pool, and results stay byte-identical to a
+    // fresh sequential predict.
+    let train = synth::gaussian_blobs(800, 5, 8, 0.7, 64);
+    let queries = synth::gaussian_blobs(300, 5, 8, 1.0, 65);
+    let mut ws = Workspace::new();
+    let model = KMeans::new(8)
+        .algorithm(Algorithm::Elkan)
+        .seed(3)
+        .threads(4)
+        .fit_model_with(&train, &mut ws)
+        .unwrap();
+    let pooled = model.predict_par(&queries, PredictMode::Scan, &ws.parallelism(4));
+    let sequential = model.predict_opts(
+        &queries,
+        &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+    );
+    assert_eq!(pooled.labels, sequential.labels);
+    assert_eq!(pooled.query_evals, sequential.query_evals);
+    for (a, b) in pooled.distances.iter().zip(&sequential.distances) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_files_error() {
+    let train = synth::gaussian_blobs(150, 3, 4, 0.5, 66);
+    let model = KMeans::new(4).seed(1).fit_model(&train).unwrap();
+    let dir = tmpdir();
+    let path = dir.join("target.kmm");
+    model.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // Truncations at every boundary class: empty, inside the magic,
+    // inside the header, inside the centers, inside the checksum.
+    for len in [0usize, 2, 6, 30, bytes.len() / 2, bytes.len() - 4, bytes.len() - 1] {
+        let p = dir.join(format!("trunc_{len}.kmm"));
+        std::fs::write(&p, &bytes[..len]).unwrap();
+        let err = KMeansModel::load(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("model") || msg.contains("checksum") || msg.contains("truncated"),
+            "prefix {len}: undiagnostic error {msg}"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    // A flipped byte anywhere in the body trips the checksum.
+    for pos in [4usize, 20, bytes.len() / 2, bytes.len() - 12] {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x01;
+        let p = dir.join(format!("flip_{pos}.kmm"));
+        std::fs::write(&p, &bad).unwrap();
+        assert!(
+            KMeansModel::load(&p).is_err(),
+            "bit flip at {pos} must not parse"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    // A non-model file errors without panicking.
+    let p = dir.join("not_a_model.kmm");
+    std::fs::write(&p, b"hello world, definitely not a model").unwrap();
+    assert!(KMeansModel::load(&p).is_err());
+    std::fs::remove_file(&p).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn exports_write_centers_faithfully() {
+    let train = synth::gaussian_blobs(200, 4, 5, 0.5, 67);
+    let model = KMeans::new(5).seed(2).fit_model(&train).unwrap();
+    let dir = tmpdir();
+
+    // CSV: Rust's shortest-round-trip float formatting means reading the
+    // CSV back reproduces the centers exactly.
+    let csv = dir.join("centers.csv");
+    model.export_centers_csv(&csv).unwrap();
+    let back = covermeans::data::io::read_csv(&csv).unwrap();
+    assert_eq!(back.rows(), model.k());
+    assert_eq!(back.cols(), model.dim());
+    for (a, b) in back.as_slice().iter().zip(model.centers().as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_file(&csv).ok();
+
+    // JSON: structurally sane without a parser dependency — the header
+    // fields and one row per center are present.
+    let json = dir.join("model.json");
+    model.export_json(&json).unwrap();
+    let text = std::fs::read_to_string(&json).unwrap();
+    assert!(text.contains("\"covermeans-kmeans-model\""));
+    assert!(text.contains("\"k\": 5"));
+    assert!(text.contains("\"algorithm\": \"Standard\""));
+    assert_eq!(text.matches('[').count(), text.matches(']').count());
+    assert_eq!(text.matches('{').count(), text.matches('}').count());
+    std::fs::remove_file(&json).ok();
+}
+
+#[test]
+fn warm_start_model_keeps_provenance_of_builder() {
+    // Models built from warm-started fits still record the configured
+    // algorithm and seed (the seed documents the builder config; the
+    // centers came from the warm start).
+    let data = synth::gaussian_blobs(300, 3, 6, 0.5, 68);
+    let mut dc = DistCounter::new();
+    let init_c = init::kmeans_plus_plus(&data, 6, 9, &mut dc);
+    let model = KMeans::new(6)
+        .algorithm(Algorithm::Exponion)
+        .seed(42)
+        .warm_start(init_c)
+        .fit_model(&data)
+        .unwrap();
+    assert_eq!(model.algorithm(), Algorithm::Exponion);
+    assert_eq!(model.seed(), 42);
+    assert_eq!(model.counts().iter().sum::<u64>(), 300);
+    let total: f64 = model.cluster_sse().iter().sum();
+    assert!((model.inertia() - total).abs() < 1e-12 * (1.0 + total));
+}

@@ -147,6 +147,54 @@ fn kmeans_plus_plus_seeding_is_thread_invariant() {
 }
 
 #[test]
+fn model_predict_is_thread_invariant() {
+    // The serving pass shards query rows over the pool; labels, distances,
+    // and counted evaluations must be byte-identical at every thread
+    // count, in both query strategies, matching the contract of the fit
+    // passes.
+    use covermeans::kmeans::{PredictMode, PredictOptions};
+    let train = synth::istanbul(0.002, 91);
+    let queries = synth::istanbul(0.001, 92);
+    let model = KMeans::new(64)
+        .algorithm(Algorithm::Hybrid)
+        .seed(17)
+        .max_iter(40)
+        .fit_model(&train)
+        .unwrap();
+    for mode in [PredictMode::Tree, PredictMode::Scan] {
+        let p1 = model.predict_opts(
+            &queries,
+            &PredictOptions { mode, threads: 1 },
+        );
+        assert_eq!(p1.mode, mode);
+        for threads in [2usize, 4] {
+            let pt = model.predict_opts(
+                &queries,
+                &PredictOptions { mode, threads },
+            );
+            assert_eq!(
+                pt.labels, p1.labels,
+                "{}: labels diverged (threads={threads})",
+                mode.name()
+            );
+            assert_eq!(
+                pt.query_evals, p1.query_evals,
+                "{}: counted evaluations (threads={threads})",
+                mode.name()
+            );
+            for (i, (a, b)) in pt.distances.iter().zip(&p1.distances).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: distance {i} (threads={threads})",
+                    mode.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn pool_reuse_across_fits_matches_fresh_pools() {
     // Two sequential fits driven through one Workspace (one persistent
     // pool, trees cleared between runs) must equal two fits with fresh
