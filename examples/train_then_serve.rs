@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     for mode in [PredictMode::Tree, PredictMode::Scan] {
         for threads in [1usize, 0] {
             let sw = std::time::Instant::now();
-            let p = served.predict_opts(&queries, &PredictOptions { mode, threads });
+            let p = served.predict_opts(&queries, &PredictOptions { mode, threads, ..Default::default() });
             let secs = sw.elapsed().as_secs_f64();
             println!(
                 "{:<18} {:>9} {:>12} {:>10.2} {:>12.0}",

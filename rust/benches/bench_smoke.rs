@@ -18,6 +18,11 @@
 //!     vs the Elkan-pruned scan, small vs large k, 1 vs 4 threads),
 //!     asserts predict thread-invariance plus the tree's counted-work win
 //!     over the naive n*k scan at k=64, and emits `BENCH_5.json`;
+//!   * spins up the serving daemon on an ephemeral port and measures
+//!     end-to-end served predict over the TCP wire (rows/s, p50/p99
+//!     request latency at batch sizes 1/64/1024, server threads 1 vs 4),
+//!     gates served labels against offline predict and across thread
+//!     counts (deterministic, always enforced), and emits `BENCH_6.json`;
 //!   * emits `BENCH_4.json` (all of the above plus the per-algorithm
 //!     table);
 //!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
@@ -34,13 +39,14 @@
 //!
 //!     REPRO_SCALE=0.01 cargo bench --bench bench_smoke
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use covermeans::benchutil::{bench_repeats, bench_scale, fmt_duration, measure, median};
 use covermeans::data::{synth, Matrix};
 use covermeans::kmeans::{init, Algorithm, KMeans, PredictMode, Workspace};
 use covermeans::metrics::{DistCounter, RunResult};
 use covermeans::parallel::{run_tasks_scoped, Parallelism};
+use covermeans::serve::{ServeClient, ServeConfig, Server};
 use covermeans::tree::KdTreeParams;
 
 /// Regression threshold vs the baseline ceilings: fail above 125%.
@@ -108,6 +114,53 @@ struct Extras {
     kd: Vec<KdRow>,
     seed_ms_t1: f64,
     seed_ms_t4: f64,
+}
+
+/// One (server threads, request batch size) cell of the daemon
+/// measurement.
+struct ServeRow {
+    threads: usize,
+    batch: usize,
+    requests: usize,
+    rows_per_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+/// Sorted-latency percentile (nearest-rank).
+fn percentile_us(sorted: &[Duration], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 * p / 100.0).ceil() as usize)
+        .clamp(1, sorted.len())
+        - 1;
+    sorted[idx].as_secs_f64() * 1e6
+}
+
+/// Emit `BENCH_6.json`: end-to-end daemon throughput (rows/s) and
+/// request latency (p50/p99) per batch size and server thread count,
+/// over the TCP wire with coalescing on.
+fn write_serve_json(path: &str, scale: f64, q_n: usize, k: usize, rows: &[ServeRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"bench-smoke-serve-v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str(&format!("  \"queries\": {q_n},\n"));
+    s.push_str(&format!("  \"model_k\": {k},\n"));
+    s.push_str("  \"batch_sizes\": [1, 64, 1024],\n");
+    s.push_str("  \"threads_compared\": [1, 4],\n");
+    s.push_str("  \"serve\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"threads\": {}, \"batch\": {}, \"requests\": {}, \
+             \"rows_per_s\": {:.0}, \"p50_us\": {:.1}, \"p99_us\": {:.1}}}{comma}\n",
+            r.threads, r.batch, r.requests, r.rows_per_s, r.p50_us, r.p99_us,
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("[json] failed to write {path}: {e}"),
+    }
 }
 
 /// One (k, strategy) cell of the serving-layer predict measurement.
@@ -507,6 +560,104 @@ fn main() {
         }
     }
     write_predict_json("BENCH_5.json", scale, q_n, &predict_rows);
+
+    // --- serving daemon end-to-end (BENCH_6.json): the same k=64 model
+    // behind `covermeans serve`, measured over the TCP wire with request
+    // coalescing on, at batch sizes 1/64/1024 and 1 vs 4 server threads.
+    // Labels must be byte-identical to offline predict and invariant to
+    // the server's thread count — a deterministic gate, always enforced.
+    let serve_k = 64usize;
+    let mut dc = DistCounter::new();
+    let s_init = init::kmeans_plus_plus(&big, serve_k, 13, &mut dc);
+    let serve_model = KMeans::new(serve_k)
+        .algorithm(Algorithm::Standard)
+        .threads(4)
+        .max_iter(5)
+        .warm_start(s_init)
+        .fit_model(&big)
+        .expect("valid serve-bench configuration");
+    let model_path = std::env::temp_dir().join(format!(
+        "covermeans_bench_serve_{}.kmm",
+        std::process::id()
+    ));
+    serve_model
+        .save(&model_path)
+        .expect("write serve-bench model");
+    let check_rows = 512.min(q_n);
+    let check = Matrix::from_vec(
+        queries.as_slice()[..check_rows * queries.cols()].to_vec(),
+        check_rows,
+        queries.cols(),
+    );
+    let offline = serve_model.predict_par(&check, PredictMode::Auto, &serve_pools[0]);
+    let mut serve_rows: Vec<ServeRow> = Vec::new();
+    for threads in [1usize, 4] {
+        let cfg = ServeConfig {
+            threads,
+            batch_wait_us: 100,
+            max_batch: 1024,
+            queue_depth: 256,
+            ..ServeConfig::for_tests(model_path.clone())
+        };
+        let mut server = Server::start(cfg).expect("start serve-bench daemon");
+        let addr = server.addr().to_string();
+        let mut client = ServeClient::connect(&addr).expect("connect serve bench");
+
+        // The determinism/identity gate rides on a verification request.
+        let served = client.predict_bin(&check).expect("serve-bench check");
+        if served.labels != offline.labels {
+            failures.push(format!(
+                "serve threads={threads}: served labels diverged from offline predict"
+            ));
+        }
+        for (a, b) in served.distances.iter().zip(&offline.distances) {
+            if a.to_bits() != b.to_bits() {
+                failures.push(format!(
+                    "serve threads={threads}: served distances not bit-identical"
+                ));
+                break;
+            }
+        }
+
+        for (batch, requests) in [(1usize, 300usize), (64, 100), (1024, 20)] {
+            let span = q_n.saturating_sub(batch).max(1);
+            let mut lat: Vec<Duration> = Vec::with_capacity(requests);
+            let wall = Instant::now();
+            for i in 0..requests {
+                let lo = (i * batch) % span;
+                let part = Matrix::from_vec(
+                    queries.as_slice()[lo * queries.cols()..(lo + batch) * queries.cols()]
+                        .to_vec(),
+                    batch,
+                    queries.cols(),
+                );
+                let t = Instant::now();
+                let reply = client.predict_bin(&part).expect("serve-bench request");
+                lat.push(t.elapsed());
+                std::hint::black_box(reply.labels.len());
+            }
+            let total = wall.elapsed().as_secs_f64().max(1e-12);
+            lat.sort();
+            let row = ServeRow {
+                threads,
+                batch,
+                requests,
+                rows_per_s: (requests * batch) as f64 / total,
+                p50_us: percentile_us(&lat, 50.0),
+                p99_us: percentile_us(&lat, 99.0),
+            };
+            println!(
+                "serve t{threads} batch {batch:<4} ({requests} reqs): \
+                 {:>9.0} rows/s | p50 {:>8.1}us | p99 {:>8.1}us",
+                row.rows_per_s, row.p50_us, row.p99_us,
+            );
+            serve_rows.push(row);
+        }
+        client.quit().expect("close serve-bench client");
+        server.shutdown().expect("stop serve-bench daemon");
+    }
+    std::fs::remove_file(&model_path).ok();
+    write_serve_json("BENCH_6.json", scale, q_n, serve_k, &serve_rows);
 
     // --- emit the artifact.
     let extras = Extras {

@@ -32,14 +32,21 @@
 //! | `mb_tol` | `1e-4` | MiniBatch: center-movement stopping tolerance. |
 //! | `mb_seed` | `0xB47C4` | MiniBatch: batch-sampling seed. |
 //! | `model_out` | *(empty)* | `covermeans run`: save the fitted [`crate::kmeans::KMeansModel`] to this `.kmm` path (empty = don't). |
-//! | `predict_mode` | `auto` | `covermeans predict`: query strategy — `auto`, `tree` (cover tree over the centers), or `scan` (Elkan-pruned linear scan). |
+//! | `predict_mode` | `auto` | `covermeans predict` / `serve`: query strategy — `auto`, `tree` (cover tree over the centers), or `scan` (Elkan-pruned linear scan). |
+//! | `predict_auto_k` | `64` | `covermeans predict` / `serve`: `k` at or above which `predict_mode = auto` picks the cover tree over the pruned scan ([`crate::kmeans::DEFAULT_PREDICT_AUTO_K`]; tune from the measured crossover in `BENCH_5.json`). |
+//! | `serve_addr` | `127.0.0.1:7464` | `covermeans serve`: listen address (`--addr` overrides; port `0` binds an ephemeral port, printed on startup). |
+//! | `max_batch` | `1024` | `covermeans serve`: the batcher drains queued requests until one coalesced predict pass holds this many rows. |
+//! | `batch_wait_us` | `200` | `covermeans serve`: how long (µs) the batcher waits for more requests after the first before running a short batch. |
+//! | `queue_depth` | `64` | `covermeans serve`: bound of the request queue; a full queue rejects with the retryable `ERR RETRY` code instead of growing without limit. |
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::kmeans::{Algorithm, KMeansParams, PredictMode};
+use crate::kmeans::{
+    Algorithm, KMeansParams, PredictMode, DEFAULT_PREDICT_AUTO_K,
+};
 use crate::tree::{CoverTreeParams, KdTreeParams};
 
 /// Everything a single experiment run needs.
@@ -71,8 +78,21 @@ pub struct RunConfig {
     /// `covermeans run`: path to save the fitted model (`.kmm`); empty
     /// disables saving.
     pub model_out: String,
-    /// `covermeans predict`: batch-query strategy (auto / tree / scan).
+    /// `covermeans predict` / `serve`: batch-query strategy (auto / tree /
+    /// scan).
     pub predict_mode: PredictMode,
+    /// `covermeans predict` / `serve`: `k` at or above which
+    /// [`PredictMode::Auto`] resolves to the cover tree over the centers.
+    pub predict_auto_k: usize,
+    /// `covermeans serve`: listen address (host:port; port 0 = ephemeral).
+    pub serve_addr: String,
+    /// `covermeans serve`: max rows coalesced into one batched predict.
+    pub max_batch: usize,
+    /// `covermeans serve`: batcher linger (µs) after the first queued
+    /// request before running a short batch.
+    pub batch_wait_us: u64,
+    /// `covermeans serve`: request-queue bound (full = retryable reject).
+    pub queue_depth: usize,
 }
 
 impl Default for RunConfig {
@@ -90,6 +110,11 @@ impl Default for RunConfig {
             out_dir: "results".to_string(),
             model_out: String::new(),
             predict_mode: PredictMode::Auto,
+            predict_auto_k: DEFAULT_PREDICT_AUTO_K,
+            serve_addr: "127.0.0.1:7464".to_string(),
+            max_batch: 1024,
+            batch_wait_us: 200,
+            queue_depth: 64,
         }
     }
 }
@@ -101,14 +126,59 @@ fn default_threads() -> usize {
 }
 
 impl RunConfig {
+    /// Every key [`RunConfig::set`] understands. The CLI uses this to
+    /// tell an unknown key (a typo'd flag, rejected by the command) from
+    /// an invalid value for a known key (a `set` error, reported as
+    /// such).
+    pub const KEYS: &'static [&'static str] = &[
+        "dataset",
+        "scale",
+        "data_seed",
+        "k",
+        "restarts",
+        "seed",
+        "threads",
+        "fit_threads",
+        "out_dir",
+        "model_out",
+        "predict_mode",
+        "predict_auto_k",
+        "serve_addr",
+        "max_batch",
+        "batch_wait_us",
+        "queue_depth",
+        "max_iter",
+        "tol",
+        "switch_at",
+        "mb_batch",
+        "mb_tol",
+        "mb_seed",
+        "scale_factor",
+        "min_node_size",
+        "kd_leaf_size",
+        "algorithms",
+    ];
+
     /// Apply one `key = value` setting.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
         match key.trim() {
             "dataset" => self.dataset = v.to_string(),
-            "scale" => self.scale = v.parse().context("scale")?,
+            "scale" => {
+                let s: f64 = v.parse().context("scale")?;
+                if !(s.is_finite() && s > 0.0) {
+                    bail!("scale must be a positive number, got {v:?}");
+                }
+                self.scale = s;
+            }
             "data_seed" => self.data_seed = v.parse().context("data_seed")?,
-            "k" => self.k = v.parse().context("k")?,
+            "k" => {
+                let k: usize = v.parse().context("k")?;
+                if k == 0 {
+                    bail!("k must be at least 1");
+                }
+                self.k = k;
+            }
             "restarts" => self.restarts = v.parse().context("restarts")?,
             "seed" => self.seed = v.parse().context("seed")?,
             "threads" => self.threads = v.parse().context("threads")?,
@@ -125,6 +195,31 @@ impl RunConfig {
                 self.predict_mode = PredictMode::parse(v).with_context(|| {
                     format!("predict_mode {v:?} (expected auto, tree or scan)")
                 })?
+            }
+            "predict_auto_k" => {
+                let a: usize = v.parse().context("predict_auto_k")?;
+                if a == 0 {
+                    bail!("predict_auto_k must be at least 1 (1 = always tree)");
+                }
+                self.predict_auto_k = a;
+            }
+            "serve_addr" => self.serve_addr = v.to_string(),
+            "max_batch" => {
+                let b: usize = v.parse().context("max_batch")?;
+                if b == 0 {
+                    bail!("max_batch must be at least 1");
+                }
+                self.max_batch = b;
+            }
+            "batch_wait_us" => {
+                self.batch_wait_us = v.parse().context("batch_wait_us")?
+            }
+            "queue_depth" => {
+                let q: usize = v.parse().context("queue_depth")?;
+                if q == 0 {
+                    bail!("queue_depth must be at least 1");
+                }
+                self.queue_depth = q;
             }
             "max_iter" => self.params.max_iter = v.parse().context("max_iter")?,
             "tol" => self.params.tol = v.parse().context("tol")?,
@@ -193,6 +288,11 @@ impl RunConfig {
         m.insert("out_dir", self.out_dir.clone());
         m.insert("model_out", self.model_out.clone());
         m.insert("predict_mode", self.predict_mode.name().to_string());
+        m.insert("predict_auto_k", self.predict_auto_k.to_string());
+        m.insert("serve_addr", self.serve_addr.clone());
+        m.insert("max_batch", self.max_batch.to_string());
+        m.insert("batch_wait_us", self.batch_wait_us.to_string());
+        m.insert("queue_depth", self.queue_depth.to_string());
         m.insert("max_iter", self.params.max_iter.to_string());
         m.insert("tol", self.params.tol.to_string());
         m.insert("switch_at", self.params.switch_at.to_string());
@@ -229,6 +329,24 @@ impl RunConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn keys_list_matches_set() {
+        // Every listed key must be *known* to `set` (whatever it thinks
+        // of a junk value, it must not claim the key does not exist)...
+        let mut c = RunConfig::default();
+        for key in RunConfig::KEYS {
+            if let Err(e) = c.set(key, "@@junk@@") {
+                assert!(
+                    !format!("{e:#}").contains("unknown config key"),
+                    "{key} is listed in KEYS but set() does not know it"
+                );
+            }
+        }
+        // ...and an unlisted key must fail as unknown.
+        let err = c.set("definitely_not_a_key", "1").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown config key"));
+    }
 
     #[test]
     fn set_and_dump_roundtrip() {
@@ -280,6 +398,40 @@ mod tests {
         let dump = c.dump();
         assert!(dump.contains("model_out = out/best.kmm"));
         assert!(dump.contains("predict_mode = tree"));
+    }
+
+    #[test]
+    fn serve_keys_roundtrip_and_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.predict_auto_k, DEFAULT_PREDICT_AUTO_K);
+        assert_eq!(c.serve_addr, "127.0.0.1:7464");
+        assert_eq!(c.max_batch, 1024);
+        assert_eq!(c.batch_wait_us, 200);
+        assert_eq!(c.queue_depth, 64);
+        c.set("predict_auto_k", "16").unwrap();
+        c.set("serve_addr", "0.0.0.0:9000").unwrap();
+        c.set("max_batch", "256").unwrap();
+        c.set("batch_wait_us", "500").unwrap();
+        c.set("queue_depth", "8").unwrap();
+        assert_eq!(c.predict_auto_k, 16);
+        assert_eq!(c.serve_addr, "0.0.0.0:9000");
+        assert_eq!(c.max_batch, 256);
+        assert_eq!(c.batch_wait_us, 500);
+        assert_eq!(c.queue_depth, 8);
+        let dump = c.dump();
+        assert!(dump.contains("predict_auto_k = 16"));
+        assert!(dump.contains("serve_addr = 0.0.0.0:9000"));
+        assert!(dump.contains("max_batch = 256"));
+        assert!(dump.contains("batch_wait_us = 500"));
+        assert!(dump.contains("queue_depth = 8"));
+        // Zero bounds are rejected with a diagnosable error, not accepted
+        // to wedge the daemon later.
+        assert!(c.set("predict_auto_k", "0").is_err());
+        assert!(c.set("max_batch", "0").is_err());
+        assert!(c.set("queue_depth", "0").is_err());
+        assert!(c.set("k", "0").is_err());
+        assert!(c.set("scale", "-1").is_err());
+        assert!(c.set("scale", "nan").is_err());
     }
 
     #[test]

@@ -77,7 +77,9 @@ use crate::tree::{CoverTree, CoverTreeParams, KdTree, KdTreeParams};
 pub use builder::{AlgorithmSpec, KMeans, KMeansError};
 pub use driver::{Fit, KMeansDriver, Observer, Signal, StepInfo, StepView};
 pub use minibatch::MiniBatchParams;
-pub use model::{KMeansModel, PredictMode, PredictOptions, Prediction};
+pub use model::{
+    KMeansModel, PredictMode, PredictOptions, Prediction, DEFAULT_PREDICT_AUTO_K,
+};
 
 /// Which algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -57,11 +57,15 @@ const MAGIC: &[u8; 4] = b"CMKM";
 /// Current `.kmm` format version.
 const FORMAT_VERSION: u32 = 1;
 
-/// Below this `k`, [`PredictMode::Auto`] resolves to the pruned scan: the
-/// center tree's per-query descent overhead (child ordering, recursion)
-/// only pays off once the scan's `O(k)` per query dominates. The
-/// `bench_smoke` harness measures the actual crossover (`BENCH_5.json`).
-const AUTO_TREE_MIN_K: usize = 64;
+/// Default `k` at or above which [`PredictMode::Auto`] resolves to the
+/// cover tree: the center tree's per-query descent overhead (child
+/// ordering, recursion) only pays off once the scan's `O(k)` per query
+/// dominates. The `bench_smoke` harness measures the actual crossover
+/// (`BENCH_5.json`); callers whose hardware crosses elsewhere override it
+/// per call ([`PredictOptions::auto_k`],
+/// [`KMeansModel::predict_par_with`]) or via the `predict_auto_k` config
+/// key (`covermeans predict` / `covermeans serve`).
+pub const DEFAULT_PREDICT_AUTO_K: usize = 64;
 
 /// Cover tree construction parameters for the *centers* index. Centers
 /// matrices are tiny next to datasets, so the node floor is far below the
@@ -73,8 +77,9 @@ const CENTER_TREE_PARAMS: CoverTreeParams =
 /// How [`KMeansModel::predict_opts`] answers nearest-center queries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PredictMode {
-    /// Pick per model: the cover tree for `k >= 64`, the pruned scan
-    /// below (the small-`k` regime where tree overhead loses).
+    /// Pick per model: the cover tree for `k >= auto_k` (default
+    /// [`DEFAULT_PREDICT_AUTO_K`]), the pruned scan below (the small-`k`
+    /// regime where tree overhead loses).
     Auto,
     /// 1-NN descent of a cover tree built over the centers
     /// ([`crate::tree::nearest`]), reusing the node radii and parent
@@ -106,18 +111,26 @@ impl PredictMode {
     }
 }
 
-/// Batch-predict configuration: the query-answering strategy and the
-/// worker-thread budget (0 = all cores; any value reproduces the
-/// single-threaded labels byte for byte).
+/// Batch-predict configuration: the query-answering strategy, the
+/// [`PredictMode::Auto`] tree/scan cutoff, and the worker-thread budget
+/// (0 = all cores; any value reproduces the single-threaded labels byte
+/// for byte).
 #[derive(Debug, Clone, Copy)]
 pub struct PredictOptions {
     pub mode: PredictMode,
+    /// `k` at or above which [`PredictMode::Auto`] picks the cover tree
+    /// (config key `predict_auto_k`; default [`DEFAULT_PREDICT_AUTO_K`]).
+    pub auto_k: usize,
     pub threads: usize,
 }
 
 impl Default for PredictOptions {
     fn default() -> Self {
-        PredictOptions { mode: PredictMode::Auto, threads: 1 }
+        PredictOptions {
+            mode: PredictMode::Auto,
+            auto_k: DEFAULT_PREDICT_AUTO_K,
+            threads: 1,
+        }
     }
 }
 
@@ -161,6 +174,9 @@ pub struct KMeansModel {
     converged: bool,
     center_tree: OnceLock<Arc<CoverTree>>,
     inter_center: OnceLock<Arc<InterCenter>>,
+    /// Lazily computed `.kmm` checksum (the serving layer's model version
+    /// tag); [`KMeansModel::from_bytes`] seeds it with the verified value.
+    checksum: OnceLock<u64>,
 }
 
 impl KMeansModel {
@@ -197,6 +213,7 @@ impl KMeansModel {
             converged: run.converged,
             center_tree: OnceLock::new(),
             inter_center: OnceLock::new(),
+            checksum: OnceLock::new(),
         }
     }
 
@@ -250,6 +267,19 @@ impl KMeansModel {
         self.converged
     }
 
+    /// The FNV-1a checksum of the model's `.kmm` serialization — the same
+    /// value [`KMeansModel::to_bytes`] appends as the trailing 8 bytes and
+    /// [`KMeansModel::from_bytes`] verifies. Two models with the same
+    /// checksum serve identical predictions, so the serving daemon uses it
+    /// as the model **version tag** carried on every reply. Computed once
+    /// and cached (loaded models reuse the verified on-disk value).
+    pub fn checksum(&self) -> u64 {
+        *self.checksum.get_or_init(|| {
+            let bytes = self.to_bytes();
+            u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap())
+        })
+    }
+
     // ----- prediction ---------------------------------------------------
 
     /// Nearest-center label per query row (defaults: [`PredictMode::Auto`],
@@ -270,17 +300,75 @@ impl KMeansModel {
     /// pool (sweeps, serving loops) should prefer
     /// [`KMeansModel::predict_par`].
     pub fn predict_opts(&self, data: &Matrix, opts: &PredictOptions) -> Prediction {
-        self.predict_par(data, opts.mode, &Parallelism::new(opts.threads))
+        self.predict_par_with(
+            data,
+            opts.mode,
+            opts.auto_k,
+            &Parallelism::new(opts.threads),
+        )
     }
 
-    /// Batch predict over an existing worker pool. Every query row is
-    /// independent and the per-chunk distance tallies are integer sums, so
-    /// any thread count produces byte-identical labels, distances, and
-    /// counted evaluations.
+    /// What [`PredictMode::Auto`] resolves to for this model under the
+    /// given tree/scan cutoff (`Tree` at `k >= auto_k`); explicit modes
+    /// pass through unchanged.
+    pub fn resolve_mode(&self, mode: PredictMode, auto_k: usize) -> PredictMode {
+        match mode {
+            PredictMode::Auto if self.k() >= auto_k => PredictMode::Tree,
+            PredictMode::Auto => PredictMode::Scan,
+            m => m,
+        }
+    }
+
+    /// Eagerly build the serving index the given mode needs (the cover
+    /// tree over the centers, or the inter-center matrix for the pruned
+    /// scan), so later predict calls run against a warm cache. Returns the
+    /// distance evaluations this call spent (0 when already warm) — the
+    /// serving daemon charges them to its prep counter at startup and on
+    /// every hot-reload, keeping query-time accounting clean.
+    pub fn prewarm(&self, mode: PredictMode, auto_k: usize) -> u64 {
+        let mut prep = 0u64;
+        match self.resolve_mode(mode, auto_k) {
+            PredictMode::Tree => {
+                self.center_tree.get_or_init(|| {
+                    let t = CoverTree::build(&self.centers, CENTER_TREE_PARAMS);
+                    prep = t.build_distances;
+                    Arc::new(t)
+                });
+            }
+            _ => {
+                self.inter_center.get_or_init(|| {
+                    let mut dc = DistCounter::new();
+                    let ic = InterCenter::compute(&self.centers, &mut dc);
+                    prep = dc.count();
+                    Arc::new(ic)
+                });
+            }
+        }
+        prep
+    }
+
+    /// Batch predict over an existing worker pool with the default
+    /// [`PredictMode::Auto`] cutoff ([`DEFAULT_PREDICT_AUTO_K`]); see
+    /// [`KMeansModel::predict_par_with`].
     pub fn predict_par(
         &self,
         data: &Matrix,
         mode: PredictMode,
+        par: &Parallelism,
+    ) -> Prediction {
+        self.predict_par_with(data, mode, DEFAULT_PREDICT_AUTO_K, par)
+    }
+
+    /// Batch predict over an existing worker pool, with an explicit
+    /// [`PredictMode::Auto`] tree/scan cutoff. Every query row is
+    /// independent and the per-chunk distance tallies are integer sums, so
+    /// any thread count produces byte-identical labels, distances, and
+    /// counted evaluations.
+    pub fn predict_par_with(
+        &self,
+        data: &Matrix,
+        mode: PredictMode,
+        auto_k: usize,
         par: &Parallelism,
     ) -> Prediction {
         assert_eq!(
@@ -291,11 +379,7 @@ impl KMeansModel {
             self.dim()
         );
         let n = data.rows();
-        let mode = match mode {
-            PredictMode::Auto if self.k() >= AUTO_TREE_MIN_K => PredictMode::Tree,
-            PredictMode::Auto => PredictMode::Scan,
-            m => m,
-        };
+        let mode = self.resolve_mode(mode, auto_k);
 
         // Serving indexes are built once, sequentially, on the dispatching
         // thread — never under the pool — so their bits (and the charged
@@ -463,6 +547,8 @@ impl KMeansModel {
         if r.remaining() != 0 {
             bail!("{} trailing bytes after the centers block", r.remaining());
         }
+        let checksum = OnceLock::new();
+        checksum.set(stored).ok();
         Ok(KMeansModel {
             centers: Matrix::from_vec(centers, k, dim),
             counts,
@@ -473,6 +559,7 @@ impl KMeansModel {
             converged,
             center_tree: OnceLock::new(),
             inter_center: OnceLock::new(),
+            checksum,
         })
     }
 
@@ -617,7 +704,7 @@ mod tests {
         for mode in [PredictMode::Auto, PredictMode::Tree, PredictMode::Scan] {
             let p = model.predict_opts(
                 &queries,
-                &PredictOptions { mode, threads: 1 },
+                &PredictOptions { mode, ..Default::default() },
             );
             assert_eq!(p.labels, want_labels, "{}", mode.name());
             for (i, (a, b)) in p.distances.iter().zip(&want_dists).enumerate() {
@@ -637,9 +724,66 @@ mod tests {
         let small = fit_model(&train, 4, 1);
         let p = small.predict_opts(&train, &PredictOptions::default());
         assert_eq!(p.mode, PredictMode::Scan);
-        let big = fit_model(&train, AUTO_TREE_MIN_K, 1);
+        let big = fit_model(&train, DEFAULT_PREDICT_AUTO_K, 1);
         let p = big.predict_opts(&train, &PredictOptions::default());
         assert_eq!(p.mode, PredictMode::Tree);
+    }
+
+    #[test]
+    fn auto_k_cutoff_is_configurable() {
+        let train = synth::gaussian_blobs(600, 3, 4, 0.5, 8);
+        let model = fit_model(&train, 4, 1);
+        // Default cutoff: k=4 resolves to the scan.
+        assert_eq!(model.resolve_mode(PredictMode::Auto, DEFAULT_PREDICT_AUTO_K), PredictMode::Scan);
+        // Lowering the cutoff to k flips Auto to the tree — and the labels
+        // must not care which strategy answered.
+        assert_eq!(model.resolve_mode(PredictMode::Auto, 4), PredictMode::Tree);
+        let scan = model.predict_opts(&train, &PredictOptions::default());
+        let tree = model.predict_opts(
+            &train,
+            &PredictOptions { auto_k: 4, ..Default::default() },
+        );
+        assert_eq!(scan.mode, PredictMode::Scan);
+        assert_eq!(tree.mode, PredictMode::Tree);
+        assert_eq!(scan.labels, tree.labels);
+        // Explicit modes ignore the cutoff entirely.
+        assert_eq!(model.resolve_mode(PredictMode::Scan, 1), PredictMode::Scan);
+        assert_eq!(
+            model.resolve_mode(PredictMode::Tree, usize::MAX),
+            PredictMode::Tree
+        );
+    }
+
+    #[test]
+    fn checksum_matches_serialization_and_survives_roundtrip() {
+        let train = synth::gaussian_blobs(200, 3, 5, 0.5, 21);
+        let model = fit_model(&train, 5, 22);
+        let bytes = model.to_bytes();
+        let tail = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        assert_eq!(model.checksum(), tail);
+        let loaded = KMeansModel::from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.checksum(), model.checksum());
+        // A different model versions differently.
+        let other = fit_model(&train, 4, 23);
+        assert_ne!(other.checksum(), model.checksum());
+    }
+
+    #[test]
+    fn prewarm_charges_prep_exactly_once() {
+        let train = synth::gaussian_blobs(300, 3, 6, 0.5, 9);
+        let model = fit_model(&train, 6, 2);
+        let prep = model.prewarm(PredictMode::Scan, DEFAULT_PREDICT_AUTO_K);
+        assert_eq!(prep, (6 * 5 / 2) as u64, "k(k-1)/2 inter-center");
+        assert_eq!(model.prewarm(PredictMode::Scan, DEFAULT_PREDICT_AUTO_K), 0);
+        // A prewarmed model's first predict charges no prep.
+        let p = model.predict_opts(
+            &train,
+            &PredictOptions { mode: PredictMode::Scan, ..Default::default() },
+        );
+        assert_eq!(p.prep_evals, 0);
+        // The tree index is independent and charges on its own first build.
+        assert!(model.prewarm(PredictMode::Tree, DEFAULT_PREDICT_AUTO_K) > 0);
+        assert_eq!(model.prewarm(PredictMode::Tree, DEFAULT_PREDICT_AUTO_K), 0);
     }
 
     #[test]
@@ -648,12 +792,12 @@ mod tests {
         let model = fit_model(&train, 6, 2);
         let p1 = model.predict_opts(
             &train,
-            &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+            &PredictOptions { mode: PredictMode::Scan, ..Default::default() },
         );
         assert_eq!(p1.prep_evals, (6 * 5 / 2) as u64, "k(k-1)/2 inter-center");
         let p2 = model.predict_opts(
             &train,
-            &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+            &PredictOptions { mode: PredictMode::Scan, ..Default::default() },
         );
         assert_eq!(p2.prep_evals, 0, "cached index must not be re-charged");
         assert_eq!(p1.labels, p2.labels);

@@ -26,7 +26,11 @@
 //!   same byte-identity contract. The `covermeans run --model_out` /
 //!   `covermeans predict` CLI verbs and the coordinator's
 //!   `Experiment::model_dir` wire the train-once/serve-many loop
-//!   end to end.
+//!   end to end. `covermeans serve` keeps that model *resident*: the
+//!   [`serve`] daemon answers predict requests over TCP with request
+//!   coalescing into single `predict_par` passes, bounded-queue
+//!   backpressure, and atomic hot-reload (swap-on-valid-parse, replies
+//!   version-tagged with the model checksum).
 //! * **Intra-fit parallelism** — a single fit shards every hot path
 //!   (the assignment phases of all drivers including the k-d-tree
 //!   filters and MiniBatch, tree construction, the inter-center matrix,
@@ -65,5 +69,6 @@ pub mod parallel;
 pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 pub mod tree;

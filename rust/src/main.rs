@@ -2,6 +2,8 @@
 //!
 //! Subcommands (see `covermeans help`):
 //!   run       one clustering run (choice of algorithm and backend)
+//!   predict   batch nearest-center assignment from a saved model
+//!   serve     resident serving daemon (batched predict over TCP)
 //!   table     regenerate paper Table 2, 3 or 4
 //!   fig1      regenerate the Fig. 1 per-iteration series
 //!   fig2      regenerate the Fig. 2 d/k scaling series
@@ -33,7 +35,15 @@ COMMANDS:
              --model_out FILE.kmm   save the fitted model for serving
   predict    batch nearest-center assignment from a saved model
              --model FILE.kmm --input POINTS.csv|.fmat [--out LABELS.csv]
-             [--predict_mode auto|tree|scan] [--fit_threads N]
+             [--predict_mode auto|tree|scan] [--predict_auto_k K]
+             [--fit_threads N]
+  serve      resident serving daemon: load a model once, answer predict
+             requests over TCP with coalescing + backpressure + hot-reload
+             --model FILE.kmm [--addr HOST:PORT] [--max_batch N]
+             [--batch_wait_us U] [--queue_depth N] [--fit_threads N]
+             [--predict_mode auto|tree|scan] [--predict_auto_k K]
+             (SIGHUP or the RELOAD verb re-reads --model; SIGINT/SIGTERM
+             or the SHUTDOWN verb drain and exit; see docs/GUIDE.md)
   table      --id 2|3|4 [--scale S] [--restarts N] [--warm true] — paper
              tables (--warm: id 4 with warm-started sweep restarts)
   fig1       [--scale S] [--k K] — Fig. 1 cumulative series (ALOI-64)
@@ -48,6 +58,7 @@ table lives in docs/GUIDE.md and the config module rustdoc):
   dataset scale data_seed k restarts seed threads fit_threads out_dir
   max_iter tol switch_at scale_factor min_node_size kd_leaf_size
   algorithms mb_batch mb_tol mb_seed model_out predict_mode
+  predict_auto_k serve_addr max_batch batch_wait_us queue_depth
 
 THREADS:
   `threads` is the total worker budget; `fit_threads` (default 1, 0 = all
@@ -85,7 +96,11 @@ fn parse_overrides(
             cfg.load_file(Path::new(&value))?;
         } else if key == "algorithm" {
             cfg.set("algorithms", &value)?;
-        } else if cfg.set(key, &value).is_err() {
+        } else if RunConfig::KEYS.contains(&key) {
+            // A known key with a bad value is its own error — it must
+            // not masquerade as an unknown flag.
+            cfg.set(key, &value).with_context(|| format!("--{key}"))?;
+        } else {
             extras.push((key.to_string(), value));
         }
         i += 2;
@@ -97,6 +112,19 @@ fn extra<'a>(extras: &'a [(String, String)], key: &str) -> Option<&'a str> {
     extras.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
 }
 
+/// A typo'd flag must be a one-line error, not a silently ignored knob:
+/// every command names the extras it understands and rejects the rest.
+fn reject_unknown(extras: &[(String, String)], allowed: &[&str]) -> Result<()> {
+    for (key, _) in extras {
+        if !allowed.contains(&key.as_str()) {
+            bail!(
+                "unknown flag --{key}; run `covermeans help` for flags and config keys"
+            );
+        }
+    }
+    Ok(())
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print!("{HELP}");
@@ -106,6 +134,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "predict" => cmd_predict(rest),
+        "serve" => cmd_serve(rest),
         "table" => cmd_table(rest),
         "fig1" => cmd_fig1(rest),
         "fig2" => cmd_fig2(rest),
@@ -123,6 +152,7 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn cmd_run(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &["backend"])?;
     let backend = extra(&extras, "backend").unwrap_or("native");
     let alg = cfg.algorithms[0];
 
@@ -193,6 +223,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
 fn cmd_predict(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &["model", "input", "out"])?;
     let model_path = extra(&extras, "model")
         .context("predict needs --model <file.kmm> (write one with `covermeans run --model_out ...`)")?;
     let input = extra(&extras, "input")
@@ -216,7 +247,7 @@ fn cmd_predict(args: &[String]) -> Result<()> {
 
     let par = Parallelism::new(cfg.params.threads);
     let sw = std::time::Instant::now();
-    let p = model.predict_par(&data, cfg.predict_mode, &par);
+    let p = model.predict_par_with(&data, cfg.predict_mode, cfg.predict_auto_k, &par);
     let secs = sw.elapsed().as_secs_f64();
     let naive = data.rows() as u64 * model.k() as u64;
 
@@ -253,6 +284,58 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         std::fs::write(Path::new(out), rows)?;
         eprintln!("wrote {out}");
     }
+    Ok(())
+}
+
+/// The resident half of the serving story: keep the model, its serving
+/// index, and the worker pool warm in one long-lived process; coalesce
+/// concurrent predict requests into single batched passes. Runs until
+/// SIGINT/SIGTERM or a client's SHUTDOWN verb, draining in-flight
+/// batches on the way out.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &["model", "addr"])?;
+    let model_path = extra(&extras, "model")
+        .context("serve needs --model <file.kmm> (write one with `covermeans run --model_out ...`)")?;
+    let addr = extra(&extras, "addr").unwrap_or(&cfg.serve_addr).to_string();
+
+    let serve_cfg = covermeans::serve::ServeConfig {
+        model_path: Path::new(model_path).to_path_buf(),
+        addr,
+        max_batch: cfg.max_batch,
+        batch_wait_us: cfg.batch_wait_us,
+        queue_depth: cfg.queue_depth,
+        mode: cfg.predict_mode,
+        auto_k: cfg.predict_auto_k,
+        threads: cfg.params.threads,
+        install_signal_handlers: true,
+    };
+    let mut server = covermeans::serve::Server::start(serve_cfg)?;
+    let model = KMeansModel::load(Path::new(model_path))?;
+    eprintln!(
+        "model       : {} (k={}, d={}, {} iters, converged {})",
+        model.algorithm().name(),
+        model.k(),
+        model.dim(),
+        model.iterations(),
+        model.converged()
+    );
+    eprintln!(
+        "version     : {}",
+        covermeans::serve::checksum_hex(server.model_checksum())
+    );
+    eprintln!(
+        "batching    : max_batch {} / batch_wait_us {} / queue_depth {} / {} threads",
+        cfg.max_batch,
+        cfg.batch_wait_us,
+        cfg.queue_depth,
+        covermeans::parallel::resolve_threads(cfg.params.threads)
+    );
+    // The machine-readable line e2e tooling parses to find the port.
+    println!("listening {}", server.addr());
+    server.wait()?;
+    eprintln!("stats       : {}", server.stats_json());
     Ok(())
 }
 
@@ -298,6 +381,7 @@ fn experiment_from_cfg(cfg: &RunConfig, mut exp: Experiment) -> Experiment {
 fn cmd_table(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &["id", "warm"])?;
     let id: u32 = extra(&extras, "id").unwrap_or("2").parse().context("--id")?;
     let warm = matches!(extra(&extras, "warm"), Some("true") | Some("1"));
     let exp = match id {
@@ -340,7 +424,8 @@ fn cmd_table(args: &[String]) -> Result<()> {
 
 fn cmd_fig1(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
-    let _ = parse_overrides(args, &mut cfg)?;
+    let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &[])?;
     let mut exp = experiment_from_cfg(&cfg, sweep::fig1(cfg.scale));
     if cfg.k != RunConfig::default().k {
         exp.ks = vec![cfg.k]; // --k override for smaller runs
@@ -369,6 +454,7 @@ fn cmd_fig1(args: &[String]) -> Result<()> {
 fn cmd_fig2(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &["axis"])?;
     let axis = extra(&extras, "axis").unwrap_or("d");
     let by_k = match axis {
         "d" => false,
@@ -398,7 +484,8 @@ fn cmd_fig2(args: &[String]) -> Result<()> {
 
 fn cmd_ablate(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
-    let _ = parse_overrides(args, &mut cfg)?;
+    let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &[])?;
     let mut rows = vec!["knob,dataset,algorithm,dist_rel,time_rel".to_string()];
     for (label, mut exp) in sweep::ablations(cfg.scale, cfg.restarts.min(3)) {
         // Keep the ablated knob; adopt only the orthogonal settings

@@ -37,7 +37,11 @@
 //! long-lived OS workers (the caller is the N-th executor), created once
 //! when the budget is constructed — by [`crate::kmeans::Workspace`] once
 //! per fit, and shared across fits when the workspace is reused (the
-//! coordinator keeps one per cell). Each [`Parallelism::run_tasks`] call
+//! coordinator keeps one per cell). The serving daemon
+//! ([`crate::serve`]) stretches the same reuse to a process lifetime:
+//! its batcher thread owns one `Parallelism` from startup to drain, so
+//! every coalesced predict batch reuses the same parked workers and no
+//! request ever pays a thread spawn. Each [`Parallelism::run_tasks`] call
 //! publishes a single *batch job* — the work-stealing claim loop over the
 //! task list — to the pool through a condvar-guarded slot; workers and the
 //! caller race to claim task indices and the caller blocks until every

@@ -1,0 +1,220 @@
+//! A small synchronous client for the serve protocol, used by the e2e
+//! tests and the serve bench section (and usable as a reference
+//! implementation for other languages — the protocol is a handful of
+//! newline-delimited verbs, see [`super::protocol`]).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::{
+    self, PredictReply, RemoteError, MAX_REQUEST_ROWS, PROTOCOL_VERSION,
+};
+use crate::data::Matrix;
+
+/// One connection to a running daemon, handshake already done.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Version tag announced at the handshake (16 hex digits).
+    model: String,
+    k: usize,
+    dim: usize,
+}
+
+impl ServeClient {
+    /// Connect and handshake. Fails on version mismatch or a non-serve
+    /// endpoint.
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .context("set read timeout")?;
+        let mut writer = stream.try_clone().context("clone stream")?;
+        let mut reader = BufReader::new(stream);
+        writer
+            .write_all(format!("CMSERVE {PROTOCOL_VERSION}\n").as_bytes())
+            .context("send hello")?;
+        let mut greet = String::new();
+        reader.read_line(&mut greet).context("read greeting")?;
+        let greet = greet.trim_end();
+        if let Some(err) = protocol::parse_err_line(greet) {
+            bail!(err);
+        }
+        // OK covermeans-serve <ver> model <hex16> k <k> dim <dim>
+        let toks: Vec<&str> = greet.split_ascii_whitespace().collect();
+        let [ok, name, ver, m_kw, model, k_kw, k, d_kw, dim] = toks[..] else {
+            bail!("bad greeting {greet:?}");
+        };
+        if ok != "OK"
+            || name != "covermeans-serve"
+            || m_kw != "model"
+            || k_kw != "k"
+            || d_kw != "dim"
+        {
+            bail!("bad greeting {greet:?}");
+        }
+        let ver: u32 = ver.parse().context("greeting version")?;
+        if ver != PROTOCOL_VERSION {
+            bail!("server speaks protocol {ver}, client wants {PROTOCOL_VERSION}");
+        }
+        Ok(ServeClient {
+            reader,
+            writer,
+            model: model.to_string(),
+            k: k.parse().context("greeting k")?,
+            dim: dim.parse().context("greeting dim")?,
+        })
+    }
+
+    /// Model version tag from the handshake (may be stale after a
+    /// reload; predict replies carry the current one).
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn read_reply_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("read reply")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    /// Turn an `ERR` line into a typed [`RemoteError`] failure.
+    fn check_err(line: &str) -> Result<()> {
+        if let Some(err) = protocol::parse_err_line(line) {
+            bail!(err);
+        }
+        Ok(())
+    }
+
+    /// Predict via the JSON framing.
+    pub fn predict_json(&mut self, data: &Matrix) -> Result<PredictReply> {
+        anyhow::ensure!(
+            data.rows() > 0 && data.rows() <= MAX_REQUEST_ROWS,
+            "request must carry 1..={MAX_REQUEST_ROWS} rows"
+        );
+        let line =
+            protocol::json_request(data.as_slice(), data.rows(), data.cols());
+        self.writer.write_all(line.as_bytes()).context("send request")?;
+        let reply = self.read_reply_line()?;
+        Self::check_err(&reply)?;
+        let parsed = protocol::parse_json_reply(&reply)?;
+        anyhow::ensure!(
+            parsed.labels.len() == data.rows(),
+            "server answered {} labels for {} rows",
+            parsed.labels.len(),
+            data.rows()
+        );
+        Ok(parsed)
+    }
+
+    /// Predict via the raw-f64 binary framing.
+    pub fn predict_bin(&mut self, data: &Matrix) -> Result<PredictReply> {
+        anyhow::ensure!(
+            data.rows() > 0 && data.rows() <= MAX_REQUEST_ROWS,
+            "request must carry 1..={MAX_REQUEST_ROWS} rows"
+        );
+        let (n, dim) = (data.rows(), data.cols());
+        let mut frame = Vec::with_capacity(24 + n * dim * 8);
+        frame.extend_from_slice(format!("BIN {n} {dim}\n").as_bytes());
+        for v in data.as_slice() {
+            frame.extend_from_slice(&v.to_le_bytes());
+        }
+        self.writer.write_all(&frame).context("send request")?;
+        let header = self.read_reply_line()?;
+        Self::check_err(&header)?;
+        // BINOK <nrows> <hex16>
+        let toks: Vec<&str> = header.split_ascii_whitespace().collect();
+        let ["BINOK", rows, model] = toks[..] else {
+            bail!("bad binary reply header {header:?}");
+        };
+        let rows: usize = rows.parse().context("BINOK rows")?;
+        anyhow::ensure!(
+            rows == n,
+            "server answered {rows} labels for {n} rows"
+        );
+        let mut raw = vec![0u8; rows * 4 + rows * 8];
+        self.reader.read_exact(&mut raw).context("read binary payload")?;
+        let labels = raw[..rows * 4]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let distances = raw[rows * 4..]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(PredictReply {
+            labels,
+            distances,
+            model: model.to_string(),
+            mode: String::new(),
+        })
+    }
+
+    /// `PING` → the current model version tag.
+    pub fn ping(&mut self) -> Result<String> {
+        self.writer.write_all(b"PING\n").context("send PING")?;
+        let reply = self.read_reply_line()?;
+        Self::check_err(&reply)?;
+        reply
+            .strip_prefix("PONG ")
+            .map(str::to_string)
+            .with_context(|| format!("bad PING reply {reply:?}"))
+    }
+
+    /// `STATS` → the one-line JSON counter snapshot.
+    pub fn stats_json(&mut self) -> Result<String> {
+        self.writer.write_all(b"STATS\n").context("send STATS")?;
+        let reply = self.read_reply_line()?;
+        Self::check_err(&reply)?;
+        Ok(reply)
+    }
+
+    /// `RELOAD` → the new model version tag; fails with a
+    /// [`RemoteError`] of code `RELOAD` (old model keeps serving) when
+    /// the file on disk does not verify.
+    pub fn reload(&mut self) -> Result<String> {
+        self.writer.write_all(b"RELOAD\n").context("send RELOAD")?;
+        let reply = self.read_reply_line()?;
+        Self::check_err(&reply)?;
+        reply
+            .strip_prefix("RELOADED ")
+            .map(str::to_string)
+            .with_context(|| format!("bad RELOAD reply {reply:?}"))
+    }
+
+    /// Close this connection politely.
+    pub fn quit(mut self) -> Result<()> {
+        self.writer.write_all(b"QUIT\n").context("send QUIT")?;
+        let _ = self.read_reply_line();
+        Ok(())
+    }
+
+    /// Ask the daemon to shut down gracefully (drains in-flight batches).
+    pub fn shutdown_server(mut self) -> Result<()> {
+        self.writer.write_all(b"SHUTDOWN\n").context("send SHUTDOWN")?;
+        let _ = self.read_reply_line();
+        Ok(())
+    }
+}
+
+/// Downcast helper: the [`RemoteError`] inside an `anyhow` failure, if
+/// that is what it is.
+pub fn remote_error(err: &anyhow::Error) -> Option<&RemoteError> {
+    err.downcast_ref::<RemoteError>()
+}

@@ -1,0 +1,48 @@
+//! The resident serving daemon: `covermeans serve --model FILE.kmm
+//! --addr HOST:PORT`.
+//!
+//! PR 5 made a trained model persistable; this subsystem makes it
+//! *resident*. A [`server::Server`] loads the `.kmm` once, pre-builds
+//! the serving indexes (the cover tree over centers, or the
+//! inter-center bound matrix — whichever the configured
+//! [`crate::kmeans::PredictMode`] resolves to), keeps one persistent
+//! [`crate::parallel::Parallelism`] worker pool warm for its whole
+//! lifetime, and answers predict requests over TCP.
+//!
+//! Three properties define the design:
+//!
+//! - **Coalescing.** Connection handlers feed a *bounded* MPSC queue; a
+//!   single batcher thread drains up to `max_batch` rows (or waits
+//!   `batch_wait_us` after the first job), runs **one**
+//!   `predict_par` pass over the warm pool, and scatters per-connection
+//!   label/distance slices. Many tiny requests amortize into one
+//!   tree/scan pass.
+//! - **Backpressure.** The queue bound is the memory bound: when the
+//!   batcher falls behind, new requests get `ERR RETRY` (a retryable
+//!   code, counted in `queue_full_rejects`) instead of growing an
+//!   unbounded buffer.
+//! - **Atomic hot-reload.** `RELOAD` (or SIGHUP) re-reads the model
+//!   file and swaps an `Arc` pointer only after the bytes parse and the
+//!   stored checksum verifies. A corrupt or truncated file can never
+//!   change served output. Every reply carries the serving model's
+//!   checksum as a version tag, so clients see exactly when the swap
+//!   landed.
+//!
+//! Determinism carries over from the offline path: served labels are
+//! byte-identical to `model.predict` on the same rows, for every
+//! `PredictMode` and any thread count.
+//!
+//! Wire format lives in [`protocol`]; counters in [`stats`]; the test /
+//! bench client in [`client`].
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod stats;
+
+pub use client::{remote_error, ServeClient};
+pub use protocol::{
+    checksum_hex, ErrCode, PredictReply, RemoteError, PROTOCOL_VERSION,
+};
+pub use server::{ServeConfig, Server};
+pub use stats::{counter, ServeStats};

@@ -1,0 +1,577 @@
+//! Wire protocol of the serving daemon: newline-delimited ASCII headers
+//! with length-prefixed binary payloads, versioned at the handshake.
+//!
+//! The offline crate set has no serde, so the JSON framing is a
+//! hand-rolled codec for the two fixed shapes the protocol uses (a
+//! predict request's `rows` matrix, a predict reply's `labels` /
+//! `distances` arrays). Floats are formatted with Rust's
+//! shortest-round-trip `Display`, so a client parsing a JSON reply
+//! recovers the served distances bit for bit.
+//!
+//! # Framing
+//!
+//! Every connection opens with a version handshake:
+//!
+//! ```text
+//! C: CMSERVE 1\n
+//! S: OK covermeans-serve 1 model <hex16> k <k> dim <dim>\n
+//! ```
+//!
+//! then carries any number of requests, each answered in order:
+//!
+//! ```text
+//! {"rows":[[x,...],...]}\n        JSON predict
+//! BIN <nrows> <dim>\n<payload>    binary predict; payload is nrows*dim
+//!                                 little-endian f64 (8 bytes each)
+//! PING\n                          liveness + current model version
+//! STATS\n                         one-line JSON counter snapshot
+//! RELOAD\n                        re-parse the model file, swap on valid
+//! QUIT\n                          close this connection
+//! SHUTDOWN\n                      graceful daemon shutdown (drains)
+//! ```
+//!
+//! Replies:
+//!
+//! ```text
+//! {"ok":true,"model":"<hex16>","mode":"<tree|scan>",
+//!  "labels":[...],"distances":[...]}\n
+//! BINOK <nrows> <hex16>\n<nrows u32 LE labels><nrows f64 LE distances>
+//! PONG <hex16>\n
+//! RELOADED <hex16>\n
+//! BYE\n
+//! ERR <CODE> <message>\n
+//! ```
+//!
+//! `<hex16>` is the serving model's `.kmm` checksum
+//! ([`crate::kmeans::KMeansModel::checksum`]) — the model **version tag**
+//! every data-bearing reply carries, so a client can detect a hot-reload
+//! between two of its requests. Error codes: `RETRY` (transient — queue
+//! full or daemon draining; resend later), `BADREQ` (malformed request),
+//! `BADDIM` (row dimensionality does not match the serving model),
+//! `RELOAD` (reload attempt failed; the old model keeps serving), `PROTO`
+//! (handshake/version mismatch).
+
+use anyhow::{bail, Context, Result};
+
+/// Protocol version spoken by this build (the handshake's second token).
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on rows in a single request frame: bounds the allocation a
+/// hostile or buggy header can demand before any payload arrives.
+pub const MAX_REQUEST_ROWS: usize = 1 << 20;
+
+/// Machine-readable error classes carried on `ERR` reply lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Transient backpressure (bounded queue full, or daemon draining):
+    /// the request was *not* served; resend after a short delay.
+    Retry,
+    /// Malformed request line or payload.
+    BadReq,
+    /// Row dimensionality does not match the serving model.
+    BadDim,
+    /// A `RELOAD` failed (unreadable/corrupt file); old model still serves.
+    Reload,
+    /// Handshake violation (bad hello, unsupported version).
+    Proto,
+}
+
+impl ErrCode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrCode::Retry => "RETRY",
+            ErrCode::BadReq => "BADREQ",
+            ErrCode::BadDim => "BADDIM",
+            ErrCode::Reload => "RELOAD",
+            ErrCode::Proto => "PROTO",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrCode> {
+        match s {
+            "RETRY" => Some(ErrCode::Retry),
+            "BADREQ" => Some(ErrCode::BadReq),
+            "BADDIM" => Some(ErrCode::BadDim),
+            "RELOAD" => Some(ErrCode::Reload),
+            "PROTO" => Some(ErrCode::Proto),
+            _ => None,
+        }
+    }
+}
+
+/// An `ERR <CODE> <message>` reply surfaced client-side as a typed error
+/// (wrap in `anyhow`; downcast to inspect the code).
+#[derive(Debug, Clone)]
+pub struct RemoteError {
+    pub code: ErrCode,
+    pub message: String,
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server replied ERR {}: {}", self.code.name(), self.message)
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
+impl RemoteError {
+    /// Is this the backpressure/drain class the client should retry?
+    pub fn is_retryable(&self) -> bool {
+        self.code == ErrCode::Retry
+    }
+}
+
+/// The model version tag as it appears on the wire (16 lowercase hex
+/// digits of the `.kmm` checksum).
+pub fn checksum_hex(sum: u64) -> String {
+    format!("{sum:016x}")
+}
+
+/// Format an `ERR` line; the message is flattened to one line so a framing
+/// cannot be broken by a multi-line error chain.
+pub fn err_line(code: ErrCode, message: &str) -> String {
+    let mut flat = message.replace(['\n', '\r'], " ");
+    const MAX: usize = 300;
+    if flat.len() > MAX {
+        let mut cut = MAX;
+        while !flat.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        flat.truncate(cut);
+        flat.push_str("...");
+    }
+    format!("ERR {} {flat}\n", code.name())
+}
+
+/// Parse the client hello (`CMSERVE <version>`); returns the version.
+pub fn parse_hello(line: &str) -> Result<u32> {
+    let mut it = line.split_ascii_whitespace();
+    match (it.next(), it.next(), it.next()) {
+        (Some("CMSERVE"), Some(v), None) => {
+            v.parse().context("hello version is not a number")
+        }
+        _ => bail!("bad hello {line:?} (expected \"CMSERVE <version>\")"),
+    }
+}
+
+/// One parsed predict request: `n` rows of `dim` coordinates, flattened
+/// row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictRequest {
+    pub rows: Vec<f64>,
+    pub n: usize,
+    pub dim: usize,
+}
+
+/// Parse the `BIN <nrows> <dim>` header (payload framing is the caller's
+/// job — it knows the stream).
+pub fn parse_bin_header(line: &str) -> Result<(usize, usize)> {
+    let rest = line
+        .strip_prefix("BIN")
+        .context("not a BIN header")?
+        .trim();
+    let mut it = rest.split_ascii_whitespace();
+    let (Some(n), Some(d), None) = (it.next(), it.next(), it.next()) else {
+        bail!("bad BIN header {line:?} (expected \"BIN <nrows> <dim>\")");
+    };
+    let n: usize = n.parse().context("BIN nrows")?;
+    let d: usize = d.parse().context("BIN dim")?;
+    if n == 0 || d == 0 {
+        bail!("BIN header rows and dim must be positive (got {n} x {d})");
+    }
+    if n > MAX_REQUEST_ROWS {
+        bail!("BIN header rows {n} exceeds the per-request cap {MAX_REQUEST_ROWS}");
+    }
+    Ok((n, d))
+}
+
+// ----- minimal JSON codec ----------------------------------------------
+
+/// Cursor over one JSON line. Only the constructs the protocol emits are
+/// understood: objects with string keys, arrays, numbers, strings without
+/// escapes, `true`/`false`.
+struct Cur<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(s: &'a str) -> Cur<'a> {
+        Cur { s: s.as_bytes(), i: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        self.skip_ws();
+        if self.s.get(self.i) == Some(&b) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!(
+                "JSON: expected {:?} at byte {}, found {:?}",
+                b as char,
+                self.i,
+                self.s.get(self.i).map(|&c| c as char)
+            );
+        }
+    }
+
+    /// `true` if the next non-space byte is `b` (consumed when matched).
+    fn eat_opt(&mut self, b: u8) -> bool {
+        if self.peek() == Some(b) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A string literal without escape handling (the protocol never emits
+    /// escapes; a client sending them gets a clean error).
+    fn string(&mut self) -> Result<&'a str> {
+        self.eat(b'"')?;
+        let start = self.i;
+        while let Some(&c) = self.s.get(self.i) {
+            if c == b'\\' {
+                bail!("JSON: escape sequences are not supported");
+            }
+            if c == b'"' {
+                let out = std::str::from_utf8(&self.s[start..self.i])
+                    .context("JSON: string is not UTF-8")?;
+                self.i += 1;
+                return Ok(out);
+            }
+            self.i += 1;
+        }
+        bail!("JSON: unterminated string");
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let start = self.i;
+        while let Some(&c) = self.s.get(self.i) {
+            if c.is_ascii_digit()
+                || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        if start == self.i {
+            bail!("JSON: expected a number at byte {start}");
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse().ok())
+            .with_context(|| format!("JSON: bad number at byte {start}"))
+    }
+
+    /// `[x, y, ...]` of numbers, appended to `out`; returns the count.
+    fn number_array(&mut self, out: &mut Vec<f64>) -> Result<usize> {
+        self.eat(b'[')?;
+        let mut count = 0usize;
+        if self.eat_opt(b']') {
+            return Ok(0);
+        }
+        loop {
+            out.push(self.number()?);
+            count += 1;
+            if self.eat_opt(b']') {
+                return Ok(count);
+            }
+            self.eat(b',')?;
+        }
+    }
+
+    fn done(&mut self) -> Result<()> {
+        self.skip_ws();
+        if self.i != self.s.len() {
+            bail!("JSON: trailing bytes after the document");
+        }
+        Ok(())
+    }
+}
+
+/// Parse a JSON predict request: `{"rows":[[...],...]}`. Every row must
+/// share one dimensionality; the total row count honors
+/// [`MAX_REQUEST_ROWS`].
+pub fn parse_json_request(line: &str) -> Result<PredictRequest> {
+    let mut c = Cur::new(line);
+    c.eat(b'{')?;
+    let key = c.string()?;
+    if key != "rows" {
+        bail!("JSON request: expected the \"rows\" key, got {key:?}");
+    }
+    c.eat(b':')?;
+    c.eat(b'[')?;
+    let mut rows = Vec::new();
+    let mut n = 0usize;
+    let mut dim = 0usize;
+    if !c.eat_opt(b']') {
+        loop {
+            let len = c.number_array(&mut rows)?;
+            if n == 0 {
+                dim = len;
+            } else if len != dim {
+                bail!(
+                    "JSON request: row {n} has {len} coordinates, expected {dim}"
+                );
+            }
+            n += 1;
+            if n > MAX_REQUEST_ROWS {
+                bail!(
+                    "JSON request: more than {MAX_REQUEST_ROWS} rows in one frame"
+                );
+            }
+            if c.eat_opt(b']') {
+                break;
+            }
+            c.eat(b',')?;
+        }
+    }
+    c.eat(b'}')?;
+    c.done()?;
+    if n == 0 || dim == 0 {
+        bail!("JSON request: empty rows");
+    }
+    Ok(PredictRequest { rows, n, dim })
+}
+
+/// Serialize a predict request as the JSON framing (client side).
+pub fn json_request(rows: &[f64], n: usize, dim: usize) -> String {
+    assert_eq!(rows.len(), n * dim, "flattened rows/shape mismatch");
+    let mut s = String::with_capacity(16 + rows.len() * 8);
+    s.push_str("{\"rows\":[");
+    for i in 0..n {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('[');
+        for (j, v) in rows[i * dim..(i + 1) * dim].iter().enumerate() {
+            if j > 0 {
+                s.push(',');
+            }
+            s.push_str(&v.to_string());
+        }
+        s.push(']');
+    }
+    s.push_str("]}\n");
+    s
+}
+
+/// One served predict result as the client sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictReply {
+    pub labels: Vec<u32>,
+    pub distances: Vec<f64>,
+    /// The serving model's version tag (16 hex digits).
+    pub model: String,
+    /// The strategy that answered (`tree` / `scan`).
+    pub mode: String,
+}
+
+/// Serialize a predict reply as the JSON framing (server side).
+pub fn json_reply(
+    labels: &[u32],
+    distances: &[f64],
+    model_hex: &str,
+    mode: &str,
+) -> String {
+    let mut s = String::with_capacity(64 + labels.len() * 12);
+    s.push_str("{\"ok\":true,\"model\":\"");
+    s.push_str(model_hex);
+    s.push_str("\",\"mode\":\"");
+    s.push_str(mode);
+    s.push_str("\",\"labels\":[");
+    for (i, l) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&l.to_string());
+    }
+    s.push_str("],\"distances\":[");
+    for (i, d) in distances.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&d.to_string());
+    }
+    s.push_str("]}\n");
+    s
+}
+
+/// Parse a JSON predict reply (client side). Keys are read in the fixed
+/// order [`json_reply`] writes them.
+pub fn parse_json_reply(line: &str) -> Result<PredictReply> {
+    let mut c = Cur::new(line);
+    c.eat(b'{')?;
+    let expect_key = |c: &mut Cur, want: &str| -> Result<()> {
+        let k = c.string()?;
+        if k != want {
+            bail!("JSON reply: expected key {want:?}, got {k:?}");
+        }
+        c.eat(b':')
+    };
+    expect_key(&mut c, "ok")?;
+    // `true` / `false` literal.
+    let ok = if c.eat_opt(b't') {
+        c.eat(b'r')?;
+        c.eat(b'u')?;
+        c.eat(b'e')?;
+        true
+    } else {
+        bail!("JSON reply: ok is not true");
+    };
+    debug_assert!(ok);
+    c.eat(b',')?;
+    expect_key(&mut c, "model")?;
+    let model = c.string()?.to_string();
+    c.eat(b',')?;
+    expect_key(&mut c, "mode")?;
+    let mode = c.string()?.to_string();
+    c.eat(b',')?;
+    expect_key(&mut c, "labels")?;
+    let mut raw = Vec::new();
+    c.number_array(&mut raw)?;
+    let labels = raw
+        .iter()
+        .map(|&v| {
+            if v.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&v) {
+                Ok(v as u32)
+            } else {
+                bail!("JSON reply: label {v} is not a u32")
+            }
+        })
+        .collect::<Result<Vec<u32>>>()?;
+    c.eat(b',')?;
+    expect_key(&mut c, "distances")?;
+    let mut distances = Vec::new();
+    c.number_array(&mut distances)?;
+    c.eat(b'}')?;
+    c.done()?;
+    if labels.len() != distances.len() {
+        bail!(
+            "JSON reply: {} labels but {} distances",
+            labels.len(),
+            distances.len()
+        );
+    }
+    Ok(PredictReply { labels, distances, model, mode })
+}
+
+/// Split an `ERR <CODE> <message>` line into a [`RemoteError`]; `None` if
+/// the line is not an error reply.
+pub fn parse_err_line(line: &str) -> Option<RemoteError> {
+    let rest = line.strip_prefix("ERR ")?;
+    let (code, msg) = rest.split_once(' ').unwrap_or((rest, ""));
+    Some(RemoteError {
+        code: ErrCode::parse(code)?,
+        message: msg.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrip() {
+        assert_eq!(parse_hello("CMSERVE 1").unwrap(), 1);
+        assert_eq!(parse_hello("CMSERVE 7").unwrap(), 7);
+        assert!(parse_hello("HTTP/1.1 GET /").is_err());
+        assert!(parse_hello("CMSERVE").is_err());
+        assert!(parse_hello("CMSERVE one").is_err());
+    }
+
+    #[test]
+    fn json_request_roundtrip() {
+        let rows = vec![1.5, -2.0, 3.25, 1e-3, 0.0, f64::MIN_POSITIVE];
+        let line = json_request(&rows, 2, 3);
+        let req = parse_json_request(line.trim_end()).unwrap();
+        assert_eq!(req.n, 2);
+        assert_eq!(req.dim, 3);
+        for (a, b) in req.rows.iter().zip(&rows) {
+            assert_eq!(a.to_bits(), b.to_bits(), "shortest-round-trip floats");
+        }
+    }
+
+    #[test]
+    fn json_request_rejects_malformed() {
+        for bad in [
+            "",
+            "{}",
+            "{\"rows\":[]}",
+            "{\"rows\":[[]]}",
+            "{\"rows\":[[1,2],[3]]}",
+            "{\"points\":[[1]]}",
+            "{\"rows\":[[1,2]]} trailing",
+            "{\"rows\":[[1,\"x\"]]}",
+        ] {
+            assert!(parse_json_request(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn json_reply_roundtrip() {
+        let line = json_reply(
+            &[3, 0, 4_000_000_000],
+            &[0.5, 1.25e-7, 2.0],
+            "00ff00ff00ff00ff",
+            "tree",
+        );
+        let r = parse_json_reply(line.trim_end()).unwrap();
+        assert_eq!(r.labels, vec![3, 0, 4_000_000_000]);
+        assert_eq!(r.distances, vec![0.5, 1.25e-7, 2.0]);
+        assert_eq!(r.model, "00ff00ff00ff00ff");
+        assert_eq!(r.mode, "tree");
+    }
+
+    #[test]
+    fn bin_header_bounds() {
+        assert_eq!(parse_bin_header("BIN 4 8").unwrap(), (4, 8));
+        assert!(parse_bin_header("BIN 0 8").is_err());
+        assert!(parse_bin_header("BIN 4 0").is_err());
+        assert!(parse_bin_header("BIN 4").is_err());
+        assert!(parse_bin_header("BIN 4 8 junk").is_err());
+        assert!(parse_bin_header(&format!("BIN {} 8", MAX_REQUEST_ROWS + 1)).is_err());
+    }
+
+    #[test]
+    fn err_lines_roundtrip_and_stay_single_line() {
+        let line = err_line(ErrCode::Retry, "queue full\nat depth 64");
+        assert_eq!(line.matches('\n').count(), 1, "one trailing newline only");
+        let e = parse_err_line(line.trim_end()).unwrap();
+        assert_eq!(e.code, ErrCode::Retry);
+        assert!(e.is_retryable());
+        assert!(e.message.contains("queue full"));
+        assert!(parse_err_line("BINOK 3 abc").is_none());
+        for c in [
+            ErrCode::Retry,
+            ErrCode::BadReq,
+            ErrCode::BadDim,
+            ErrCode::Reload,
+            ErrCode::Proto,
+        ] {
+            assert_eq!(ErrCode::parse(c.name()), Some(c));
+        }
+    }
+
+    #[test]
+    fn checksum_hex_is_16_digits() {
+        assert_eq!(checksum_hex(0), "0000000000000000");
+        assert_eq!(checksum_hex(u64::MAX), "ffffffffffffffff");
+        assert_eq!(checksum_hex(0xdead_beef), "00000000deadbeef");
+    }
+}

@@ -1,0 +1,782 @@
+//! The resident daemon: accept loop, coalescing batcher, atomic
+//! hot-reload, and graceful drain.
+//!
+//! Data flow:
+//!
+//! ```text
+//! accept loop ──spawn──▶ connection handlers ──try_send──▶ bounded queue
+//!                                                              │
+//!                              per-job reply channel ◀── batcher thread
+//!                                                     (one warm Parallelism
+//!                                                      pool, one predict_par
+//!                                                      pass per batch)
+//! ```
+//!
+//! The queue is a [`std::sync::mpsc::sync_channel`] of depth
+//! `queue_depth`: when the batcher falls behind, `try_send` fails fast
+//! and the handler answers `ERR RETRY` instead of buffering without
+//! bound — that refusal *is* the backpressure contract. The batcher
+//! drains up to `max_batch` rows or waits `batch_wait_us` after the
+//! first job, whichever ends first, then runs a single
+//! [`KMeansModel::predict_par_with`] pass and scatters the label /
+//! distance slices back to each connection.
+//!
+//! Hot-reload (`RELOAD` verb or SIGHUP) re-reads the model file and
+//! swaps an `Arc<KMeansModel>` behind an [`RwLock`] **only after** the
+//! bytes parse and their checksum verifies ([`KMeansModel::from_bytes`]
+//! rejects corrupt or truncated files), so a bad file on disk can never
+//! change served output. Each reply carries the serving model's checksum
+//! as a version tag, so clients observe exactly when a swap landed.
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::protocol::{
+    self, ErrCode, PredictRequest, MAX_REQUEST_ROWS, PROTOCOL_VERSION,
+};
+use super::stats::ServeStats;
+use crate::data::Matrix;
+use crate::kmeans::{KMeansModel, PredictMode};
+use crate::parallel::Parallelism;
+
+/// How a [`Server`] is built; the CLI fills this from [`crate::config`]
+/// keys, tests construct it directly.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// The `.kmm` file served — also the hot-reload source.
+    pub model_path: PathBuf,
+    /// Bind address (`HOST:PORT`; port `0` picks an ephemeral port).
+    pub addr: String,
+    /// Max rows coalesced into one predict pass (config `max_batch`).
+    pub max_batch: usize,
+    /// How long the batcher waits after the first queued job for more
+    /// rows to coalesce, in microseconds (config `batch_wait_us`).
+    pub batch_wait_us: u64,
+    /// Bound of the handler→batcher job queue (config `queue_depth`);
+    /// a full queue rejects with `ERR RETRY`.
+    pub queue_depth: usize,
+    /// Query strategy (config `predict_mode`).
+    pub mode: PredictMode,
+    /// [`PredictMode::Auto`] cutoff (config `predict_auto_k`).
+    pub auto_k: usize,
+    /// Worker threads of the daemon-lifetime pool (config `threads`;
+    /// 0 = all cores). Labels are thread-count invariant.
+    pub threads: usize,
+    /// Register SIGHUP (reload) and SIGINT/SIGTERM (shutdown) handlers.
+    /// Only the CLI sets this — signal handlers are process-global, so
+    /// in-process tests must leave it off.
+    pub install_signal_handlers: bool,
+}
+
+impl ServeConfig {
+    /// A config for in-process tests: ephemeral port, no signal
+    /// handlers, everything else from the given knobs.
+    pub fn for_tests(model_path: PathBuf) -> ServeConfig {
+        ServeConfig {
+            model_path,
+            addr: "127.0.0.1:0".to_string(),
+            max_batch: 1024,
+            batch_wait_us: 200,
+            queue_depth: 64,
+            mode: PredictMode::Auto,
+            auto_k: crate::kmeans::DEFAULT_PREDICT_AUTO_K,
+            threads: 1,
+            install_signal_handlers: false,
+        }
+    }
+}
+
+/// One queued predict job plus the channel its reply scatters back on.
+struct Job {
+    rows: Vec<f64>,
+    n: usize,
+    dim: usize,
+    reply: mpsc::Sender<BatchReply>,
+}
+
+/// What the batcher hands back to a waiting connection handler.
+enum BatchReply {
+    Ok {
+        labels: Vec<u32>,
+        distances: Vec<f64>,
+        checksum: u64,
+        mode: PredictMode,
+    },
+    /// The serving model changed dimensionality between the handler's
+    /// check and the batch run (a hot-reload race); the handler turns
+    /// this into `ERR BADDIM`.
+    WrongDim { expected: usize },
+}
+
+/// State shared by the accept loop, handlers, and batcher.
+struct Shared {
+    cfg: ServeConfig,
+    /// The serving model; reload writes, everything else read-clones the
+    /// `Arc` (the pointer-swap that makes reload atomic).
+    model: RwLock<Arc<KMeansModel>>,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+    /// Live connection handlers (drain barrier for graceful shutdown).
+    conns: AtomicUsize,
+    /// Producer side of the job queue; `None` once draining has begun,
+    /// so late requests fail fast with `ERR RETRY`.
+    queue: Mutex<Option<SyncSender<Job>>>,
+}
+
+impl Shared {
+    fn current_model(&self) -> Arc<KMeansModel> {
+        self.model.read().unwrap().clone()
+    }
+
+    /// Re-read `model_path`; swap only if the bytes parse and verify.
+    fn reload(&self) -> Result<u64> {
+        let attempt = || -> Result<Arc<KMeansModel>> {
+            let bytes = std::fs::read(&self.cfg.model_path).with_context(|| {
+                format!("read model {:?}", self.cfg.model_path)
+            })?;
+            let model = KMeansModel::from_bytes(&bytes)?;
+            Ok(Arc::new(model))
+        };
+        match attempt() {
+            Ok(model) => {
+                let prep = model.prewarm(self.cfg.mode, self.cfg.auto_k);
+                ServeStats::add(&self.stats.prep_evals, prep);
+                let sum = model.checksum();
+                *self.model.write().unwrap() = model;
+                ServeStats::bump(&self.stats.reload_ok);
+                Ok(sum)
+            }
+            Err(e) => {
+                ServeStats::bump(&self.stats.reload_fail);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// A running daemon. [`Server::start`] binds and spawns the threads;
+/// [`Server::wait`] blocks until shutdown and drains; dropping the
+/// handle shuts down too.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+    batch_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load the model, prewarm the serving index, bind, and start
+    /// serving. Returns once the listener is live (`addr()` is final).
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let model = Arc::new(
+            KMeansModel::load(&cfg.model_path)
+                .with_context(|| format!("load model {:?}", cfg.model_path))?,
+        );
+        let stats = ServeStats::new();
+        let prep = model.prewarm(cfg.mode, cfg.auto_k);
+        ServeStats::add(&stats.prep_evals, prep);
+
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {:?}", cfg.addr))?;
+        let addr = listener.local_addr().context("listener local_addr")?;
+        listener
+            .set_nonblocking(true)
+            .context("set listener nonblocking")?;
+
+        if cfg.install_signal_handlers {
+            signals::install();
+        }
+
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
+        let shared = Arc::new(Shared {
+            cfg,
+            model: RwLock::new(model),
+            stats,
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            queue: Mutex::new(Some(tx)),
+        });
+
+        let batch_thread = {
+            let shared = shared.clone();
+            thread::Builder::new()
+                .name("serve-batcher".to_string())
+                .spawn(move || batcher_loop(&shared, rx))
+                .context("spawn batcher thread")?
+        };
+        let accept_thread = {
+            let shared = shared.clone();
+            thread::Builder::new()
+                .name("serve-accept".to_string())
+                .spawn(move || accept_loop(&shared, listener))
+                .context("spawn accept thread")?
+        };
+
+        Ok(Server {
+            shared,
+            addr,
+            accept_thread: Some(accept_thread),
+            batch_thread: Some(batch_thread),
+        })
+    }
+
+    /// The bound address (resolves port `0` to the ephemeral pick).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Checksum (version tag) of the model currently serving.
+    pub fn model_checksum(&self) -> u64 {
+        self.shared.current_model().checksum()
+    }
+
+    /// JSON snapshot of the daemon counters.
+    pub fn stats_json(&self) -> String {
+        self.shared.stats.snapshot_json()
+    }
+
+    /// Trigger a hot-reload (same path as the `RELOAD` verb / SIGHUP).
+    pub fn reload(&self) -> Result<u64> {
+        self.shared.reload()
+    }
+
+    /// Ask the daemon to stop; returns immediately. Pair with
+    /// [`Server::wait`] to block until the drain completes.
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until shutdown is requested (flag, signal, or `SHUTDOWN`
+    /// verb), then drain: stop accepting, let in-flight handlers get
+    /// their batched replies, and join the batcher.
+    pub fn wait(&mut self) -> Result<()> {
+        if let Some(t) = self.accept_thread.take() {
+            t.join().ok();
+        }
+        // Handlers still hold queue senders and blocked `recv()`s; the
+        // batcher is alive, so every in-flight batch completes. Give the
+        // handlers a bounded window to observe the flag and finish.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.shared.conns.load(Ordering::SeqCst) > 0
+            && Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(5));
+        }
+        // Dropping the master sender lets the batcher drain whatever is
+        // still buffered and then exit on Disconnected.
+        self.shared.queue.lock().unwrap().take();
+        if let Some(t) = self.batch_thread.take() {
+            t.join().ok();
+        }
+        Ok(())
+    }
+
+    /// `request_shutdown` + `wait` in one call.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.request_shutdown();
+        self.wait()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.request_shutdown();
+        let _ = self.wait();
+    }
+}
+
+// ----- accept loop ------------------------------------------------------
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    loop {
+        if shared.cfg.install_signal_handlers {
+            if signals::take_shutdown() {
+                shared.shutdown.store(true, Ordering::SeqCst);
+            }
+            if signals::take_reload() {
+                match shared.reload() {
+                    Ok(sum) => eprintln!(
+                        "serve: SIGHUP reload ok, model {}",
+                        protocol::checksum_hex(sum)
+                    ),
+                    Err(e) => eprintln!(
+                        "serve: SIGHUP reload failed ({e:#}); old model keeps serving"
+                    ),
+                }
+            }
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let conn_shared = shared.clone();
+                let spawned = thread::Builder::new()
+                    .name("serve-conn".to_string())
+                    .spawn(move || {
+                        let _guard = ConnGuard(&conn_shared.conns);
+                        handle_connection(&conn_shared, stream);
+                    });
+                if spawned.is_err() {
+                    shared.conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Decrements the live-connection count however the handler exits.
+struct ConnGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ----- connection handler -----------------------------------------------
+
+/// Read timeout used to keep handlers responsive to the shutdown flag.
+const POLL_TIMEOUT: Duration = Duration::from_millis(100);
+/// Overall deadline for one request's payload bytes to arrive.
+const PAYLOAD_DEADLINE: Duration = Duration::from_secs(10);
+
+fn handle_connection(shared: &Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(POLL_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+
+    // Handshake.
+    let Some(hello) = read_line(shared, &mut reader) else {
+        return;
+    };
+    match protocol::parse_hello(hello.trim_end()) {
+        Ok(v) if v == PROTOCOL_VERSION => {}
+        Ok(v) => {
+            let _ = writer.write_all(
+                protocol::err_line(
+                    ErrCode::Proto,
+                    &format!("unsupported protocol version {v} (want {PROTOCOL_VERSION})"),
+                )
+                .as_bytes(),
+            );
+            return;
+        }
+        Err(e) => {
+            let _ = writer
+                .write_all(protocol::err_line(ErrCode::Proto, &format!("{e:#}")).as_bytes());
+            return;
+        }
+    }
+    {
+        let m = shared.current_model();
+        let greet = format!(
+            "OK covermeans-serve {PROTOCOL_VERSION} model {} k {} dim {}\n",
+            protocol::checksum_hex(m.checksum()),
+            m.k(),
+            m.dim()
+        );
+        if writer.write_all(greet.as_bytes()).is_err() {
+            return;
+        }
+    }
+
+    // Request loop.
+    while let Some(line) = read_line(shared, &mut reader) {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        let reply_done = if line.starts_with('{') {
+            match protocol::parse_json_request(line) {
+                Ok(req) => serve_predict(shared, &mut writer, req, Framing::Json),
+                Err(e) => write_err(&mut writer, ErrCode::BadReq, &format!("{e:#}")),
+            }
+        } else if line.starts_with("BIN") {
+            match read_bin_request(shared, &mut reader, line) {
+                Ok(Some(req)) => {
+                    serve_predict(shared, &mut writer, req, Framing::Bin)
+                }
+                Ok(None) => return, // shutdown or EOF mid-payload
+                Err(e) => write_err(&mut writer, ErrCode::BadReq, &format!("{e:#}")),
+            }
+        } else {
+            match line {
+                "PING" => {
+                    let sum = shared.current_model().checksum();
+                    writer
+                        .write_all(
+                            format!("PONG {}\n", protocol::checksum_hex(sum)).as_bytes(),
+                        )
+                        .is_ok()
+                }
+                "STATS" => {
+                    let mut snap = shared.stats.snapshot_json();
+                    snap.push('\n');
+                    writer.write_all(snap.as_bytes()).is_ok()
+                }
+                "RELOAD" => match shared.reload() {
+                    Ok(sum) => writer
+                        .write_all(
+                            format!("RELOADED {}\n", protocol::checksum_hex(sum))
+                                .as_bytes(),
+                        )
+                        .is_ok(),
+                    Err(e) => {
+                        write_err(&mut writer, ErrCode::Reload, &format!("{e:#}"))
+                    }
+                },
+                "QUIT" => {
+                    let _ = writer.write_all(b"BYE\n");
+                    return;
+                }
+                "SHUTDOWN" => {
+                    let _ = writer.write_all(b"BYE\n");
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    return;
+                }
+                other => write_err(
+                    &mut writer,
+                    ErrCode::BadReq,
+                    &format!("unknown verb {other:?}"),
+                ),
+            }
+        };
+        if !reply_done {
+            return;
+        }
+    }
+}
+
+/// Read one line, riding out read timeouts while the daemon is alive.
+/// Returns `None` on EOF, hard error, or shutdown.
+fn read_line(shared: &Shared, reader: &mut BufReader<TcpStream>) -> Option<String> {
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => return None,
+            Ok(_) => {
+                if buf.ends_with('\n') {
+                    return Some(buf);
+                }
+                // Partial line straddling a timeout boundary: keep going.
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return None;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Read the raw-f64 payload that follows a `BIN` header. `Ok(None)`
+/// means the connection died or the daemon is draining.
+fn read_bin_request(
+    shared: &Shared,
+    reader: &mut BufReader<TcpStream>,
+    header: &str,
+) -> Result<Option<PredictRequest>> {
+    let (n, dim) = protocol::parse_bin_header(header)?;
+    let total = n
+        .checked_mul(dim)
+        .and_then(|c| c.checked_mul(8))
+        .context("BIN payload size overflows")?;
+    let mut payload = vec![0u8; total];
+    let mut filled = 0usize;
+    let deadline = Instant::now() + PAYLOAD_DEADLINE;
+    while filled < total {
+        match reader.read(&mut payload[filled..]) {
+            Ok(0) => return Ok(None),
+            Ok(got) => filled += got,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst)
+                    || Instant::now() > deadline
+                {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return Ok(None),
+        }
+    }
+    let rows: Vec<f64> = payload
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Some(PredictRequest { rows, n, dim }))
+}
+
+enum Framing {
+    Json,
+    Bin,
+}
+
+/// Enqueue one predict job, wait for the batcher's scatter, and write the
+/// reply in the request's framing. Returns `false` when the connection
+/// should close.
+fn serve_predict(
+    shared: &Arc<Shared>,
+    writer: &mut TcpStream,
+    req: PredictRequest,
+    framing: Framing,
+) -> bool {
+    debug_assert!(req.n <= MAX_REQUEST_ROWS);
+    {
+        let m = shared.current_model();
+        if req.dim != m.dim() {
+            return write_err(
+                writer,
+                ErrCode::BadDim,
+                &format!("request dim {} but model dim {}", req.dim, m.dim()),
+            );
+        }
+    }
+    let tx = match shared.queue.lock().unwrap().as_ref() {
+        Some(tx) => tx.clone(),
+        None => {
+            return write_err(writer, ErrCode::Retry, "daemon is shutting down")
+        }
+    };
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let job = Job {
+        rows: req.rows,
+        n: req.n,
+        dim: req.dim,
+        reply: reply_tx,
+    };
+    match tx.try_send(job) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            ServeStats::bump(&shared.stats.queue_full_rejects);
+            return write_err(
+                writer,
+                ErrCode::Retry,
+                &format!(
+                    "batch queue full (depth {}), retry later",
+                    shared.cfg.queue_depth
+                ),
+            );
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            return write_err(writer, ErrCode::Retry, "daemon is shutting down")
+        }
+    }
+    ServeStats::bump(&shared.stats.requests);
+    // The batcher either answers or drops the job's reply sender (its
+    // loop never blocks forever), so this recv cannot deadlock.
+    match reply_rx.recv() {
+        Ok(BatchReply::Ok { labels, distances, checksum, mode }) => {
+            let hex = protocol::checksum_hex(checksum);
+            match framing {
+                Framing::Json => {
+                    let line =
+                        protocol::json_reply(&labels, &distances, &hex, mode.name());
+                    writer.write_all(line.as_bytes()).is_ok()
+                }
+                Framing::Bin => {
+                    let mut out = Vec::with_capacity(
+                        32 + labels.len() * 4 + distances.len() * 8,
+                    );
+                    out.extend_from_slice(
+                        format!("BINOK {} {hex}\n", labels.len()).as_bytes(),
+                    );
+                    for l in &labels {
+                        out.extend_from_slice(&l.to_le_bytes());
+                    }
+                    for d in &distances {
+                        out.extend_from_slice(&d.to_le_bytes());
+                    }
+                    writer.write_all(&out).is_ok()
+                }
+            }
+        }
+        Ok(BatchReply::WrongDim { expected }) => write_err(
+            writer,
+            ErrCode::BadDim,
+            &format!("model dim changed to {expected} during a hot-reload"),
+        ),
+        Err(_) => write_err(writer, ErrCode::Retry, "batch dropped during drain"),
+    }
+}
+
+fn write_err(writer: &mut TcpStream, code: ErrCode, msg: &str) -> bool {
+    writer
+        .write_all(protocol::err_line(code, msg).as_bytes())
+        .is_ok()
+}
+
+// ----- batcher ----------------------------------------------------------
+
+/// Idle poll period: how often an empty batcher rechecks for exit.
+const IDLE_POLL: Duration = Duration::from_millis(25);
+
+fn batcher_loop(shared: &Arc<Shared>, rx: Receiver<Job>) {
+    // One pool for the daemon lifetime: worker threads and their parked
+    // condvars persist across batches (no per-request spawn cost).
+    let par = Parallelism::new(shared.cfg.threads);
+    loop {
+        let first = match rx.recv_timeout(IDLE_POLL) {
+            Ok(job) => job,
+            Err(RecvTimeoutError::Timeout) => continue,
+            // All senders gone: the master sender was dropped by the
+            // drain and no handler holds a clone — nothing can arrive.
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        let mut jobs = vec![first];
+        let mut total = jobs[0].n;
+        let deadline =
+            Instant::now() + Duration::from_micros(shared.cfg.batch_wait_us);
+        while total < shared.cfg.max_batch {
+            let now = Instant::now();
+            let job = if now >= deadline {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            };
+            total += job.n;
+            jobs.push(job);
+        }
+        run_batch(shared, &par, jobs);
+    }
+}
+
+/// One coalesced pass: snapshot the model, predict all matching rows,
+/// scatter per-job slices.
+fn run_batch(shared: &Arc<Shared>, par: &Parallelism, jobs: Vec<Job>) {
+    let model = shared.current_model();
+    let dim = model.dim();
+    let mut ok_jobs = Vec::with_capacity(jobs.len());
+    let mut rows = Vec::new();
+    for job in jobs {
+        if job.dim != dim {
+            // Raced a hot-reload that changed dimensionality.
+            let _ = job.reply.send(BatchReply::WrongDim { expected: dim });
+            continue;
+        }
+        rows.extend_from_slice(&job.rows);
+        ok_jobs.push(job);
+    }
+    if ok_jobs.is_empty() {
+        return;
+    }
+    let n: usize = ok_jobs.iter().map(|j| j.n).sum();
+    let data = Matrix::from_vec(rows, n, dim);
+    let pred = model.predict_par_with(
+        &data,
+        shared.cfg.mode,
+        shared.cfg.auto_k,
+        par,
+    );
+    ServeStats::bump(&shared.stats.batches);
+    ServeStats::add(&shared.stats.rows, n as u64);
+    ServeStats::add(&shared.stats.query_evals, pred.query_evals);
+    ServeStats::add(&shared.stats.prep_evals, pred.prep_evals);
+    let checksum = model.checksum();
+    let mut at = 0usize;
+    for job in ok_jobs {
+        let labels = pred.labels[at..at + job.n].to_vec();
+        let distances = pred.distances[at..at + job.n].to_vec();
+        at += job.n;
+        // A handler that gave up (dead connection) just drops its
+        // receiver; that is not the batcher's problem.
+        let _ = job.reply.send(BatchReply::Ok {
+            labels,
+            distances,
+            checksum,
+            mode: pred.mode,
+        });
+    }
+}
+
+// ----- signals ----------------------------------------------------------
+
+/// SIGHUP → reload, SIGINT/SIGTERM → shutdown, via process-global atomic
+/// flags the accept loop polls. Raw `signal(2)` FFI keeps the crate
+/// dependency-free; handlers only store to atomics (async-signal-safe).
+#[cfg(unix)]
+pub mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+    static RELOAD: AtomicBool = AtomicBool::new(false);
+
+    const SIGHUP: i32 = 1;
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+
+    extern "C" fn on_shutdown(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" fn on_reload(_sig: i32) {
+        RELOAD.store(true, Ordering::SeqCst);
+    }
+
+    /// Register the handlers (idempotent; CLI daemon only).
+    pub fn install() {
+        unsafe {
+            signal(SIGHUP, on_reload);
+            signal(SIGINT, on_shutdown);
+            signal(SIGTERM, on_shutdown);
+        }
+    }
+
+    pub fn take_shutdown() -> bool {
+        SHUTDOWN.swap(false, Ordering::SeqCst)
+    }
+
+    pub fn take_reload() -> bool {
+        RELOAD.swap(false, Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+pub mod signals {
+    /// No-op off unix: the `RELOAD`/`SHUTDOWN` verbs still work.
+    pub fn install() {}
+
+    pub fn take_shutdown() -> bool {
+        false
+    }
+
+    pub fn take_reload() -> bool {
+        false
+    }
+}

@@ -1,0 +1,108 @@
+//! Per-daemon counters behind the `STATS` verb.
+//!
+//! Every counter is a relaxed [`AtomicU64`]: the numbers are an
+//! observability surface (throughput claims, reject rates, reload
+//! health), not a synchronization mechanism, so no ordering stronger
+//! than `Relaxed` is needed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters accumulated over the daemon lifetime.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Predict requests accepted into the batch queue.
+    pub requests: AtomicU64,
+    /// Data rows served (sum of request sizes that got an `OK` reply).
+    pub rows: AtomicU64,
+    /// Coalesced batches executed by the batcher.
+    pub batches: AtomicU64,
+    /// Predict requests rejected with `ERR RETRY` because the bounded
+    /// queue was full (the backpressure path).
+    pub queue_full_rejects: AtomicU64,
+    /// Hot-reloads that parsed, verified, and swapped in a new model.
+    pub reload_ok: AtomicU64,
+    /// Hot-reload attempts that failed (old model kept serving).
+    pub reload_fail: AtomicU64,
+    /// Point-center distance evaluations spent answering queries.
+    pub query_evals: AtomicU64,
+    /// Distance evaluations spent building serving indexes (initial
+    /// prewarm plus every successful reload).
+    pub prep_evals: AtomicU64,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    pub fn add(field: &AtomicU64, n: u64) {
+        field.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn get(field: &AtomicU64) -> u64 {
+        field.load(Ordering::Relaxed)
+    }
+
+    /// One-line JSON snapshot (the `STATS` reply body).
+    pub fn snapshot_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"requests\":{},\"rows\":{},\"batches\":{},",
+                "\"queue_full_rejects\":{},\"reload_ok\":{},",
+                "\"reload_fail\":{},\"query_evals\":{},\"prep_evals\":{}}}"
+            ),
+            Self::get(&self.requests),
+            Self::get(&self.rows),
+            Self::get(&self.batches),
+            Self::get(&self.queue_full_rejects),
+            Self::get(&self.reload_ok),
+            Self::get(&self.reload_fail),
+            Self::get(&self.query_evals),
+            Self::get(&self.prep_evals),
+        )
+    }
+}
+
+/// Pull one `"key":value` counter out of a [`ServeStats::snapshot_json`]
+/// line — enough JSON for tests and the CLI's final stats print.
+pub fn counter(snapshot: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = snapshot.find(&pat)? + pat.len();
+    let rest = &snapshot[at..];
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_carries_every_counter() {
+        let s = ServeStats::new();
+        ServeStats::add(&s.requests, 7);
+        ServeStats::add(&s.rows, 700);
+        ServeStats::bump(&s.batches);
+        ServeStats::bump(&s.queue_full_rejects);
+        ServeStats::add(&s.reload_ok, 2);
+        ServeStats::add(&s.reload_fail, 3);
+        ServeStats::add(&s.query_evals, 41);
+        ServeStats::add(&s.prep_evals, 13);
+        let snap = s.snapshot_json();
+        assert_eq!(counter(&snap, "requests"), Some(7));
+        assert_eq!(counter(&snap, "rows"), Some(700));
+        assert_eq!(counter(&snap, "batches"), Some(1));
+        assert_eq!(counter(&snap, "queue_full_rejects"), Some(1));
+        assert_eq!(counter(&snap, "reload_ok"), Some(2));
+        assert_eq!(counter(&snap, "reload_fail"), Some(3));
+        assert_eq!(counter(&snap, "query_evals"), Some(41));
+        assert_eq!(counter(&snap, "prep_evals"), Some(13));
+        assert_eq!(counter(&snap, "nope"), None);
+    }
+}

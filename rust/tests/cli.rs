@@ -1,0 +1,137 @@
+//! CLI error-handling contract: malformed flags, missing required
+//! arguments, invalid config values, and nonexistent files must exit
+//! nonzero with a one-line `error: ...` diagnostic on stderr — never a
+//! panic, never a silent success.
+
+use std::process::{Command, Output};
+
+fn covermeans(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_covermeans"))
+        .args(args)
+        .output()
+        .expect("spawn covermeans")
+}
+
+/// Assert a nonzero exit with a single diagnosable `error:` line whose
+/// text mentions every given needle.
+fn assert_fails(args: &[&str], needles: &[&str]) {
+    let out = covermeans(args);
+    assert!(
+        !out.status.success(),
+        "`covermeans {}` must exit nonzero",
+        args.join(" ")
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let error_lines: Vec<&str> =
+        stderr.lines().filter(|l| l.starts_with("error: ")).collect();
+    assert_eq!(
+        error_lines.len(),
+        1,
+        "`covermeans {}` must print exactly one error line, got stderr:\n{stderr}",
+        args.join(" ")
+    );
+    assert!(
+        !stderr.contains("panicked"),
+        "`covermeans {}` panicked:\n{stderr}",
+        args.join(" ")
+    );
+    for needle in needles {
+        assert!(
+            error_lines[0].contains(needle),
+            "`covermeans {}`: error line {:?} does not mention {needle:?}",
+            args.join(" "),
+            error_lines[0]
+        );
+    }
+}
+
+#[test]
+fn unknown_command_fails() {
+    assert_fails(&["frobnicate"], &["unknown command", "frobnicate"]);
+}
+
+#[test]
+fn malformed_flags_fail() {
+    // Positional junk where a --flag is expected.
+    assert_fails(&["run", "dataset"], &["expected --key"]);
+    // A flag with no value.
+    assert_fails(&["run", "--dataset"], &["--dataset needs a value"]);
+    // A typo'd flag must be rejected, not silently ignored.
+    assert_fails(&["run", "--datset", "aloi64"], &["unknown flag", "datset"]);
+    assert_fails(&["predict", "--modle", "x.kmm"], &["unknown flag", "modle"]);
+    assert_fails(&["serve", "--adr", "127.0.0.1:0"], &["unknown flag", "adr"]);
+    assert_fails(&["table", "--ids", "2"], &["unknown flag", "ids"]);
+    assert_fails(&["fig1", "--axis", "d"], &["unknown flag", "axis"]);
+}
+
+#[test]
+fn invalid_config_values_fail() {
+    assert_fails(&["run", "--k", "0"], &["k"]);
+    assert_fails(&["run", "--scale", "-1"], &["scale"]);
+    assert_fails(&["run", "--scale", "nan"], &["scale"]);
+    assert_fails(&["serve", "--queue_depth", "0"], &["queue_depth"]);
+    assert_fails(&["serve", "--max_batch", "0"], &["max_batch"]);
+    assert_fails(&["predict", "--predict_auto_k", "0"], &["predict_auto_k"]);
+    assert_fails(&["run", "--predict_mode", "psychic"], &["predict_mode"]);
+}
+
+#[test]
+fn missing_required_flags_fail() {
+    assert_fails(&["predict"], &["--model"]);
+    assert_fails(&["serve"], &["--model"]);
+    assert_fails(
+        &["predict", "--model", "m.kmm"],
+        &["--input"],
+    );
+}
+
+#[test]
+fn nonexistent_files_fail() {
+    assert_fails(
+        &["predict", "--model", "/nonexistent/m.kmm", "--input", "/nonexistent/q.csv"],
+        &["m.kmm"],
+    );
+    assert_fails(
+        &["serve", "--model", "/nonexistent/m.kmm"],
+        &["m.kmm"],
+    );
+    assert_fails(
+        &["run", "--config", "/nonexistent/cfg.toml"],
+        &["cfg.toml"],
+    );
+}
+
+#[test]
+fn bad_serve_addr_fails() {
+    let dir = std::env::temp_dir()
+        .join(format!("covermeans_cli_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.kmm");
+    let train = covermeans::data::synth::gaussian_blobs(200, 4, 4, 0.5, 9);
+    let model = covermeans::kmeans::KMeans::new(4)
+        .seed(9)
+        .fit_model(&train)
+        .unwrap();
+    model.save(&path).unwrap();
+    assert_fails(
+        &["serve", "--model", path.to_str().unwrap(), "--addr", "not-an-addr"],
+        &["bind", "not-an-addr"],
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn help_and_datasets_succeed() {
+    for args in [&["help"][..], &["datasets"][..], &[][..]] {
+        let out = covermeans(args);
+        assert!(
+            out.status.success(),
+            "`covermeans {}` must exit 0",
+            args.join(" ")
+        );
+    }
+    let help = covermeans(&["help"]);
+    let text = String::from_utf8_lossy(&help.stdout);
+    assert!(text.contains("serve"), "help must document the serve verb");
+    assert!(text.contains("predict_auto_k"), "help must list the new keys");
+}

@@ -74,7 +74,7 @@ fn save_load_predict_roundtrip_across_algorithms() {
         // and both match the naive scan.
         let (want_labels, want_dists, _) = naive_predict(&queries, model.centers());
         for mode in [PredictMode::Tree, PredictMode::Scan] {
-            let opts = PredictOptions { mode, threads: 1 };
+            let opts = PredictOptions { mode, ..Default::default() };
             let fresh = model.predict_opts(&queries, &opts);
             let served = loaded.predict_opts(&queries, &opts);
             assert_eq!(fresh.labels, want_labels, "{} {}", alg.name(), mode.name());
@@ -103,7 +103,7 @@ fn tree_predict_beats_naive_scan_at_high_k() {
         .unwrap();
     let p = model.predict_opts(
         &queries,
-        &PredictOptions { mode: PredictMode::Auto, threads: 1 },
+        &PredictOptions { mode: PredictMode::Auto, ..Default::default() },
     );
     assert_eq!(p.mode, PredictMode::Tree, "auto must pick the tree at k=64");
     let naive = (queries.rows() * k) as u64;
@@ -126,7 +126,7 @@ fn tree_predict_beats_naive_scan_at_high_k() {
     // the inter-center matrix, charged to prep once).
     let scan = model.predict_opts(
         &queries,
-        &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+        &PredictOptions { mode: PredictMode::Scan, ..Default::default() },
     );
     assert_eq!(scan.labels, want);
     assert!(
@@ -153,7 +153,7 @@ fn predict_reuses_fit_workspace_pool() {
     let pooled = model.predict_par(&queries, PredictMode::Scan, &ws.parallelism(4));
     let sequential = model.predict_opts(
         &queries,
-        &PredictOptions { mode: PredictMode::Scan, threads: 1 },
+        &PredictOptions { mode: PredictMode::Scan, ..Default::default() },
     );
     assert_eq!(pooled.labels, sequential.labels);
     assert_eq!(pooled.query_evals, sequential.query_evals);

@@ -164,13 +164,13 @@ fn model_predict_is_thread_invariant() {
     for mode in [PredictMode::Tree, PredictMode::Scan] {
         let p1 = model.predict_opts(
             &queries,
-            &PredictOptions { mode, threads: 1 },
+            &PredictOptions { mode, ..Default::default() },
         );
         assert_eq!(p1.mode, mode);
         for threads in [2usize, 4] {
             let pt = model.predict_opts(
                 &queries,
-                &PredictOptions { mode, threads },
+                &PredictOptions { mode, threads, ..Default::default() },
             );
             assert_eq!(
                 pt.labels, p1.labels,
