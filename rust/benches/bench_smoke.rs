@@ -23,6 +23,10 @@
 //!     request latency at batch sizes 1/64/1024, server threads 1 vs 4),
 //!     gates served labels against offline predict and across thread
 //!     counts (deterministic, always enforced), and emits `BENCH_6.json`;
+//!   * runs the dual-tree assignment pass head-to-head against the
+//!     single-tree cover scan at k in {8, 64, 256} (wall time at 1 and 4
+//!     threads plus counted per-iteration distances), gates exactness
+//!     and thread invariance deterministically, and emits `BENCH_7.json`;
 //!   * emits `BENCH_4.json` (all of the above plus the per-algorithm
 //!     table);
 //!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
@@ -31,7 +35,9 @@
 //!
 //! `BENCH_ENFORCE_SPEEDUP=1` additionally requires >= 1.5x Lloyd
 //! assignment speedup at 4 threads, >= 1.5x on at least one k-d-tree
-//! driver, and pool dispatch below the scoped-spawn baseline, measured
+//! driver, the dual-tree pass to count strictly fewer assignment
+//! distances than the single-tree scan at k = 256, and pool dispatch
+//! below the scoped-spawn baseline, measured
 //! best-of-N on both sides (set in CI, where 4 cores are guaranteed;
 //! skipped by default so laptops with fewer cores don't fail spuriously).
 //! `BENCH_GATE_WARN_ONLY=1` downgrades every gate failure to a warning
@@ -202,6 +208,53 @@ fn write_predict_json(path: &str, scale: f64, q_n: usize, rows: &[PredictRow]) {
             r.query_evals,
             r.prep_evals,
             r.naive_evals,
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("[json] failed to write {path}: {e}"),
+    }
+}
+
+/// One k of the dual-tree vs single-tree cover head-to-head.
+struct DualRow {
+    k: usize,
+    cover_ms_t1: f64,
+    cover_ms_t4: f64,
+    dual_ms_t1: f64,
+    dual_ms_t4: f64,
+    cover_dists: u64,
+    dual_dists: u64,
+}
+
+/// Emit `BENCH_7.json`: wall time (1 vs 4 threads) and counted
+/// per-iteration distances for the single-tree Cover-means scan vs the
+/// dual-tree node-pair traversal at small, medium, and large k, so the
+/// crossover where the dual pass starts winning is visible from the
+/// artifact.
+fn write_dual_json(path: &str, scale: f64, n: usize, rows: &[DualRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"bench-smoke-dual-v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str(&format!("  \"rows\": {n},\n"));
+    s.push_str("  \"threads_compared\": [1, 4],\n");
+    s.push_str("  \"dual_tree\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"k\": {}, \"cover_ms_t1\": {:.3}, \"cover_ms_t4\": {:.3}, \
+             \"dual_ms_t1\": {:.3}, \"dual_ms_t4\": {:.3}, \
+             \"cover_dists\": {}, \"dual_dists\": {}, \"dist_ratio\": {:.4}}}{comma}\n",
+            r.k,
+            r.cover_ms_t1,
+            r.cover_ms_t4,
+            r.dual_ms_t1,
+            r.dual_ms_t4,
+            r.cover_dists,
+            r.dual_dists,
+            r.dual_dists as f64 / r.cover_dists.max(1) as f64,
         ));
     }
     s.push_str("  ]\n}\n");
@@ -658,6 +711,72 @@ fn main() {
     }
     std::fs::remove_file(&model_path).ok();
     write_serve_json("BENCH_6.json", scale, q_n, serve_k, &serve_rows);
+
+    // --- dual-tree vs single-tree cover assignment (BENCH_7.json). Same
+    // warm start and point-tree parameters on both sides; at k in
+    // {8, 64, 256} measure full-fit wall time (1 vs 4 threads) and
+    // counted per-iteration distances. Both passes are exact, so equal
+    // labels and thread invariance are deterministic gates, always
+    // enforced. The dual pass exists for large k — the single-tree scan
+    // pays ~k candidate distances at the root, where Eq. 9 cannot prune
+    // — so under BENCH_ENFORCE_SPEEDUP it must count strictly fewer
+    // assignment distances than the scan at k = 256.
+    let dual_data = synth::istanbul(scale.max(0.02), 14);
+    let mut dual_rows: Vec<DualRow> = Vec::new();
+    for dk in [8usize, 64, 256] {
+        let dk = dk.min(dual_data.rows() / 4);
+        let mut dc = DistCounter::new();
+        let d_init = init::kmeans_plus_plus(&dual_data, dk, 21, &mut dc);
+        let (tc1, rc1) =
+            timed_fit(repeats, &dual_data, &d_init, Algorithm::CoverMeans, 1, 8);
+        let (tc4, rc4) =
+            timed_fit(repeats, &dual_data, &d_init, Algorithm::CoverMeans, 4, 8);
+        let (td1, rd1) =
+            timed_fit(repeats, &dual_data, &d_init, Algorithm::DualTree, 1, 8);
+        let (td4, rd4) =
+            timed_fit(repeats, &dual_data, &d_init, Algorithm::DualTree, 4, 8);
+        for (name, r1, r4) in
+            [("Cover-means", &rc1, &rc4), ("Dual-tree", &rd1, &rd4)]
+        {
+            if r1.labels != r4.labels || r1.distances != r4.distances {
+                failures.push(format!(
+                    "dual-tree fixture k={dk}: {name} threads=4 diverged from threads=1"
+                ));
+            }
+        }
+        if rd1.labels != rc1.labels || rd1.iterations != rc1.iterations {
+            failures.push(format!(
+                "dual-tree fixture k={dk}: Dual-tree labels diverged from Cover-means"
+            ));
+        }
+        let row = DualRow {
+            k: dk,
+            cover_ms_t1: median(&tc1).as_secs_f64() * 1e3,
+            cover_ms_t4: median(&tc4).as_secs_f64() * 1e3,
+            dual_ms_t1: median(&td1).as_secs_f64() * 1e3,
+            dual_ms_t4: median(&td4).as_secs_f64() * 1e3,
+            cover_dists: rc1.distances,
+            dual_dists: rd1.distances,
+        };
+        println!(
+            "dual-tree k={dk:<3}: cover t1 {:>9} dists {:>10} | \
+             dual t1 {:>9} dists {:>10} ({:.2}x fewer)",
+            fmt_duration(median(&tc1)),
+            row.cover_dists,
+            fmt_duration(median(&td1)),
+            row.dual_dists,
+            row.cover_dists as f64 / row.dual_dists.max(1) as f64,
+        );
+        if enforce && dk == 256 && row.dual_dists >= row.cover_dists {
+            failures.push(format!(
+                "dual-tree at k=256 counted {} assignment distances, not below \
+                 the single-tree scan's {}",
+                row.dual_dists, row.cover_dists,
+            ));
+        }
+        dual_rows.push(row);
+    }
+    write_dual_json("BENCH_7.json", scale, dual_data.rows(), &dual_rows);
 
     // --- emit the artifact.
     let extras = Extras {

@@ -89,6 +89,26 @@ pub fn fig2b(scale: f64, restarts: usize) -> Experiment {
     }
 }
 
+/// Large-k head-to-head of the two cover-tree assignment passes: the
+/// single-tree Cover-means scan vs the dual-tree node-pair traversal,
+/// over the top of the k grid where the single-tree per-node candidate
+/// scan dominates (Standard rides along as the distance baseline).
+pub fn large_k(scale: f64, restarts: usize) -> Experiment {
+    Experiment {
+        datasets: vec!["istanbul".into(), "mnist10".into()],
+        algorithms: vec![
+            Algorithm::Standard,
+            Algorithm::CoverMeans,
+            Algorithm::DualTree,
+        ],
+        ks: vec![100, 200, 400, 700, 1000],
+        restarts,
+        scale,
+        amortize_tree: true,
+        ..Experiment::new("large_k")
+    }
+}
+
 /// E8 ablations: one knob varied at a time on two contrasting datasets
 /// (tree-friendly istanbul, tree-hostile kdd04). Returns labelled
 /// experiments; the bench/CLI runs each and reports Cover-means/Hybrid.
@@ -160,6 +180,11 @@ mod tests {
 
         assert_eq!(fig2a(0.01, 3).datasets.len(), 5);
         assert_eq!(fig2b(0.01, 3).ks.len(), 8);
+
+        let lk = large_k(0.01, 3);
+        assert!(lk.algorithms.contains(&Algorithm::DualTree));
+        assert!(lk.amortize_tree, "trees amortize across the k sweep");
+        assert_eq!(lk.ks.last(), Some(&1000));
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub enum AlgorithmSpec {
     PellegMoore { kd: KdTreeParams },
     CoverMeans { cover: CoverTreeParams },
     Hybrid { cover: CoverTreeParams, switch_at: usize },
+    DualTree { cover: CoverTreeParams },
     MiniBatch { batch: usize, tol: f64, seed: u64 },
 }
 
@@ -73,6 +74,7 @@ impl AlgorithmSpec {
             AlgorithmSpec::PellegMoore { .. } => Algorithm::PellegMoore,
             AlgorithmSpec::CoverMeans { .. } => Algorithm::CoverMeans,
             AlgorithmSpec::Hybrid { .. } => Algorithm::Hybrid,
+            AlgorithmSpec::DualTree { .. } => Algorithm::DualTree,
             AlgorithmSpec::MiniBatch { .. } => Algorithm::MiniBatch,
         }
     }
@@ -93,6 +95,7 @@ impl AlgorithmSpec {
             Algorithm::Hybrid => {
                 AlgorithmSpec::Hybrid { cover: p.cover, switch_at: p.switch_at }
             }
+            Algorithm::DualTree => AlgorithmSpec::DualTree { cover: p.cover },
             Algorithm::MiniBatch => AlgorithmSpec::MiniBatch {
                 batch: p.minibatch.batch,
                 tol: p.minibatch.tol,
@@ -106,7 +109,9 @@ impl AlgorithmSpec {
         p.algorithm = self.kind();
         match *self {
             AlgorithmSpec::Kanungo { kd } | AlgorithmSpec::PellegMoore { kd } => p.kd = kd,
-            AlgorithmSpec::CoverMeans { cover } => p.cover = cover,
+            AlgorithmSpec::CoverMeans { cover } | AlgorithmSpec::DualTree { cover } => {
+                p.cover = cover
+            }
             AlgorithmSpec::Hybrid { cover, switch_at } => {
                 p.cover = cover;
                 p.switch_at = switch_at;

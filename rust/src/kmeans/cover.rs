@@ -211,23 +211,15 @@ pub(crate) fn assign_pass(
         // (assigning what Eqs. 10-13 settle outright) and spill the
         // children that still need a recursive visit back into the list.
         let mut tasks: Vec<Task> = vec![Task { node: root, cands, lb }];
-        while tasks.len() < TASK_TARGET {
-            let mut best: Option<(usize, u32)> = None;
-            for (i, t) in tasks.iter().enumerate() {
-                if !t.node.children.is_empty() && t.node.weight >= MIN_TASK_WEIGHT {
-                    let heavier = match best {
-                        None => true,
-                        Some((_, w)) => t.node.weight > w,
-                    };
-                    if heavier {
-                        best = Some((i, t.node.weight));
-                    }
-                }
-            }
-            let Some((idx, _)) = best else { break };
-            let t = tasks.remove(idx);
-            assign_node(&mut ctx, t.node, &t.cands, t.lb, Some(&mut tasks));
-        }
+        crate::parallel::expand_tasks(
+            &mut tasks,
+            TASK_TARGET,
+            |t| {
+                (!t.node.children.is_empty() && t.node.weight >= MIN_TASK_WEIGHT)
+                    .then_some(t.node.weight)
+            },
+            |t, out| assign_node(&mut ctx, t.node, &t.cands, t.lb, Some(out)),
+        );
         changed = ctx.changed;
         tasks
     };

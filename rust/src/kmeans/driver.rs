@@ -26,8 +26,8 @@ use std::time::Duration;
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
 use crate::kmeans::{
-    cover, elkan, exponion, hamerly, hybrid, kanungo, lloyd, pelleg, phillips,
-    shallot, Algorithm, KMeansParams, Workspace,
+    cover, dualtree, elkan, exponion, hamerly, hybrid, kanungo, lloyd, pelleg,
+    phillips, shallot, Algorithm, KMeansParams, Workspace,
 };
 use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
 
@@ -362,6 +362,15 @@ pub(crate) fn new_driver<'a>(
                 (0, Duration::ZERO)
             };
             (Box::new(cover::CoverDriver::new(data, tree, par)), bd, bt)
+        }
+        Algorithm::DualTree => {
+            let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);
+            let (bd, bt) = if fresh {
+                (tree.build_distances, tree.build_time)
+            } else {
+                (0, Duration::ZERO)
+            };
+            (Box::new(dualtree::DualDriver::new(data, tree, par)), bd, bt)
         }
         Algorithm::Hybrid => {
             let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);

@@ -1,0 +1,809 @@
+//! Dual-tree k-means assignment (Curtin, arXiv:1601.03754): traverse the
+//! point cover tree and a per-iteration cover tree over the k centers
+//! *simultaneously*, pruning per node *pair* instead of per point-tree
+//! node.
+//!
+//! The single-tree pass (`kmeans::cover`) scans every surviving candidate
+//! center at each point-tree node; at large k the root-level scan alone
+//! costs ~k distance computations per iteration, because the Eq. 9 filter
+//! barely prunes when the node radius is large. The dual pass instead
+//! carries a small set of [`Entry`]s — disjoint *center-tree subtrees*
+//! that partition the surviving centers — and only computes distances to
+//! the routing centers of subtrees it actually expands. A node pair
+//! (point node `x`, center subtree `E`) is pruned with a bound over the
+//! whole pair, so distant center groups cost O(1) per point node instead
+//! of O(|group|).
+//!
+//! The center tree is rebuilt from the inter-center matrix
+//! ([`InterCenter`]) whenever any center moved — pure table lookups, so
+//! the rebuild adds **zero** counted distance computations (see
+//! [`crate::tree::centers`]). The converged tail of a fit (all movements
+//! exactly 0.0) and warm refits reuse the cached tree.
+//!
+//! # Pruning bounds (proofs)
+//!
+//! Throughout, `x` is a point-tree node with routing object `p` and cover
+//! radius `r_x` (every point `q` of the subtree has `d(q, p) <= r_x`), and
+//! an entry `E` holds a center subtree with routing center `E.c` at
+//! *exact* distance `E.d = d(p, centers[E.c])` and cover radius `E.r`
+//! (every center `c` of the subtree has `d(centers[E.c], c) <= E.r`). The
+//! *incumbent* is the entry minimizing `(d, c)` lexicographically; its
+//! routing center `c1` at distance `d1` gives the upper bound
+//! `d(q, c1) <= d1 + r_x` for every `q` in the ball.
+//!
+//! * **Pair prune** — drop `E` when `E.d - E.r > d1 + 2 r_x` (strict).
+//!   For every `q` in the ball and every center `c` in `E`:
+//!   `d(q, c) >= d(p, c) - r_x >= (E.d - E.r) - r_x > d1 + r_x >= d(q, c1)`.
+//!   Strictly worse than a surviving center, so `c` is never the
+//!   `(distance, index)`-argmin — the strict inequality makes the prune
+//!   tie-safe (a center that could *tie* the incumbent is never dropped,
+//!   so the lowest-index tie-break matches the Standard algorithm). The
+//!   incumbent itself always survives (`d1 - E.r <= d1 <= d1 + 2 r_x`).
+//! * **Pair settle** — assign the whole point subtree to `c1` when the
+//!   incumbent is *resolved* (a single concrete center, `E.r = 0`) and
+//!   `l2 > d1 + 2 r_x` (strict), where `l2 = min over other entries of
+//!   (E.d - E.r)`: every other center `c` has
+//!   `d(q, c) >= l2 - r_x > d1 + r_x >= d(q, c1)`, so `c1` is the unique
+//!   nearest center of every point in the subtree. An unresolved
+//!   incumbent cannot settle — its own subtree hides centers whose lower
+//!   bound `d1 - E.r` can never exceed the threshold — so the refinement
+//!   loop expands it first.
+//! * **Child descent** (point child `y` at stored distance `dxy` from
+//!   `p`, radius `r_y`) reuses the same bounds shifted by the triangle
+//!   inequality: `d(q, c1) <= d1 + dxy + r_y` (or `dy1 + r_y` after one
+//!   fresh distance `dy1 = d(p_y, c1)`), and
+//!   `d(q, c) >= (E.d - E.r) - dxy - r_y` — the analogues of the paper's
+//!   Eqs. 12-13 with the candidate list replaced by subtree entries.
+//! * **Retarget prune** (moving entries from `p` to `p_y`): for `c` in
+//!   `E`, `d(p_y, c) >= |E.d - dxy| - E.r`, and via the inter-center
+//!   matrix `d(p_y, c) >= cc(c_b, E.c) - E.r - d_b` for the running best
+//!   `(c_b, d_b)` at `p_y`. Either bound exceeding `d_b + 2 r_y`
+//!   (strictly) drops the pair for the whole child ball, by the pair
+//!   prune argument verbatim.
+//!
+//! Leaf points are finally scanned against the fully-resolved entry list
+//! with exactly the single-tree pass's Eq. 12-14/Eq. 9 singleton logic,
+//! so per-point tie handling is *identical* to `kmeans::cover` — which
+//! the exactness suite pins against the Standard algorithm.
+//!
+//! # Parallel decomposition
+//!
+//! Same scheme as the single-tree pass: a sequential expansion peels the
+//! top of the *point* tree into at most ~[`TASK_TARGET`] pair tasks
+//! (point subtree + its entry list) via the shared
+//! [`crate::parallel::expand_tasks`] policy, charging its distances to
+//! the caller's counter in a fixed order; the task phase runs each pair
+//! task with a private [`CentroidAccum`]/[`DistCounter`] and merges in
+//! task order. Labels go through a [`ScatterSlice`] (disjoint point
+//! subtrees). The center tree, the entry lists, and the task list are all
+//! computed sequentially from the data alone, so `threads = N` is
+//! byte-identical to `threads = 1`.
+
+use std::sync::Arc;
+
+use crate::data::Matrix;
+use crate::kmeans::bounds::{CentroidAccum, InterCenter};
+use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::{Algorithm, KMeansParams, Workspace};
+use crate::metrics::{DistCounter, RunResult};
+use crate::parallel::{Parallelism, ScatterSlice};
+use crate::tree::centers::{CenterNode, CenterTree, CenterTreeCache, CENTER_MIN_NODE};
+use crate::tree::covertree::{CoverTree, CoverTreeParams, Node};
+
+/// One surviving center group at the current point-tree node: a disjoint
+/// center subtree (`node = Some`) or a single resolved center
+/// (`node = None`, `r == 0`). `d` is always the *exact* distance from the
+/// current routing object to `centers[c]`; `r` is the subtree cover
+/// radius. The entries at any moment partition the surviving centers.
+#[derive(Clone, Copy)]
+struct Entry<'c> {
+    node: Option<&'c CenterNode>,
+    c: u32,
+    d: f64,
+    r: f64,
+}
+
+/// One unit of the parallel decomposition: a point subtree with the entry
+/// list that survived the path from the root.
+struct Task<'t, 'c> {
+    node: &'t Node,
+    entries: Vec<Entry<'c>>,
+}
+
+/// The expansion stops splitting once this many tasks exist. Fixed (never
+/// derived from the thread count) so the task list — and therefore the
+/// accumulator merge order — is a function of the trees and centers only.
+const TASK_TARGET: usize = 64;
+/// Point subtrees lighter than this are not worth splitting further.
+const MIN_TASK_WEIGHT: u32 = 256;
+
+/// Mutable per-task view of the traversal (mirrors `cover::Ctx`).
+struct Ctx<'a> {
+    data: &'a Matrix,
+    centers: &'a Matrix,
+    ic: &'a InterCenter,
+    labels: ScatterSlice<'a, u32>,
+    acc: &'a mut CentroidAccum,
+    dist: &'a mut DistCounter,
+    changed: usize,
+}
+
+/// Incumbent of an entry list: index, routing center, its exact distance,
+/// and `l2` — the minimum `E.d - E.r` over the *other* entries (a lower
+/// bound on the distance from the routing object to every non-incumbent
+/// center), `+inf` when the incumbent is alone.
+fn scan_entries(entries: &[Entry<'_>]) -> (usize, u32, f64, f64) {
+    debug_assert!(!entries.is_empty());
+    let mut bi = 0usize;
+    for (i, e) in entries.iter().enumerate().skip(1) {
+        let b = &entries[bi];
+        if e.d < b.d || (e.d == b.d && e.c < b.c) {
+            bi = i;
+        }
+    }
+    let mut l2 = f64::INFINITY;
+    for (i, e) in entries.iter().enumerate() {
+        if i != bi {
+            l2 = l2.min(e.d - e.r);
+        }
+    }
+    (bi, entries[bi].c, entries[bi].d, l2)
+}
+
+/// Expand entry `i` (a center subtree) at routing object `p`: replace it
+/// with entries for its children and singletons. The self-child and the
+/// routing center's own singleton inherit the already-known exact
+/// distance; coincident singletons (`ds == 0`, an identical center
+/// vector) inherit it too. Every other child/singleton is first tested
+/// with the two creation-time bounds (triangle via the parent routing
+/// center, inter-center filter via the running best) and only on survival
+/// pays one counted distance. Dropped groups are provably never the
+/// nearest center of any point in `ball(p, r_x)` — see the pair-prune
+/// proof in the module docs, with the lower bound
+/// `|E.d - parent_dist| - radius` (triangle through the parent center).
+fn expand(ctx: &mut Ctx<'_>, p: &[f64], r_x: f64, entries: &mut Vec<Entry<'_>>, i: usize) {
+    let e = entries.remove(i);
+    let nd = e.node.expect("expand requires a node entry");
+    // Running best over the survivors plus the removed entry's own routing
+    // center (its distance is exact and carried into a child/singleton).
+    let (mut best_c, mut best_d) = (e.c, e.d);
+    for s in entries.iter() {
+        if s.d < best_d || (s.d == best_d && s.c < best_c) {
+            best_d = s.d;
+            best_c = s.c;
+        }
+    }
+    for ch in &nd.children {
+        if ch.center == nd.center {
+            // Self-child: same routing center, the distance carries over.
+            entries.push(Entry { node: Some(ch), c: e.c, d: e.d, r: ch.radius });
+            continue;
+        }
+        // Triangle bound through the parent center: for every center c in
+        // ch's subtree, d(p, c) >= |d(p, c_E) - d(c_E, c_ch)| - r_ch.
+        let lb = (e.d - ch.parent_dist).abs() - ch.radius;
+        if lb > best_d + 2.0 * r_x {
+            continue;
+        }
+        // Inter-center filter: d(p, c) >= cc(best, c) - d(p, best) and
+        // cc(best, c) >= cc(best, c_ch) - r_ch.
+        let cc = ctx.ic.d(best_c as usize, ch.center as usize);
+        if cc - ch.radius - best_d > best_d + 2.0 * r_x {
+            continue;
+        }
+        let dch = ctx.dist.d(p, ctx.centers.row(ch.center as usize));
+        if dch < best_d || (dch == best_d && ch.center < best_c) {
+            best_d = dch;
+            best_c = ch.center;
+        }
+        entries.push(Entry { node: Some(ch), c: ch.center, d: dch, r: ch.radius });
+    }
+    for &(cs, ds) in &nd.singletons {
+        if cs == nd.center || ds == 0.0 {
+            // The routing center itself, or a center coincident with it
+            // (identical vector): the exact distance is already known.
+            if e.d < best_d || (e.d == best_d && cs < best_c) {
+                best_d = e.d;
+                best_c = cs;
+            }
+            entries.push(Entry { node: None, c: cs, d: e.d, r: 0.0 });
+            continue;
+        }
+        let lb = (e.d - ds).abs();
+        if lb > best_d + 2.0 * r_x {
+            continue;
+        }
+        let cc = ctx.ic.d(best_c as usize, cs as usize);
+        if cc - best_d > best_d + 2.0 * r_x {
+            continue;
+        }
+        let dcs = ctx.dist.d(p, ctx.centers.row(cs as usize));
+        if dcs < best_d || (dcs == best_d && cs < best_c) {
+            best_d = dcs;
+            best_c = cs;
+        }
+        entries.push(Entry { node: None, c: cs, d: dcs, r: 0.0 });
+    }
+}
+
+/// The pair refinement loop at one point-tree node: alternate pruning,
+/// settlement checks, and center-subtree expansion until the ball settles
+/// (`Some(c1)`) or no center subtree's radius dominates the point node's
+/// (`None` — descend the point tree instead). Expansion policy: largest
+/// radius first among node entries with `r >= r_x` (tie to the lowest
+/// routing center), the classic dual-tree larger-side descent; an
+/// unresolved incumbent that alone blocks a settle is expanded regardless
+/// of its radius. Every step is a pure function of `(entries, trees,
+/// centers)` — no thread-count dependence.
+fn refine(
+    ctx: &mut Ctx<'_>,
+    p: &[f64],
+    r_x: f64,
+    entries: &mut Vec<Entry<'_>>,
+) -> Option<u32> {
+    loop {
+        let (bi, c1, d1, l2) = scan_entries(entries);
+        if l2 > d1 + 2.0 * r_x {
+            if entries[bi].node.is_none() {
+                // Pair settle (see module docs): c1 is the unique nearest
+                // center of every point in ball(p, r_x).
+                return Some(c1);
+            }
+            // Only the incumbent's own unresolved subtree blocks the
+            // settle — expand it and re-check.
+            expand(ctx, p, r_x, entries, bi);
+            continue;
+        }
+        // Pair prune: strictly dominated entries can never produce the
+        // argmin for any point in the ball (proof in module docs). The
+        // incumbent never satisfies the condition, so it survives.
+        entries.retain(|e| e.d - e.r <= d1 + 2.0 * r_x);
+        // Largest-radius-first expansion while a center subtree's radius
+        // dominates the point node's.
+        let mut pick: Option<(usize, f64, u32)> = None;
+        for (i, e) in entries.iter().enumerate() {
+            if e.node.is_some() && e.r >= r_x {
+                let better = match pick {
+                    None => true,
+                    Some((_, pr, pc)) => e.r > pr || (e.r == pr && e.c < pc),
+                };
+                if better {
+                    pick = Some((i, e.r, e.c));
+                }
+            }
+        }
+        match pick {
+            Some((i, _, _)) => expand(ctx, p, r_x, entries, i),
+            None => return None,
+        }
+    }
+}
+
+/// Expand every remaining node entry so the list holds only resolved
+/// centers — the flat candidate list the leaf point scan consumes.
+fn resolve_full(ctx: &mut Ctx<'_>, p: &[f64], r_x: f64, entries: &mut Vec<Entry<'_>>) {
+    loop {
+        let Some(i) = entries.iter().position(|e| e.node.is_some()) else {
+            break;
+        };
+        expand(ctx, p, r_x, entries, i);
+    }
+}
+
+/// Assign the whole point subtree to `c` via the stored aggregates (§3.2).
+fn assign_subtree(ctx: &mut Ctx<'_>, node: &Node, c: u32) {
+    ctx.acc.add_aggregate(c as usize, &node.sum, node.weight as f64);
+    let labels = ctx.labels;
+    let mut changed = 0usize;
+    node.for_each_point(&mut |pi| {
+        // Safety: every point index occurs in exactly one subtree, and
+        // concurrent tasks own disjoint subtrees.
+        unsafe {
+            if labels.read(pi as usize) != c {
+                labels.write(pi as usize, c);
+                changed += 1;
+            }
+        }
+    });
+    ctx.changed += changed;
+}
+
+fn assign_point(ctx: &mut Ctx<'_>, pi: u32, c: u32) {
+    let i = pi as usize;
+    ctx.acc.add_point(c as usize, ctx.data.row(i));
+    // Safety: singletons belong to exactly one node; tasks are disjoint.
+    unsafe {
+        if ctx.labels.read(i) != c {
+            ctx.labels.write(i, c);
+            ctx.changed += 1;
+        }
+    }
+}
+
+/// Scan a node's singleton points against a fully-resolved entry list.
+/// This is verbatim the single-tree pass's per-point logic (Eqs. 12-14
+/// with `r_y = 0` plus the Eq. 9 running filter, ties to the lowest
+/// index), so leaf-level tie behavior is identical to `kmeans::cover` —
+/// and therefore to the Standard algorithm.
+fn scan_singletons(ctx: &mut Ctx<'_>, node: &Node, cands: &[Entry<'_>]) {
+    debug_assert!(cands.iter().all(|e| e.node.is_none()));
+    // Best and second-best resolved candidates (ties to the lowest id).
+    let mut c1 = (cands[0].c, cands[0].d);
+    let mut d2 = f64::INFINITY;
+    for e in &cands[1..] {
+        if e.d < c1.1 || (e.d == c1.1 && e.c < c1.0) {
+            d2 = c1.1;
+            c1 = (e.c, e.d);
+        } else if e.d < d2 {
+            d2 = e.d;
+        }
+    }
+    for &(pi, dq) in &node.singletons {
+        // Eq. 12 (r_y = 0): no computation at all.
+        if c1.1 + dq <= d2 - dq {
+            assign_point(ctx, pi, c1.0);
+            continue;
+        }
+        let q = ctx.data.row(pi as usize);
+        // Eq. 13: exact distance to the inherited nearest only.
+        let dq1 = ctx.dist.d(q, ctx.centers.row(c1.0 as usize));
+        if dq1 <= d2 - dq {
+            assign_point(ctx, pi, c1.0);
+            continue;
+        }
+        // Eq. 14 prune + Eq. 9 running filter, then exact argmin.
+        let mut best = (c1.0, dq1);
+        for e in cands {
+            if e.c == c1.0 {
+                continue;
+            }
+            // Eq. 14 with r_y = 0: skip without computing.
+            if e.d - dq > dq1 {
+                continue;
+            }
+            // Eq. 9 with r = 0 against the running best.
+            let cc = ctx.ic.d(best.0 as usize, e.c as usize);
+            if cc >= 2.0 * best.1 {
+                continue;
+            }
+            let dj = ctx.dist.d(q, ctx.centers.row(e.c as usize));
+            if dj < best.1 || (dj == best.1 && e.c < best.0) {
+                best = (e.c, dj);
+            }
+        }
+        assign_point(ctx, pi, best.0);
+    }
+}
+
+/// Move the surviving entries from routing object `p` (distance frame of
+/// `entries`) to the child routing object `p_y`. The incumbent is always
+/// carried (its fresh distance `dy1` is already computed); every other
+/// entry is first tested with the stale-frame triangle bound and the
+/// inter-center filter against the running best, and only on survival
+/// pays one counted distance at `p_y`. Dropped entries are provably never
+/// the argmin for any point in `ball(p_y, r_y)` (retarget prune, module
+/// docs).
+#[allow(clippy::too_many_arguments)]
+fn retarget<'c>(
+    ctx: &mut Ctx<'_>,
+    entries: &[Entry<'c>],
+    bi: usize,
+    dy1: f64,
+    dxy: f64,
+    ry: f64,
+    py: &[f64],
+) -> Vec<Entry<'c>> {
+    let mut out = Vec::with_capacity(entries.len());
+    let inc = entries[bi];
+    out.push(Entry { node: inc.node, c: inc.c, d: dy1, r: inc.r });
+    let (mut best_c, mut best_d) = (inc.c, dy1);
+    for (i, e) in entries.iter().enumerate() {
+        if i == bi {
+            continue;
+        }
+        // Triangle through the old routing object: for c in E,
+        // d(p_y, c) >= |d(p, c_E) - d(p, p_y)| - E.r.
+        let lb = (e.d - dxy).abs() - e.r;
+        if lb > best_d + 2.0 * ry {
+            continue;
+        }
+        // Inter-center filter against the running best at p_y.
+        let cc = ctx.ic.d(best_c as usize, e.c as usize);
+        if cc - e.r - best_d > best_d + 2.0 * ry {
+            continue;
+        }
+        let de = ctx.dist.d(py, ctx.centers.row(e.c as usize));
+        if de < best_d || (de == best_d && e.c < best_c) {
+            best_d = de;
+            best_c = e.c;
+        }
+        out.push(Entry { node: e.node, c: e.c, d: de, r: e.r });
+    }
+    out
+}
+
+/// Recursive pair traversal of one point-tree node with its entry list.
+/// With `spill == None` children recurse directly; during the expansion
+/// phase `spill` collects the children that would recurse as [`Task`]s
+/// instead — the node's own work (refinement, settles, singleton scans)
+/// happens identically either way.
+fn assign_node<'t, 'c>(
+    ctx: &mut Ctx<'_>,
+    node: &'t Node,
+    mut entries: Vec<Entry<'c>>,
+    mut spill: Option<&mut Vec<Task<'t, 'c>>>,
+) {
+    let p = ctx.data.row(node.routing as usize);
+    let r_x = node.radius;
+
+    if let Some(c1) = refine(ctx, p, r_x, &mut entries) {
+        assign_subtree(ctx, node, c1);
+        return;
+    }
+
+    if node.children.is_empty() {
+        // Leaf: resolve everything and run the exact per-point scan.
+        resolve_full(ctx, p, r_x, &mut entries);
+        scan_singletons(ctx, node, &entries);
+        return;
+    }
+
+    // Interior nodes carry no singletons by construction; handle any (a
+    // future tree-shape change) through a fully-resolved copy.
+    if !node.singletons.is_empty() {
+        let mut full = entries.clone();
+        resolve_full(ctx, p, r_x, &mut full);
+        scan_singletons(ctx, node, &full);
+    }
+
+    let (bi, c1, d1, l2) = scan_entries(&entries);
+    let inc_resolved = entries[bi].node.is_none();
+    for child in &node.children {
+        if child.routing == node.routing {
+            // Self-child: identical routing object, every entry distance
+            // carries over; only the radius shrank.
+            match spill.as_deref_mut() {
+                Some(out) => out.push(Task { node: child, entries: entries.clone() }),
+                None => assign_node(ctx, child, entries.clone(), None),
+            }
+            continue;
+        }
+        let dxy = child.parent_dist;
+        let ry = child.radius;
+        // Child settle, zero computation (Eq. 12 analogue): for q in the
+        // child ball, d(q, c1) <= d1 + dxy + ry and every other center
+        // has d(q, c) >= l2 - dxy - ry. Needs a resolved incumbent (an
+        // unresolved one hides centers l2 does not cover).
+        if inc_resolved && l2 - dxy - ry > d1 + dxy + ry {
+            assign_subtree(ctx, child, c1);
+            continue;
+        }
+        // One fresh distance to the incumbent center (Eq. 13 analogue).
+        let py = ctx.data.row(child.routing as usize);
+        let dy1 = ctx.dist.d(py, ctx.centers.row(c1 as usize));
+        if inc_resolved && l2 - dxy - ry > dy1 + ry {
+            assign_subtree(ctx, child, c1);
+            continue;
+        }
+        let child_entries = retarget(ctx, &entries, bi, dy1, dxy, ry, py);
+        match spill.as_deref_mut() {
+            Some(out) => out.push(Task { node: child, entries: child_entries }),
+            None => assign_node(ctx, child, child_entries, None),
+        }
+    }
+}
+
+/// Run one full dual-tree assignment pass. Returns the number of points
+/// whose assignment changed.
+///
+/// Same two phases as the single-tree pass regardless of thread count: a
+/// sequential expansion peels the top of the point tree into at most
+/// ~[`TASK_TARGET`] pair tasks (charging its distances to the caller's
+/// counter), then the tasks run — concurrently when `par` has the budget,
+/// inline otherwise — each with a private accumulator merged back in task
+/// order. `threads = N` is therefore byte-identical to `threads = 1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assign_pass(
+    data: &Matrix,
+    tree: &CoverTree,
+    ctree: &CenterTree,
+    centers: &Matrix,
+    ic: &InterCenter,
+    labels: &mut [u32],
+    acc: &mut CentroidAccum,
+    dist: &mut DistCounter,
+    par: &Parallelism,
+) -> usize {
+    let k = centers.rows();
+    let d = data.cols();
+    let sink = ScatterSlice::new(labels);
+    let root = &tree.root;
+    let mut changed;
+    let tasks = {
+        let mut ctx = Ctx { data, centers, ic, labels: sink, acc, dist, changed: 0 };
+        // Root pair: the whole point tree against the whole center tree —
+        // one counted distance seeds the traversal.
+        let p = data.row(root.routing as usize);
+        let d0 = ctx.dist.d(p, centers.row(ctree.root.center as usize));
+        let entries = vec![Entry {
+            node: Some(&ctree.root),
+            c: ctree.root.center,
+            d: d0,
+            r: ctree.root.radius,
+        }];
+        let mut tasks: Vec<Task> = vec![Task { node: root, entries }];
+        crate::parallel::expand_tasks(
+            &mut tasks,
+            TASK_TARGET,
+            |t| {
+                (!t.node.children.is_empty() && t.node.weight >= MIN_TASK_WEIGHT)
+                    .then_some(t.node.weight)
+            },
+            |t, out| assign_node(&mut ctx, t.node, t.entries, Some(out)),
+        );
+        changed = ctx.changed;
+        tasks
+    };
+    // Task phase: private accumulators, merged in task order below.
+    let results = par.run_tasks(tasks, |task| {
+        let mut task_acc = CentroidAccum::new(k, d);
+        let mut dc = DistCounter::new();
+        let mut ctx = Ctx {
+            data,
+            centers,
+            ic,
+            labels: sink,
+            acc: &mut task_acc,
+            dist: &mut dc,
+            changed: 0,
+        };
+        assign_node(&mut ctx, task.node, task.entries, None);
+        (task_acc, dc.count(), ctx.changed)
+    });
+    for (task_acc, count, task_changed) in results {
+        acc.merge(&task_acc);
+        dist.add_bulk(count);
+        changed += task_changed;
+    }
+    changed
+}
+
+/// The dual-tree driver: the shared point cover tree, the per-iteration
+/// center tree cache, and the labels.
+pub(crate) struct DualDriver<'a> {
+    data: &'a Matrix,
+    tree: Arc<CoverTree>,
+    labels: Vec<u32>,
+    par: Parallelism,
+    cache: CenterTreeCache,
+    center_params: CoverTreeParams,
+}
+
+impl<'a> DualDriver<'a> {
+    pub(crate) fn new(
+        data: &'a Matrix,
+        tree: Arc<CoverTree>,
+        par: Parallelism,
+    ) -> DualDriver<'a> {
+        let n = data.rows();
+        // The center tree shares the point tree's scale factor but uses
+        // its own (much smaller) leaf threshold: k is orders of magnitude
+        // below n, and the point tree's default minimum of 100 would
+        // collapse the center tree to one flat leaf for most k.
+        let center_params = CoverTreeParams {
+            scale_factor: tree.params.scale_factor,
+            min_node_size: CENTER_MIN_NODE,
+        };
+        DualDriver {
+            data,
+            tree,
+            labels: vec![u32::MAX; n],
+            par,
+            cache: CenterTreeCache::new(),
+            center_params,
+        }
+    }
+
+    fn pass(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        let ic = InterCenter::compute_par(centers, dist, &self.par);
+        // Center-tree (re)build from the k x k lookup: zero counted
+        // distances (see module docs).
+        let ctree =
+            self.cache
+                .get_or_build(centers.rows(), self.center_params, &|i, j| ic.d(i, j));
+        assign_pass(
+            self.data,
+            &self.tree,
+            ctree,
+            centers,
+            &ic,
+            &mut self.labels,
+            acc,
+            dist,
+            &self.par,
+        )
+    }
+}
+
+impl KMeansDriver for DualDriver<'_> {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::DualTree
+    }
+
+    fn init_state(
+        &mut self,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn iterate(
+        &mut self,
+        _iter: usize,
+        centers: &Matrix,
+        acc: &mut CentroidAccum,
+        dist: &mut DistCounter,
+    ) -> usize {
+        self.pass(centers, acc, dist)
+    }
+
+    fn post_update(&mut self, _iter: usize, movement: &[f64]) {
+        // The center tree indexes the current centers; any nonzero
+        // movement makes it stale. The all-zero case (converged tail,
+        // empty-cluster stasis) keeps the cached tree — a rebuild from
+        // the identical lookup would be bit-identical anyway.
+        if movement.iter().any(|&m| m != 0.0) {
+            self.cache.invalidate();
+        }
+    }
+
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn finish(self: Box<Self>) -> Vec<u32> {
+        self.labels
+    }
+}
+
+/// Legacy shim: drive the dual-tree algorithm through the shared loop,
+/// reusing (or building) the workspace's point cover tree.
+pub fn run(
+    data: &Matrix,
+    init: &Matrix,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> RunResult {
+    let par = ws.parallelism(params.threads);
+    let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);
+    let (build_dist, build_time) = if fresh {
+        (tree.build_distances, tree.build_time)
+    } else {
+        (0, std::time::Duration::ZERO)
+    };
+    Fit::from_driver(
+        data,
+        Box::new(DualDriver::new(data, tree, par)),
+        init,
+        params.max_iter,
+        params.tol,
+    )
+    .with_build_cost(build_dist, build_time)
+    .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{init, lloyd, Algorithm, KMeansParams};
+    use crate::metrics::DistCounter;
+    use crate::tree::CoverTreeParams;
+
+    fn params_small_leaf() -> KMeansParams {
+        KMeansParams {
+            cover: CoverTreeParams { scale_factor: 1.2, min_node_size: 10 },
+            ..KMeansParams::with_algorithm(Algorithm::DualTree)
+        }
+    }
+
+    #[test]
+    fn matches_lloyd_exactly_blobs() {
+        let data = synth::gaussian_blobs(500, 3, 5, 1.0, 19);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 5, 13, &mut dc);
+        let params = params_small_leaf();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_d = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_d.labels, r_l.labels);
+        assert_eq!(r_d.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn matches_lloyd_exactly_geo() {
+        let data = synth::istanbul(0.002, 20);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 25, 14, &mut dc);
+        let params = params_small_leaf();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_d = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_d.labels, r_l.labels);
+        assert_eq!(r_d.iterations, r_l.iterations);
+    }
+
+    #[test]
+    fn matches_lloyd_on_duplicate_heavy_data() {
+        let data = synth::traffic(0.00005, 23);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 10, 17, &mut dc);
+        let params = params_small_leaf();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_d = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_d.labels, r_l.labels, "exactness on duplicate-heavy data");
+    }
+
+    #[test]
+    fn matches_lloyd_k_equals_one() {
+        let data = synth::gaussian_blobs(120, 2, 1, 0.5, 7);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 1, 3, &mut dc);
+        let params = params_small_leaf();
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_d = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_d.labels, r_l.labels);
+    }
+
+    #[test]
+    fn beats_single_tree_at_large_k() {
+        // The dual pass's reason to exist: at large k the single-tree
+        // pass pays ~k distances at the point root where its Eq. 9 filter
+        // cannot prune; the dual pass only touches expanded center-node
+        // routings. Counted assignment distances must come out lower.
+        let data = synth::istanbul(0.003, 21);
+        let k = 64;
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, k, 15, &mut dc);
+        let params = KMeansParams { max_iter: 5, ..params_small_leaf() };
+        let cover_params = KMeansParams {
+            algorithm: Algorithm::CoverMeans,
+            ..params
+        };
+        let r_d = run(&data, &init_c, &params, &mut Workspace::new());
+        let r_c = crate::kmeans::cover::run(
+            &data,
+            &init_c,
+            &cover_params,
+            &mut Workspace::new(),
+        );
+        assert_eq!(r_d.labels, r_c.labels, "both must be exact");
+        assert!(
+            r_d.distances < r_c.distances,
+            "dual {} vs cover {}",
+            r_d.distances,
+            r_c.distances
+        );
+    }
+
+    #[test]
+    fn default_leaf_size_matches_too() {
+        let data = synth::mnist(10, 0.005, 24);
+        let mut dc = DistCounter::new();
+        let init_c = init::kmeans_plus_plus(&data, 15, 18, &mut dc);
+        let params = KMeansParams::with_algorithm(Algorithm::DualTree);
+        let mut ws = Workspace::new();
+        let r_l = lloyd::run(&data, &init_c, &params);
+        let r_d = run(&data, &init_c, &params, &mut ws);
+        assert_eq!(r_d.labels, r_l.labels);
+    }
+}

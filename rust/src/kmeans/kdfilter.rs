@@ -201,35 +201,29 @@ pub(crate) fn filter_pass<P: PruneRule>(
     // (settling what the prune test decides outright) and spill the
     // children that still need a recursive visit back into the list.
     let mut tasks: Vec<KdTask<'_>> = vec![KdTask { node: &tree.root, cands: all }];
-    while tasks.len() < TASK_TARGET {
-        let mut best: Option<(usize, u32)> = None;
-        for (i, t) in tasks.iter().enumerate() {
-            if !t.node.is_leaf() && t.node.weight >= MIN_TASK_WEIGHT {
-                let heavier = match best {
-                    None => true,
-                    Some((_, w)) => t.node.weight > w,
-                };
-                if heavier {
-                    best = Some((i, t.node.weight));
-                }
-            }
-        }
-        let Some((idx, _)) = best else { break };
-        let t = tasks.remove(idx);
-        visit(
-            rule,
-            data,
-            centers,
-            t.node,
-            &t.cands,
-            &sink,
-            acc,
-            dist,
-            &mut changed,
-            &mut scratch,
-            Some(&mut tasks),
-        );
-    }
+    crate::parallel::expand_tasks(
+        &mut tasks,
+        TASK_TARGET,
+        |t| {
+            (!t.node.is_leaf() && t.node.weight >= MIN_TASK_WEIGHT)
+                .then_some(t.node.weight)
+        },
+        |t, out| {
+            visit(
+                rule,
+                data,
+                centers,
+                t.node,
+                &t.cands,
+                &sink,
+                acc,
+                dist,
+                &mut changed,
+                &mut scratch,
+                Some(out),
+            );
+        },
+    );
     // Task phase: private accumulators and counters, merged in task order.
     let results = par.run_tasks(tasks, |task| {
         let mut task_acc = CentroidAccum::new(k, d);

@@ -36,6 +36,7 @@
 //! | Phillips     | `phillips`  | compare-means [15] |
 //! | Cover-means  | `cover`     | **this paper §3.1-3.3** |
 //! | Hybrid       | `hybrid`    | **this paper §3.4** |
+//! | Dual-tree    | `dualtree`  | Curtin's dual-tree k-means (arXiv:1601.03754) |
 //! | MiniBatch    | `minibatch` | Sculley [22] (approximate; no driver) |
 //!
 //! The free functions [`run`] and [`cluster`] and the flat
@@ -53,6 +54,7 @@ pub mod bounds;
 pub mod builder;
 pub mod cover;
 pub mod driver;
+pub mod dualtree;
 pub mod elkan;
 pub mod exponion;
 pub mod hamerly;
@@ -96,6 +98,10 @@ pub enum Algorithm {
     Phillips,
     /// Pelleg & Moore's box-blacklisting k-d tree k-means [14] (exact).
     PellegMoore,
+    /// Dual-tree k-means after Curtin (arXiv:1601.03754): simultaneous
+    /// traversal of the point cover tree and a per-iteration cover tree
+    /// over the centers, pruning per node *pair* (exact).
+    DualTree,
     /// Sculley's mini-batch k-means [22] (approximate; §1 contrast).
     MiniBatch,
 }
@@ -115,7 +121,7 @@ impl Algorithm {
 
     /// Extended family: the paper's table plus the related-work methods
     /// it discusses (§1-2) that this repo also implements.
-    pub const EXTENDED: [Algorithm; 11] = [
+    pub const EXTENDED: [Algorithm; 12] = [
         Algorithm::Standard,
         Algorithm::Kanungo,
         Algorithm::PellegMoore,
@@ -126,6 +132,7 @@ impl Algorithm {
         Algorithm::Shallot,
         Algorithm::CoverMeans,
         Algorithm::Hybrid,
+        Algorithm::DualTree,
         Algorithm::MiniBatch,
     ];
 
@@ -146,6 +153,7 @@ impl Algorithm {
             Algorithm::Hybrid => "Hybrid",
             Algorithm::Phillips => "Phillips",
             Algorithm::PellegMoore => "Pelleg-Moore",
+            Algorithm::DualTree => "Dual-tree",
             Algorithm::MiniBatch => "MiniBatch",
         }
     }
@@ -162,6 +170,7 @@ impl Algorithm {
             "hybrid" => Some(Algorithm::Hybrid),
             "phillips" | "compare-means" => Some(Algorithm::Phillips),
             "pelleg" | "pelleg-moore" | "pellegmoore" => Some(Algorithm::PellegMoore),
+            "dual-tree" | "dualtree" | "dual" => Some(Algorithm::DualTree),
             "minibatch" | "mini-batch" => Some(Algorithm::MiniBatch),
             _ => None,
         }
@@ -175,6 +184,7 @@ impl Algorithm {
                 | Algorithm::CoverMeans
                 | Algorithm::Hybrid
                 | Algorithm::PellegMoore
+                | Algorithm::DualTree
         )
     }
 }

@@ -356,6 +356,44 @@ impl Default for Parallelism {
     }
 }
 
+/// Thread-count-independent task expansion shared by the tree passes
+/// (cover, dual-tree, and the k-d filtering engine): repeatedly pick the
+/// **first strictly-heaviest** splittable task and let `visit` replace it
+/// with its children, until `target` tasks exist or nothing splits.
+///
+/// `weight` returns `None` for tasks that must not be split further
+/// (leaves, subtrees below the pass's minimum weight). Determinism
+/// contract rule 2 lives here: `target` is a fixed constant at every call
+/// site — never derived from the thread count — and the selection policy
+/// (first index wins ties, strict `>` comparison) is a pure function of
+/// the task list, so the resulting task order (and therefore every
+/// order-sensitive accumulator merge downstream) depends on the data
+/// alone.
+pub fn expand_tasks<T>(
+    tasks: &mut Vec<T>,
+    target: usize,
+    weight: impl Fn(&T) -> Option<u32>,
+    mut visit: impl FnMut(T, &mut Vec<T>),
+) {
+    while tasks.len() < target {
+        let mut best: Option<(usize, u32)> = None;
+        for (i, t) in tasks.iter().enumerate() {
+            if let Some(w) = weight(t) {
+                let heavier = match best {
+                    None => true,
+                    Some((_, bw)) => w > bw,
+                };
+                if heavier {
+                    best = Some((i, w));
+                }
+            }
+        }
+        let Some((idx, _)) = best else { break };
+        let t = tasks.remove(idx);
+        visit(t, tasks);
+    }
+}
+
 /// Resolve a configured thread count: 0 = all available cores, otherwise
 /// the value itself (minimum 1).
 pub fn resolve_threads(threads: usize) -> usize {
@@ -603,6 +641,33 @@ mod tests {
         let sums = par.map_chunks(10_000, |r| r.sum::<usize>());
         let total: usize = sums.into_iter().sum();
         assert_eq!(total, (0..10_000).sum::<usize>());
+    }
+
+    #[test]
+    fn expand_tasks_first_heaviest_and_target() {
+        // Tasks are (weight, id); splitting halves the weight into two
+        // children. The policy must pick the first strictly-heaviest task
+        // each round and stop exactly at the target.
+        let mut tasks: Vec<(u32, u32)> = vec![(8, 0), (8, 1), (2, 2)];
+        let mut visited = Vec::new();
+        expand_tasks(
+            &mut tasks,
+            5,
+            |t| (t.0 >= 4).then_some(t.0),
+            |t, out| {
+                visited.push(t.1);
+                out.push((t.0 / 2, t.1 * 10 + 1));
+                out.push((t.0 / 2, t.1 * 10 + 2));
+            },
+        );
+        // First round splits id 0 (first of the two weight-8 ties), second
+        // splits id 1; then 5 tasks exist and expansion stops.
+        assert_eq!(visited, vec![0, 1]);
+        assert_eq!(tasks.len(), 5);
+        // Unsplittable everything: expansion is a no-op.
+        let mut flat: Vec<(u32, u32)> = vec![(1, 0), (1, 1)];
+        expand_tasks(&mut flat, 10, |_| None, |_, _| panic!("no split"));
+        assert_eq!(flat.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Per-iteration cover tree over the k cluster centers, built entirely
+//! from a distance *lookup* — in the dual-tree pass the lookup is the
+//! inter-center matrix (`kmeans::bounds::InterCenter`), which every exact
+//! iteration already computes, so (re)building this tree costs **zero
+//! counted distance computations**.
+//!
+//! The structure mirrors the point tree ([`crate::tree::covertree`]):
+//! `children[0]` is the self-child (same center, radius shrunk by the
+//! scale factor) when children exist, every center appears in exactly one
+//! singleton list across the tree, `radius` bounds the distance from the
+//! node's routing center to every center in its subtree, and each child
+//! and singleton stores its exact distance to the routing center — the
+//! quantities the dual-tree node-pair prunes consume.
+//!
+//! Construction is sequential (k is tiny next to n and the build is pure
+//! table lookups) and deterministic, so the dual-tree pass's candidate
+//! entries — and therefore its task list and merge order — stay a
+//! function of the data alone, as the `threads=N ≡ threads=1`
+//! byte-identity contract requires.
+
+use crate::tree::covertree::CoverTreeParams;
+
+/// Splitting the center set below this size is not worth the pointer
+/// chasing: a handful of centers scans faster flat than through children.
+/// Much smaller than the point tree's default `min_node_size` (100) —
+/// at k=256 a 100-minimum would leave the center tree a single leaf and
+/// degenerate the dual pass to a per-node flat scan.
+pub const CENTER_MIN_NODE: usize = 8;
+
+/// A node of the center tree. Same shape as the point tree's node minus
+/// the aggregates (centers are never assigned in bulk).
+#[derive(Debug, Clone)]
+pub struct CenterNode {
+    /// Index of the routing center (a row of the current centers matrix).
+    pub center: u32,
+    /// Distance from this node's routing center to the parent's routing
+    /// center (0 for the root and for self-children).
+    pub parent_dist: f64,
+    /// Cover radius: max distance from `center` to any center in the
+    /// subtree. 0 for pure singleton leaves.
+    pub radius: f64,
+    /// Child nodes (empty for leaves); `children[0]` is the self-child.
+    pub children: Vec<CenterNode>,
+    /// Centers stored directly: `(center index, dist to routing center)`.
+    /// The routing center itself appears exactly once among all singleton
+    /// lists, at the node where its descent stops.
+    pub singletons: Vec<(u32, f64)>,
+}
+
+impl CenterNode {
+    /// Visit every center index in the subtree.
+    pub fn for_each_center(&self, f: &mut impl FnMut(u32)) {
+        for &(c, _) in &self.singletons {
+            f(c);
+        }
+        for ch in &self.children {
+            ch.for_each_center(f);
+        }
+    }
+
+    /// Number of centers in the subtree.
+    pub fn count(&self) -> usize {
+        let mut n = 0usize;
+        self.for_each_center(&mut |_| n += 1);
+        n
+    }
+}
+
+/// The per-iteration index over the centers.
+#[derive(Debug, Clone)]
+pub struct CenterTree {
+    pub root: CenterNode,
+    /// Number of centers indexed (k at build time).
+    pub k: usize,
+}
+
+/// Build a cover tree over centers `0..k` using the distance lookup `d`
+/// (symmetric, `d(i,i) == 0`). Mirrors the point tree's greedy
+/// construction: root routed at center 0, near/far partition at
+/// `radius / scale_factor`, self-child first, then farthest-point
+/// promotion of the remaining far centers.
+pub fn build_center_tree(
+    k: usize,
+    params: CoverTreeParams,
+    d: &impl Fn(usize, usize) -> f64,
+) -> CenterTree {
+    assert!(params.scale_factor > 1.0, "scale factor must be > 1");
+    assert!(k > 0, "empty center set");
+    let elems: Vec<(u32, f64)> =
+        (1..k as u32).map(|i| (i, d(0, i as usize))).collect();
+    let root = build_node(&params, d, 0, 0.0, elems, true);
+    CenterTree { root, k }
+}
+
+fn build_leaf(
+    p: u32,
+    parent_dist: f64,
+    radius: f64,
+    mut elems: Vec<(u32, f64)>,
+    owns_routing: bool,
+) -> CenterNode {
+    let mut node = CenterNode {
+        center: p,
+        parent_dist,
+        radius,
+        children: Vec::new(),
+        singletons: Vec::new(),
+    };
+    if owns_routing {
+        node.singletons.push((p, 0.0));
+    }
+    node.singletons.append(&mut elems);
+    node
+}
+
+fn build_node(
+    params: &CoverTreeParams,
+    d: &impl Fn(usize, usize) -> f64,
+    p: u32,
+    parent_dist: f64,
+    elems: Vec<(u32, f64)>,
+    owns_routing: bool,
+) -> CenterNode {
+    let radius = elems.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
+    if elems.len() < params.min_node_size || radius <= 0.0 {
+        return build_leaf(p, parent_dist, radius, elems, owns_routing);
+    }
+
+    let cov = radius / params.scale_factor;
+    let mut near: Vec<(u32, f64)> = Vec::new();
+    let mut far: Vec<(u32, f64)> = Vec::new();
+    for e in elems {
+        if e.1 <= cov {
+            near.push(e);
+        } else {
+            far.push(e);
+        }
+    }
+
+    let mut node = CenterNode {
+        center: p,
+        parent_dist,
+        radius,
+        children: Vec::new(),
+        singletons: Vec::new(),
+    };
+    // Self-child: same routing center, radius <= cov, dist-to-parent 0.
+    let near_radius = near.iter().fold(0.0f64, |m, &(_, dd)| m.max(dd));
+    node.children.push(build_node(params, d, p, 0.0, near, owns_routing));
+    debug_assert!(node.children[0].radius <= near_radius + 1e-12);
+
+    // Farthest-point promotion over the far set (no triangle shortcut —
+    // lookups are free, unlike the point build's counted distances).
+    while !far.is_empty() {
+        let (far_idx, _) = far
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .unwrap();
+        let (q, q_pdist) = far.swap_remove(far_idx);
+        let mut q_elems: Vec<(u32, f64)> = Vec::new();
+        let mut rest: Vec<(u32, f64)> = Vec::with_capacity(far.len());
+        for (idx, pd) in far {
+            let dq = d(q as usize, idx as usize);
+            if dq <= cov {
+                q_elems.push((idx, dq));
+            } else {
+                rest.push((idx, pd));
+            }
+        }
+        far = rest;
+        node.children.push(build_node(params, d, q, q_pdist, q_elems, true));
+    }
+    node
+}
+
+/// Rebuild-or-reuse policy for the per-iteration center tree.
+///
+/// The tree indexes the *current* centers, so it is stale the moment any
+/// center moves; the driver invalidates the cache after every update
+/// whose movement vector is not identically zero. The reuse case is the
+/// converged tail of a fit (all movements exactly 0.0) and warm-started
+/// refits — there the k x k lookups and the tree are unchanged, so the
+/// cached structure is bit-identical to a rebuild.
+#[derive(Debug, Default)]
+pub struct CenterTreeCache {
+    tree: Option<CenterTree>,
+}
+
+impl CenterTreeCache {
+    pub fn new() -> CenterTreeCache {
+        CenterTreeCache { tree: None }
+    }
+
+    /// Drop the cached tree (a center moved; the index is stale).
+    pub fn invalidate(&mut self) {
+        self.tree = None;
+    }
+
+    /// Return the cached tree if it indexes `k` centers, else rebuild
+    /// from the lookup.
+    pub fn get_or_build(
+        &mut self,
+        k: usize,
+        params: CoverTreeParams,
+        d: &impl Fn(usize, usize) -> f64,
+    ) -> &CenterTree {
+        let stale = match &self.tree {
+            Some(t) => t.k != k,
+            None => true,
+        };
+        if stale {
+            self.tree = Some(build_center_tree(k, params, d));
+        }
+        self.tree.as_ref().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::dist;
+    use crate::data::synth;
+
+    fn exact_lookup(
+        centers: &crate::data::Matrix,
+    ) -> impl Fn(usize, usize) -> f64 + '_ {
+        |i, j| dist(centers.row(i), centers.row(j))
+    }
+
+    fn check_invariants(
+        centers: &crate::data::Matrix,
+        node: &CenterNode,
+    ) {
+        let p = centers.row(node.center as usize);
+        node.for_each_center(&mut |c| {
+            let dd = dist(p, centers.row(c as usize));
+            assert!(dd <= node.radius + 1e-9, "radius violated");
+        });
+        if let Some(first) = node.children.first() {
+            assert_eq!(first.center, node.center, "self-child first");
+            assert_eq!(first.parent_dist, 0.0);
+        }
+        for ch in &node.children {
+            let dd = dist(p, centers.row(ch.center as usize));
+            assert!((dd - ch.parent_dist).abs() < 1e-9, "child parent dist");
+            assert!(ch.radius <= node.radius + 1e-9, "radius monotone");
+            check_invariants(centers, ch);
+        }
+        for &(c, pd) in &node.singletons {
+            let dd = dist(p, centers.row(c as usize));
+            assert!((dd - pd).abs() < 1e-9, "singleton dist");
+        }
+    }
+
+    #[test]
+    fn builds_and_obeys_invariants() {
+        for (k, seed) in [(3usize, 1u64), (17, 2), (64, 3), (256, 4)] {
+            let centers = synth::gaussian_blobs(k, 5, 6, 1.0, seed);
+            let params =
+                CoverTreeParams { scale_factor: 1.3, min_node_size: CENTER_MIN_NODE };
+            let tree = build_center_tree(k, params, &exact_lookup(&centers));
+            assert_eq!(tree.k, k);
+            assert_eq!(tree.root.count(), k, "every center indexed");
+            let mut seen = vec![0u8; k];
+            tree.root.for_each_center(&mut |c| seen[c as usize] += 1);
+            assert!(seen.iter().all(|&c| c == 1), "each center exactly once");
+            check_invariants(&centers, &tree.root);
+        }
+    }
+
+    #[test]
+    fn single_center_is_a_leaf() {
+        let centers = synth::gaussian_blobs(1, 4, 1, 1.0, 9);
+        let tree = build_center_tree(
+            1,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: CENTER_MIN_NODE },
+            &exact_lookup(&centers),
+        );
+        assert!(tree.root.children.is_empty());
+        assert_eq!(tree.root.singletons, vec![(0, 0.0)]);
+        assert_eq!(tree.root.radius, 0.0);
+    }
+
+    #[test]
+    fn duplicate_centers_collapse() {
+        // Coincident centers (an empty-cluster fit can produce them) must
+        // land in a radius-0 leaf, not recurse forever.
+        let rows: Vec<Vec<f64>> = vec![vec![1.0, 2.0]; 40];
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let centers = crate::data::Matrix::from_rows(&refs);
+        let tree = build_center_tree(
+            40,
+            CoverTreeParams { scale_factor: 1.2, min_node_size: 4 },
+            &exact_lookup(&centers),
+        );
+        assert!(tree.root.children.is_empty());
+        assert_eq!(tree.root.radius, 0.0);
+        assert_eq!(tree.root.count(), 40);
+    }
+
+    #[test]
+    fn cache_rebuilds_on_invalidate_and_k_change() {
+        let centers = synth::gaussian_blobs(20, 3, 4, 1.0, 5);
+        let params =
+            CoverTreeParams { scale_factor: 1.2, min_node_size: CENTER_MIN_NODE };
+        let mut cache = CenterTreeCache::new();
+        let r1 = cache.get_or_build(20, params, &exact_lookup(&centers)).root.center;
+        // Reuse: same k, no invalidation.
+        let r2 = cache.get_or_build(20, params, &exact_lookup(&centers)).root.center;
+        assert_eq!(r1, r2);
+        // k change forces a rebuild even without invalidation.
+        let small = cache.get_or_build(7, params, &exact_lookup(&centers));
+        assert_eq!(small.k, 7);
+        cache.invalidate();
+        let again = cache.get_or_build(20, params, &exact_lookup(&centers));
+        assert_eq!(again.k, 20);
+    }
+}

@@ -1,10 +1,13 @@
-//! Spatial index substrates: the paper's cover tree (§2.3) and the
-//! k-d tree used by the Kanungo et al. baseline.
+//! Spatial index substrates: the paper's cover tree (§2.3), the
+//! k-d tree used by the Kanungo et al. baseline, and the per-iteration
+//! center tree driving the dual-tree assignment pass.
 
+pub mod centers;
 pub mod covertree;
 pub mod kdtree;
 pub mod search;
 
+pub use centers::{CenterNode, CenterTree, CenterTreeCache};
 pub use covertree::{CoverTree, CoverTreeParams};
 pub use kdtree::{KdTree, KdTreeParams};
 pub use search::{knn, nearest, radius, Neighbor};

@@ -40,6 +40,7 @@ fn check_all_match(data: &Matrix, k: usize, seed: u64, params: &KMeansParams) {
         Algorithm::Kanungo,
         Algorithm::CoverMeans,
         Algorithm::Hybrid,
+        Algorithm::DualTree,
     ] {
         let p = KMeansParams { algorithm: alg, ..*params };
         let r = kmeans::run(data, &init_c, &p, &mut Workspace::new());

@@ -202,7 +202,7 @@ fn pool_reuse_across_fits_matches_fresh_pools() {
     let data = synth::istanbul(0.001, 90);
     let mut dc = DistCounter::new();
     let init_c = init::kmeans_plus_plus(&data, 15, 5, &mut dc);
-    for alg in [Algorithm::Kanungo, Algorithm::Hybrid] {
+    for alg in [Algorithm::Kanungo, Algorithm::Hybrid, Algorithm::DualTree] {
         let fresh_a = fit_with_threads(&data, &init_c, alg, 4);
         let fresh_b = fit_with_threads(&data, &init_c, alg, 4);
         assert_identical(&fresh_b, &fresh_a, &format!("{} fresh/fresh", alg.name()));

@@ -4,6 +4,7 @@
 use covermeans::data::{matrix::dist, synth, Matrix};
 use covermeans::rng::Rng;
 use covermeans::testutil::{check, usize_in, Config};
+use covermeans::tree::centers::build_center_tree;
 use covermeans::tree::covertree::{CoverTree, CoverTreeParams, Node};
 use covermeans::tree::kdtree::{is_farther, KdTree, KdTreeParams};
 
@@ -138,6 +139,99 @@ fn dominance_test_sound() {
             }
         }
     });
+}
+
+/// The dual-tree pair prune must be a no-op on the result: whenever a
+/// (point node, center subtree) pair satisfies the prune condition
+/// `d(p, c_E) - r_E > d(p, c_1) + 2 r_x` (exact routing distances,
+/// incumbent `c_1` minimal by `(distance, index)`), no point of the
+/// point node's subtree has a center of the pruned subtree closer than
+/// the incumbent's routing center.
+#[test]
+fn dual_tree_pair_prune_is_sound() {
+    check(Config { cases: 10, seed: 0xD0A1 }, "dual-prune-sound", |rng| {
+        let data = random_data(rng);
+        let k = usize_in(rng, 4, 40).min(data.rows());
+        let rows: Vec<&[f64]> = (0..k)
+            .map(|_| data.row(usize_in(rng, 0, data.rows() - 1)))
+            .collect();
+        let centers = Matrix::from_rows(&rows);
+        let ctree = build_center_tree(
+            k,
+            CoverTreeParams { scale_factor: 1.3, min_node_size: 4 },
+            &|i, j| dist(centers.row(i), centers.row(j)),
+        );
+        let tree = CoverTree::build(
+            &data,
+            CoverTreeParams {
+                scale_factor: 1.1 + rng.f64() * 0.4,
+                min_node_size: usize_in(rng, 1, 100),
+            },
+        );
+        // One expansion of the center root: its child subtrees plus its
+        // resolved singletons — the entry shape the dual pass carries.
+        let mut groups: Vec<(Vec<u32>, u32, f64)> = Vec::new();
+        for ch in &ctree.root.children {
+            let mut members = Vec::new();
+            ch.for_each_center(&mut |c| members.push(c));
+            groups.push((members, ch.center, ch.radius));
+        }
+        for &(c, _) in &ctree.root.singletons {
+            groups.push((vec![c], c, 0.0));
+        }
+        let mut checked = 0usize;
+        check_pair_prune_no_op(&data, &centers, &groups, &tree.root, &mut checked);
+    });
+}
+
+/// Walk the point tree (capped for runtime) and verify the prune claim of
+/// `dual_tree_pair_prune_is_sound` against exhaustive distances.
+fn check_pair_prune_no_op(
+    data: &Matrix,
+    centers: &Matrix,
+    groups: &[(Vec<u32>, u32, f64)],
+    node: &Node,
+    checked: &mut usize,
+) {
+    if *checked >= 48 {
+        return;
+    }
+    *checked += 1;
+    let p = data.row(node.routing as usize);
+    let evals: Vec<f64> = groups
+        .iter()
+        .map(|&(_, c, _)| dist(p, centers.row(c as usize)))
+        .collect();
+    let mut bi = 0usize;
+    for i in 1..groups.len() {
+        if evals[i] < evals[bi] || (evals[i] == evals[bi] && groups[i].1 < groups[bi].1)
+        {
+            bi = i;
+        }
+    }
+    let c1 = groups[bi].1;
+    let d1 = evals[bi];
+    let mut points = Vec::new();
+    node.for_each_point(&mut |i| points.push(i));
+    points.truncate(64);
+    for (i, (members, _, r_e)) in groups.iter().enumerate() {
+        if evals[i] - r_e <= d1 + 2.0 * node.radius {
+            continue; // pair survives; the prune claims nothing
+        }
+        for &q in &points {
+            let qr = data.row(q as usize);
+            let dq1 = dist(qr, centers.row(c1 as usize));
+            for &c in members {
+                assert!(
+                    dist(qr, centers.row(c as usize)) + 1e-9 >= dq1,
+                    "pruned pair held a better center for a subtree point"
+                );
+            }
+        }
+    }
+    for ch in &node.children {
+        check_pair_prune_no_op(data, centers, groups, ch, checked);
+    }
 }
 
 /// The paper's §1 memory claim: the ball representation (center vector +
