@@ -27,6 +27,11 @@
 //!     single-tree cover scan at k in {8, 64, 256} (wall time at 1 and 4
 //!     threads plus counted per-iteration distances), gates exactness
 //!     and thread invariance deterministically, and emits `BENCH_7.json`;
+//!   * measures the distance-kernel layer (scalar vs dispatched SIMD
+//!     ns/dist at d in {3, 30, 784}, tiled vs row-wise inter-center pass
+//!     at k in {64, 256, 1000}, f32 vs f64 serving throughput at k=256),
+//!     gates the bit-identities deterministically (SIMD ≡ scalar, tiled ≡
+//!     row-wise, f32 labels/distances ≡ f64), and emits `BENCH_8.json`;
 //!   * emits `BENCH_4.json` (all of the above plus the per-algorithm
 //!     table);
 //!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
@@ -36,7 +41,9 @@
 //! `BENCH_ENFORCE_SPEEDUP=1` additionally requires >= 1.5x Lloyd
 //! assignment speedup at 4 threads, >= 1.5x on at least one k-d-tree
 //! driver, the dual-tree pass to count strictly fewer assignment
-//! distances than the single-tree scan at k = 256, and pool dispatch
+//! distances than the single-tree scan at k = 256, the dispatched SIMD
+//! kernel to beat the scalar loop at d=30 (skipped when the dispatch IS
+//! scalar), f32 serving to beat f64 serving at k=256, and pool dispatch
 //! below the scoped-spawn baseline, measured
 //! best-of-N on both sides (set in CI, where 4 cores are guaranteed;
 //! skipped by default so laptops with fewer cores don't fail spuriously).
@@ -49,7 +56,11 @@ use std::time::{Duration, Instant};
 
 use covermeans::benchutil::{bench_repeats, bench_scale, fmt_duration, measure, median};
 use covermeans::data::{synth, Matrix};
-use covermeans::kmeans::{init, Algorithm, KMeans, PredictMode, Workspace};
+use covermeans::kernels::{self, scalar as scalar_kernels};
+use covermeans::kmeans::{
+    init, Algorithm, KMeans, PredictMode, PredictOptions, PredictPrecision,
+    Workspace,
+};
 use covermeans::metrics::{DistCounter, RunResult};
 use covermeans::parallel::{run_tasks_scoped, Parallelism};
 use covermeans::serve::{ServeClient, ServeConfig, Server};
@@ -258,6 +269,86 @@ fn write_dual_json(path: &str, scale: f64, n: usize, rows: &[DualRow]) {
         ));
     }
     s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("[json] failed to write {path}: {e}"),
+    }
+}
+
+/// One dimensionality of the scalar-vs-dispatched sqdist measurement.
+struct KernelDimRow {
+    d: usize,
+    scalar_ns: f64,
+    dispatched_ns: f64,
+}
+
+/// One k of the row-wise vs cache-tiled inter-center pass.
+struct KernelPairRow {
+    k: usize,
+    rowwise_ms: f64,
+    tiled_ms: f64,
+}
+
+/// The f64-vs-f32 serving throughput head-to-head at one k.
+struct KernelPredictRow {
+    k: usize,
+    rows_per_s_f64: f64,
+    rows_per_s_f32: f64,
+    fallbacks: u64,
+}
+
+/// Emit `BENCH_8.json`: the distance-kernel layer — per-distance cost of
+/// the scalar vs dispatched kernels across dimensionalities, the tiled
+/// inter-center pass vs the historical row-wise loop across k, and f32 vs
+/// f64 serving throughput, all attributed to the selected dispatch.
+fn write_kernel_json(
+    path: &str,
+    scale: f64,
+    dims: &[KernelDimRow],
+    pairs: &[KernelPairRow],
+    pred: &KernelPredictRow,
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"bench-smoke-kernels-v1\",\n");
+    s.push_str(&format!("  \"dispatch\": \"{}\",\n", kernels::active_name()));
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str("  \"sqdist\": [\n");
+    for (i, r) in dims.iter().enumerate() {
+        let comma = if i + 1 < dims.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"d\": {}, \"scalar_ns\": {:.3}, \"dispatched_ns\": {:.3}, \
+             \"speedup\": {:.3}}}{comma}\n",
+            r.d,
+            r.scalar_ns,
+            r.dispatched_ns,
+            r.scalar_ns / r.dispatched_ns.max(1e-12),
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"intercenter\": [\n");
+    for (i, r) in pairs.iter().enumerate() {
+        let comma = if i + 1 < pairs.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"k\": {}, \"rowwise_ms\": {:.3}, \"tiled_ms\": {:.3}, \
+             \"speedup\": {:.3}}}{comma}\n",
+            r.k,
+            r.rowwise_ms,
+            r.tiled_ms,
+            r.rowwise_ms / r.tiled_ms.max(1e-12),
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"predict_f32\": {{\"k\": {}, \"rows_per_s_f64\": {:.0}, \
+         \"rows_per_s_f32\": {:.0}, \"speedup\": {:.3}, \"fallbacks\": {}}}\n",
+        pred.k,
+        pred.rows_per_s_f64,
+        pred.rows_per_s_f32,
+        pred.rows_per_s_f32 / pred.rows_per_s_f64.max(1e-12),
+        pred.fallbacks,
+    ));
+    s.push_str("}\n");
     match std::fs::write(path, s) {
         Ok(()) => println!("[json] wrote {path}"),
         Err(e) => eprintln!("[json] failed to write {path}: {e}"),
@@ -777,6 +868,194 @@ fn main() {
         dual_rows.push(row);
     }
     write_dual_json("BENCH_7.json", scale, dual_data.rows(), &dual_rows);
+
+    // --- distance-kernel layer (BENCH_8.json): scalar vs dispatched
+    // sqdist per-distance cost, tiled vs row-wise inter-center pass, and
+    // f32 vs f64 serving throughput. The bit-identity gates are
+    // deterministic and always enforced; the speedup gates (SIMD at d=30,
+    // f32 serving at k=256) run under BENCH_ENFORCE_SPEEDUP.
+    println!("kernel dispatch: {}", kernels::active_name());
+
+    /// Best-of-N ns per distance for one sqdist implementation over a
+    /// fixed pool of vector pairs.
+    fn ns_per_dist(
+        repeats: usize,
+        iters: usize,
+        pairs: usize,
+        d: usize,
+        va: &[f64],
+        vb: &[f64],
+        f: impl Fn(&[f64], &[f64]) -> f64,
+    ) -> f64 {
+        let times = measure(repeats, || {
+            let mut acc = 0.0;
+            for _ in 0..iters {
+                for p in 0..pairs {
+                    acc += f(&va[p * d..(p + 1) * d], &vb[p * d..(p + 1) * d]);
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        times[0].as_secs_f64() * 1e9 / (iters * pairs) as f64
+    }
+
+    let mut dim_rows: Vec<KernelDimRow> = Vec::new();
+    for d in [3usize, 30, 784] {
+        const PAIRS: usize = 32;
+        let va: Vec<f64> = (0..PAIRS * d)
+            .map(|i| ((i * 37 + 11) % 101) as f64 * 0.173 - 8.0)
+            .collect();
+        let vb: Vec<f64> = (0..PAIRS * d)
+            .map(|i| ((i * 53 + 29) % 97) as f64 * 0.211 - 10.0)
+            .collect();
+        // Identity gate (always enforced): dispatched ≡ scalar, bit for
+        // bit, on every pair of the timing pool.
+        for p in 0..PAIRS {
+            let (a, b) = (&va[p * d..(p + 1) * d], &vb[p * d..(p + 1) * d]);
+            if kernels::sqdist(a, b).to_bits()
+                != scalar_kernels::sqdist(a, b).to_bits()
+            {
+                failures.push(format!(
+                    "kernel identity broken at d={d} (dispatch {})",
+                    kernels::active_name()
+                ));
+                break;
+            }
+        }
+        let iters = (2_000_000 / (d * PAIRS).max(1)).max(20);
+        let scalar_ns =
+            ns_per_dist(repeats, iters, PAIRS, d, &va, &vb, scalar_kernels::sqdist);
+        let dispatched_ns =
+            ns_per_dist(repeats, iters, PAIRS, d, &va, &vb, kernels::sqdist);
+        println!(
+            "sqdist d={d:<4}: scalar {scalar_ns:>7.2} ns | {} {dispatched_ns:>7.2} ns | {:.2}x",
+            kernels::active_name(),
+            scalar_ns / dispatched_ns.max(1e-12),
+        );
+        if enforce
+            && d == 30
+            && kernels::active() != kernels::Dispatch::Scalar
+            && dispatched_ns >= scalar_ns
+        {
+            failures.push(format!(
+                "dispatched sqdist ({}) {dispatched_ns:.2} ns/dist not below the \
+                 scalar loop's {scalar_ns:.2} at d=30",
+                kernels::active_name()
+            ));
+        }
+        dim_rows.push(KernelDimRow { d, scalar_ns, dispatched_ns });
+    }
+
+    // Tiled vs row-wise inter-center pass: same per-pair arithmetic,
+    // cache-blocked loop order. Identity over the full upper triangle is
+    // a deterministic gate; the timing rows show the cache win growing
+    // with k.
+    let mut pair_rows: Vec<KernelPairRow> = Vec::new();
+    for ck in [64usize, 256, 1000] {
+        let centers = synth::gaussian_blobs(ck, 30, 16, 1.0, 300 + ck as u64);
+        let mut grid = vec![f64::NAN; ck * ck];
+        kernels::pairwise_upper(&centers, |i, j, dd| grid[i * ck + j] = dd);
+        let mut identical = true;
+        'pairs: for i in 0..ck {
+            for j in (i + 1)..ck {
+                let want = kernels::sqdist(centers.row(i), centers.row(j)).sqrt();
+                if grid[i * ck + j].to_bits() != want.to_bits() {
+                    identical = false;
+                    break 'pairs;
+                }
+            }
+        }
+        if !identical {
+            failures.push(format!(
+                "tiled inter-center pass not bit-identical to row-wise at k={ck}"
+            ));
+        }
+        let rowwise_times = measure(repeats, || {
+            let mut acc = 0.0f64;
+            for i in 0..ck {
+                let ci = centers.row(i);
+                for j in (i + 1)..ck {
+                    acc += kernels::sqdist(ci, centers.row(j)).sqrt();
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        let tiled_times = measure(repeats, || {
+            let mut acc = 0.0f64;
+            kernels::pairwise_upper(&centers, |_, _, dd| acc += dd);
+            std::hint::black_box(acc);
+        });
+        let rowwise_ms = rowwise_times[0].as_secs_f64() * 1e3;
+        let tiled_ms = tiled_times[0].as_secs_f64() * 1e3;
+        println!(
+            "inter-center k={ck:<4} (d=30): row-wise {rowwise_ms:>8.3}ms | \
+             tiled {tiled_ms:>8.3}ms | {:.2}x",
+            rowwise_ms / tiled_ms.max(1e-12),
+        );
+        pair_rows.push(KernelPairRow { k: ck, rowwise_ms, tiled_ms });
+    }
+
+    // f32 vs f64 serving at k=256: identical labels and distance bits
+    // (deterministic gate), higher throughput (BENCH_ENFORCE_SPEEDUP).
+    let f32_k = 256usize;
+    let mut dc = DistCounter::new();
+    let f_init = init::kmeans_plus_plus(&big, f32_k, 31, &mut dc);
+    let f_model = KMeans::new(f32_k)
+        .algorithm(Algorithm::Standard)
+        .threads(4)
+        .max_iter(3)
+        .warm_start(f_init)
+        .fit_model(&big)
+        .expect("valid kernel-bench configuration");
+    let opts64 = PredictOptions {
+        mode: PredictMode::Scan,
+        threads: 4,
+        precision: PredictPrecision::F64,
+        ..PredictOptions::default()
+    };
+    let opts32 = PredictOptions { precision: PredictPrecision::F32, ..opts64 };
+    // Cold calls charge index prep and feed the identity gate.
+    let pk64 = f_model.predict_opts_par(&queries, &opts64, &serve_pools[1]);
+    let pk32 = f_model.predict_opts_par(&queries, &opts32, &serve_pools[1]);
+    if pk32.labels != pk64.labels {
+        failures.push("f32 serving labels diverged from f64 at k=256".to_string());
+    } else if pk32
+        .distances
+        .iter()
+        .zip(&pk64.distances)
+        .any(|(a, b)| a.to_bits() != b.to_bits())
+    {
+        failures.push("f32 serving distances not bit-identical to f64".to_string());
+    }
+    let mut rps = [0.0f64; 2];
+    for (slot, o) in [&opts64, &opts32].into_iter().enumerate() {
+        let times = measure(repeats, || {
+            let p = f_model.predict_opts_par(&queries, o, &serve_pools[1]);
+            std::hint::black_box(p.labels.len());
+        });
+        rps[slot] = q_n as f64 / times[0].as_secs_f64().max(1e-12);
+    }
+    println!(
+        "predict k={f32_k} scan (n={q_n}): f64 {:>9.0} rows/s | f32 {:>9.0} rows/s \
+         | {:.2}x | {} fallbacks",
+        rps[0],
+        rps[1],
+        rps[1] / rps[0].max(1e-12),
+        pk32.f32_fallbacks,
+    );
+    if enforce && rps[1] <= rps[0] {
+        failures.push(format!(
+            "f32 serving at k={f32_k} ({:.0} rows/s) not above f64 ({:.0} rows/s)",
+            rps[1], rps[0],
+        ));
+    }
+    let kernel_pred = KernelPredictRow {
+        k: f32_k,
+        rows_per_s_f64: rps[0],
+        rows_per_s_f32: rps[1],
+        fallbacks: pk32.f32_fallbacks,
+    };
+    write_kernel_json("BENCH_8.json", scale, &dim_rows, &pair_rows, &kernel_pred);
 
     // --- emit the artifact.
     let extras = Extras {

@@ -34,6 +34,8 @@
 //! | `model_out` | *(empty)* | `covermeans run`: save the fitted [`crate::kmeans::KMeansModel`] to this `.kmm` path (empty = don't). |
 //! | `predict_mode` | `auto` | `covermeans predict` / `serve`: query strategy — `auto`, `tree` (cover tree over the centers), or `scan` (Elkan-pruned linear scan). |
 //! | `predict_auto_k` | `64` | `covermeans predict` / `serve`: `k` at or above which `predict_mode = auto` picks the cover tree over the pruned scan ([`crate::kmeans::DEFAULT_PREDICT_AUTO_K`]; tune from the measured crossover in `BENCH_5.json`). |
+//! | `predict_precision` | `f64` | `covermeans predict` / `serve`: scan arithmetic — `f64` (full doubles) or `f32` (quantized SIMD scan with certified f64 fallback; labels and distances stay bit-identical to f64, see [`crate::kmeans::PredictPrecision`]). |
+//! | `pin_workers` | `0` | Pin each pool worker to its own core at spawn (Linux `sched_setaffinity`; no-op elsewhere). Placement only — results are byte-identical either way. The `COVERMEANS_FORCE_SCALAR` *env var* (not a config key) similarly forces the scalar distance kernels for A/B runs. |
 //! | `serve_addr` | `127.0.0.1:7464` | `covermeans serve`: listen address (`--addr` overrides; port `0` binds an ephemeral port, printed on startup). |
 //! | `max_batch` | `1024` | `covermeans serve`: the batcher drains queued requests until one coalesced predict pass holds this many rows. |
 //! | `batch_wait_us` | `200` | `covermeans serve`: how long (µs) the batcher waits for more requests after the first before running a short batch. |
@@ -45,7 +47,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::kmeans::{
-    Algorithm, KMeansParams, PredictMode, DEFAULT_PREDICT_AUTO_K,
+    Algorithm, KMeansParams, PredictMode, PredictPrecision, DEFAULT_PREDICT_AUTO_K,
 };
 use crate::tree::{CoverTreeParams, KdTreeParams};
 
@@ -84,6 +86,9 @@ pub struct RunConfig {
     /// `covermeans predict` / `serve`: `k` at or above which
     /// [`PredictMode::Auto`] resolves to the cover tree over the centers.
     pub predict_auto_k: usize,
+    /// `covermeans predict` / `serve`: scan arithmetic (f64 default; f32
+    /// is the certified quantized fast path with identical outputs).
+    pub predict_precision: PredictPrecision,
     /// `covermeans serve`: listen address (host:port; port 0 = ephemeral).
     pub serve_addr: String,
     /// `covermeans serve`: max rows coalesced into one batched predict.
@@ -111,6 +116,7 @@ impl Default for RunConfig {
             model_out: String::new(),
             predict_mode: PredictMode::Auto,
             predict_auto_k: DEFAULT_PREDICT_AUTO_K,
+            predict_precision: PredictPrecision::F64,
             serve_addr: "127.0.0.1:7464".to_string(),
             max_batch: 1024,
             batch_wait_us: 200,
@@ -143,6 +149,8 @@ impl RunConfig {
         "model_out",
         "predict_mode",
         "predict_auto_k",
+        "predict_precision",
+        "pin_workers",
         "serve_addr",
         "max_batch",
         "batch_wait_us",
@@ -202,6 +210,19 @@ impl RunConfig {
                     bail!("predict_auto_k must be at least 1 (1 = always tree)");
                 }
                 self.predict_auto_k = a;
+            }
+            "predict_precision" => {
+                self.predict_precision =
+                    PredictPrecision::parse(v).with_context(|| {
+                        format!("predict_precision {v:?} (expected f64 or f32)")
+                    })?
+            }
+            "pin_workers" => {
+                self.params.pin_workers = match v {
+                    "1" | "true" | "yes" | "on" => true,
+                    "0" | "false" | "no" | "off" => false,
+                    other => bail!("pin_workers must be a boolean, got {other:?}"),
+                }
             }
             "serve_addr" => self.serve_addr = v.to_string(),
             "max_batch" => {
@@ -289,6 +310,14 @@ impl RunConfig {
         m.insert("model_out", self.model_out.clone());
         m.insert("predict_mode", self.predict_mode.name().to_string());
         m.insert("predict_auto_k", self.predict_auto_k.to_string());
+        m.insert(
+            "predict_precision",
+            self.predict_precision.name().to_string(),
+        );
+        m.insert(
+            "pin_workers",
+            if self.params.pin_workers { "1" } else { "0" }.to_string(),
+        );
         m.insert("serve_addr", self.serve_addr.clone());
         m.insert("max_batch", self.max_batch.to_string());
         m.insert("batch_wait_us", self.batch_wait_us.to_string());
@@ -398,6 +427,26 @@ mod tests {
         let dump = c.dump();
         assert!(dump.contains("model_out = out/best.kmm"));
         assert!(dump.contains("predict_mode = tree"));
+    }
+
+    #[test]
+    fn kernel_and_pinning_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.predict_precision, PredictPrecision::F64);
+        assert!(!c.params.pin_workers);
+        c.set("predict_precision", "f32").unwrap();
+        c.set("pin_workers", "1").unwrap();
+        assert_eq!(c.predict_precision, PredictPrecision::F32);
+        assert!(c.params.pin_workers);
+        let dump = c.dump();
+        assert!(dump.contains("predict_precision = f32"));
+        assert!(dump.contains("pin_workers = 1"));
+        c.set("predict_precision", "double").unwrap();
+        c.set("pin_workers", "off").unwrap();
+        assert_eq!(c.predict_precision, PredictPrecision::F64);
+        assert!(!c.params.pin_workers);
+        assert!(c.set("predict_precision", "f16").is_err());
+        assert!(c.set("pin_workers", "maybe").is_err());
     }
 
     #[test]

@@ -246,7 +246,8 @@ fn run_cell(
     // One persistent worker pool per cell, shared by every fit, tree
     // build, and seeding pass the cell runs (fit_threads > 1 only pays
     // the spawn cost once, not per run).
-    let fit_par = ws.parallelism(exp.params.threads);
+    let fit_par =
+        ws.parallelism_opts(exp.params.threads, exp.params.pin_workers);
     let spec = AlgorithmSpec::from_params(alg, &exp.params);
     // Previous-k solution per restart, for the warm-started sweep.
     let mut prev_centers: Vec<Option<Matrix>> = vec![None; exp.restarts];

@@ -24,6 +24,7 @@ pub fn provenance_rows_for(cell_threads: usize, fit_threads: usize) -> Vec<Strin
     vec![
         format!("# cell_threads = {cell_threads}"),
         format!("# fit_threads = {fit_threads}"),
+        format!("# kernel = {}", crate::kernels::active_name()),
     ]
 }
 
@@ -219,6 +220,10 @@ mod tests {
         let rows = provenance_rows(&exp);
         assert_eq!(rows[0], "# cell_threads = 4");
         assert_eq!(rows[1], "# fit_threads = 2");
+        assert_eq!(
+            rows[2],
+            format!("# kernel = {}", crate::kernels::active_name())
+        );
     }
 
     #[test]

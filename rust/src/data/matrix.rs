@@ -126,40 +126,19 @@ impl Matrix {
 ///
 /// This is the *uncounted* primitive; algorithm code must go through
 /// [`crate::metrics::DistCounter`] so the paper's "number of distance
-/// computations" metric is tracked.
+/// computations" metric is tracked. Since the kernels refactor this is a
+/// shim over [`crate::kernels::sqdist`] — the runtime-dispatched SIMD
+/// kernel, bit-identical to the historical 4-accumulator scalar loop
+/// (which now lives in [`crate::kernels::scalar`]).
 #[inline]
 pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    // Four *independent* accumulators break the serial add dependency
-    // chain, and `chunks_exact` removes the bounds checks that blocked
-    // vectorization (measured together at +88% over the
-    // single-accumulator indexed unroll on d=30).
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    let ca = a.chunks_exact(4);
-    let cb = b.chunks_exact(4);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (qa, qb) in ca.zip(cb) {
-        let d0 = qa[0] - qb[0];
-        let d1 = qa[1] - qb[1];
-        let d2 = qa[2] - qb[2];
-        let d3 = qa[3] - qb[3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-    }
-    let mut acc = (s0 + s2) + (s1 + s3);
-    for (x, y) in ra.iter().zip(rb) {
-        let d = x - y;
-        acc += d * d;
-    }
-    acc
+    crate::kernels::sqdist(a, b)
 }
 
-/// Euclidean distance.
+/// Euclidean distance (shim over [`crate::kernels::dist`]).
 #[inline]
 pub fn dist(a: &[f64], b: &[f64]) -> f64 {
-    sqdist(a, b).sqrt()
+    crate::kernels::dist(a, b)
 }
 
 #[cfg(test)]

@@ -286,7 +286,7 @@ pub fn gaussian_blobs(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::matrix::dist;
+    use crate::kernels::dist;
 
     #[test]
     fn sizes_scale() {

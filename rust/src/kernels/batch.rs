@@ -1,0 +1,138 @@
+//! Batched scan entry points: one-point-vs-many-centers argmin and the
+//! cache-blocked inter-center pass. These change *loop structure* only —
+//! the per-pair arithmetic is the dispatched [`super::sqdist`], so
+//! everything here inherits the module's bit-identity guarantee.
+
+use super::scalar;
+use crate::data::Matrix;
+
+/// Nearest and second-nearest center for `point`, ties to the lowest
+/// index: `(c1, d1, c2, d2)` with Euclidean (not squared) distances and
+/// `d2 = ∞` when there is a single center.
+///
+/// Dispatch is hoisted out of the scan: the SIMD variants run the whole
+/// k-row loop inside one `target_feature` region, amortizing loads of
+/// `point` across center rows instead of paying a dispatch branch per
+/// distance. Exactly the comparison sequence of the historical per-row
+/// loop, so results are byte-identical under every dispatch.
+#[inline]
+pub fn argmin2(point: &[f64], centers: &Matrix) -> (u32, f64, u32, f64) {
+    #[cfg(target_arch = "x86_64")]
+    if super::active() == super::Dispatch::Avx {
+        // Safety: Avx is only selected after runtime feature detection.
+        return unsafe { super::x86::argmin2_avx(point, centers) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if super::active() == super::Dispatch::Neon {
+        return super::neon::argmin2_neon(point, centers);
+    }
+    scalar::argmin2(point, centers)
+}
+
+/// f32 [`argmin2`] over a flat row-major `k × d` center buffer,
+/// returning **squared** distances (monotone in the true distance, so
+/// argmin and tie order match; the serving path converts to f64 and
+/// takes roots only for its error-bound test).
+#[inline]
+pub fn argmin2_f32(point: &[f32], centers: &[f32], d: usize) -> (u32, f32, u32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if super::active() == super::Dispatch::Avx {
+        // Safety: Avx is only selected after runtime feature detection.
+        return unsafe { super::x86::argmin2_f32_avx(point, centers, d) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if super::active() == super::Dispatch::Neon {
+        return super::neon::argmin2_f32_neon(point, centers, d);
+    }
+    scalar::argmin2_f32(point, centers, d)
+}
+
+/// Row-block size of [`pairwise_upper`]: 8 rows of the i-block stay hot
+/// while a j-tile streams past them.
+const TILE_I: usize = 8;
+/// Column-tile size of [`pairwise_upper`].
+const TILE_J: usize = 32;
+
+/// Cache-blocked upper-triangle pairwise pass over the center rows:
+/// `emit(i, j, d(c_i, c_j))` exactly once per unordered pair `i < j`.
+///
+/// The O(k²d) inter-center pass used to stream the full matrix once per
+/// row; tiling re-uses an 8-row block against 32-row tiles so each block
+/// of operands is loaded from cache, not memory. Emission *order* differs
+/// from the row-wise loop, but each pair's distance is an independent
+/// [`super::sqdist`] and the consumer (`InterCenter`'s per-row minimum)
+/// is order-free, so results stay byte-identical.
+pub fn pairwise_upper(centers: &Matrix, mut emit: impl FnMut(usize, usize, f64)) {
+    let k = centers.rows();
+    let mut ib = 0;
+    while ib < k {
+        let ie = (ib + TILE_I).min(k);
+        let mut jb = ib + 1;
+        while jb < k {
+            let je = (jb + TILE_J).min(k);
+            for j in jb..je {
+                let cj = centers.row(j);
+                for i in ib..ie.min(j) {
+                    emit(i, j, super::sqdist(centers.row(i), cj).sqrt());
+                }
+            }
+            jb = je;
+        }
+        ib = ie;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_centers(k: usize, d: usize) -> Matrix {
+        let mut m = Matrix::zeros(k, d);
+        for i in 0..k {
+            for j in 0..d {
+                m.row_mut(i)[j] = ((i * 31 + j * 7) % 17) as f64 * 0.25 - 1.0;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn argmin2_matches_scalar_reference() {
+        let centers = toy_centers(37, 13);
+        let q: Vec<f64> = (0..13).map(|i| (i as f64) * 0.1 - 0.3).collect();
+        let got = argmin2(&q, &centers);
+        let want = scalar::argmin2(&q, &centers);
+        assert_eq!(got.0, want.0);
+        assert_eq!(got.1.to_bits(), want.1.to_bits());
+        assert_eq!(got.2, want.2);
+        assert_eq!(got.3.to_bits(), want.3.to_bits());
+    }
+
+    #[test]
+    fn argmin2_single_center_second_is_infinite() {
+        let centers = toy_centers(1, 5);
+        let (c1, d1, _, d2) = argmin2(&[0.0; 5], &centers);
+        assert_eq!(c1, 0);
+        assert!(d1.is_finite());
+        assert_eq!(d2, f64::INFINITY);
+    }
+
+    #[test]
+    fn pairwise_upper_emits_each_pair_once() {
+        for k in [0usize, 1, 2, 7, TILE_I, TILE_I + 1, 50] {
+            let centers = toy_centers(k.max(1), 6);
+            let centers = if k == 0 { Matrix::zeros(0, 6) } else { centers };
+            let mut seen = std::collections::HashSet::new();
+            let mut count = 0usize;
+            pairwise_upper(&centers, |i, j, dd| {
+                assert!(i < j, "k={k}");
+                assert!(j < k, "k={k}");
+                assert!(seen.insert((i, j)), "duplicate pair ({i},{j}) k={k}");
+                let want = super::super::sqdist(centers.row(i), centers.row(j)).sqrt();
+                assert_eq!(dd.to_bits(), want.to_bits());
+                count += 1;
+            });
+            assert_eq!(count, k * (k.max(1) - 1) / 2, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! The one home of all Euclidean distance math: runtime-dispatched SIMD
+//! kernels with a bit-identical scalar fallback, batched argmin scans,
+//! and the reduced-precision (f32) serving kernels.
+//!
+//! Every point–point and point–center distance the crate computes funnels
+//! through this module — [`crate::data::matrix::sqdist`] and
+//! [`crate::metrics::DistCounter`] are thin shims over [`sqdist`]/[`dist`]
+//! here, and the survivors loops, leaf scans, and predict paths call the
+//! batched entry points ([`argmin2`], [`pairwise_upper`]) directly.
+//!
+//! # Dispatch
+//!
+//! The kernel implementation is selected **once per process** and cached:
+//!
+//! 1. If the `COVERMEANS_FORCE_SCALAR` environment variable is set to a
+//!    non-empty value other than `0`, the scalar kernels run everywhere
+//!    (the escape hatch for bug triage and A/B benchmarking).
+//! 2. On `x86_64`, runtime detection (`is_x86_feature_detected!("avx2")`)
+//!    selects the AVX kernels in [`x86`].
+//! 3. On `aarch64`, NEON is architecturally guaranteed, so the [`neon`]
+//!    kernels are always selected.
+//! 4. Anything else falls back to the [`scalar`] kernels — the exact
+//!    4-accumulator loop the crate has always used.
+//!
+//! The selected name is reported by [`active_name`] and surfaces in the
+//! CLI startup line, the serving daemon's `STATS` counters, and the CSV
+//! provenance headers, so every artifact is attributable to a code path.
+//!
+//! # Bit-identity (the reason this is safe)
+//!
+//! The repo's determinism contract (`threads=N ≡ threads=1` byte for
+//! byte, GUIDE §3) extends across dispatch: **SIMD ≡ scalar, bit for
+//! bit**. That is engineered, not hoped for. The scalar f64 kernel keeps
+//! four independent accumulators over `chunks_exact(4)` —
+//!
+//! ```text
+//! s0 += d0*d0;  s1 += d1*d1;  s2 += d2*d2;  s3 += d3*d3;   // per quad
+//! acc = (s0 + s2) + (s1 + s3);                              // fixed tree
+//! acc += d*d for each remainder element                     // scalar tail
+//! ```
+//!
+//! — which maps 1:1 onto a 4×f64 vector accumulator: lane *i* of the AVX
+//! accumulator receives exactly the operands of `s_i`, in the same order,
+//! with separately rounded multiply and add (**no FMA** — a fused
+//! multiply-add rounds once where the scalar kernel rounds twice, which
+//! is precisely the kind of silent divergence this module exists to
+//! forbid). The horizontal reduction extracts the 128-bit halves and adds
+//! them in the same fixed `(s0+s2)+(s1+s3)` tree, and the remainder lanes
+//! run the identical scalar tail. IEEE-754 ops are deterministic given
+//! operands, operation, and rounding order — all three are equal by
+//! construction, so every intermediate, and the result, is bit-identical.
+//! The same argument covers NEON (two 2-lane accumulators `[s0,s1]` /
+//! `[s2,s3]`) and the f32 kernel (eight accumulators folded
+//! `(t0+t2)+(t1+t3)` with `t_i = s_i + s_{i+4}`, matching the natural
+//! 8×f32 AVX reduction). `rust/tests/kernels.rs` property-tests the
+//! equality across dimensions 0..=67, subnormals, signed zeros, and
+//! large-magnitude inputs; CI runs the suite under both dispatches.
+//!
+//! The batched scans change loop structure only, never arithmetic:
+//! [`argmin2`] performs the same per-row `sqrt(sqdist)` comparisons as
+//! the historical per-row loop (lowest index wins ties), and
+//! [`pairwise_upper`] tiles the O(k²d) inter-center pass for cache reuse
+//! while emitting each unordered pair exactly once — the consumer's
+//! row-min is order-free, so the tiling is invisible in the output.
+
+use std::sync::OnceLock;
+
+pub mod batch;
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+pub use batch::{argmin2, argmin2_f32, pairwise_upper};
+
+/// Which kernel implementation the process dispatches to (selected once,
+/// see the [module docs](self)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The portable 4-accumulator scalar loop (always available).
+    Scalar,
+    /// 256-bit AVX vectors on x86_64 (runtime-detected; no FMA — see the
+    /// bit-identity notes in the [module docs](self)).
+    Avx,
+    /// 128-bit NEON vectors on aarch64 (architecturally guaranteed).
+    Neon,
+}
+
+impl Dispatch {
+    /// Lower-case name used in log lines, `STATS`, and CSV provenance.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx => "avx",
+            Dispatch::Neon => "neon",
+        }
+    }
+}
+
+/// Is the `COVERMEANS_FORCE_SCALAR` escape hatch engaged? (Set to any
+/// non-empty value other than `0`.)
+pub fn force_scalar() -> bool {
+    match std::env::var_os("COVERMEANS_FORCE_SCALAR") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+fn detect() -> Dispatch {
+    if force_scalar() {
+        return Dispatch::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Dispatch::Avx;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Dispatch::Neon;
+    }
+    #[allow(unreachable_code)]
+    Dispatch::Scalar
+}
+
+static DISPATCH: OnceLock<Dispatch> = OnceLock::new();
+
+/// The dispatch selected for this process (detection runs on first call
+/// and is cached; the env escape hatch is read at that point).
+#[inline]
+pub fn active() -> Dispatch {
+    *DISPATCH.get_or_init(detect)
+}
+
+/// [`active`]'s name — the string logged at startup and recorded in
+/// `STATS` / CSV provenance.
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+/// Squared Euclidean distance, dispatched. Bit-identical to
+/// [`scalar::sqdist`] under every dispatch.
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Dispatch::Avx {
+        // Safety: `Avx` is only ever selected after runtime detection
+        // confirmed the feature on this CPU.
+        return unsafe { x86::sqdist_avx(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Dispatch::Neon {
+        return neon::sqdist_neon(a, b);
+    }
+    scalar::sqdist(a, b)
+}
+
+/// Euclidean distance, dispatched (`sqrt` of [`sqdist`]).
+#[inline]
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    sqdist(a, b).sqrt()
+}
+
+/// Squared Euclidean distance in f32, dispatched. Bit-identical to
+/// [`scalar::sqdist_f32`] under every dispatch, so the f32 serving
+/// path's fallback decisions are dispatch-invariant too.
+#[inline]
+pub fn sqdist_f32(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Dispatch::Avx {
+        // Safety: as in `sqdist` — Avx implies detection succeeded.
+        return unsafe { x86::sqdist_f32_avx(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Dispatch::Neon {
+        return neon::sqdist_f32_neon(a, b);
+    }
+    scalar::sqdist_f32(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_is_cached_and_named() {
+        let a = active();
+        assert_eq!(a, active(), "detection must be stable");
+        assert!(["scalar", "avx", "neon"].contains(&active_name()));
+        if force_scalar() {
+            assert_eq!(a, Dispatch::Scalar, "escape hatch must win");
+        }
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_bits() {
+        // The heavyweight property suite lives in rust/tests/kernels.rs;
+        // this is the smoke version that runs with every unit test pass.
+        for d in [0usize, 1, 3, 4, 7, 32, 67] {
+            let a: Vec<f64> =
+                (0..d).map(|i| (i as f64).sin() * 1e3 + 0.125).collect();
+            let b: Vec<f64> = (0..d).map(|i| (i as f64).cos() * 1e-3).collect();
+            assert_eq!(
+                sqdist(&a, &b).to_bits(),
+                scalar::sqdist(&a, &b).to_bits(),
+                "d={d}"
+            );
+            let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            assert_eq!(
+                sqdist_f32(&af, &bf).to_bits(),
+                scalar::sqdist_f32(&af, &bf).to_bits(),
+                "d={d}"
+            );
+        }
+    }
+}

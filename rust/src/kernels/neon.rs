@@ -1,0 +1,129 @@
+//! NEON kernels for aarch64. NEON (ASIMD) is architecturally guaranteed
+//! on aarch64, so these are safe functions selected unconditionally by
+//! [`super::active`] (unless the scalar escape hatch is engaged).
+//!
+//! Bit-identity with the scalar reference follows the same argument as
+//! the AVX kernels (see the [module docs](super)): the f64 kernel keeps
+//! the four scalar accumulators as two 2-lane vectors `[s0,s1]` and
+//! `[s2,s3]`, adds them into `[s0+s2, s1+s3]`, and finishes lane0 +
+//! lane1 — exactly `(s0+s2)+(s1+s3)`; multiplies and adds round
+//! separately (`vmulq` + `vaddq`, never `vfmaq`).
+
+#![cfg(target_arch = "aarch64")]
+
+use std::arch::aarch64::*;
+
+use crate::data::Matrix;
+
+/// NEON twin of [`super::scalar::sqdist`].
+#[inline]
+pub fn sqdist_neon(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let quads = n / 4;
+    unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0); // lanes [s0, s1]
+        let mut acc23 = vdupq_n_f64(0.0); // lanes [s2, s3]
+        for q in 0..quads {
+            let a0 = vld1q_f64(pa.add(q * 4));
+            let a1 = vld1q_f64(pa.add(q * 4 + 2));
+            let b0 = vld1q_f64(pb.add(q * 4));
+            let b1 = vld1q_f64(pb.add(q * 4 + 2));
+            let d0 = vsubq_f64(a0, b0);
+            let d1 = vsubq_f64(a1, b1);
+            // vmul + vadd, never vfma: two roundings like the scalar loop.
+            acc01 = vaddq_f64(acc01, vmulq_f64(d0, d0));
+            acc23 = vaddq_f64(acc23, vmulq_f64(d1, d1));
+        }
+        let t = vaddq_f64(acc01, acc23); // [s0+s2, s1+s3]
+        let mut out = vgetq_lane_f64::<0>(t) + vgetq_lane_f64::<1>(t);
+        for i in quads * 4..n {
+            let d = *pa.add(i) - *pb.add(i);
+            out += d * d;
+        }
+        out
+    }
+}
+
+/// NEON twin of [`super::scalar::sqdist_f32`].
+#[inline]
+pub fn sqdist_f32_neon(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let octs = n / 8;
+    unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0); // lanes [s0..s3]
+        let mut acc1 = vdupq_n_f32(0.0); // lanes [s4..s7]
+        for q in 0..octs {
+            let a0 = vld1q_f32(pa.add(q * 8));
+            let a1 = vld1q_f32(pa.add(q * 8 + 4));
+            let b0 = vld1q_f32(pb.add(q * 8));
+            let b1 = vld1q_f32(pb.add(q * 8 + 4));
+            let d0 = vsubq_f32(a0, b0);
+            let d1 = vsubq_f32(a1, b1);
+            acc0 = vaddq_f32(acc0, vmulq_f32(d0, d0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(d1, d1));
+        }
+        let t = vaddq_f32(acc0, acc1); // [t0..t3] = [s0+s4, ...]
+        let mut out = (vgetq_lane_f32::<0>(t) + vgetq_lane_f32::<2>(t))
+            + (vgetq_lane_f32::<1>(t) + vgetq_lane_f32::<3>(t));
+        for i in octs * 8..n {
+            let d = *pa.add(i) - *pb.add(i);
+            out += d * d;
+        }
+        out
+    }
+}
+
+/// NEON twin of [`super::scalar::argmin2`] (scan hoisted so the per-row
+/// kernel inlines).
+pub fn argmin2_neon(point: &[f64], centers: &Matrix) -> (u32, f64, u32, f64) {
+    let mut c1 = 0u32;
+    let mut d1 = f64::INFINITY;
+    let mut c2 = 0u32;
+    let mut d2 = f64::INFINITY;
+    for i in 0..centers.rows() {
+        let dd = sqdist_neon(point, centers.row(i)).sqrt();
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}
+
+/// NEON twin of [`super::scalar::argmin2_f32`] (squared distances, flat
+/// `k × d` buffer).
+pub fn argmin2_f32_neon(
+    point: &[f32],
+    centers: &[f32],
+    d: usize,
+) -> (u32, f32, u32, f32) {
+    let k = if d == 0 { 0 } else { centers.len() / d };
+    let mut c1 = 0u32;
+    let mut d1 = f32::INFINITY;
+    let mut c2 = 0u32;
+    let mut d2 = f32::INFINITY;
+    for i in 0..k {
+        let dd = sqdist_f32_neon(point, &centers[i * d..(i + 1) * d]);
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}

@@ -1,0 +1,120 @@
+//! The portable reference kernels — the ground truth every SIMD path
+//! must match bit for bit (see the [module docs](super) for the proof
+//! sketch). The f64 kernel is the crate's historical 4-accumulator loop,
+//! moved here verbatim from `data/matrix.rs`; the f32 kernel uses eight
+//! accumulators with a fixed reduction tree chosen to coincide with the
+//! natural 8×f32 AVX horizontal sum.
+
+use crate::data::Matrix;
+
+/// Squared Euclidean distance between two equal-length rows.
+///
+/// Four independent accumulators over quads, separately rounded multiply
+/// and add, fixed `(s0+s2)+(s1+s3)` reduction, scalar tail — the lane
+/// structure the SIMD kernels replicate exactly.
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (qa, qb) in ca.zip(cb) {
+        let d0 = qa[0] - qb[0];
+        let d1 = qa[1] - qb[1];
+        let d2 = qa[2] - qb[2];
+        let d3 = qa[3] - qb[3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut acc = (s0 + s2) + (s1 + s3);
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Squared Euclidean distance in f32.
+///
+/// Eight accumulators over octets; the reduction folds halves first
+/// (`t_i = s_i + s_{i+4}`) and then the same `(t0+t2)+(t1+t3)` tree as
+/// the f64 kernel — exactly the order of an 8×f32 AVX register's
+/// 128-bit-half + `movehl` horizontal sum, so SIMD ≡ scalar holds in
+/// f32 too (and with it, the f32 serving path's fallback counts).
+#[inline]
+pub fn sqdist_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (qa, qb) in ca.zip(cb) {
+        for lane in 0..8 {
+            let d = qa[lane] - qb[lane];
+            s[lane] += d * d;
+        }
+    }
+    let t0 = s[0] + s[4];
+    let t1 = s[1] + s[5];
+    let t2 = s[2] + s[6];
+    let t3 = s[3] + s[7];
+    let mut acc = (t0 + t2) + (t1 + t3);
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// One point against every center row: nearest and second-nearest by
+/// Euclidean distance, ties to the lowest index. Returns
+/// `(c1, d1, c2, d2)`; with a single center `d2` is infinite. Exactly the
+/// comparison sequence of the historical per-row loop in
+/// `kmeans::bounds::nearest_two`.
+pub fn argmin2(point: &[f64], centers: &Matrix) -> (u32, f64, u32, f64) {
+    let mut c1 = 0u32;
+    let mut d1 = f64::INFINITY;
+    let mut c2 = 0u32;
+    let mut d2 = f64::INFINITY;
+    for i in 0..centers.rows() {
+        let dd = sqdist(point, centers.row(i)).sqrt();
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}
+
+/// f32 variant of [`argmin2`] over a flat row-major `k × d` center
+/// buffer. Returns **squared** distances (the serving path compares and
+/// then takes square roots in f64; squaring is monotone, so the argmin
+/// and tie order are unchanged).
+pub fn argmin2_f32(point: &[f32], centers: &[f32], d: usize) -> (u32, f32, u32, f32) {
+    let k = if d == 0 { 0 } else { centers.len() / d };
+    let mut c1 = 0u32;
+    let mut d1 = f32::INFINITY;
+    let mut c2 = 0u32;
+    let mut d2 = f32::INFINITY;
+    for i in 0..k {
+        let dd = sqdist_f32(point, &centers[i * d..(i + 1) * d]);
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}

@@ -1,0 +1,140 @@
+//! AVX kernels for x86_64, selected at runtime by
+//! [`super::active`] when the CPU reports `avx2`.
+//!
+//! Deliberately **no FMA**: `_mm256_fmadd_pd` rounds the product and sum
+//! once, the scalar reference rounds them separately, and bit-identity to
+//! the scalar kernel is the contract (see the [module docs](super)).
+//! Every function here is `#[target_feature(enable = "avx")]` (the
+//! 256-bit float ops used are AVX; detecting `avx2` implies it) and
+//! therefore `unsafe` to call — callers must have confirmed detection,
+//! which [`super::active`] guarantees.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+use crate::data::Matrix;
+
+/// AVX twin of [`super::scalar::sqdist`]: lane *i* of the accumulator is
+/// exactly the scalar kernel's `s_i`.
+///
+/// # Safety
+/// The CPU must support AVX (runtime-detected by [`super::active`]).
+#[target_feature(enable = "avx")]
+pub unsafe fn sqdist_avx(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let quads = n / 4;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for q in 0..quads {
+        let va = _mm256_loadu_pd(pa.add(q * 4));
+        let vb = _mm256_loadu_pd(pb.add(q * 4));
+        let d = _mm256_sub_pd(va, vb);
+        // Separate multiply and add (not fmadd): two roundings, exactly
+        // like `s_i += d_i * d_i` in the scalar loop.
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+    }
+    // Fixed (s0+s2)+(s1+s3) reduction: low half [s0,s1] + high half
+    // [s2,s3] gives [s0+s2, s1+s3]; then lane0 + lane1.
+    let lo = _mm256_castpd256_pd128(acc);
+    let hi = _mm256_extractf128_pd::<1>(acc);
+    let t = _mm_add_pd(lo, hi);
+    let mut out = _mm_cvtsd_f64(t) + _mm_cvtsd_f64(_mm_unpackhi_pd(t, t));
+    for i in quads * 4..n {
+        let d = *pa.add(i) - *pb.add(i);
+        out += d * d;
+    }
+    out
+}
+
+/// AVX twin of [`super::scalar::sqdist_f32`]: eight lanes, halves folded
+/// first, then the `(t0+t2)+(t1+t3)` tree.
+///
+/// # Safety
+/// The CPU must support AVX (runtime-detected by [`super::active`]).
+#[target_feature(enable = "avx")]
+pub unsafe fn sqdist_f32_avx(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let octs = n / 8;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for q in 0..octs {
+        let va = _mm256_loadu_ps(pa.add(q * 8));
+        let vb = _mm256_loadu_ps(pb.add(q * 8));
+        let d = _mm256_sub_ps(va, vb);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+    }
+    // [s0..s3] + [s4..s7] = [t0..t3]; then (t0+t2)+(t1+t3).
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps::<1>(acc);
+    let t = _mm_add_ps(lo, hi);
+    let u = _mm_add_ps(t, _mm_movehl_ps(t, t));
+    let mut out = _mm_cvtss_f32(u) + _mm_cvtss_f32(_mm_shuffle_ps::<0x55>(u, u));
+    for i in octs * 8..n {
+        let d = *pa.add(i) - *pb.add(i);
+        out += d * d;
+    }
+    out
+}
+
+/// AVX-hoisted twin of [`super::scalar::argmin2`]: the whole scan runs
+/// inside one `target_feature` region so the per-row kernel inlines
+/// instead of paying a dispatch branch per center.
+///
+/// # Safety
+/// The CPU must support AVX (runtime-detected by [`super::active`]).
+#[target_feature(enable = "avx")]
+pub unsafe fn argmin2_avx(point: &[f64], centers: &Matrix) -> (u32, f64, u32, f64) {
+    let mut c1 = 0u32;
+    let mut d1 = f64::INFINITY;
+    let mut c2 = 0u32;
+    let mut d2 = f64::INFINITY;
+    for i in 0..centers.rows() {
+        let dd = sqdist_avx(point, centers.row(i)).sqrt();
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}
+
+/// AVX-hoisted twin of [`super::scalar::argmin2_f32`] (squared
+/// distances, flat `k × d` buffer).
+///
+/// # Safety
+/// The CPU must support AVX (runtime-detected by [`super::active`]).
+#[target_feature(enable = "avx")]
+pub unsafe fn argmin2_f32_avx(
+    point: &[f32],
+    centers: &[f32],
+    d: usize,
+) -> (u32, f32, u32, f32) {
+    let k = if d == 0 { 0 } else { centers.len() / d };
+    let mut c1 = 0u32;
+    let mut d1 = f32::INFINITY;
+    let mut c2 = 0u32;
+    let mut d2 = f32::INFINITY;
+    for i in 0..k {
+        let dd = sqdist_f32_avx(point, &centers[i * d..(i + 1) * d]);
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}

@@ -44,20 +44,28 @@ pub struct InterCenter {
 }
 
 impl InterCenter {
+    /// Sequential inter-center pass, cache-blocked through
+    /// [`crate::kernels::pairwise_upper`]: an 8-row block of centers stays
+    /// hot while 32-row tiles stream past it, instead of re-streaming the
+    /// whole matrix once per row. Byte-identical to the classic pair loop
+    /// it replaced — each cell holds the same single distance evaluation,
+    /// tiling only reorders *which pair is computed when*, and the
+    /// `nearest` reduction below is an order-free row minimum.
     pub fn compute(centers: &Matrix, dist: &mut DistCounter) -> InterCenter {
         let k = centers.rows();
         let mut cc = vec![0.0; k * k];
+        let mut pairs = 0u64;
+        crate::kernels::pairwise_upper(centers, |i, j, d| {
+            cc[i * k + j] = d;
+            cc[j * k + i] = d;
+            pairs += 1;
+        });
+        dist.add_bulk(pairs);
         let mut nearest = vec![f64::INFINITY; k];
         for i in 0..k {
-            for j in (i + 1)..k {
-                let d = dist.d(centers.row(i), centers.row(j));
-                cc[i * k + j] = d;
-                cc[j * k + i] = d;
-                if d < nearest[i] {
-                    nearest[i] = d;
-                }
-                if d < nearest[j] {
-                    nearest[j] = d;
+            for j in 0..k {
+                if j != i && cc[i * k + j] < nearest[i] {
+                    nearest[i] = cc[i * k + j];
                 }
             }
         }
@@ -283,29 +291,19 @@ pub(crate) fn accumulate_in_order(
 /// Dense nearest + second-nearest scan of a point against all centers,
 /// counting k distances. Ties break to the lowest index. Returns
 /// `(c1, d1, c2, d2)`; for k == 1, `c2 == c1` and `d2 == +inf`.
+///
+/// The scan itself is the batched [`crate::kernels::argmin2`] kernel
+/// (dispatch hoisted out of the k-row loop); it performs the exact
+/// comparison sequence of the historical per-row loop, so results are
+/// byte-identical and the count stays one evaluation per center.
 #[inline]
 pub fn nearest_two(
     point: &[f64],
     centers: &Matrix,
     dist: &mut DistCounter,
 ) -> (u32, f64, u32, f64) {
-    let mut c1 = 0u32;
-    let mut d1 = f64::INFINITY;
-    let mut c2 = 0u32;
-    let mut d2 = f64::INFINITY;
-    for i in 0..centers.rows() {
-        let dd = dist.d(point, centers.row(i));
-        if dd < d1 {
-            c2 = c1;
-            d2 = d1;
-            c1 = i as u32;
-            d1 = dd;
-        } else if dd < d2 {
-            c2 = i as u32;
-            d2 = dd;
-        }
-    }
-    (c1, d1, c2, d2)
+    dist.add_bulk(centers.rows() as u64);
+    crate::kernels::argmin2(point, centers)
 }
 
 #[cfg(test)]
@@ -341,6 +339,40 @@ mod tests {
                 }
                 assert_eq!(next, k, "k={k} target={target}");
             }
+        }
+    }
+
+    #[test]
+    fn compute_is_bit_identical_to_naive_pair_loop() {
+        // The tiled pass must be invisible next to the classic row-wise
+        // upper-triangle loop: same cells, same count, same bits.
+        let data = crate::data::synth::gaussian_blobs(50, 5, 6, 0.8, 11);
+        let mut dc = DistCounter::new();
+        let ic = InterCenter::compute(&data, &mut dc);
+        let k = data.rows();
+        assert_eq!(dc.count(), (k * (k - 1) / 2) as u64);
+        let mut dc2 = DistCounter::new();
+        let mut cc = vec![0.0; k * k];
+        let mut nearest = vec![f64::INFINITY; k];
+        for i in 0..k {
+            for j in (i + 1)..k {
+                let d = dc2.d(data.row(i), data.row(j));
+                cc[i * k + j] = d;
+                cc[j * k + i] = d;
+                if d < nearest[i] {
+                    nearest[i] = d;
+                }
+                if d < nearest[j] {
+                    nearest[j] = d;
+                }
+            }
+        }
+        assert_eq!(dc2.count(), dc.count());
+        for (idx, (a, b)) in ic.cc.iter().zip(&cc).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "cc[{idx}]");
+        }
+        for (i, &nd) in nearest.iter().enumerate() {
+            assert_eq!(ic.s[i].to_bits(), (0.5 * nd).to_bits(), "s[{i}]");
         }
     }
 

@@ -178,6 +178,7 @@ pub struct KMeans {
     tol: f64,
     seed: u64,
     threads: usize,
+    pin_workers: bool,
     warm: Option<Matrix>,
     observer: Option<Observer>,
 }
@@ -195,6 +196,7 @@ impl KMeans {
             tol: d.tol,
             seed: 0,
             threads: d.threads,
+            pin_workers: d.pin_workers,
             warm: None,
             observer: None,
         }
@@ -243,6 +245,14 @@ impl KMeans {
         self
     }
 
+    /// Pin each pool worker to its own core at spawn (config key
+    /// `pin_workers`; Linux `sched_setaffinity(2)`, a no-op elsewhere).
+    /// Placement only — results are byte-identical either way.
+    pub fn pin_workers(mut self, pin: bool) -> Self {
+        self.pin_workers = pin;
+        self
+    }
+
     /// Start from these centers instead of k-means++ — prior results,
     /// sweep reuse, or an explicit shared init for cross-algorithm
     /// comparisons. Must be `k x d`.
@@ -269,6 +279,7 @@ impl KMeans {
             max_iter: self.max_iter,
             tol: self.tol,
             threads: self.threads,
+            pin_workers: self.pin_workers,
             ..KMeansParams::default()
         };
         self.spec.apply(&mut p);
@@ -332,7 +343,7 @@ impl KMeans {
                 return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
             }
             let params = self.params();
-            let par = ws.parallelism(params.threads);
+            let par = ws.parallelism_opts(params.threads, params.pin_workers);
             let init_c = self.make_init(data, &par)?;
             return Ok(minibatch::run_par(
                 data,
@@ -402,7 +413,7 @@ impl KMeans {
             return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
         }
         let params = self.params();
-        let par = ws.parallelism(params.threads);
+        let par = ws.parallelism_opts(params.threads, params.pin_workers);
         let init_c = self.make_init(data, &par)?;
         let (drv, build_dist, build_time) =
             driver::new_driver(data, init_c.rows(), &params, ws);

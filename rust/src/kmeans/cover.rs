@@ -756,7 +756,7 @@ mod tests {
             // Validate against the *current* centers (before movement).
             for i in 0..n {
                 let a = labels[i] as usize;
-                let da = crate::data::matrix::dist(data.row(i), centers.row(a));
+                let da = crate::kernels::dist(data.row(i), centers.row(a));
                 assert!(
                     upper[i] >= da - 1e-9,
                     "u[{i}]={} < d={da}",
@@ -765,7 +765,7 @@ mod tests {
                 for j in 0..6 {
                     if j != a {
                         let dj =
-                            crate::data::matrix::dist(data.row(i), centers.row(j));
+                            crate::kernels::dist(data.row(i), centers.row(j));
                         assert!(
                             lower[i] <= dj + 1e-9,
                             "l[{i}]={} > d_{j}={dj}",

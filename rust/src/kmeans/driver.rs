@@ -324,7 +324,7 @@ pub(crate) fn new_driver<'a>(
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> (Box<dyn KMeansDriver + 'a>, u64, Duration) {
-    let par = ws.parallelism(params.threads);
+    let par = ws.parallelism_opts(params.threads, params.pin_workers);
     match params.algorithm {
         Algorithm::Standard => {
             (Box::new(lloyd::LloydDriver::new(data, par)), 0, Duration::ZERO)

@@ -681,7 +681,7 @@ pub fn run(
     params: &KMeansParams,
     ws: &mut Workspace,
 ) -> RunResult {
-    let par = ws.parallelism(params.threads);
+    let par = ws.parallelism_opts(params.threads, params.pin_workers);
     let (tree, fresh) = ws.cover_tree_arc_par(data, params.cover, &par);
     let (build_dist, build_time) = if fresh {
         (tree.build_distances, tree.build_time)

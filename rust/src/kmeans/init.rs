@@ -386,7 +386,7 @@ mod tests {
         // pairwise center distances must be blob-scale, not noise-scale
         for i in 0..3 {
             for j in (i + 1)..3 {
-                assert!(crate::data::matrix::dist(c.row(i), c.row(j)) > 1.0);
+                assert!(crate::kernels::dist(c.row(i), c.row(j)) > 1.0);
             }
         }
     }

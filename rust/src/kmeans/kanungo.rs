@@ -167,7 +167,7 @@ pub fn run(
     let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
     // k-d construction computes no distances; only the time is charged.
     let build_time = if fresh { tree.build_time } else { Duration::ZERO };
-    let par = ws.parallelism(params.threads);
+    let par = ws.parallelism_opts(params.threads, params.pin_workers);
     Fit::from_driver(
         data,
         Box::new(KanungoDriver::new(data, tree, par)),

@@ -80,7 +80,8 @@ pub use builder::{AlgorithmSpec, KMeans, KMeansError};
 pub use driver::{Fit, KMeansDriver, Observer, Signal, StepInfo, StepView};
 pub use minibatch::MiniBatchParams;
 pub use model::{
-    KMeansModel, PredictMode, PredictOptions, Prediction, DEFAULT_PREDICT_AUTO_K,
+    KMeansModel, PredictMode, PredictOptions, PredictPrecision, Prediction,
+    DEFAULT_PREDICT_AUTO_K,
 };
 
 /// Which algorithm to run.
@@ -221,6 +222,11 @@ pub struct KMeansParams {
     /// tree drivers (Cover-means, Hybrid, Kanungo, Pelleg-Moore),
     /// MiniBatch, and k-means++ seeding.
     pub threads: usize,
+    /// Pin each pool worker to its own core at spawn (config key
+    /// `pin_workers`; Linux `sched_setaffinity`, a no-op elsewhere).
+    /// Placement only — results are byte-identical either way; see
+    /// [`crate::parallel::pin_current_thread`].
+    pub pin_workers: bool,
 }
 
 impl Default for KMeansParams {
@@ -234,6 +240,7 @@ impl Default for KMeansParams {
             switch_at: 7,
             minibatch: MiniBatchParams::default(),
             threads: 1,
+            pin_workers: false,
         }
     }
 }
@@ -318,13 +325,21 @@ impl Workspace {
     /// cores), created on first use and reused across fits. Requesting a
     /// different resolved thread count replaces the pool.
     pub fn parallelism(&mut self, threads: usize) -> Parallelism {
+        self.parallelism_opts(threads, false)
+    }
+
+    /// [`Workspace::parallelism`] with opt-in worker-core pinning
+    /// ([`KMeansParams::pin_workers`]). Pinning is part of the cache key:
+    /// asking for a pinned pool after an unpinned one (or vice versa)
+    /// respawns the workers with the new placement.
+    pub fn parallelism_opts(&mut self, threads: usize, pin: bool) -> Parallelism {
         let resolved = crate::parallel::resolve_threads(threads);
         if let Some(p) = &self.par {
-            if p.threads() == resolved {
+            if p.threads() == resolved && p.pinned() == pin {
                 return p.clone();
             }
         }
-        let p = Parallelism::new(threads);
+        let p = Parallelism::new_opts(threads, pin);
         self.par = Some(p.clone());
         p
     }
@@ -443,7 +458,7 @@ pub fn run(
         "more centers than points"
     );
     if params.algorithm == Algorithm::MiniBatch {
-        let par = ws.parallelism(params.threads);
+        let par = ws.parallelism_opts(params.threads, params.pin_workers);
         return minibatch::run_par(data, init, params, &params.minibatch, &par);
     }
     driver::run_exact(data, init, params, ws)

@@ -38,6 +38,15 @@
 //! to match a naive lowest-index nearest-center scan label for label, at
 //! every thread count and in every [`PredictMode`]
 //! (`rust/tests/model.rs`, `rust/tests/parallel_exactness.rs`).
+//!
+//! **f32 serving.** [`PredictPrecision::F32`] (config key
+//! `predict_precision`) scans a quantized single-precision copy of the
+//! centers with the f32 SIMD kernel and *certifies* each answer against a
+//! rigorous error bound, falling back to the f64 scan for the (rare)
+//! queries the bound cannot separate — so even the fast path returns
+//! labels and distances bit-identical to f64 mode (see the `F32Index`
+//! internals for the proof sketch and `rust/tests/kernels.rs` for the
+//! property tests).
 
 use std::path::Path;
 use std::sync::{Arc, OnceLock};
@@ -45,8 +54,8 @@ use std::sync::{Arc, OnceLock};
 use anyhow::{bail, Context, Result};
 
 use crate::data::io::{bin, fnv1a};
-use crate::data::{matrix, Matrix};
-use crate::kmeans::bounds::InterCenter;
+use crate::data::Matrix;
+use crate::kmeans::bounds::{nearest_two, InterCenter};
 use crate::kmeans::Algorithm;
 use crate::metrics::{DistCounter, RunResult};
 use crate::parallel::{Parallelism, SharedSlices};
@@ -111,6 +120,44 @@ impl PredictMode {
     }
 }
 
+/// Arithmetic the serving scan runs in (config key `predict_precision`).
+///
+/// [`PredictPrecision::F64`] is the default: every distance in full
+/// doubles, the same arithmetic the fit used. [`PredictPrecision::F32`]
+/// keeps a quantized single-precision copy of the centers and scans it
+/// with the f32 SIMD kernel (twice the lanes per vector register, half
+/// the memory traffic) — but never at the cost of the answer: a query is
+/// accepted from the f32 scan only when a rigorous error bound proves the
+/// f32 winner is the true f64 nearest center, and falls back to the full
+/// f64 scan otherwise (see [`KMeansModel`]'s f32 quality contract). The
+/// reported labels and distances are therefore **identical** to f64 mode
+/// at every thread count; only throughput and [`Prediction::f32_fallbacks`]
+/// differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictPrecision {
+    /// Full double-precision scan (default).
+    F64,
+    /// Quantized single-precision scan with certified f64 fallback.
+    F32,
+}
+
+impl PredictPrecision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredictPrecision::F64 => "f64",
+            PredictPrecision::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PredictPrecision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(PredictPrecision::F64),
+            "f32" | "single" | "float" => Some(PredictPrecision::F32),
+            _ => None,
+        }
+    }
+}
+
 /// Batch-predict configuration: the query-answering strategy, the
 /// [`PredictMode::Auto`] tree/scan cutoff, and the worker-thread budget
 /// (0 = all cores; any value reproduces the single-threaded labels byte
@@ -122,6 +169,8 @@ pub struct PredictOptions {
     /// (config key `predict_auto_k`; default [`DEFAULT_PREDICT_AUTO_K`]).
     pub auto_k: usize,
     pub threads: usize,
+    /// Scan arithmetic (config key `predict_precision`; default f64).
+    pub precision: PredictPrecision,
 }
 
 impl Default for PredictOptions {
@@ -130,6 +179,7 @@ impl Default for PredictOptions {
             mode: PredictMode::Auto,
             auto_k: DEFAULT_PREDICT_AUTO_K,
             threads: 1,
+            precision: PredictPrecision::F64,
         }
     }
 }
@@ -151,7 +201,16 @@ pub struct Prediction {
     /// Distance evaluations spent building the serving index in this call.
     pub prep_evals: u64,
     /// The strategy that actually ran ([`PredictMode::Auto`] resolved).
+    /// Under [`PredictPrecision::F32`] this is always [`PredictMode::Scan`]:
+    /// the f32 path scans the flat quantized buffer regardless of the
+    /// requested mode (a tree over rounded centers would need its own
+    /// radii-correctness argument for no measured win).
     pub mode: PredictMode,
+    /// The arithmetic that ran the scan.
+    pub precision: PredictPrecision,
+    /// Queries the f32 scan could not certify and re-answered with the
+    /// full f64 scan (always 0 under [`PredictPrecision::F64`]).
+    pub f32_fallbacks: u64,
 }
 
 /// A trained k-means model: the artifact `fit` hands to serving.
@@ -174,9 +233,64 @@ pub struct KMeansModel {
     converged: bool,
     center_tree: OnceLock<Arc<CoverTree>>,
     inter_center: OnceLock<Arc<InterCenter>>,
+    f32_index: OnceLock<Arc<F32Index>>,
     /// Lazily computed `.kmm` checksum (the serving layer's model version
     /// tag); [`KMeansModel::from_bytes`] seeds it with the verified value.
     checksum: OnceLock<u64>,
+}
+
+/// The f32 serving index: a quantized copy of the centers plus the two
+/// constants the acceptance test needs.
+///
+/// **Quality contract.** Let `c32_j` be center `j` rounded to f32 (read
+/// back as f64), `r_j` the f32-computed distance from the quantized query
+/// `q32` to `c32_j` (lifted to f64), `qx = d(q, q32)` the query's own
+/// quantization displacement, and `qmax = max_j d(c_j, c32_j)` the worst
+/// center displacement. The f32 accumulation's relative error is bounded
+/// by `gamma = (d + 8) * eps_f32` (a standard forward bound: `d - 1`
+/// additions plus the subtract/multiply rounding per lane, with slack for
+/// the reduction tree and the final sqrt), so with `m = qx + qmax` the
+/// true distance satisfies, by the triangle inequality,
+///
+/// ```text
+/// r_j * (1 - gamma) - m  <=  d(q, c_j)  <=  r_j * (1 + gamma) + m
+/// ```
+///
+/// If the f32 runner-up's lower bound strictly exceeds the f32 winner's
+/// upper bound, every other center's true distance strictly exceeds the
+/// winner's (the runner-up has the second-smallest `r_j`), so the winner
+/// is the unique true nearest — the f64 scan, lowest-index ties and all,
+/// would return exactly it. Otherwise the query falls back to the full
+/// f64 scan. Accepted winners get their reported distance recomputed in
+/// f64, so outputs are bit-identical to f64 mode either way.
+#[derive(Debug)]
+struct F32Index {
+    /// Quantized centers, row-major `k x d`.
+    centers: Vec<f32>,
+    /// `max_j d(c_j, c32_j)`: worst-case center quantization displacement.
+    qmax: f64,
+    /// Relative error bound of one f32 squared-distance accumulation.
+    gamma: f64,
+}
+
+impl F32Index {
+    fn build(centers: &Matrix) -> F32Index {
+        let (k, d) = (centers.rows(), centers.cols());
+        let mut c32 = Vec::with_capacity(k * d);
+        for &v in centers.as_slice() {
+            c32.push(v as f32);
+        }
+        let mut qmax = 0.0f64;
+        let mut back = vec![0.0f64; d];
+        for j in 0..k {
+            for (t, &v) in back.iter_mut().zip(&c32[j * d..(j + 1) * d]) {
+                *t = v as f64;
+            }
+            qmax = qmax.max(crate::kernels::dist(centers.row(j), &back));
+        }
+        let gamma = (d as f64 + 8.0) * (f32::EPSILON as f64);
+        F32Index { centers: c32, qmax, gamma }
+    }
 }
 
 impl KMeansModel {
@@ -201,7 +315,7 @@ impl KMeansModel {
         for (i, &l) in run.labels.iter().enumerate() {
             counts[l as usize] += 1;
             cluster_sse[l as usize] +=
-                matrix::sqdist(data.row(i), run.centers.row(l as usize));
+                crate::kernels::sqdist(data.row(i), run.centers.row(l as usize));
         }
         KMeansModel {
             centers: run.centers.clone(),
@@ -213,6 +327,7 @@ impl KMeansModel {
             converged: run.converged,
             center_tree: OnceLock::new(),
             inter_center: OnceLock::new(),
+            f32_index: OnceLock::new(),
             checksum: OnceLock::new(),
         }
     }
@@ -300,12 +415,7 @@ impl KMeansModel {
     /// pool (sweeps, serving loops) should prefer
     /// [`KMeansModel::predict_par`].
     pub fn predict_opts(&self, data: &Matrix, opts: &PredictOptions) -> Prediction {
-        self.predict_par_with(
-            data,
-            opts.mode,
-            opts.auto_k,
-            &Parallelism::new(opts.threads),
-        )
+        self.predict_opts_par(data, opts, &Parallelism::new(opts.threads))
     }
 
     /// What [`PredictMode::Auto`] resolves to for this model under the
@@ -347,6 +457,23 @@ impl KMeansModel {
         prep
     }
 
+    /// [`KMeansModel::prewarm`] for a full option set: additionally builds
+    /// the quantized f32 index when `opts.precision` asks for it. Building
+    /// the f32 index charges no distance evaluations — quantizing centers
+    /// and measuring their rounding displacement is conversion accounting,
+    /// not query or inter-center work (and the f64 fallback index is warmed
+    /// too, so an ambiguous query never pays prep at query time).
+    pub fn prewarm_opts(&self, opts: &PredictOptions) -> u64 {
+        match opts.precision {
+            PredictPrecision::F64 => self.prewarm(opts.mode, opts.auto_k),
+            PredictPrecision::F32 => {
+                self.f32_index
+                    .get_or_init(|| Arc::new(F32Index::build(&self.centers)));
+                0
+            }
+        }
+    }
+
     /// Batch predict over an existing worker pool with the default
     /// [`PredictMode::Auto`] cutoff ([`DEFAULT_PREDICT_AUTO_K`]); see
     /// [`KMeansModel::predict_par_with`].
@@ -359,8 +486,26 @@ impl KMeansModel {
         self.predict_par_with(data, mode, DEFAULT_PREDICT_AUTO_K, par)
     }
 
+    /// Batch predict over an existing worker pool with the full option
+    /// set (strategy, Auto cutoff, scan precision; `opts.threads` is
+    /// ignored — the pool decides). The one entry point the serving
+    /// daemon and CLI use.
+    pub fn predict_opts_par(
+        &self,
+        data: &Matrix,
+        opts: &PredictOptions,
+        par: &Parallelism,
+    ) -> Prediction {
+        match opts.precision {
+            PredictPrecision::F64 => {
+                self.predict_par_with(data, opts.mode, opts.auto_k, par)
+            }
+            PredictPrecision::F32 => self.predict_f32(data, par),
+        }
+    }
+
     /// Batch predict over an existing worker pool, with an explicit
-    /// [`PredictMode::Auto`] tree/scan cutoff. Every query row is
+    /// [`PredictMode::Auto`] tree/scan cutoff, in f64. Every query row is
     /// independent and the per-chunk distance tallies are integer sums, so
     /// any thread count produces byte-identical labels, distances, and
     /// counted evaluations.
@@ -438,7 +583,95 @@ impl KMeansModel {
             .sum()
         };
 
-        Prediction { labels, distances: dists, query_evals, prep_evals, mode }
+        Prediction {
+            labels,
+            distances: dists,
+            query_evals,
+            prep_evals,
+            mode,
+            precision: PredictPrecision::F64,
+            f32_fallbacks: 0,
+        }
+    }
+
+    /// The f32 serving scan (see [`F32Index`] for the quality contract):
+    /// quantize the query, run the batched f32 argmin over the flat
+    /// quantized centers, and accept the winner only when the certified
+    /// error bound proves it is the true f64 nearest; otherwise fall back
+    /// to the full f64 scan for that query. Accounting: the f32 scan is
+    /// charged `k` evaluations per query (same O(d) passes, half-width
+    /// lanes), an accepted winner one more for its f64 distance, and a
+    /// fallback the `k` of its rescan.
+    fn predict_f32(&self, data: &Matrix, par: &Parallelism) -> Prediction {
+        assert_eq!(
+            data.cols(),
+            self.dim(),
+            "query dimension {} does not match model dimension {}",
+            data.cols(),
+            self.dim()
+        );
+        let n = data.rows();
+        let (k, d) = (self.k(), self.dim());
+        let idx = self
+            .f32_index
+            .get_or_init(|| Arc::new(F32Index::build(&self.centers)))
+            .as_ref();
+
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f64; n];
+        let (query_evals, f32_fallbacks) = {
+            let lab = SharedSlices::new(&mut labels);
+            let dst = SharedSlices::new(&mut dists);
+            let per_chunk = par.map_chunks(n, |range| {
+                // Safety: `map_chunks` hands out pairwise-disjoint ranges.
+                let l = unsafe { lab.range(range.clone()) };
+                let dv = unsafe { dst.range(range.clone()) };
+                let mut dc = DistCounter::new();
+                let mut fallbacks = 0u64;
+                let mut q32 = vec![0.0f32; d];
+                for (off, i) in range.enumerate() {
+                    let q = data.row(i);
+                    let mut qx = 0.0f64;
+                    for (t, &v) in q32.iter_mut().zip(q) {
+                        *t = v as f32;
+                        let diff = v - *t as f64;
+                        qx += diff * diff;
+                    }
+                    let qx = qx.sqrt();
+                    dc.add_bulk(k as u64);
+                    let (c1, s1, _, s2) =
+                        crate::kernels::argmin2_f32(&q32, &idx.centers, d);
+                    let r1 = (s1 as f64).sqrt();
+                    let r2 = (s2 as f64).sqrt();
+                    let m = qx + idx.qmax;
+                    // NaN anywhere makes the comparison false => fallback;
+                    // k = 1 makes r2 infinite => always accepted.
+                    if r2 * (1.0 - idx.gamma) - m > r1 * (1.0 + idx.gamma) + m {
+                        l[off] = c1;
+                        dv[off] = dc.d(q, self.centers.row(c1 as usize));
+                    } else {
+                        fallbacks += 1;
+                        let (c, dd, _, _) = nearest_two(q, &self.centers, &mut dc);
+                        l[off] = c;
+                        dv[off] = dd;
+                    }
+                }
+                (dc.count(), fallbacks)
+            });
+            per_chunk
+                .into_iter()
+                .fold((0u64, 0u64), |(e, f), (ce, cf)| (e + ce, f + cf))
+        };
+
+        Prediction {
+            labels,
+            distances: dists,
+            query_evals,
+            prep_evals: 0,
+            mode: PredictMode::Scan,
+            precision: PredictPrecision::F32,
+            f32_fallbacks,
+        }
     }
 
     // ----- persistence --------------------------------------------------
@@ -559,6 +792,7 @@ impl KMeansModel {
             converged,
             center_tree: OnceLock::new(),
             inter_center: OnceLock::new(),
+            f32_index: OnceLock::new(),
             checksum,
         })
     }
@@ -857,6 +1091,144 @@ mod tests {
         let mut long = bytes.clone();
         long.extend_from_slice(&[0u8; 16]);
         assert!(KMeansModel::from_bytes(&long).is_err());
+    }
+
+    fn model_from_centers(centers: Matrix) -> KMeansModel {
+        let data = centers.clone();
+        let labels: Vec<u32> = (0..centers.rows() as u32).collect();
+        let run = RunResult {
+            labels,
+            centers,
+            iterations: 1,
+            distances: 0,
+            build_dist: 0,
+            time: std::time::Duration::ZERO,
+            build_time: std::time::Duration::ZERO,
+            log: crate::metrics::IterationLog::new(),
+            converged: true,
+        };
+        KMeansModel::from_run(&data, &run, Algorithm::Standard, 0)
+    }
+
+    #[test]
+    fn f32_precision_is_output_identical_to_f64() {
+        let train = synth::gaussian_blobs(400, 4, 10, 0.6, 5);
+        let queries = synth::gaussian_blobs(150, 4, 10, 1.2, 6);
+        let model = fit_model(&train, 10, 7);
+        let base = model.predict_opts(&queries, &PredictOptions::default());
+        assert_eq!(base.precision, PredictPrecision::F64);
+        assert_eq!(base.f32_fallbacks, 0);
+        let fast = model.predict_opts(
+            &queries,
+            &PredictOptions {
+                precision: PredictPrecision::F32,
+                ..Default::default()
+            },
+        );
+        assert_eq!(fast.precision, PredictPrecision::F32);
+        assert_eq!(fast.mode, PredictMode::Scan);
+        assert_eq!(fast.labels, base.labels);
+        for (i, (a, b)) in fast.distances.iter().zip(&base.distances).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "distance {i}");
+        }
+        // Well-separated blobs: the certificate should accept nearly all
+        // queries (the point of the fast path).
+        assert!(
+            fast.f32_fallbacks < queries.rows() as u64 / 2,
+            "{} of {} queries fell back",
+            fast.f32_fallbacks,
+            queries.rows()
+        );
+    }
+
+    #[test]
+    fn f32_near_ties_fall_back_and_stay_exact() {
+        // Two centers separated by less than f32 resolution around 1.0:
+        // they quantize to the same f32 row, the f32 margin is ~0, the
+        // certificate must refuse, and the f64 fallback must keep the
+        // lowest-index-wins answer exact.
+        let centers = Matrix::from_rows(&[&[1.0, 0.0], &[1.0 + 1e-12, 0.0]]);
+        let model = model_from_centers(centers);
+        let queries = Matrix::from_rows(&[&[1.0, 0.5], &[1.0 + 1e-12, -0.5]]);
+        let (want_labels, want_dists) = naive_labels(&queries, model.centers());
+        let p = model.predict_opts(
+            &queries,
+            &PredictOptions {
+                precision: PredictPrecision::F32,
+                ..Default::default()
+            },
+        );
+        assert_eq!(p.labels, want_labels);
+        for (a, b) in p.distances.iter().zip(&want_dists) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(
+            p.f32_fallbacks,
+            queries.rows() as u64,
+            "indistinguishable-in-f32 centers must always fall back"
+        );
+    }
+
+    #[test]
+    fn f32_single_center_always_certifies() {
+        let model = model_from_centers(Matrix::from_rows(&[&[0.5, -0.25, 3.0]]));
+        let queries = synth::gaussian_blobs(50, 3, 2, 1.0, 33);
+        let p = model.predict_opts(
+            &queries,
+            &PredictOptions {
+                precision: PredictPrecision::F32,
+                ..Default::default()
+            },
+        );
+        assert!(p.labels.iter().all(|&l| l == 0));
+        assert_eq!(p.f32_fallbacks, 0, "k = 1 has an infinite margin");
+    }
+
+    #[test]
+    fn f32_predict_is_thread_count_invariant() {
+        let train = synth::gaussian_blobs(500, 3, 8, 0.5, 17);
+        let model = fit_model(&train, 8, 18);
+        let opts = PredictOptions {
+            precision: PredictPrecision::F32,
+            ..Default::default()
+        };
+        let base = model.predict_opts_par(&train, &opts, &Parallelism::new(1));
+        for t in [2usize, 4] {
+            let p = model.predict_opts_par(&train, &opts, &Parallelism::new(t));
+            assert_eq!(p.labels, base.labels, "threads={t}");
+            assert_eq!(p.query_evals, base.query_evals, "threads={t}");
+            assert_eq!(p.f32_fallbacks, base.f32_fallbacks, "threads={t}");
+            for (a, b) in p.distances.iter().zip(&base.distances) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn prewarm_opts_covers_both_precisions() {
+        let train = synth::gaussian_blobs(300, 3, 6, 0.5, 9);
+        let model = fit_model(&train, 6, 2);
+        let opts = PredictOptions {
+            precision: PredictPrecision::F32,
+            ..Default::default()
+        };
+        assert_eq!(model.prewarm_opts(&opts), 0, "f32 index is uncounted");
+        let p = model.predict_opts(&train, &opts);
+        assert_eq!(p.prep_evals, 0);
+        // The f64 default routes through the mode-based prewarm.
+        let def = PredictOptions::default();
+        assert_eq!(model.prewarm_opts(&def), (6 * 5 / 2) as u64);
+        assert_eq!(model.prewarm_opts(&def), 0);
+    }
+
+    #[test]
+    fn predict_precision_parse_roundtrip() {
+        for p in [PredictPrecision::F64, PredictPrecision::F32] {
+            assert_eq!(PredictPrecision::parse(p.name()), Some(p));
+        }
+        assert_eq!(PredictPrecision::parse("single"), Some(PredictPrecision::F32));
+        assert_eq!(PredictPrecision::parse("double"), Some(PredictPrecision::F64));
+        assert!(PredictPrecision::parse("f16").is_none());
     }
 
     #[test]

@@ -166,7 +166,7 @@ pub fn run(
 ) -> RunResult {
     let (tree, fresh) = ws.kd_tree_arc(data, params.kd);
     let build_time = if fresh { tree.build_time } else { Duration::ZERO };
-    let par = ws.parallelism(params.threads);
+    let par = ws.parallelism_opts(params.threads, params.pin_workers);
     Fit::from_driver(
         data,
         Box::new(PellegDriver::new(data, tree, par)),

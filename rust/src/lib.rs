@@ -63,6 +63,7 @@ pub mod benchutil;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod kmeans;
 pub mod metrics;
 pub mod parallel;

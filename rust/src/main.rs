@@ -36,12 +36,13 @@ COMMANDS:
   predict    batch nearest-center assignment from a saved model
              --model FILE.kmm --input POINTS.csv|.fmat [--out LABELS.csv]
              [--predict_mode auto|tree|scan] [--predict_auto_k K]
-             [--fit_threads N]
+             [--predict_precision f64|f32] [--fit_threads N]
   serve      resident serving daemon: load a model once, answer predict
              requests over TCP with coalescing + backpressure + hot-reload
              --model FILE.kmm [--addr HOST:PORT] [--max_batch N]
              [--batch_wait_us U] [--queue_depth N] [--fit_threads N]
              [--predict_mode auto|tree|scan] [--predict_auto_k K]
+             [--predict_precision f64|f32] [--pin_workers 0|1]
              (SIGHUP or the RELOAD verb re-reads --model; SIGINT/SIGTERM
              or the SHUTDOWN verb drain and exit; see docs/GUIDE.md)
   table      --id 2|3|4 [--scale S] [--restarts N] [--warm true] — paper
@@ -58,7 +59,17 @@ table lives in docs/GUIDE.md and the config module rustdoc):
   dataset scale data_seed k restarts seed threads fit_threads out_dir
   max_iter tol switch_at scale_factor min_node_size kd_leaf_size
   algorithms mb_batch mb_tol mb_seed model_out predict_mode
-  predict_auto_k serve_addr max_batch batch_wait_us queue_depth
+  predict_auto_k predict_precision pin_workers serve_addr max_batch
+  batch_wait_us queue_depth
+
+KERNELS:
+  Distance arithmetic dispatches once at startup to the widest SIMD path
+  the CPU offers (AVX on x86-64, NEON on aarch64) — bit-identical to the
+  scalar loop; the selected kernel is logged at startup and carried in
+  CSV provenance and serve STATS. Set COVERMEANS_FORCE_SCALAR=1 to pin
+  the scalar path. `predict_precision f32` serves from quantized centers
+  with a certified exact-fallback test: labels and distances stay
+  identical to f64 serving.
 
 THREADS:
   `threads` is the total worker budget; `fit_threads` (default 1, 0 = all
@@ -184,6 +195,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
 
     println!("algorithm   : {}", alg.name());
     println!("backend     : {backend}");
+    println!("kernel      : {}", covermeans::kernels::active_name());
     println!(
         "fit_threads : {}",
         covermeans::parallel::resolve_threads(params.threads)
@@ -245,9 +257,15 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         );
     }
 
-    let par = Parallelism::new(cfg.params.threads);
+    let par = Parallelism::new_opts(cfg.params.threads, cfg.params.pin_workers);
+    let opts = kmeans::PredictOptions {
+        mode: cfg.predict_mode,
+        auto_k: cfg.predict_auto_k,
+        threads: cfg.params.threads,
+        precision: cfg.predict_precision,
+    };
     let sw = std::time::Instant::now();
-    let p = model.predict_par_with(&data, cfg.predict_mode, cfg.predict_auto_k, &par);
+    let p = model.predict_opts_par(&data, &opts, &par);
     let secs = sw.elapsed().as_secs_f64();
     let naive = data.rows() as u64 * model.k() as u64;
 
@@ -261,7 +279,20 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         model.converged()
     );
     println!("queries     : {} points from {input}", data.rows());
-    println!("mode        : {} ({} threads)", p.mode.name(), par.threads());
+    println!("kernel      : {}", covermeans::kernels::active_name());
+    println!(
+        "mode        : {} ({}, {} threads)",
+        p.mode.name(),
+        p.precision.name(),
+        par.threads()
+    );
+    if p.f32_fallbacks > 0 {
+        println!(
+            "fallbacks   : {} of {} queries re-answered in f64 (near-ties)",
+            p.f32_fallbacks,
+            data.rows()
+        );
+    }
     println!(
         "distances   : {} (+{} index prep) vs naive {} ({:.2}x fewer)",
         p.query_evals,
@@ -309,6 +340,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         mode: cfg.predict_mode,
         auto_k: cfg.predict_auto_k,
         threads: cfg.params.threads,
+        precision: cfg.predict_precision,
+        pin_workers: cfg.params.pin_workers,
         install_signal_handlers: true,
     };
     let mut server = covermeans::serve::Server::start(serve_cfg)?;
@@ -331,6 +364,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.batch_wait_us,
         cfg.queue_depth,
         covermeans::parallel::resolve_threads(cfg.params.threads)
+    );
+    eprintln!(
+        "kernel      : {} ({} precision{})",
+        covermeans::kernels::active_name(),
+        cfg.predict_precision.name(),
+        if cfg.params.pin_workers { ", pinned workers" } else { "" }
     );
     // The machine-readable line e2e tooling parses to find the port.
     println!("listening {}", server.addr());

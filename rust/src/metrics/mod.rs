@@ -11,12 +11,14 @@ pub mod quality;
 
 use std::time::{Duration, Instant};
 
-use crate::data::matrix;
+use crate::kernels;
 
 /// Counted distance oracle. Every Euclidean distance (or squared distance)
 /// an algorithm evaluates goes through this; one evaluation = one count,
 /// matching how ELKI's benchmark counts them (inter-center distances and
-/// center-movement distances included).
+/// center-movement distances included). The arithmetic itself is the
+/// runtime-dispatched kernel of [`crate::kernels`] — bit-identical to the
+/// scalar reference under every dispatch.
 #[derive(Debug, Default, Clone)]
 pub struct DistCounter {
     count: u64,
@@ -31,7 +33,7 @@ impl DistCounter {
     #[inline]
     pub fn d(&mut self, a: &[f64], b: &[f64]) -> f64 {
         self.count += 1;
-        matrix::dist(a, b)
+        kernels::dist(a, b)
     }
 
     /// Squared Euclidean distance, counted once (a squared distance is the
@@ -40,11 +42,11 @@ impl DistCounter {
     #[inline]
     pub fn sq(&mut self, a: &[f64], b: &[f64]) -> f64 {
         self.count += 1;
-        matrix::sqdist(a, b)
+        kernels::sqdist(a, b)
     }
 
-    /// Record `n` distance computations performed on an external backend
-    /// (the XLA assign path computes chunk x centers distances in bulk).
+    /// Record `n` distance computations performed in a batched kernel
+    /// (the [`crate::kernels`] argmin scans, the XLA assign path).
     #[inline]
     pub fn add_bulk(&mut self, n: u64) {
         self.count += n;
@@ -124,7 +126,7 @@ impl Default for Stopwatch {
 pub fn sse(data: &crate::data::Matrix, labels: &[u32], centers: &crate::data::Matrix) -> f64 {
     let mut sse = 0.0;
     for (i, &l) in labels.iter().enumerate() {
-        sse += matrix::sqdist(data.row(i), centers.row(l as usize));
+        sse += kernels::sqdist(data.row(i), centers.row(l as usize));
     }
     sse
 }

@@ -8,7 +8,8 @@
 //! family. All evaluate a finished clustering; none is counted against the
 //! algorithm's distance budget (they are evaluation work).
 
-use crate::data::matrix::{sqdist, Matrix};
+use crate::data::Matrix;
+use crate::kernels::{argmin2, sqdist};
 
 /// Sum of squared errors (the k-means objective; lower is better).
 pub fn sse(data: &Matrix, labels: &[u32], centers: &Matrix) -> f64 {
@@ -67,12 +68,12 @@ pub fn simplified_silhouette(data: &Matrix, labels: &[u32], centers: &Matrix) ->
     for (i, &l) in labels.iter().enumerate() {
         let p = data.row(i);
         let a = sqdist(p, centers.row(l as usize)).sqrt();
-        let mut b = f64::INFINITY;
-        for c in 0..k {
-            if c != l as usize {
-                b = b.min(sqdist(p, centers.row(c)).sqrt());
-            }
-        }
+        // One batched argmin2 scan instead of a hand-rolled min loop: if
+        // the nearest center is the point's own, the nearest *other* is
+        // the second-nearest; otherwise it is the nearest itself (the
+        // min over c != l then includes c1). Same distances, same min.
+        let (c1, d1, _, d2) = argmin2(p, centers);
+        let b = if c1 == l { d2 } else { d1 };
         let m = a.max(b);
         total += if m > 0.0 { (b - a) / m } else { 0.0 };
     }

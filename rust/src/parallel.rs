@@ -76,6 +76,42 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+/// Best-effort worker-core pinning (config key `pin_workers`; Linux only).
+///
+/// On Linux this calls `sched_setaffinity(2)` directly (the crate has no
+/// libc dependency; the serving daemon's signal handling sets the same
+/// precedent for raw FFI). Failure is silently ignored — restricted
+/// cpusets in containers make pinning a hint, never a correctness matter.
+/// Everywhere else it is a no-op, so `pin_workers = 1` is portable
+/// configuration. Pinning only affects *where* threads run; the
+/// determinism contract (rules 1-3 above) never depends on placement.
+#[cfg(target_os = "linux")]
+mod affinity {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
+    /// Pin the calling thread to `core` (wrapped into the 1024-bit
+    /// `cpu_set_t` a default kernel supports).
+    pub fn pin_current_thread(core: usize) {
+        let mut mask = [0u64; 16];
+        let bit = core % (mask.len() * 64);
+        mask[bit / 64] |= 1u64 << (bit % 64);
+        // pid 0 = the calling thread; errors (EPERM under restricted
+        // cpusets, EINVAL for offline cores) are deliberately ignored.
+        unsafe {
+            sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod affinity {
+    pub fn pin_current_thread(_core: usize) {}
+}
+
+pub use affinity::pin_current_thread;
+
 /// What the pool's job slot holds: the current batch's claim loop with its
 /// lifetime erased. Soundness: the dispatching thread blocks until
 /// `running == 0` and the slot is cleared before the pointee's stack frame
@@ -144,7 +180,12 @@ struct WorkerPool {
 }
 
 impl WorkerPool {
-    fn new(workers: usize) -> WorkerPool {
+    /// Spawn `workers` pool threads. With `pin`, worker `i` pins itself to
+    /// core `(i + 1) % cores` — the dispatching thread (the pool's N-th
+    /// executor) is *not* pinned, since it is the caller's thread and may
+    /// be a short-lived batcher or test thread; leaving core 0 to it is
+    /// why the workers start at core 1.
+    fn new(workers: usize, pin: bool) -> WorkerPool {
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState {
                 job: None,
@@ -156,12 +197,18 @@ impl WorkerPool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
+        let cores = resolve_threads(0);
         let handles = (0..workers)
             .map(|i| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("covermeans-pool-{i}"))
-                    .spawn(move || worker_loop(&sh))
+                    .spawn(move || {
+                        if pin {
+                            affinity::pin_current_thread((i + 1) % cores);
+                        }
+                        worker_loop(&sh)
+                    })
                     .expect("spawn pool worker")
             })
             .collect();
@@ -241,6 +288,7 @@ impl Drop for WorkerPool {
 #[derive(Clone)]
 pub struct Parallelism {
     threads: usize,
+    pinned: bool,
     pool: Option<Arc<WorkerPool>>,
 }
 
@@ -248,6 +296,7 @@ impl std::fmt::Debug for Parallelism {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Parallelism")
             .field("threads", &self.threads)
+            .field("pinned", &self.pinned)
             .field("pooled", &self.pool.is_some())
             .finish()
     }
@@ -257,19 +306,34 @@ impl Parallelism {
     /// A budget of `threads` workers; 0 means "all available cores".
     /// Spawns the persistent pool when the resolved budget exceeds one.
     pub fn new(threads: usize) -> Parallelism {
+        Parallelism::new_opts(threads, false)
+    }
+
+    /// [`Parallelism::new`] with opt-in worker-core pinning (see
+    /// [`pin_current_thread`]): each pool worker is pinned to its own core
+    /// at spawn, which steadies tail latency for long-lived pools (the
+    /// serving daemon) on multi-socket or busy hosts. No effect on
+    /// results — only on placement — and a no-op outside Linux.
+    pub fn new_opts(threads: usize, pin: bool) -> Parallelism {
         let threads = resolve_threads(threads);
-        let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads - 1)));
-        Parallelism { threads, pool }
+        let pool =
+            (threads > 1).then(|| Arc::new(WorkerPool::new(threads - 1, pin)));
+        Parallelism { threads, pinned: pin, pool }
     }
 
     /// Strictly sequential execution (no pool).
     pub fn sequential() -> Parallelism {
-        Parallelism { threads: 1, pool: None }
+        Parallelism { threads: 1, pinned: false, pool: None }
     }
 
     /// The resolved worker count (>= 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Whether the pool workers were pinned at spawn.
+    pub fn pinned(&self) -> bool {
+        self.pinned
     }
 
     /// Run every task, returning the results **in task order**. Tasks are
@@ -611,6 +675,21 @@ mod tests {
         // The pool must stay usable after a failed batch.
         let out = par.run_tasks((0..8).collect::<Vec<usize>>(), |i| i + 1);
         assert_eq!(out, (1..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pinned_pool_matches_unpinned() {
+        let pinned = Parallelism::new_opts(4, true);
+        assert!(pinned.pinned());
+        let plain = Parallelism::new(4);
+        assert!(!plain.pinned());
+        let a = pinned.run_tasks((0..100).collect::<Vec<usize>>(), |i| i * 3);
+        let b = plain.run_tasks((0..100).collect::<Vec<usize>>(), |i| i * 3);
+        assert_eq!(a, b, "pinning must only move threads, never results");
+        // Direct pinning of the calling thread is also safe (and a no-op
+        // off Linux); out-of-range cores wrap instead of erroring.
+        pin_current_thread(0);
+        pin_current_thread(100_000);
     }
 
     #[test]

@@ -44,7 +44,7 @@ use super::protocol::{
 };
 use super::stats::ServeStats;
 use crate::data::Matrix;
-use crate::kmeans::{KMeansModel, PredictMode};
+use crate::kmeans::{KMeansModel, PredictMode, PredictOptions, PredictPrecision};
 use crate::parallel::Parallelism;
 
 /// How a [`Server`] is built; the CLI fills this from [`crate::config`]
@@ -70,6 +70,13 @@ pub struct ServeConfig {
     /// Worker threads of the daemon-lifetime pool (config `threads`;
     /// 0 = all cores). Labels are thread-count invariant.
     pub threads: usize,
+    /// Scan arithmetic (config `predict_precision`). [`PredictPrecision::F32`]
+    /// serves from quantized centers with a certified exact-fallback path;
+    /// labels and distances stay identical to f64 serving.
+    pub precision: PredictPrecision,
+    /// Pin pool workers to distinct cores (config `pin_workers`;
+    /// Linux-only, a no-op elsewhere). Placement only — never results.
+    pub pin_workers: bool,
     /// Register SIGHUP (reload) and SIGINT/SIGTERM (shutdown) handlers.
     /// Only the CLI sets this — signal handlers are process-global, so
     /// in-process tests must leave it off.
@@ -89,7 +96,19 @@ impl ServeConfig {
             mode: PredictMode::Auto,
             auto_k: crate::kmeans::DEFAULT_PREDICT_AUTO_K,
             threads: 1,
+            precision: PredictPrecision::F64,
+            pin_workers: false,
             install_signal_handlers: false,
+        }
+    }
+
+    /// The [`PredictOptions`] every batch and prewarm of this daemon uses.
+    fn predict_options(&self) -> PredictOptions {
+        PredictOptions {
+            mode: self.mode,
+            auto_k: self.auto_k,
+            threads: self.threads,
+            precision: self.precision,
         }
     }
 }
@@ -147,7 +166,7 @@ impl Shared {
         };
         match attempt() {
             Ok(model) => {
-                let prep = model.prewarm(self.cfg.mode, self.cfg.auto_k);
+                let prep = model.prewarm_opts(&self.cfg.predict_options());
                 ServeStats::add(&self.stats.prep_evals, prep);
                 let sum = model.checksum();
                 *self.model.write().unwrap() = model;
@@ -181,7 +200,7 @@ impl Server {
                 .with_context(|| format!("load model {:?}", cfg.model_path))?,
         );
         let stats = ServeStats::new();
-        let prep = model.prewarm(cfg.mode, cfg.auto_k);
+        let prep = model.prewarm_opts(&cfg.predict_options());
         ServeStats::add(&stats.prep_evals, prep);
 
         let listener = TcpListener::bind(&cfg.addr)
@@ -640,7 +659,7 @@ const IDLE_POLL: Duration = Duration::from_millis(25);
 fn batcher_loop(shared: &Arc<Shared>, rx: Receiver<Job>) {
     // One pool for the daemon lifetime: worker threads and their parked
     // condvars persist across batches (no per-request spawn cost).
-    let par = Parallelism::new(shared.cfg.threads);
+    let par = Parallelism::new_opts(shared.cfg.threads, shared.cfg.pin_workers);
     loop {
         let first = match rx.recv_timeout(IDLE_POLL) {
             Ok(job) => job,
@@ -694,16 +713,13 @@ fn run_batch(shared: &Arc<Shared>, par: &Parallelism, jobs: Vec<Job>) {
     }
     let n: usize = ok_jobs.iter().map(|j| j.n).sum();
     let data = Matrix::from_vec(rows, n, dim);
-    let pred = model.predict_par_with(
-        &data,
-        shared.cfg.mode,
-        shared.cfg.auto_k,
-        par,
-    );
+    let pred =
+        model.predict_opts_par(&data, &shared.cfg.predict_options(), par);
     ServeStats::bump(&shared.stats.batches);
     ServeStats::add(&shared.stats.rows, n as u64);
     ServeStats::add(&shared.stats.query_evals, pred.query_evals);
     ServeStats::add(&shared.stats.prep_evals, pred.prep_evals);
+    ServeStats::add(&shared.stats.f32_fallbacks, pred.f32_fallbacks);
     let checksum = model.checksum();
     let mut at = 0usize;
     for job in ok_jobs {

@@ -28,6 +28,9 @@ pub struct ServeStats {
     /// Distance evaluations spent building serving indexes (initial
     /// prewarm plus every successful reload).
     pub prep_evals: AtomicU64,
+    /// f32-mode queries that failed the certified accept test and fell
+    /// back to an exact f64 rescan (zero when serving in f64).
+    pub f32_fallbacks: AtomicU64,
 }
 
 impl ServeStats {
@@ -47,13 +50,17 @@ impl ServeStats {
         field.load(Ordering::Relaxed)
     }
 
-    /// One-line JSON snapshot (the `STATS` reply body).
+    /// One-line JSON snapshot (the `STATS` reply body). Besides the
+    /// counters it carries one static provenance field: `kernel`, the
+    /// distance-kernel dispatch this process selected at startup
+    /// (`"scalar"`, `"avx"`, or `"neon"` — see [`crate::kernels`]).
     pub fn snapshot_json(&self) -> String {
         format!(
             concat!(
                 "{{\"requests\":{},\"rows\":{},\"batches\":{},",
                 "\"queue_full_rejects\":{},\"reload_ok\":{},",
-                "\"reload_fail\":{},\"query_evals\":{},\"prep_evals\":{}}}"
+                "\"reload_fail\":{},\"query_evals\":{},\"prep_evals\":{},",
+                "\"f32_fallbacks\":{},\"kernel\":\"{}\"}}"
             ),
             Self::get(&self.requests),
             Self::get(&self.rows),
@@ -63,6 +70,8 @@ impl ServeStats {
             Self::get(&self.reload_fail),
             Self::get(&self.query_evals),
             Self::get(&self.prep_evals),
+            Self::get(&self.f32_fallbacks),
+            crate::kernels::active_name(),
         )
     }
 }
@@ -94,6 +103,7 @@ mod tests {
         ServeStats::add(&s.reload_fail, 3);
         ServeStats::add(&s.query_evals, 41);
         ServeStats::add(&s.prep_evals, 13);
+        ServeStats::add(&s.f32_fallbacks, 5);
         let snap = s.snapshot_json();
         assert_eq!(counter(&snap, "requests"), Some(7));
         assert_eq!(counter(&snap, "rows"), Some(700));
@@ -103,6 +113,9 @@ mod tests {
         assert_eq!(counter(&snap, "reload_fail"), Some(3));
         assert_eq!(counter(&snap, "query_evals"), Some(41));
         assert_eq!(counter(&snap, "prep_evals"), Some(13));
+        assert_eq!(counter(&snap, "f32_fallbacks"), Some(5));
+        let kernel_pat = format!("\"kernel\":\"{}\"", crate::kernels::active_name());
+        assert!(snap.contains(&kernel_pat), "missing kernel field in {snap}");
         assert_eq!(counter(&snap, "nope"), None);
     }
 }

@@ -219,7 +219,7 @@ impl CenterTreeCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::matrix::dist;
+    use crate::kernels::dist;
     use crate::data::synth;
 
     fn exact_lookup(

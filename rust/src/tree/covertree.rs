@@ -579,7 +579,7 @@ impl Node {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::matrix::dist as raw_dist;
+    use crate::kernels::dist as raw_dist;
     use crate::data::synth;
 
     fn check_invariants(data: &Matrix, node: &Node) {

@@ -265,7 +265,7 @@ mod tests {
         let mut all: Vec<Neighbor> = (0..data.rows())
             .map(|i| Neighbor {
                 index: i as u32,
-                dist: crate::data::matrix::dist(q, data.row(i)),
+                dist: crate::kernels::dist(q, data.row(i)),
             })
             .collect();
         all.sort_unstable_by(|a, b| {
@@ -328,7 +328,7 @@ mod tests {
         let mut dc = DistCounter::new();
         let got = radius(&tree, &data, &q, t, &mut dc);
         let want: Vec<u32> = (0..data.rows())
-            .filter(|&i| crate::data::matrix::dist(&q, data.row(i)) <= t)
+            .filter(|&i| crate::kernels::dist(&q, data.row(i)) <= t)
             .map(|i| i as u32)
             .collect();
         let got_idx: Vec<u32> = {

@@ -1,0 +1,383 @@
+//! Property suite for the distance-kernel layer (docs/GUIDE.md "Distance
+//! kernels"): the dispatched SIMD kernels must match the scalar reference
+//! **bit for bit** across dimensions and pathological values, the batched
+//! scans must match their per-row references, and f32 serving must return
+//! the same labels and distance bits as f64 serving. CI runs this binary
+//! twice — once under the host's default dispatch and once with
+//! `COVERMEANS_FORCE_SCALAR=1` — so both sides of every identity are
+//! exercised on the same machine.
+
+use std::time::Duration;
+
+use covermeans::data::{synth, Matrix};
+use covermeans::kernels::{self, scalar, Dispatch};
+use covermeans::kmeans::{
+    Algorithm, KMeans, KMeansModel, PredictMode, PredictOptions,
+    PredictPrecision,
+};
+use covermeans::metrics::{IterationLog, RunResult};
+
+/// Dependency-free xorshift64* — deterministic fixtures, no `rand`.
+struct XorShift(u64);
+
+impl XorShift {
+    fn new(seed: u64) -> XorShift {
+        XorShift(seed | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform in [0, 1).
+    fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Signed value spanning ~24 decades of magnitude (squares and sums
+    /// stay finite in f64).
+    fn value(&mut self) -> f64 {
+        let sign = if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        let mag = 10f64.powf(self.uniform() * 24.0 - 12.0);
+        sign * self.uniform() * mag
+    }
+
+    fn vector(&mut self, d: usize) -> Vec<f64> {
+        (0..d).map(|_| self.value()).collect()
+    }
+}
+
+// ----- SIMD == scalar, bit for bit --------------------------------------
+
+#[test]
+fn dispatched_sqdist_matches_scalar_bits_across_dims() {
+    let mut rng = XorShift::new(0xC0FFEE);
+    for d in 0..=67usize {
+        for trial in 0..4 {
+            let a = rng.vector(d);
+            let b = rng.vector(d);
+            assert_eq!(
+                kernels::sqdist(&a, &b).to_bits(),
+                scalar::sqdist(&a, &b).to_bits(),
+                "sqdist d={d} trial={trial} dispatch={}",
+                kernels::active_name()
+            );
+            assert_eq!(
+                kernels::dist(&a, &b).to_bits(),
+                scalar::sqdist(&a, &b).sqrt().to_bits(),
+                "dist d={d} trial={trial}"
+            );
+            let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            assert_eq!(
+                kernels::sqdist_f32(&af, &bf).to_bits(),
+                scalar::sqdist_f32(&af, &bf).to_bits(),
+                "sqdist_f32 d={d} trial={trial}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_sqdist_matches_scalar_on_pathological_values() {
+    // Subnormals, signed zeros, and magnitudes near the overflow edge of
+    // the squared sum; every lane position gets every pathological value
+    // as d ranges over lane offsets.
+    let pool: [f64; 10] = [
+        0.0,
+        -0.0,
+        f64::MIN_POSITIVE,        // smallest normal
+        -f64::MIN_POSITIVE,
+        f64::MIN_POSITIVE / 8.0,  // subnormal
+        -f64::MIN_POSITIVE / 2.0, // subnormal
+        1e150,
+        -1e150,
+        1.5e-300,
+        1.0 + f64::EPSILON,
+    ];
+    for d in 0..=23usize {
+        for shift in 0..pool.len() {
+            let a: Vec<f64> =
+                (0..d).map(|i| pool[(i + shift) % pool.len()]).collect();
+            let b: Vec<f64> =
+                (0..d).map(|i| pool[(i + shift + 3) % pool.len()]).collect();
+            assert_eq!(
+                kernels::sqdist(&a, &b).to_bits(),
+                scalar::sqdist(&a, &b).to_bits(),
+                "d={d} shift={shift}"
+            );
+        }
+    }
+    // Empty rows are a defined case: distance zero.
+    assert_eq!(kernels::sqdist(&[], &[]).to_bits(), 0f64.to_bits());
+    // f32 pathological pool, same idea (1e18 squares without overflow).
+    let pool32: [f32; 8] = [
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE / 4.0, // subnormal
+        1e18,
+        -1e18,
+        1.0 + f32::EPSILON,
+        1.5e-42, // subnormal
+    ];
+    for d in 0..=19usize {
+        for shift in 0..pool32.len() {
+            let a: Vec<f32> =
+                (0..d).map(|i| pool32[(i + shift) % pool32.len()]).collect();
+            let b: Vec<f32> =
+                (0..d).map(|i| pool32[(i + shift + 5) % pool32.len()]).collect();
+            assert_eq!(
+                kernels::sqdist_f32(&a, &b).to_bits(),
+                scalar::sqdist_f32(&a, &b).to_bits(),
+                "f32 d={d} shift={shift}"
+            );
+        }
+    }
+}
+
+// ----- batched scans == per-row references ------------------------------
+
+/// The historical per-row loop `argmin2` must reproduce exactly:
+/// independent `sqrt(sqdist)` per row, strict `<` updates (lowest index
+/// wins ties).
+fn argmin2_reference(q: &[f64], centers: &Matrix) -> (u32, f64, u32, f64) {
+    let (mut c1, mut d1, mut c2, mut d2) = (0u32, f64::INFINITY, 0u32, f64::INFINITY);
+    for i in 0..centers.rows() {
+        let dd = kernels::sqdist(q, centers.row(i)).sqrt();
+        if dd < d1 {
+            c2 = c1;
+            d2 = d1;
+            c1 = i as u32;
+            d1 = dd;
+        } else if dd < d2 {
+            c2 = i as u32;
+            d2 = dd;
+        }
+    }
+    (c1, d1, c2, d2)
+}
+
+#[test]
+fn argmin2_matches_per_row_reference() {
+    let mut rng = XorShift::new(0xBADD_ECAF);
+    for &k in &[1usize, 2, 3, 7, 8, 9, 64, 129] {
+        for &d in &[1usize, 3, 8, 17] {
+            let mut centers = Matrix::zeros(k, d);
+            for i in 0..k {
+                let row = rng.vector(d);
+                centers.row_mut(i).copy_from_slice(&row);
+            }
+            for _ in 0..5 {
+                let q = rng.vector(d);
+                let got = kernels::argmin2(&q, &centers);
+                let want = argmin2_reference(&q, &centers);
+                assert_eq!(got.0, want.0, "c1 k={k} d={d}");
+                assert_eq!(got.1.to_bits(), want.1.to_bits(), "d1 k={k} d={d}");
+                assert_eq!(got.2, want.2, "c2 k={k} d={d}");
+                assert_eq!(got.3.to_bits(), want.3.to_bits(), "d2 k={k} d={d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn argmin2_breaks_ties_toward_lowest_index() {
+    // Rows 2 and 5 are identical and nearest: c1 must be 2, c2 must be 5.
+    let mut centers = Matrix::zeros(7, 3);
+    for i in 0..7 {
+        let v = 10.0 + i as f64;
+        centers.row_mut(i).copy_from_slice(&[v, v, v]);
+    }
+    centers.row_mut(2).copy_from_slice(&[1.0, 2.0, 3.0]);
+    centers.row_mut(5).copy_from_slice(&[1.0, 2.0, 3.0]);
+    let (c1, d1, c2, d2) = kernels::argmin2(&[1.0, 2.0, 2.0], &centers);
+    assert_eq!((c1, c2), (2, 5));
+    assert_eq!(d1.to_bits(), d2.to_bits());
+
+    // Same contract in f32 (squared distances).
+    let flat: Vec<f32> = centers.as_slice().iter().map(|&v| v as f32).collect();
+    let (c1, s1, c2, s2) = kernels::argmin2_f32(&[1.0, 2.0, 2.0], &flat, 3);
+    assert_eq!((c1, c2), (2, 5));
+    assert_eq!(s1.to_bits(), s2.to_bits());
+}
+
+#[test]
+fn argmin2_f32_matches_scalar_reference() {
+    let mut rng = XorShift::new(0xF00D);
+    for &k in &[1usize, 5, 8, 33] {
+        for &d in &[1usize, 4, 16, 30] {
+            let centers: Vec<f32> =
+                (0..k * d).map(|_| rng.value() as f32).collect();
+            for _ in 0..4 {
+                let q: Vec<f32> = (0..d).map(|_| rng.value() as f32).collect();
+                let got = kernels::argmin2_f32(&q, &centers, d);
+                let want = scalar::argmin2_f32(&q, &centers, d);
+                assert_eq!(got.0, want.0, "k={k} d={d}");
+                assert_eq!(got.1.to_bits(), want.1.to_bits(), "k={k} d={d}");
+                assert_eq!(got.2, want.2, "k={k} d={d}");
+                assert_eq!(got.3.to_bits(), want.3.to_bits(), "k={k} d={d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pairwise_upper_matches_rowwise_reference() {
+    let mut rng = XorShift::new(0x9E37);
+    for &k in &[0usize, 1, 2, 8, 9, 33, 100] {
+        let d = 6;
+        let mut centers = Matrix::zeros(k, d);
+        for i in 0..k {
+            let row = rng.vector(d);
+            centers.row_mut(i).copy_from_slice(&row);
+        }
+        let mut got = vec![f64::NAN; k * k];
+        let mut emitted = 0usize;
+        kernels::pairwise_upper(&centers, |i, j, dd| {
+            assert!(i < j && j < k, "pair ({i},{j}) out of range k={k}");
+            assert!(got[i * k + j].is_nan(), "pair ({i},{j}) emitted twice");
+            got[i * k + j] = dd;
+            emitted += 1;
+        });
+        assert_eq!(emitted, k.saturating_sub(1) * k / 2, "k={k}");
+        for i in 0..k {
+            for j in (i + 1)..k {
+                let want = kernels::sqdist(centers.row(i), centers.row(j)).sqrt();
+                assert_eq!(
+                    got[i * k + j].to_bits(),
+                    want.to_bits(),
+                    "pair ({i},{j}) k={k}"
+                );
+            }
+        }
+    }
+}
+
+// ----- f32 serving == f64 serving ---------------------------------------
+
+fn opts(precision: PredictPrecision, threads: usize) -> PredictOptions {
+    PredictOptions {
+        mode: PredictMode::Scan,
+        threads,
+        precision,
+        ..PredictOptions::default()
+    }
+}
+
+#[test]
+fn f32_predict_matches_f64_labels_and_distance_bits() {
+    let train = synth::gaussian_blobs(1500, 8, 64, 1.0, 97);
+    let model = KMeans::new(64).seed(7).fit_model(&train).unwrap();
+    let queries = synth::gaussian_blobs(400, 8, 64, 1.0, 98);
+
+    let p64 = model.predict_opts(&queries, &opts(PredictPrecision::F64, 1));
+    let p32 = model.predict_opts(&queries, &opts(PredictPrecision::F32, 1));
+    assert_eq!(p32.precision, PredictPrecision::F32);
+    assert_eq!(p64.f32_fallbacks, 0);
+    assert_eq!(p32.labels, p64.labels);
+    for (i, (a, b)) in p32.distances.iter().zip(&p64.distances).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "distance bits differ at row {i}");
+    }
+    // On separated blobs the certificate must do real work: most queries
+    // are answered without the exact rescan.
+    assert!(
+        (p32.f32_fallbacks as usize) < queries.rows() / 2,
+        "fallbacks {} of {}",
+        p32.f32_fallbacks,
+        queries.rows()
+    );
+
+    // Thread-count invariance of the batched f32 path: results AND
+    // counters are byte-identical at every worker count.
+    for threads in [2usize, 4] {
+        let pt = model.predict_opts(&queries, &opts(PredictPrecision::F32, threads));
+        assert_eq!(pt.labels, p32.labels, "threads={threads}");
+        for (a, b) in pt.distances.iter().zip(&p32.distances) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+        }
+        assert_eq!(pt.query_evals, p32.query_evals, "threads={threads}");
+        assert_eq!(pt.f32_fallbacks, p32.f32_fallbacks, "threads={threads}");
+    }
+}
+
+/// A model with exactly the given centers (self-labeled one-point-per-
+/// center run — the public `from_run` constructor validates shape only).
+fn model_from_centers(centers: Matrix) -> KMeansModel {
+    let k = centers.rows();
+    let data = centers.clone();
+    let run = RunResult {
+        labels: (0..k as u32).collect(),
+        centers,
+        iterations: 1,
+        distances: 0,
+        build_dist: 0,
+        time: Duration::ZERO,
+        build_time: Duration::ZERO,
+        log: IterationLog::new(),
+        converged: true,
+    };
+    KMeansModel::from_run(&data, &run, Algorithm::Standard, 0)
+}
+
+#[test]
+fn f32_near_ties_fall_back_and_stay_exact() {
+    // Two centers 1e-12 apart: distinct in f64, the *same* point after
+    // f32 quantization. The certificate can never separate them, so every
+    // query must take the exact-fallback path — and still produce the f64
+    // answer, including the lowest-index tie convention.
+    let centers = Matrix::from_vec(vec![1.0, 0.0, 1.0 + 1e-12, 0.0], 2, 2);
+    let model = model_from_centers(centers);
+    let mut rng = XorShift::new(0xABCD);
+    let n = 64usize;
+    let rows: Vec<f64> = (0..n * 2)
+        .map(|_| rng.uniform() * 4.0 - 2.0)
+        .collect();
+    let queries = Matrix::from_vec(rows, n, 2);
+
+    let p64 = model.predict_opts(&queries, &opts(PredictPrecision::F64, 1));
+    let p32 = model.predict_opts(&queries, &opts(PredictPrecision::F32, 1));
+    assert_eq!(
+        p32.f32_fallbacks, n as u64,
+        "every near-tie query must fall back"
+    );
+    assert_eq!(p32.labels, p64.labels);
+    for (a, b) in p32.distances.iter().zip(&p64.distances) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn f32_single_center_never_falls_back() {
+    let model = model_from_centers(Matrix::from_vec(vec![0.5, -0.5, 2.0], 1, 3));
+    let queries = Matrix::from_vec(vec![1.0, 1.0, 1.0, -3.0, 0.0, 4.0], 2, 3);
+    let p32 = model.predict_opts(&queries, &opts(PredictPrecision::F32, 1));
+    let p64 = model.predict_opts(&queries, &opts(PredictPrecision::F64, 1));
+    assert_eq!(p32.f32_fallbacks, 0, "k=1 has no runner-up to confuse");
+    assert_eq!(p32.labels, vec![0, 0]);
+    for (a, b) in p32.distances.iter().zip(&p64.distances) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+// ----- dispatch provenance ----------------------------------------------
+
+#[test]
+fn dispatch_name_is_reportable_and_escape_hatch_wins() {
+    let name = kernels::active_name();
+    assert!(
+        ["scalar", "avx", "neon"].contains(&name),
+        "unknown dispatch name {name:?}"
+    );
+    if kernels::force_scalar() {
+        // The CI forced-scalar leg runs this binary with
+        // COVERMEANS_FORCE_SCALAR=1: the escape hatch must actually win.
+        assert_eq!(kernels::active(), Dispatch::Scalar);
+        assert_eq!(name, "scalar");
+    }
+}
