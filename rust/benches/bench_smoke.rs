@@ -32,6 +32,10 @@
 //!     at k in {64, 256, 1000}, f32 vs f64 serving throughput at k=256),
 //!     gates the bit-identities deterministically (SIMD ≡ scalar, tiled ≡
 //!     row-wise, f32 labels/distances ≡ f64), and emits `BENCH_8.json`;
+//!   * measures the checkpointed-fit overhead (snapshots off vs
+//!     final-only vs every 10th iteration vs every iteration on the same
+//!     fixed-seed fit), gates that checkpointing never perturbs the fit
+//!     (deterministic, always enforced), and emits `BENCH_9.json`;
 //!   * emits `BENCH_4.json` (all of the above plus the per-algorithm
 //!     table);
 //!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
@@ -58,8 +62,8 @@ use covermeans::benchutil::{bench_repeats, bench_scale, fmt_duration, measure, m
 use covermeans::data::{synth, Matrix};
 use covermeans::kernels::{self, scalar as scalar_kernels};
 use covermeans::kmeans::{
-    init, Algorithm, KMeans, PredictMode, PredictOptions, PredictPrecision,
-    Workspace,
+    init, Algorithm, CheckpointConfig, KMeans, PredictMode, PredictOptions,
+    PredictPrecision, Workspace,
 };
 use covermeans::metrics::{DistCounter, RunResult};
 use covermeans::parallel::{run_tasks_scoped, Parallelism};
@@ -287,6 +291,49 @@ struct KernelPairRow {
     k: usize,
     rowwise_ms: f64,
     tiled_ms: f64,
+}
+
+/// One cadence of the checkpointed-fit overhead measurement.
+struct CkptRow {
+    cadence: &'static str,
+    ms: f64,
+    overhead: f64,
+}
+
+/// Emit `BENCH_9.json`: wall time of the same fixed-seed fit with
+/// snapshots off, final-only, every 10th iteration, and every iteration,
+/// plus the on-disk snapshot size — the cost of crash safety as a ratio
+/// over the uncheckpointed baseline.
+fn write_ckpt_json(
+    path: &str,
+    scale: f64,
+    n: usize,
+    k: usize,
+    baseline_ms: f64,
+    snapshot_bytes: u64,
+    rows: &[CkptRow],
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"bench-smoke-checkpoint-v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str(&format!("  \"rows\": {n},\n"));
+    s.push_str(&format!("  \"k\": {k},\n"));
+    s.push_str(&format!("  \"baseline_ms\": {baseline_ms:.3},\n"));
+    s.push_str(&format!("  \"snapshot_bytes\": {snapshot_bytes},\n"));
+    s.push_str("  \"checkpointed\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"cadence\": \"{}\", \"ms\": {:.3}, \"overhead\": {:.4}}}{comma}\n",
+            r.cadence, r.ms, r.overhead,
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("[json] failed to write {path}: {e}"),
+    }
 }
 
 /// The f64-vs-f32 serving throughput head-to-head at one k.
@@ -1056,6 +1103,86 @@ fn main() {
         fallbacks: pk32.f32_fallbacks,
     };
     write_kernel_json("BENCH_8.json", scale, &dim_rows, &pair_rows, &kernel_pred);
+
+    // --- checkpointed-fit overhead (BENCH_9.json): the same fixed-seed
+    // Lloyd fit with snapshots off, final-only (every=0), every 10th
+    // iteration, and every iteration, on the blob fixture. Checkpointing
+    // must not perturb the fit — identical labels, distances, and
+    // iteration count to the uncheckpointed run is a deterministic gate,
+    // always enforced. Under BENCH_ENFORCE_SPEEDUP the every=10 cadence
+    // must stay under 1.5x the baseline wall time (every=1 pays an fsync
+    // per iteration by design and is reported, not gated).
+    let ck_path = std::env::temp_dir().join(format!(
+        "covermeans_bench_ckpt_{}.kmc",
+        std::process::id()
+    ));
+    let ckpt_fit = |every: Option<usize>| -> (f64, RunResult) {
+        let mut last: Option<RunResult> = None;
+        let times = measure(repeats, || {
+            let mut b = KMeans::new(big_init.rows())
+                .algorithm(Algorithm::Standard)
+                .threads(1)
+                .max_iter(8)
+                .warm_start(big_init.clone());
+            if let Some(every) = every {
+                b = b.checkpoint(CheckpointConfig {
+                    path: ck_path.clone(),
+                    every,
+                    secs: 0,
+                });
+            }
+            let r = b.fit(&big).expect("valid checkpoint bench configuration");
+            last = Some(r);
+        });
+        (
+            times[0].as_secs_f64() * 1e3,
+            last.expect("at least one measured run"),
+        )
+    };
+    let (base_ms, r_base) = ckpt_fit(None);
+    let cells = [
+        ("final-only", ckpt_fit(Some(0))),
+        ("every-10", ckpt_fit(Some(10))),
+        ("every-1", ckpt_fit(Some(1))),
+    ];
+    let snapshot_bytes = std::fs::metadata(&ck_path).map(|m| m.len()).unwrap_or(0);
+    let mut ckpt_rows: Vec<CkptRow> = Vec::new();
+    for (cadence, (ms, r)) in cells {
+        if r.labels != r_base.labels
+            || r.distances != r_base.distances
+            || r.iterations != r_base.iterations
+        {
+            failures.push(format!(
+                "checkpointing ({cadence}) perturbed the fit it was snapshotting"
+            ));
+        }
+        let overhead = ms / base_ms.max(1e-9);
+        println!(
+            "checkpoint {cadence:<10} (n={n_speed}, k=64, 8 iters): \
+             {ms:>8.2}ms | {overhead:.2}x baseline {base_ms:.2}ms"
+        );
+        if enforce && cadence == "every-10" && overhead > 1.5 {
+            failures.push(format!(
+                "every-10 checkpointing cost {overhead:.2}x the uncheckpointed \
+                 baseline, above the 1.5x ceiling"
+            ));
+        }
+        ckpt_rows.push(CkptRow { cadence, ms, overhead });
+    }
+    for suffix in ["", ".prev", ".tmp"] {
+        let mut name = ck_path.as_os_str().to_os_string();
+        name.push(suffix);
+        std::fs::remove_file(std::path::PathBuf::from(name)).ok();
+    }
+    write_ckpt_json(
+        "BENCH_9.json",
+        scale,
+        big.rows(),
+        big_init.rows(),
+        base_ms,
+        snapshot_bytes,
+        &ckpt_rows,
+    );
 
     // --- emit the artifact.
     let extras = Extras {

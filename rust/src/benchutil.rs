@@ -5,7 +5,6 @@
 //! environment-controlled scale knob (`REPRO_SCALE`) so `cargo bench`
 //! stays tractable, and a CSV sink under `results/`.
 
-use std::io::Write;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -67,17 +66,26 @@ impl CsvSink {
         self.rows.push(row);
     }
 
-    /// Write the collected rows; also echoes the path to stdout.
+    /// Write the collected rows atomically; also echoes the path to
+    /// stdout. A write failure panics — a bench whose results CSV cannot
+    /// be written must fail, not print timings and quietly drop the
+    /// artifact the CI run uploads.
     pub fn flush(&self) {
-        if let Some(dir) = self.path.parent() {
-            let _ = std::fs::create_dir_all(dir);
-        }
-        if let Ok(mut f) = std::fs::File::create(&self.path) {
-            for r in &self.rows {
-                let _ = writeln!(f, "{r}");
+        let write = || -> anyhow::Result<()> {
+            if let Some(dir) = self.path.parent() {
+                std::fs::create_dir_all(dir)?;
             }
-            println!("[csv] wrote {}", self.path.display());
+            let mut buf = String::new();
+            for r in &self.rows {
+                buf.push_str(r);
+                buf.push('\n');
+            }
+            crate::data::io::atomic_write(&self.path, buf.as_bytes())
+        };
+        if let Err(e) = write() {
+            panic!("could not write bench results {}: {e:#}", self.path.display());
         }
+        println!("[csv] wrote {}", self.path.display());
     }
 }
 

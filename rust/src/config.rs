@@ -32,6 +32,9 @@
 //! | `mb_tol` | `1e-4` | MiniBatch: center-movement stopping tolerance. |
 //! | `mb_seed` | `0xB47C4` | MiniBatch: batch-sampling seed. |
 //! | `model_out` | *(empty)* | `covermeans run`: save the fitted [`crate::kmeans::KMeansModel`] to this `.kmm` path (empty = don't). |
+//! | `checkpoint_path` | *(empty)* | `covermeans run`: crash-safe snapshot file (`.kmc`) for the fit; empty disables checkpointing. `--resume` continues from it bit-identically. |
+//! | `checkpoint_every` | `0` | Snapshot every N iterations (0 = only at completion / on SIGINT). Needs `checkpoint_path`. |
+//! | `checkpoint_secs` | `0` | Also snapshot when this many seconds passed since the last one (0 = no time trigger). |
 //! | `predict_mode` | `auto` | `covermeans predict` / `serve`: query strategy — `auto`, `tree` (cover tree over the centers), or `scan` (Elkan-pruned linear scan). |
 //! | `predict_auto_k` | `64` | `covermeans predict` / `serve`: `k` at or above which `predict_mode = auto` picks the cover tree over the pruned scan ([`crate::kmeans::DEFAULT_PREDICT_AUTO_K`]; tune from the measured crossover in `BENCH_5.json`). |
 //! | `predict_precision` | `f64` | `covermeans predict` / `serve`: scan arithmetic — `f64` (full doubles) or `f32` (quantized SIMD scan with certified f64 fallback; labels and distances stay bit-identical to f64, see [`crate::kmeans::PredictPrecision`]). |
@@ -80,6 +83,10 @@ pub struct RunConfig {
     /// `covermeans run`: path to save the fitted model (`.kmm`); empty
     /// disables saving.
     pub model_out: String,
+    /// `covermeans run`: crash-safe checkpoint file (`.kmc`); empty
+    /// disables checkpointing. The periodic triggers live in
+    /// `params.checkpoint_every` / `params.checkpoint_secs`.
+    pub checkpoint_path: String,
     /// `covermeans predict` / `serve`: batch-query strategy (auto / tree /
     /// scan).
     pub predict_mode: PredictMode,
@@ -114,6 +121,7 @@ impl Default for RunConfig {
             threads: default_threads(),
             out_dir: "results".to_string(),
             model_out: String::new(),
+            checkpoint_path: String::new(),
             predict_mode: PredictMode::Auto,
             predict_auto_k: DEFAULT_PREDICT_AUTO_K,
             predict_precision: PredictPrecision::F64,
@@ -147,6 +155,9 @@ impl RunConfig {
         "fit_threads",
         "out_dir",
         "model_out",
+        "checkpoint_path",
+        "checkpoint_every",
+        "checkpoint_secs",
         "predict_mode",
         "predict_auto_k",
         "predict_precision",
@@ -199,6 +210,14 @@ impl RunConfig {
             "fit_threads" => self.params.threads = v.parse().context("fit_threads")?,
             "out_dir" => self.out_dir = v.to_string(),
             "model_out" => self.model_out = v.to_string(),
+            "checkpoint_path" => self.checkpoint_path = v.to_string(),
+            "checkpoint_every" => {
+                self.params.checkpoint_every =
+                    v.parse().context("checkpoint_every")?
+            }
+            "checkpoint_secs" => {
+                self.params.checkpoint_secs = v.parse().context("checkpoint_secs")?
+            }
             "predict_mode" => {
                 self.predict_mode = PredictMode::parse(v).with_context(|| {
                     format!("predict_mode {v:?} (expected auto, tree or scan)")
@@ -308,6 +327,12 @@ impl RunConfig {
         m.insert("fit_threads", self.params.threads.to_string());
         m.insert("out_dir", self.out_dir.clone());
         m.insert("model_out", self.model_out.clone());
+        m.insert("checkpoint_path", self.checkpoint_path.clone());
+        m.insert(
+            "checkpoint_every",
+            self.params.checkpoint_every.to_string(),
+        );
+        m.insert("checkpoint_secs", self.params.checkpoint_secs.to_string());
         m.insert("predict_mode", self.predict_mode.name().to_string());
         m.insert("predict_auto_k", self.predict_auto_k.to_string());
         m.insert(
@@ -481,6 +506,26 @@ mod tests {
         assert!(c.set("k", "0").is_err());
         assert!(c.set("scale", "-1").is_err());
         assert!(c.set("scale", "nan").is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.checkpoint_path, "");
+        assert_eq!(c.params.checkpoint_every, 0);
+        assert_eq!(c.params.checkpoint_secs, 0);
+        c.set("checkpoint_path", "out/fit.kmc").unwrap();
+        c.set("checkpoint_every", "10").unwrap();
+        c.set("checkpoint_secs", "30").unwrap();
+        assert_eq!(c.checkpoint_path, "out/fit.kmc");
+        assert_eq!(c.params.checkpoint_every, 10);
+        assert_eq!(c.params.checkpoint_secs, 30);
+        let dump = c.dump();
+        assert!(dump.contains("checkpoint_path = out/fit.kmc"));
+        assert!(dump.contains("checkpoint_every = 10"));
+        assert!(dump.contains("checkpoint_secs = 30"));
+        assert!(c.set("checkpoint_every", "many").is_err());
+        assert!(c.set("checkpoint_secs", "-5").is_err());
     }
 
     #[test]

@@ -70,6 +70,14 @@ pub struct Experiment {
     /// serve-many hand-off from a sweep. `None` (the default) keeps the
     /// paper-replication protocols free of I/O.
     pub model_dir: Option<std::path::PathBuf>,
+    /// Completion manifest for interrupted-sweep resume. When set, every
+    /// finished `(dataset, algorithm)` cell is recorded here (atomic
+    /// rewrite after each cell), and a rerun of the *same* experiment —
+    /// guarded by a fingerprint over the cell grid and run parameters —
+    /// adopts the recorded cells instead of recomputing them. The file is
+    /// removed once every cell is complete, so a finished sweep always
+    /// starts fresh. Adopted cells carry no per-iteration logs.
+    pub manifest_path: Option<std::path::PathBuf>,
 }
 
 impl Experiment {
@@ -87,6 +95,7 @@ impl Experiment {
             warm_restarts: false,
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
             model_dir: None,
+            manifest_path: None,
         }
     }
 
@@ -184,6 +193,143 @@ pub fn init_seed(dataset: &str, k: usize, restart: usize) -> u64 {
     h
 }
 
+/// Fingerprint of everything that determines a sweep's cell grid and the
+/// work inside each cell, binding a completion manifest to its experiment.
+/// Thread topology is deliberately excluded: intra-fit parallelism is
+/// exactness-preserving, so a sweep may resume at a different thread count.
+fn experiment_fingerprint(exp: &Experiment) -> u64 {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(exp.name.as_bytes());
+    for d in &exp.datasets {
+        buf.push(0);
+        buf.extend_from_slice(d.as_bytes());
+    }
+    for a in &exp.algorithms {
+        buf.push(1);
+        buf.extend_from_slice(a.name().as_bytes());
+    }
+    for &k in &exp.ks {
+        buf.extend_from_slice(&(k as u64).to_le_bytes());
+    }
+    buf.extend_from_slice(&(exp.restarts as u64).to_le_bytes());
+    buf.extend_from_slice(&exp.scale.to_bits().to_le_bytes());
+    buf.extend_from_slice(&exp.data_seed.to_le_bytes());
+    buf.extend_from_slice(&(exp.params.max_iter as u64).to_le_bytes());
+    buf.extend_from_slice(&exp.params.tol.to_bits().to_le_bytes());
+    buf.extend_from_slice(&exp.params.cover.scale_factor.to_bits().to_le_bytes());
+    buf.extend_from_slice(&(exp.params.cover.min_node_size as u64).to_le_bytes());
+    buf.extend_from_slice(&(exp.params.kd.leaf_size as u64).to_le_bytes());
+    buf.extend_from_slice(&(exp.params.switch_at as u64).to_le_bytes());
+    buf.push(exp.amortize_tree as u8);
+    buf.push(exp.warm_restarts as u8);
+    crate::data::io::fnv1a(&buf)
+}
+
+/// Serialize the completed cells: one `cell` line per `(dataset,
+/// algorithm)` pair, one `run` line per `(k, restart)` with SSE as raw
+/// f64 bits so an adopted cell reproduces the original byte for byte.
+fn render_manifest(fingerprint: u64, res: &ExperimentResult) -> String {
+    let mut s = format!("covermeans-sweep-manifest v1 {fingerprint:#018x}\n");
+    for ((dataset, alg), cell) in &res.cells {
+        s.push_str(&format!("cell {dataset} {}\n", alg.to_ascii_lowercase()));
+        for r in &cell.runs {
+            s.push_str(&format!(
+                "run {} {} {} {} {} {} {} {:016x} {}\n",
+                r.k,
+                r.restart,
+                r.iterations,
+                r.distances,
+                r.build_dist,
+                r.time.as_nanos(),
+                r.build_time.as_nanos(),
+                r.sse.to_bits(),
+                r.converged as u8,
+            ));
+        }
+    }
+    s
+}
+
+/// Parse a completion manifest back into results. `None` on any mismatch —
+/// wrong fingerprint, unknown line, short field list — in which case the
+/// sweep starts from scratch (a stale manifest must never inject cells
+/// from a different experiment).
+fn parse_manifest(text: &str, fingerprint: u64) -> Option<ExperimentResult> {
+    let mut lines = text.lines();
+    let mut header = lines.next()?.split_whitespace();
+    if header.next()? != "covermeans-sweep-manifest" || header.next()? != "v1" {
+        return None;
+    }
+    let fp =
+        u64::from_str_radix(header.next()?.trim_start_matches("0x"), 16).ok()?;
+    if fp != fingerprint {
+        return None;
+    }
+    let mut res = ExperimentResult::default();
+    let mut current: Option<(String, &'static str)> = None;
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut f = line.split_whitespace();
+        match f.next()? {
+            "cell" => {
+                let dataset = f.next()?.to_string();
+                let alg = Algorithm::parse(f.next()?)?;
+                let key = (dataset, alg.name());
+                res.cells.insert(key.clone(), CellResult::default());
+                current = Some(key);
+            }
+            "run" => {
+                let cell = res.cells.get_mut(current.as_ref()?)?;
+                let k: usize = f.next()?.parse().ok()?;
+                let restart: usize = f.next()?.parse().ok()?;
+                let iterations: usize = f.next()?.parse().ok()?;
+                let distances: u64 = f.next()?.parse().ok()?;
+                let build_dist: u64 = f.next()?.parse().ok()?;
+                let time = Duration::from_nanos(f.next()?.parse().ok()?);
+                let build_time = Duration::from_nanos(f.next()?.parse().ok()?);
+                let sse =
+                    f64::from_bits(u64::from_str_radix(f.next()?, 16).ok()?);
+                let converged = f.next()? == "1";
+                cell.distances += distances;
+                cell.build_dist += build_dist;
+                cell.time += time;
+                cell.build_time += build_time;
+                cell.runs.push(RunSummary {
+                    k,
+                    restart,
+                    iterations,
+                    distances,
+                    build_dist,
+                    time,
+                    build_time,
+                    sse,
+                    converged,
+                    log: None,
+                });
+            }
+            _ => return None,
+        }
+    }
+    Some(res)
+}
+
+/// Atomically persist the manifest (previous generation retained by
+/// [`crate::data::io::atomic_write`], like every other artifact).
+fn write_manifest(
+    path: &std::path::Path,
+    fingerprint: u64,
+    res: &ExperimentResult,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    crate::data::io::atomic_write(path, render_manifest(fingerprint, res).as_bytes())
+}
+
 /// Run every `(dataset, algorithm)` cell of the experiment on a thread
 /// pool. `keep_logs` retains per-iteration series (Fig. 1).
 pub fn run_experiment(exp: &Experiment, keep_logs: bool) -> Result<ExperimentResult> {
@@ -193,6 +339,32 @@ pub fn run_experiment(exp: &Experiment, keep_logs: bool) -> Result<ExperimentRes
         let m = registry::load(name, exp.scale, exp.data_seed)
             .with_context(|| format!("unknown dataset {name:?}"))?;
         datasets.insert(name.clone(), Arc::new(m));
+    }
+
+    // Interrupted-sweep resume: adopt cells a previous invocation of the
+    // *same* experiment (fingerprint-guarded) already completed.
+    let total = exp.datasets.len() * exp.algorithms.len();
+    let fingerprint = experiment_fingerprint(exp);
+    let mut done = ExperimentResult::default();
+    if let Some(mpath) = &exp.manifest_path {
+        if let Ok(text) = std::fs::read_to_string(mpath) {
+            match parse_manifest(&text, fingerprint) {
+                Some(prev) => {
+                    eprintln!(
+                        "resuming sweep: {} of {total} cells already complete \
+                         (manifest {})",
+                        prev.cells.len(),
+                        mpath.display()
+                    );
+                    done = prev;
+                }
+                None => eprintln!(
+                    "ignoring stale sweep manifest {} (written by a different \
+                     experiment); starting fresh",
+                    mpath.display()
+                ),
+            }
+        }
     }
 
     // Cell queue.
@@ -206,9 +378,10 @@ pub fn run_experiment(exp: &Experiment, keep_logs: bool) -> Result<ExperimentRes
             .flat_map(|d| {
                 exp.algorithms.iter().map(move |&alg| Cell { dataset: d.clone(), alg })
             })
+            .filter(|c| !done.cells.contains_key(&(c.dataset.clone(), c.alg.name())))
             .collect(),
     );
-    let results: Mutex<ExperimentResult> = Mutex::new(ExperimentResult::default());
+    let results: Mutex<ExperimentResult> = Mutex::new(done);
     // Cell-level × intra-fit budget split: fits that shard internally get
     // proportionally fewer concurrent cells.
     let threads = exp.cell_workers();
@@ -220,16 +393,33 @@ pub fn run_experiment(exp: &Experiment, keep_logs: bool) -> Result<ExperimentRes
                 let Some(cell) = cell else { break };
                 let data = datasets.get(&cell.dataset).unwrap().clone();
                 let res = run_cell(exp, &cell.dataset, cell.alg, &data, keep_logs);
-                results
-                    .lock()
-                    .unwrap()
-                    .cells
-                    .insert((cell.dataset, cell.alg.name()), res);
+                let mut guard = results.lock().unwrap();
+                guard.cells.insert((cell.dataset, cell.alg.name()), res);
+                if let Some(mpath) = &exp.manifest_path {
+                    // A manifest write failure degrades resume, not the
+                    // sweep itself: report and carry on.
+                    if let Err(e) = write_manifest(mpath, fingerprint, &guard) {
+                        eprintln!(
+                            "warning: could not write sweep manifest {}: {e:#}",
+                            mpath.display()
+                        );
+                    }
+                }
             });
         }
     });
 
-    Ok(results.into_inner().unwrap())
+    let results = results.into_inner().unwrap();
+    if let Some(mpath) = &exp.manifest_path {
+        if results.cells.len() == total {
+            // The sweep is complete: a manifest left behind would make the
+            // next invocation a silent no-op serving stale cells.
+            std::fs::remove_file(mpath).ok();
+            std::fs::remove_file(crate::data::io::sibling_path(mpath, ".prev")).ok();
+            std::fs::remove_file(crate::data::io::sibling_path(mpath, ".tmp")).ok();
+        }
+    }
+    Ok(results)
 }
 
 /// Execute one cell: all `(k, restart)` runs of one algorithm on one
@@ -501,6 +691,103 @@ mod tests {
             );
             std::fs::remove_file(&path).ok();
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_rejects_other_experiments() {
+        let res = run_experiment(&tiny_experiment(), false).unwrap();
+        let text = render_manifest(7, &res);
+        let back = parse_manifest(&text, 7).unwrap();
+        assert_eq!(back.cells.len(), res.cells.len());
+        for (key, cell) in &res.cells {
+            let b = back.cells.get(key).unwrap();
+            assert_eq!(b.distances, cell.distances, "{key:?}");
+            assert_eq!(b.build_dist, cell.build_dist, "{key:?}");
+            assert_eq!(b.total_time(), cell.total_time(), "{key:?}");
+            assert_eq!(b.runs.len(), cell.runs.len());
+            for (x, y) in b.runs.iter().zip(&cell.runs) {
+                assert_eq!(x.k, y.k);
+                assert_eq!(x.restart, y.restart);
+                assert_eq!(x.iterations, y.iterations);
+                assert_eq!(x.distances, y.distances);
+                assert_eq!(x.sse.to_bits(), y.sse.to_bits());
+                assert_eq!(x.converged, y.converged);
+            }
+        }
+        // Wrong fingerprint or garbage: discarded, never half-parsed.
+        assert!(parse_manifest(&text, 8).is_none());
+        assert!(parse_manifest("garbage", 7).is_none());
+        assert!(parse_manifest("", 7).is_none());
+        // The fingerprint tracks the work grid, not the thread topology
+        // (sweeps may resume at a different thread count).
+        let a = experiment_fingerprint(&tiny_experiment());
+        let mut same = tiny_experiment();
+        same.threads = 16;
+        same.params.threads = 4;
+        assert_eq!(a, experiment_fingerprint(&same));
+        let mut other = tiny_experiment();
+        other.restarts = 5;
+        assert_ne!(a, experiment_fingerprint(&other));
+        let mut other = tiny_experiment();
+        other.ks = vec![5];
+        assert_ne!(a, experiment_fingerprint(&other));
+    }
+
+    #[test]
+    fn sweep_resumes_from_manifest_and_cleans_up() {
+        let dir = std::env::temp_dir().join(format!(
+            "covermeans_sweep_manifest_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mpath = dir.join("tiny.manifest");
+        let reference = run_experiment(&tiny_experiment(), false).unwrap();
+
+        // Simulate an interrupted sweep: one cell recorded, two to go —
+        // with a poisoned summary so adoption (vs recomputation) is
+        // observable.
+        let mut exp = tiny_experiment();
+        exp.manifest_path = Some(mpath.clone());
+        let key = ("blobs:200:3:4".to_string(), Algorithm::Standard.name());
+        let mut partial = ExperimentResult::default();
+        let mut marked = reference.cells.get(&key).unwrap().clone();
+        // Aggregates are rebuilt from the run lines on parse, so the
+        // marker goes on a run.
+        marked.runs[0].distances += 1_000_000;
+        partial.cells.insert(key.clone(), marked);
+        write_manifest(&mpath, experiment_fingerprint(&exp), &partial).unwrap();
+
+        let resumed = run_experiment(&exp, false).unwrap();
+        assert_eq!(resumed.cells.len(), reference.cells.len());
+        let adopted = resumed.cells.get(&key).unwrap();
+        assert_eq!(
+            adopted.distances,
+            reference.cells.get(&key).unwrap().distances + 1_000_000,
+            "the recorded cell must be adopted, not recomputed"
+        );
+        for (k, cell) in &reference.cells {
+            if *k == key {
+                continue;
+            }
+            let r = resumed.cells.get(k).unwrap();
+            assert_eq!(r.distances, cell.distances, "{k:?}");
+            for (a, b) in r.runs.iter().zip(&cell.runs) {
+                assert_eq!(a.sse.to_bits(), b.sse.to_bits(), "{k:?}");
+            }
+        }
+        // A completed sweep removes its manifest: the next invocation
+        // starts fresh instead of serving stale cells.
+        assert!(!mpath.exists(), "manifest must be cleaned up when done");
+
+        // A stale manifest (different experiment) is ignored entirely.
+        let mut other = tiny_experiment();
+        other.restarts = 1;
+        other.manifest_path = Some(mpath.clone());
+        write_manifest(&mpath, experiment_fingerprint(&exp), &partial).unwrap();
+        let fresh = run_experiment(&other, false).unwrap();
+        let cell = fresh.cells.get(&key).unwrap();
+        assert_eq!(cell.runs.len(), 1, "stale manifest must not inject cells");
         std::fs::remove_dir_all(&dir).ok();
     }
 

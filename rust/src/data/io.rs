@@ -7,7 +7,7 @@
 //! format of [`crate::kmeans::KMeansModel`] (`.kmm` files).
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -94,21 +94,109 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Write a matrix as CSV (no header).
+// ----- atomic writes ----------------------------------------------------
+
+/// Companion path of an artifact: its in-flight temp file (`.tmp`) or its
+/// retained previous generation (`.prev`). The suffix is appended to the
+/// full file name so `model.kmm` pairs with `model.kmm.tmp`, not
+/// `model.tmp`.
+pub fn sibling_path(path: &Path, suffix: &str) -> std::path::PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_default();
+    name.push(suffix);
+    path.with_file_name(name)
+}
+
+/// Crash-safe artifact write: `<path>.tmp` → `sync_all` → rename over
+/// `path`, with the previous generation rotated to `<path>.prev` first.
+///
+/// At every instant one of `path` / `<path>.prev` holds a complete prior
+/// byte-for-byte artifact: a crash before the final rename leaves `path`
+/// untouched, a crash between the rotate and the rename leaves
+/// `<path>.prev` intact. Readers that must survive torn writes try the
+/// generations in order (see `KMeansCheckpoint::load_any`).
+///
+/// Fault injection: when `COVERMEANS_CRASH_TORN_WRITE` is set to
+/// `truncate` or `bitflip`, the temp file is corrupted accordingly and
+/// the process aborts *before* the rename — simulating a torn write that
+/// must never replace a good generation.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = sibling_path(path, ".tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("create temp file {tmp:?}"))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write temp file {tmp:?}"))?;
+        f.sync_all()
+            .with_context(|| format!("sync temp file {tmp:?}"))?;
+    }
+    maybe_inject_torn_write(&tmp, bytes.len());
+    if path.exists() {
+        let prev = sibling_path(path, ".prev");
+        std::fs::rename(path, &prev)
+            .with_context(|| format!("rotate {path:?} -> {prev:?}"))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    // Make the rename itself durable where the platform allows it; the
+    // data blocks are already synced, so this is best-effort.
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The torn-write crash point of [`atomic_write`]: corrupt the temp file,
+/// then die before the rename. Gated behind an env var so only the
+/// fault-injection harness ever reaches it.
+fn maybe_inject_torn_write(tmp: &Path, len: usize) {
+    let Ok(mode) = std::env::var("COVERMEANS_CRASH_TORN_WRITE") else {
+        return;
+    };
+    match mode.as_str() {
+        "truncate" => {
+            let keep = (len / 2) as u64;
+            if let Ok(f) = std::fs::OpenOptions::new().write(true).open(tmp) {
+                let _ = f.set_len(keep);
+                let _ = f.sync_all();
+            }
+        }
+        "bitflip" => {
+            if let Ok(mut bytes) = std::fs::read(tmp) {
+                if !bytes.is_empty() {
+                    let at = bytes.len() / 2;
+                    bytes[at] ^= 0x40;
+                    let _ = std::fs::write(tmp, &bytes);
+                }
+            }
+        }
+        _ => return,
+    }
+    eprintln!("fault injection: torn write ({mode}) at {tmp:?}, aborting");
+    std::process::abort();
+}
+
+/// Write a matrix as CSV (no header), atomically (see [`atomic_write`]).
 pub fn write_csv(path: &Path, m: &Matrix) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
+    let mut out = Vec::new();
     for row in m.iter_rows() {
         let mut first = true;
         for v in row {
             if !first {
-                w.write_all(b",")?;
+                out.push(b',');
             }
-            write!(w, "{v}")?;
+            write!(out, "{v}")?;
             first = false;
         }
-        w.write_all(b"\n")?;
+        out.push(b'\n');
     }
-    Ok(())
+    atomic_write(path, &out)
 }
 
 /// Read a CSV of floats (no header; `,`, `;` or whitespace separated).
@@ -142,14 +230,14 @@ pub fn read_csv(path: &Path) -> Result<Matrix> {
     Ok(Matrix::from_vec(data, rows, cols))
 }
 
-/// Write the binary cache format.
+/// Write the binary cache format, atomically (see [`atomic_write`]).
 pub fn write_fmat(path: &Path, m: &Matrix) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    write!(w, "FMAT1\n{} {}\n", m.rows(), m.cols())?;
+    let mut out = Vec::with_capacity(32 + m.rows() * m.cols() * 8);
+    write!(out, "FMAT1\n{} {}\n", m.rows(), m.cols())?;
     for &v in m.as_slice() {
-        w.write_all(&v.to_le_bytes())?;
+        out.extend_from_slice(&v.to_le_bytes());
     }
-    Ok(())
+    atomic_write(path, &out)
 }
 
 /// Read the binary cache format.
@@ -275,6 +363,25 @@ mod tests {
         let mut r = bin::Reader::new(&buf[..6]);
         assert_eq!(r.u32().unwrap(), 7);
         assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn atomic_write_keeps_previous_generation() {
+        let p = tmpdir().join("gen.bin");
+        atomic_write(&p, b"one").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"one");
+        assert!(!sibling_path(&p, ".prev").exists());
+        atomic_write(&p, b"two").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"two");
+        assert_eq!(std::fs::read(sibling_path(&p, ".prev")).unwrap(), b"one");
+        assert!(!sibling_path(&p, ".tmp").exists(), "temp must be renamed away");
+    }
+
+    #[test]
+    fn sibling_path_appends_to_full_name() {
+        let p = Path::new("/a/b/model.kmm");
+        assert_eq!(sibling_path(p, ".tmp"), Path::new("/a/b/model.kmm.tmp"));
+        assert_eq!(sibling_path(p, ".prev"), Path::new("/a/b/model.kmm.prev"));
     }
 
     #[test]

@@ -32,6 +32,7 @@
 use std::fmt;
 
 use crate::data::Matrix;
+use crate::kmeans::checkpoint::{self, CheckpointConfig};
 use crate::kmeans::driver::{Fit, Observer, Signal, StepView};
 use crate::kmeans::minibatch::MiniBatchParams;
 use crate::kmeans::model::KMeansModel;
@@ -145,6 +146,9 @@ pub enum KMeansError {
     /// `fit_step` on an algorithm without exact stepwise semantics
     /// (MiniBatch moves centers online inside its batch loop).
     NotStepwise(Algorithm),
+    /// A checkpoint write failed mid-fit; the run stopped at that
+    /// iteration boundary instead of continuing uncheckpointed.
+    Checkpoint(String),
 }
 
 impl fmt::Display for KMeansError {
@@ -162,6 +166,9 @@ impl fmt::Display for KMeansError {
             }
             KMeansError::NotStepwise(a) => {
                 write!(f, "{} has no exact stepwise iteration", a.name())
+            }
+            KMeansError::Checkpoint(e) => {
+                write!(f, "checkpoint write failed: {e}")
             }
         }
     }
@@ -181,6 +188,7 @@ pub struct KMeans {
     pin_workers: bool,
     warm: Option<Matrix>,
     observer: Option<Observer>,
+    checkpoint: Option<CheckpointConfig>,
 }
 
 impl KMeans {
@@ -199,6 +207,7 @@ impl KMeans {
             pin_workers: d.pin_workers,
             warm: None,
             observer: None,
+            checkpoint: None,
         }
     }
 
@@ -258,6 +267,18 @@ impl KMeans {
     /// comparisons. Must be `k x d`.
     pub fn warm_start(mut self, centers: Matrix) -> Self {
         self.warm = Some(centers);
+        self
+    }
+
+    /// Crash-safe checkpointing: snapshot the fit to `cfg.path` per the
+    /// `cfg` triggers (plus once at completion), through atomic writes
+    /// that retain the previous generation. A failed write stops the fit
+    /// with [`KMeansError::Checkpoint`] instead of running on
+    /// uncheckpointed. Resume via [`crate::kmeans::KMeansCheckpoint`] and
+    /// [`Fit::restore`]. Only the exact algorithms checkpoint; MiniBatch
+    /// has no iteration boundary to snapshot.
+    pub fn checkpoint(mut self, cfg: CheckpointConfig) -> Self {
+        self.checkpoint = Some(cfg);
         self
     }
 
@@ -336,10 +357,10 @@ impl KMeans {
     /// Table 4 amortization protocol).
     pub fn fit_with(mut self, data: &Matrix, ws: &mut Workspace) -> Result<RunResult, KMeansError> {
         if let AlgorithmSpec::MiniBatch { .. } = self.spec {
-            if self.observer.is_some() {
+            if self.observer.is_some() || self.checkpoint.is_some() {
                 // Mini-batch moves centers online inside its batch loop;
-                // there is no exact iteration boundary to observe. Error
-                // instead of silently never firing the callback.
+                // there is no exact iteration boundary to observe or to
+                // checkpoint. Error instead of silently never firing.
                 return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
             }
             let params = self.params();
@@ -353,8 +374,12 @@ impl KMeans {
                 &par,
             ));
         }
-        let fit = self.fit_step_with(data, ws)?;
-        Ok(fit.run())
+        let mut fit = self.fit_step_with(data, ws)?;
+        while fit.step().is_some() {}
+        if let Some(e) = fit.take_checkpoint_error() {
+            return Err(KMeansError::Checkpoint(format!("{e:#}")));
+        }
+        Ok(fit.finish())
     }
 
     /// Fit to completion and capture the result as a servable, persistable
@@ -417,9 +442,14 @@ impl KMeans {
         let init_c = self.make_init(data, &par)?;
         let (drv, build_dist, build_time) =
             driver::new_driver(data, init_c.rows(), &params, ws);
-        Ok(Fit::from_driver(data, drv, &init_c, params.max_iter, params.tol)
+        let mut fit = Fit::from_driver(data, drv, &init_c, params.max_iter, params.tol)
             .with_build_cost(build_dist, build_time)
-            .with_observer(self.observer.take()))
+            .with_observer(self.observer.take());
+        if let Some(cfg) = self.checkpoint.take() {
+            let fp = checkpoint::config_fingerprint(&params, data, init_c.rows());
+            fit = fit.with_checkpoints(cfg, fp, self.seed);
+        }
+        Ok(fit)
     }
 }
 
@@ -516,6 +546,45 @@ mod tests {
             tiny.distances,
             default.distances
         );
+    }
+
+    #[test]
+    fn checkpointed_fit_writes_final_snapshot() {
+        let data = synth::gaussian_blobs(200, 2, 3, 0.5, 8);
+        let dir = std::env::temp_dir().join(format!(
+            "covermeans_builder_ckpt_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("final.kmc");
+        let r = KMeans::new(3)
+            .algorithm(Algorithm::Hamerly)
+            .seed(4)
+            .checkpoint(CheckpointConfig::new(path.clone()))
+            .fit(&data)
+            .unwrap();
+        assert!(r.converged);
+        let snap = crate::kmeans::KMeansCheckpoint::load(&path).unwrap();
+        assert_eq!(snap.iter as usize, r.iterations);
+        assert!(snap.converged);
+        assert_eq!(snap.seed, 4);
+        assert_eq!(snap.algorithm, Algorithm::Hamerly);
+        assert_eq!(snap.distances, r.distances);
+        // MiniBatch cannot checkpoint: no exact iteration boundary.
+        let err = KMeans::new(3)
+            .algorithm(Algorithm::MiniBatch)
+            .checkpoint(CheckpointConfig::new(dir.join("mb.kmc")))
+            .fit(&data)
+            .unwrap_err();
+        assert_eq!(err, KMeansError::NotStepwise(Algorithm::MiniBatch));
+        // A doomed path surfaces as KMeansError::Checkpoint.
+        let err = KMeans::new(3)
+            .checkpoint(CheckpointConfig::new(
+                dir.join("no_such_subdir").join("x.kmc"),
+            ))
+            .fit(&data)
+            .unwrap_err();
+        assert!(matches!(err, KMeansError::Checkpoint(_)), "{err}");
     }
 
     #[test]

@@ -1,0 +1,634 @@
+//! Crash-safe checkpoints of in-progress fits (`.kmc` files).
+//!
+//! A checkpoint is a complete snapshot of a [`crate::kmeans::Fit`] at an
+//! iteration boundary: the centers' exact f64 bit patterns, the driver's
+//! cross-iteration state (labels and stored bounds, see
+//! [`DriverState`]), the counted-distance total, the per-iteration log,
+//! and the run's provenance (algorithm, seed, iteration, convergence).
+//! Resuming from it replays the remaining iterations **bit-identically**
+//! to the uninterrupted run — same labels, same center bits, same counted
+//! distances (`rust/tests/crash_resume.rs`).
+//!
+//! The on-disk format mirrors the `.kmm` model format: a `CMKC` magic, a
+//! format version, a config fingerprint, the header, the payload, and a
+//! trailing FNV-1a checksum over everything before it. Writes go through
+//! [`crate::data::io::atomic_write`], so at every instant one of
+//! `path` / `path.prev` holds a complete valid snapshot; [`load_any`
+//! ](KMeansCheckpoint::load_any) walks the generations (`path`, `path.tmp`,
+//! `path.prev`) and resumes from the newest one that validates.
+//!
+//! What is *not* stored: spatial indexes (cover / k-d trees — their builds
+//! are deterministic, so resume rebuilds them and then overwrites the
+//! re-charged build cost with the checkpointed one), thread count and
+//! worker pinning (the parallel reductions are exactness-preserving, so a
+//! fit checkpointed at `threads = 4` resumes bit-identically at
+//! `threads = 1` and vice versa), and wall-clock times (excluded from the
+//! identity contract).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::io::{atomic_write, bin, fnv1a, sibling_path};
+use crate::data::Matrix;
+use crate::kmeans::driver::DriverState;
+use crate::kmeans::{Algorithm, KMeansParams};
+use crate::metrics::IterationStat;
+
+const MAGIC: &[u8] = b"CMKC";
+const FORMAT_VERSION: u32 = 1;
+
+/// Upper bound on driver state slots — all in-tree drivers use at most 2
+/// f64 + 1 u32 slots; a header claiming more is corrupt, not ambitious.
+const MAX_SLOTS: u32 = 64;
+
+/// When and where a fit writes its snapshots.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// Snapshot file (`.kmc`); `path.tmp` / `path.prev` are its in-flight
+    /// and previous generations.
+    pub path: PathBuf,
+    /// Write every N iterations (0 = no periodic trigger). A snapshot is
+    /// always written when the run completes, whatever the triggers.
+    pub every: usize,
+    /// Also write when this many seconds elapsed since the last snapshot
+    /// (0 = no time trigger).
+    pub secs: u64,
+}
+
+impl CheckpointConfig {
+    pub fn new(path: impl Into<PathBuf>) -> CheckpointConfig {
+        CheckpointConfig { path: path.into(), every: 0, secs: 0 }
+    }
+}
+
+/// Which on-disk generation a checkpoint was loaded from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Generation {
+    /// The primary file.
+    Current,
+    /// The in-flight temp (`.tmp`) — a crash landed between the sync and
+    /// the rename, leaving a complete snapshot under the temp name.
+    Temp,
+    /// The retained previous generation (`.prev`) — the primary is
+    /// missing or failed validation.
+    Previous,
+}
+
+impl Generation {
+    /// The actual file this generation lives at, for a primary `path`.
+    pub fn path_for(&self, path: &Path) -> PathBuf {
+        match self {
+            Generation::Current => path.to_path_buf(),
+            Generation::Temp => sibling_path(path, ".tmp"),
+            Generation::Previous => sibling_path(path, ".prev"),
+        }
+    }
+}
+
+impl fmt::Display for Generation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Generation::Current => "current",
+            Generation::Temp => "in-flight temp",
+            Generation::Previous => "previous generation",
+        })
+    }
+}
+
+/// Fingerprint of everything that determines the iteration sequence: the
+/// algorithm, the data (shape plus sampled content), k, the convergence
+/// knobs, and the tree construction parameters. Resuming under a different
+/// fingerprint would silently produce a hybrid of two runs, so loads
+/// reject mismatches ([`KMeansCheckpoint::validate`]).
+///
+/// Deliberately excluded: `threads` / `pin_workers` (exactness-preserving,
+/// see the module docs), the mini-batch knobs (mini-batch is not
+/// checkpointable), and the checkpoint triggers themselves (when to
+/// snapshot does not change what is computed).
+pub fn config_fingerprint(params: &KMeansParams, data: &Matrix, k: usize) -> u64 {
+    let mut buf = Vec::with_capacity(96 + 1024 * 8);
+    buf.extend_from_slice(params.algorithm.name().as_bytes());
+    bin::put_u64(&mut buf, data.rows() as u64);
+    bin::put_u64(&mut buf, data.cols() as u64);
+    bin::put_u64(&mut buf, k as u64);
+    bin::put_u64(&mut buf, params.max_iter as u64);
+    bin::put_f64(&mut buf, params.tol);
+    bin::put_f64(&mut buf, params.cover.scale_factor);
+    bin::put_u64(&mut buf, params.cover.min_node_size as u64);
+    bin::put_u64(&mut buf, params.kd.leaf_size as u64);
+    bin::put_u64(&mut buf, params.kd.max_depth as u64);
+    bin::put_u64(&mut buf, params.switch_at as u64);
+    // Sampled data content, the workspace cache's DataKey idiom: up to
+    // 1024 evenly-spaced elements' exact bit patterns. Catches "same
+    // shape, different dataset" without an O(nd) pass per snapshot.
+    let s = data.as_slice();
+    let step = (s.len() / 1024).max(1);
+    for &v in s.iter().step_by(step) {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fnv1a(&buf)
+}
+
+/// One snapshot of an in-progress (or just-completed) fit — everything
+/// [`crate::kmeans::Fit::restore`] needs to continue bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KMeansCheckpoint {
+    /// [`config_fingerprint`] of the run that wrote this snapshot.
+    pub fingerprint: u64,
+    pub algorithm: Algorithm,
+    pub k: usize,
+    pub dim: usize,
+    /// Point count of the dataset the fit runs over.
+    pub n: usize,
+    /// Seed provenance (the k-means++ init already happened; recorded so
+    /// a resumed run reports the same provenance, not replayed).
+    pub seed: u64,
+    /// Completed iterations at snapshot time.
+    pub iter: u64,
+    pub converged: bool,
+    /// Cumulative counted distance computations (excludes tree build).
+    pub distances: u64,
+    /// Tree construction distances charged to the original run.
+    pub build_dist: u64,
+    /// Tree construction time charged to the original run.
+    pub build_time: Duration,
+    /// Centers after iteration `iter`, exact f64 bit patterns.
+    pub centers: Matrix,
+    /// Per-iteration series up to and including iteration `iter`.
+    pub log: Vec<IterationStat>,
+    /// The driver's cross-iteration state (labels, stored bounds).
+    pub state: DriverState,
+}
+
+impl KMeansCheckpoint {
+    /// Serialize to the `.kmc` byte format. Round-trips bit-identically.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let name = self.algorithm.name().as_bytes();
+        let state_len: usize = self.state.labels.len() * 4
+            + self.state.f64_slots.iter().map(|s| 8 + s.len() * 8).sum::<usize>()
+            + self.state.u32_slots.iter().map(|s| 8 + s.len() * 4).sum::<usize>();
+        let mut out = Vec::with_capacity(
+            128 + name.len()
+                + self.k * self.dim * 8
+                + self.log.len() * 32
+                + state_len,
+        );
+        out.extend_from_slice(MAGIC);
+        bin::put_u32(&mut out, FORMAT_VERSION);
+        bin::put_u64(&mut out, self.fingerprint);
+        bin::put_u32(&mut out, self.k as u32);
+        bin::put_u32(&mut out, self.dim as u32);
+        bin::put_u64(&mut out, self.n as u64);
+        bin::put_u32(&mut out, name.len() as u32);
+        out.extend_from_slice(name);
+        bin::put_u64(&mut out, self.seed);
+        bin::put_u64(&mut out, self.iter);
+        out.push(self.converged as u8);
+        bin::put_u64(&mut out, self.distances);
+        bin::put_u64(&mut out, self.build_dist);
+        bin::put_u64(&mut out, self.build_time.as_nanos() as u64);
+        for &v in self.centers.as_slice() {
+            bin::put_f64(&mut out, v);
+        }
+        bin::put_u32(&mut out, self.log.len() as u32);
+        for s in &self.log {
+            bin::put_u64(&mut out, s.iter as u64);
+            bin::put_u64(&mut out, s.dist_cum);
+            bin::put_u64(&mut out, s.time_cum.as_nanos() as u64);
+            bin::put_u64(&mut out, s.changed as u64);
+        }
+        bin::put_u64(&mut out, self.state.labels.len() as u64);
+        for &l in &self.state.labels {
+            bin::put_u32(&mut out, l);
+        }
+        bin::put_u32(&mut out, self.state.f64_slots.len() as u32);
+        for slot in &self.state.f64_slots {
+            bin::put_u64(&mut out, slot.len() as u64);
+            for &v in slot {
+                bin::put_f64(&mut out, v);
+            }
+        }
+        bin::put_u32(&mut out, self.state.u32_slots.len() as u32);
+        for slot in &self.state.u32_slots {
+            bin::put_u64(&mut out, slot.len() as u64);
+            for &v in slot {
+                bin::put_u32(&mut out, v);
+            }
+        }
+        let sum = fnv1a(&out);
+        bin::put_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse the `.kmc` byte format, verifying the magic, checksum,
+    /// version and structure — a truncated or bit-flipped file fails with
+    /// a diagnosable error instead of yielding a silently corrupt resume.
+    pub fn from_bytes(buf: &[u8]) -> Result<KMeansCheckpoint> {
+        if buf.len() < MAGIC.len() + 4 {
+            bail!("not a covermeans checkpoint: {} bytes is too short", buf.len());
+        }
+        if &buf[..MAGIC.len()] != MAGIC {
+            bail!(
+                "not a covermeans checkpoint: bad magic {:?}",
+                &buf[..MAGIC.len()]
+            );
+        }
+        if buf.len() < MAGIC.len() + 8 {
+            bail!("truncated checkpoint: no room for a checksum");
+        }
+        let (body, tail) = buf.split_at(buf.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual = fnv1a(body);
+        if stored != actual {
+            bail!(
+                "checkpoint checksum mismatch (stored {stored:#018x}, computed \
+                 {actual:#018x}): the file is truncated or corrupt"
+            );
+        }
+        let mut r = bin::Reader::new(&body[MAGIC.len()..]);
+        let version = r.u32()?;
+        if version != FORMAT_VERSION {
+            bail!(
+                "unsupported checkpoint format version {version} \
+                 (this build reads {FORMAT_VERSION})"
+            );
+        }
+        let fingerprint = r.u64()?;
+        let k = r.u32()? as usize;
+        let dim = r.u32()? as usize;
+        let n = r.u64()? as usize;
+        if k == 0 || dim == 0 || n == 0 || k > n {
+            bail!("corrupt checkpoint header: k={k}, dim={dim}, n={n}");
+        }
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .context("algorithm name is not UTF-8")?;
+        let algorithm = Algorithm::parse(name)
+            .with_context(|| format!("unknown algorithm {name:?} in checkpoint header"))?;
+        let seed = r.u64()?;
+        let iter = r.u64()?;
+        let converged = match r.take(1)?[0] {
+            0 => false,
+            1 => true,
+            other => bail!("corrupt convergence flag {other}"),
+        };
+        let distances = r.u64()?;
+        let build_dist = r.u64()?;
+        let build_time = Duration::from_nanos(r.u64()?);
+        let center_bytes = k
+            .checked_mul(dim)
+            .and_then(|c| c.checked_mul(8))
+            .context("checkpoint dimensions overflow")?;
+        let mut centers = Vec::with_capacity(k * dim);
+        for c in r.take(center_bytes)?.chunks_exact(8) {
+            centers.push(f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())));
+        }
+        let log_len = r.u32()? as usize;
+        if r.remaining() < log_len.checked_mul(32).context("log length overflow")? {
+            bail!("checkpoint log claims {log_len} entries, payload is too short");
+        }
+        let mut log = Vec::with_capacity(log_len);
+        for _ in 0..log_len {
+            log.push(IterationStat {
+                iter: r.u64()? as usize,
+                dist_cum: r.u64()?,
+                time_cum: Duration::from_nanos(r.u64()?),
+                changed: r.u64()? as usize,
+            });
+        }
+        let labels_len = r.u64()? as usize;
+        if labels_len != n {
+            bail!("checkpointed labels have {labels_len} entries, expected {n}");
+        }
+        let mut labels = Vec::with_capacity(n);
+        for c in r
+            .take(n.checked_mul(4).context("label length overflow")?)?
+            .chunks_exact(4)
+        {
+            labels.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut state = DriverState::new(labels);
+        let f64_slots = r.u32()?;
+        if f64_slots > MAX_SLOTS {
+            bail!("corrupt checkpoint: {f64_slots} f64 state slots");
+        }
+        for _ in 0..f64_slots {
+            let len = r.u64()? as usize;
+            let bytes = r
+                .take(len.checked_mul(8).context("slot length overflow")?)
+                .context("truncated f64 state slot")?;
+            let mut slot = Vec::with_capacity(len);
+            for c in bytes.chunks_exact(8) {
+                slot.push(f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())));
+            }
+            state = state.with_f64(slot);
+        }
+        let u32_slots = r.u32()?;
+        if u32_slots > MAX_SLOTS {
+            bail!("corrupt checkpoint: {u32_slots} u32 state slots");
+        }
+        for _ in 0..u32_slots {
+            let len = r.u64()? as usize;
+            let bytes = r
+                .take(len.checked_mul(4).context("slot length overflow")?)
+                .context("truncated u32 state slot")?;
+            let mut slot = Vec::with_capacity(len);
+            for c in bytes.chunks_exact(4) {
+                slot.push(u32::from_le_bytes(c.try_into().unwrap()));
+            }
+            state = state.with_u32(slot);
+        }
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after the driver state", r.remaining());
+        }
+        Ok(KMeansCheckpoint {
+            fingerprint,
+            algorithm,
+            k,
+            dim,
+            n,
+            seed,
+            iter,
+            converged,
+            distances,
+            build_dist,
+            build_time,
+            centers: Matrix::from_vec(centers, k, dim),
+            log,
+            state,
+        })
+    }
+
+    /// Write the snapshot crash-safely (temp → sync → rename; previous
+    /// generation retained as `path.prev` — see
+    /// [`crate::data::io::atomic_write`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.to_bytes())
+            .with_context(|| format!("write checkpoint {path:?}"))
+    }
+
+    /// Read one specific file back.
+    pub fn load(path: &Path) -> Result<KMeansCheckpoint> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("read checkpoint {path:?}"))?;
+        KMeansCheckpoint::from_bytes(&buf)
+            .with_context(|| format!("parse checkpoint {path:?}"))
+    }
+
+    /// Load the best available generation of the checkpoint at `path`:
+    /// try `path`, `path.tmp` and `path.prev`, drop any that fail
+    /// validation, and return the survivor with the highest iteration
+    /// count together with which [`Generation`] it was. A torn write can
+    /// corrupt at most the generation being written, so as long as one
+    /// snapshot was ever completed this finds a valid one.
+    pub fn load_any(path: &Path) -> Result<(KMeansCheckpoint, Generation)> {
+        let mut best: Option<(KMeansCheckpoint, Generation)> = None;
+        let mut errors = Vec::new();
+        for gen in [Generation::Current, Generation::Temp, Generation::Previous] {
+            let p = gen.path_for(path);
+            if !p.exists() {
+                continue;
+            }
+            match KMeansCheckpoint::load(&p) {
+                Ok(c) => {
+                    let better = match &best {
+                        None => true,
+                        Some((b, _)) => c.iter > b.iter,
+                    };
+                    if better {
+                        best = Some((c, gen));
+                    }
+                }
+                Err(e) => errors.push(format!("{gen} {p:?}: {e:#}")),
+            }
+        }
+        match best {
+            Some(found) => Ok(found),
+            None if errors.is_empty() => {
+                bail!("no checkpoint at {path:?} (nor a .tmp/.prev generation)")
+            }
+            None => bail!(
+                "no loadable checkpoint at {path:?}; every generation failed: {}",
+                errors.join("; ")
+            ),
+        }
+    }
+
+    /// Reject resuming under a configuration or dataset other than the
+    /// one that wrote the snapshot (see [`config_fingerprint`]).
+    pub fn validate(
+        &self,
+        params: &KMeansParams,
+        data: &Matrix,
+        k: usize,
+    ) -> Result<()> {
+        let want = config_fingerprint(params, data, k);
+        if self.fingerprint != want {
+            bail!(
+                "checkpoint fingerprint mismatch (checkpoint {:#018x}, this \
+                 run {:#018x}): the snapshot was written by a different \
+                 algorithm, dataset, or configuration (checkpoint says {} \
+                 k={} over n={} d={}); refusing to resume",
+                self.fingerprint,
+                want,
+                self.algorithm.name(),
+                self.k,
+                self.n,
+                self.dim,
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "covermeans_ckpt_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> KMeansCheckpoint {
+        KMeansCheckpoint {
+            fingerprint: 0xDEAD_BEEF_0BAD_F00D,
+            algorithm: Algorithm::Hamerly,
+            k: 2,
+            dim: 3,
+            n: 4,
+            seed: 7,
+            iter: 5,
+            converged: false,
+            distances: 1234,
+            build_dist: 56,
+            build_time: Duration::from_nanos(789),
+            centers: Matrix::from_vec(
+                vec![1.0, -0.0, f64::NAN, 2.5, 3.5, -4.5],
+                2,
+                3,
+            ),
+            log: vec![
+                IterationStat {
+                    iter: 1,
+                    dist_cum: 100,
+                    time_cum: Duration::from_nanos(10),
+                    changed: 4,
+                },
+                IterationStat {
+                    iter: 5,
+                    dist_cum: 1234,
+                    time_cum: Duration::from_nanos(50),
+                    changed: 1,
+                },
+            ],
+            state: DriverState::new(vec![0, 1, 1, 0])
+                .with_f64(vec![0.25, 0.5, 0.75, 1.0])
+                .with_f64(vec![9.0, 8.0, 7.0, 6.0])
+                .with_u32(vec![1, 0, 0, 1]),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let c = sample();
+        let back = KMeansCheckpoint::from_bytes(&c.to_bytes()).unwrap();
+        // NaN centers break a direct PartialEq comparison; compare bits.
+        assert_eq!(
+            c.centers
+                .as_slice()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>(),
+            back.centers
+                .as_slice()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(back.fingerprint, c.fingerprint);
+        assert_eq!(back.algorithm, c.algorithm);
+        assert_eq!((back.k, back.dim, back.n), (c.k, c.dim, c.n));
+        assert_eq!((back.seed, back.iter, back.converged), (7, 5, false));
+        assert_eq!(back.distances, c.distances);
+        assert_eq!(back.build_dist, c.build_dist);
+        assert_eq!(back.build_time, c.build_time);
+        assert_eq!(back.log, c.log);
+        assert_eq!(back.state, c.state);
+    }
+
+    #[test]
+    fn corruption_is_diagnosed_never_panics() {
+        let buf = sample().to_bytes();
+        // Truncations at structural boundaries and arbitrary cuts.
+        for cut in [0, 2, 6, 30, buf.len() / 2, buf.len() - 4, buf.len() - 1] {
+            let err = KMeansCheckpoint::from_bytes(&buf[..cut]).unwrap_err();
+            assert!(!format!("{err:#}").is_empty(), "cut at {cut}");
+        }
+        // Single-bit flips must fail the checksum.
+        for at in [4, 20, buf.len() / 2, buf.len() - 12] {
+            let mut bad = buf.clone();
+            bad[at] ^= 0x01;
+            let err = KMeansCheckpoint::from_bytes(&bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("checksum") || msg.contains("magic"),
+                "flip at {at}: {msg}"
+            );
+        }
+        // Trailing garbage invalidates the checksum (it moves).
+        let mut bad = buf.clone();
+        bad.extend_from_slice(b"junk");
+        assert!(KMeansCheckpoint::from_bytes(&bad).is_err());
+        // Not a checkpoint at all.
+        assert!(KMeansCheckpoint::from_bytes(b"FMAT1\n2 2\n....").is_err());
+    }
+
+    #[test]
+    fn save_load_any_prefers_newest_valid_generation() {
+        let dir = tmpdir();
+        let path = dir.join("gen_pref.kmc");
+        let mut c = sample();
+        c.iter = 3;
+        c.save(&path).unwrap();
+        c.iter = 6;
+        c.save(&path).unwrap();
+        let (loaded, gen) = KMeansCheckpoint::load_any(&path).unwrap();
+        assert_eq!(loaded.iter, 6);
+        assert_eq!(gen, Generation::Current);
+        // Corrupt the current generation: the previous one must win.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let (loaded, gen) = KMeansCheckpoint::load_any(&path).unwrap();
+        assert_eq!(loaded.iter, 3);
+        assert_eq!(gen, Generation::Previous);
+        // Truncate it instead: same fallback.
+        std::fs::write(&path, &std::fs::read(&path).unwrap()[..10]).unwrap();
+        let (loaded, gen) = KMeansCheckpoint::load_any(&path).unwrap();
+        assert_eq!(loaded.iter, 3);
+        assert_eq!(gen, Generation::Previous);
+        // Corrupt the fallback too: the error lists every failure.
+        let prev = Generation::Previous.path_for(&path);
+        std::fs::write(&prev, b"garbage").unwrap();
+        let err = KMeansCheckpoint::load_any(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("no loadable checkpoint"));
+        // Remove every generation: a diagnosable miss.
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&prev).unwrap();
+        let err = KMeansCheckpoint::load_any(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("no checkpoint at"));
+    }
+
+    #[test]
+    fn load_any_reads_orphaned_temp() {
+        // A crash after sync but before rename leaves only `path.tmp`.
+        let dir = tmpdir();
+        let path = dir.join("orphan.kmc");
+        let c = sample();
+        std::fs::write(Generation::Temp.path_for(&path), c.to_bytes()).unwrap();
+        let (loaded, gen) = KMeansCheckpoint::load_any(&path).unwrap();
+        assert_eq!(loaded.iter, c.iter);
+        assert_eq!(gen, Generation::Temp);
+    }
+
+    #[test]
+    fn fingerprint_separates_configs_but_not_threads() {
+        let data = crate::data::synth::gaussian_blobs(60, 2, 3, 0.5, 11);
+        let p = KMeansParams::default();
+        let base = config_fingerprint(&p, &data, 3);
+        assert_eq!(base, config_fingerprint(&p, &data, 3), "deterministic");
+        assert_ne!(base, config_fingerprint(&p, &data, 4), "k matters");
+        let other_alg =
+            KMeansParams::with_algorithm(Algorithm::CoverMeans);
+        assert_ne!(base, config_fingerprint(&other_alg, &data, 3));
+        let other_tol = KMeansParams { tol: 1e-6, ..p };
+        assert_ne!(base, config_fingerprint(&other_tol, &data, 3));
+        let other_data = crate::data::synth::gaussian_blobs(60, 2, 3, 0.5, 12);
+        assert_ne!(base, config_fingerprint(&p, &other_data, 3));
+        // threads / pin_workers are exactness-preserving: same fingerprint.
+        let threaded = KMeansParams { threads: 4, pin_workers: true, ..p };
+        assert_eq!(base, config_fingerprint(&threaded, &data, 3));
+    }
+
+    #[test]
+    fn validate_rejects_mismatch_with_context() {
+        let data = crate::data::synth::gaussian_blobs(60, 2, 3, 0.5, 11);
+        let p = KMeansParams::default();
+        let mut c = sample();
+        c.fingerprint = config_fingerprint(&p, &data, 3);
+        assert!(c.validate(&p, &data, 3).is_ok());
+        let err = c.validate(&p, &data, 4).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fingerprint mismatch"), "{msg}");
+        assert!(msg.contains("Hamerly"), "names the checkpoint's origin: {msg}");
+    }
+}

@@ -27,7 +27,7 @@ use std::sync::Arc;
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{CentroidAccum, InterCenter};
-use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
 use crate::parallel::Parallelism;
@@ -619,6 +619,27 @@ impl KMeansDriver for CoverDriver<'_> {
 
     fn labels(&self) -> &[u32] {
         &self.labels
+    }
+
+    fn save_state(&self) -> Option<DriverState> {
+        // Bounds are refreshed by every tree pass, but the vectors are
+        // saved anyway: the snapshot then matches the Shallot layout the
+        // Hybrid hand-off produces, and costs nothing extra on resume.
+        Some(
+            DriverState::new(self.labels.clone())
+                .with_f64(self.upper.clone())
+                .with_f64(self.lower.clone())
+                .with_u32(self.second.clone()),
+        )
+    }
+
+    fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
+        let n = self.data.rows();
+        self.labels = state.labels_checked(n)?.to_vec();
+        self.upper = state.f64_slot(0, n, "upper bounds")?.to_vec();
+        self.lower = state.f64_slot(1, n, "lower bounds")?.to_vec();
+        self.second = state.u32_slot(0, n, "second-nearest indices")?.to_vec();
+        Ok(())
     }
 
     fn finish(self: Box<Self>) -> Vec<u32> {

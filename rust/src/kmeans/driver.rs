@@ -21,15 +21,89 @@
 //! replicates the pre-refactor per-algorithm loops byte-for-byte — same
 //! assignment sequence, same distance counts (`rust/tests/exactness.rs`).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
+use crate::kmeans::checkpoint::{CheckpointConfig, KMeansCheckpoint};
 use crate::kmeans::{
     cover, dualtree, elkan, exponion, hamerly, hybrid, kanungo, lloyd, pelleg,
     phillips, shallot, Algorithm, KMeansParams, Workspace,
 };
 use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
+
+/// The serializable cross-iteration state of a [`KMeansDriver`], as the
+/// checkpoint subsystem sees it: the labels every driver keeps, plus
+/// driver-defined `f64` / `u32` vectors (stored bounds, second-nearest
+/// indices) in a slot order each driver fixes for itself. Spatial indexes
+/// (cover / k-d trees) are *not* state — their builds are deterministic
+/// and thread-count invariant, so resume rebuilds them.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DriverState {
+    /// Current assignment (may be the `u32::MAX` unassigned sentinel
+    /// when a checkpoint landed before iteration 1 — it never does today,
+    /// but the format allows it).
+    pub labels: Vec<u32>,
+    /// Driver-defined `f64` vectors (e.g. Hamerly's upper/lower bounds),
+    /// in the driver's own slot order.
+    pub f64_slots: Vec<Vec<f64>>,
+    /// Driver-defined `u32` vectors (e.g. Shallot's second-nearest
+    /// center indices), in the driver's own slot order.
+    pub u32_slots: Vec<Vec<u32>>,
+}
+
+impl DriverState {
+    pub fn new(labels: Vec<u32>) -> DriverState {
+        DriverState { labels, f64_slots: Vec::new(), u32_slots: Vec::new() }
+    }
+
+    pub fn with_f64(mut self, v: Vec<f64>) -> DriverState {
+        self.f64_slots.push(v);
+        self
+    }
+
+    pub fn with_u32(mut self, v: Vec<u32>) -> DriverState {
+        self.u32_slots.push(v);
+        self
+    }
+
+    /// The labels, validated against the expected point count.
+    pub fn labels_checked(&self, n: usize) -> Result<&[u32]> {
+        if self.labels.len() != n {
+            bail!(
+                "checkpointed labels have {} entries, expected {n}",
+                self.labels.len()
+            );
+        }
+        Ok(&self.labels)
+    }
+
+    /// Slot `i` of the `f64` state, validated against an expected length.
+    pub fn f64_slot(&self, i: usize, len: usize, what: &str) -> Result<&[f64]> {
+        match self.f64_slots.get(i) {
+            Some(v) if v.len() == len => Ok(v),
+            Some(v) => bail!(
+                "checkpointed {what} has {} entries, expected {len}",
+                v.len()
+            ),
+            None => bail!("checkpoint is missing driver state slot {i} ({what})"),
+        }
+    }
+
+    /// Slot `i` of the `u32` state, validated against an expected length.
+    pub fn u32_slot(&self, i: usize, len: usize, what: &str) -> Result<&[u32]> {
+        match self.u32_slots.get(i) {
+            Some(v) if v.len() == len => Ok(v),
+            Some(v) => bail!(
+                "checkpointed {what} has {} entries, expected {len}",
+                v.len()
+            ),
+            None => bail!("checkpoint is missing driver state slot {i} ({what})"),
+        }
+    }
+}
 
 /// Per-iteration strategy of one exact k-means variant.
 ///
@@ -70,6 +144,24 @@ pub trait KMeansDriver {
 
     /// Current assignment (valid after `init_state`).
     fn labels(&self) -> &[u32];
+
+    /// Snapshot the cross-iteration state for a checkpoint. `None` (the
+    /// default) marks the driver as not checkpointable — the fit then
+    /// refuses to write snapshots instead of writing unresumable ones.
+    fn save_state(&self) -> Option<DriverState> {
+        None
+    }
+
+    /// Restore a snapshot produced by [`KMeansDriver::save_state`].
+    /// Implementations must validate lengths: a state that does not fit
+    /// this driver/dataset is an error, never a panic. The default
+    /// (paired with the `save_state` default) rejects restoration.
+    fn load_state(&mut self, _state: &DriverState) -> Result<()> {
+        bail!(
+            "{} does not support checkpoint resume",
+            self.algorithm().name()
+        )
+    }
 
     /// Consume the driver, yielding the final labels without cloning.
     fn finish(self: Box<Self>) -> Vec<u32>;
@@ -124,6 +216,32 @@ impl StepView<'_> {
 /// Per-iteration callback; return [`Signal::Stop`] to end the run early.
 pub type Observer = Box<dyn FnMut(&StepView<'_>) -> Signal>;
 
+/// The attached checkpoint destination of a [`Fit`]: the config (path +
+/// triggers), the run identity recorded into every snapshot, the time
+/// trigger's clock, and the sticky error of a failed write.
+struct CheckpointSink {
+    cfg: CheckpointConfig,
+    fingerprint: u64,
+    seed: u64,
+    last_write: Instant,
+    err: Option<anyhow::Error>,
+}
+
+/// Fault injection: `COVERMEANS_CRASH_AFTER_ITER=N` aborts the process
+/// right after the first checkpoint written at iteration >= N — the
+/// deterministic "power loss mid-run" the crash-resume harness replays
+/// (`rust/tests/crash_resume.rs`).
+fn maybe_crash_after_iter(iter: usize) {
+    let Ok(v) = std::env::var("COVERMEANS_CRASH_AFTER_ITER") else {
+        return;
+    };
+    let Ok(n) = v.parse::<usize>() else { return };
+    if iter >= n {
+        eprintln!("fault injection: simulated crash after iteration {iter}");
+        std::process::abort();
+    }
+}
+
 /// A stepwise k-means run: the shared outer loop with the iteration
 /// boundary exposed. Construct via [`crate::kmeans::KMeans::fit_step`] (or
 /// [`Fit::from_driver`] for a custom [`KMeansDriver`]), then either call
@@ -145,6 +263,7 @@ pub struct Fit<'a> {
     build_dist: u64,
     build_time: Duration,
     observer: Option<Observer>,
+    ckpt: Option<CheckpointSink>,
 }
 
 impl<'a> Fit<'a> {
@@ -175,6 +294,7 @@ impl<'a> Fit<'a> {
             build_dist: 0,
             build_time: Duration::ZERO,
             observer: None,
+            ckpt: None,
         }
     }
 
@@ -186,6 +306,28 @@ impl<'a> Fit<'a> {
 
     pub(crate) fn with_observer(mut self, observer: Option<Observer>) -> Self {
         self.observer = observer;
+        self
+    }
+
+    /// Attach crash-safe checkpointing: snapshots go to `cfg.path` per the
+    /// `cfg` triggers, plus one when the run completes. `fingerprint` is
+    /// this run's [`crate::kmeans::checkpoint::config_fingerprint`]
+    /// (resume rejects any other); `seed` is recorded as provenance. A
+    /// failed write stops the run at that iteration boundary and surfaces
+    /// through [`Fit::checkpoint_error`].
+    pub fn with_checkpoints(
+        mut self,
+        cfg: CheckpointConfig,
+        fingerprint: u64,
+        seed: u64,
+    ) -> Self {
+        self.ckpt = Some(CheckpointSink {
+            cfg,
+            fingerprint,
+            seed,
+            last_write: Instant::now(),
+            err: None,
+        });
         self
     }
 
@@ -238,7 +380,130 @@ impl<'a> Fit<'a> {
                 info.done = true;
             }
         }
+        self.maybe_checkpoint();
+        info.done = self.done;
         Some(info)
+    }
+
+    /// Write a snapshot if one is due: the run just finished, the every-N
+    /// trigger fired, or the time trigger elapsed. A write failure is
+    /// sticky ([`Fit::checkpoint_error`]) and ends the run at this
+    /// boundary — continuing past it would break the crash-safety the
+    /// caller asked for.
+    fn maybe_checkpoint(&mut self) {
+        let Some(ck) = &self.ckpt else { return };
+        if ck.err.is_some() {
+            return;
+        }
+        let due = self.done
+            || (ck.cfg.every > 0 && self.iter % ck.cfg.every == 0)
+            || (ck.cfg.secs > 0 && ck.last_write.elapsed().as_secs() >= ck.cfg.secs);
+        if !due {
+            return;
+        }
+        if let Err(e) = self.checkpoint_now() {
+            self.done = true;
+            if let Some(ck) = &mut self.ckpt {
+                ck.err = Some(e);
+            }
+        }
+    }
+
+    /// Snapshot the fit to the configured checkpoint path right now,
+    /// whatever the triggers say — the signal-driven checkpoint-then-exit
+    /// path of `covermeans run`. Also resets the time trigger.
+    pub fn checkpoint_now(&mut self) -> Result<()> {
+        let Some(ck) = &self.ckpt else {
+            bail!("no checkpoint path configured for this fit");
+        };
+        let Some(state) = self.driver.save_state() else {
+            bail!(
+                "{} does not support checkpointing",
+                self.driver.algorithm().name()
+            );
+        };
+        let snap = KMeansCheckpoint {
+            fingerprint: ck.fingerprint,
+            algorithm: self.driver.algorithm(),
+            k: self.centers.rows(),
+            dim: self.centers.cols(),
+            n: self.data.rows(),
+            seed: ck.seed,
+            iter: self.iter as u64,
+            converged: self.converged,
+            distances: self.dist.count(),
+            build_dist: self.build_dist,
+            build_time: self.build_time,
+            centers: self.centers.clone(),
+            log: self.log.stats.clone(),
+            state,
+        };
+        snap.save(&ck.cfg.path)?;
+        maybe_crash_after_iter(self.iter);
+        if let Some(ck) = &mut self.ckpt {
+            ck.last_write = Instant::now();
+        }
+        Ok(())
+    }
+
+    /// The sticky error of a failed checkpoint write, if any (the run
+    /// stopped at the iteration boundary where the write failed).
+    pub fn checkpoint_error(&self) -> Option<&anyhow::Error> {
+        self.ckpt.as_ref().and_then(|c| c.err.as_ref())
+    }
+
+    /// Take ownership of the sticky checkpoint error for propagation.
+    pub fn take_checkpoint_error(&mut self) -> Option<anyhow::Error> {
+        self.ckpt.as_mut().and_then(|c| c.err.take())
+    }
+
+    /// Rewind this freshly constructed (never stepped) fit to a
+    /// checkpointed state. The caller validates the config fingerprint
+    /// first ([`KMeansCheckpoint::validate`]); this checks the structural
+    /// fit and restores the centers, driver state, counters and log. The
+    /// stopwatch restarts — wall-clock time sits outside the identity
+    /// contract; everything else resumes bit-identically.
+    pub fn restore(&mut self, snap: &KMeansCheckpoint) -> Result<()> {
+        if self.iter != 0 {
+            bail!("restore must happen before the first step");
+        }
+        if snap.algorithm != self.driver.algorithm() {
+            bail!(
+                "checkpoint is for {}, this fit drives {}",
+                snap.algorithm.name(),
+                self.driver.algorithm().name()
+            );
+        }
+        if snap.n != self.data.rows()
+            || snap.dim != self.data.cols()
+            || snap.k != self.centers.rows()
+        {
+            bail!(
+                "checkpoint shape (n={}, d={}, k={}) does not match this \
+                 fit (n={}, d={}, k={})",
+                snap.n,
+                snap.dim,
+                snap.k,
+                self.data.rows(),
+                self.data.cols(),
+                self.centers.rows()
+            );
+        }
+        self.driver.load_state(&snap.state)?;
+        self.centers = snap.centers.clone();
+        self.iter = snap.iter as usize;
+        self.converged = snap.converged;
+        self.done = self.converged || self.iter >= self.max_iter;
+        self.dist = DistCounter::new();
+        self.dist.add_bulk(snap.distances);
+        self.log = IterationLog { stats: snap.log.clone() };
+        // The snapshot's build cost replaces any re-charged tree build of
+        // this construction, so resumed totals match the uninterrupted
+        // run exactly.
+        self.build_dist = snap.build_dist;
+        self.build_time = snap.build_time;
+        self.sw = Stopwatch::start();
+        Ok(())
     }
 
     /// Drive to completion (the observer, if any, is consulted inside
@@ -482,6 +747,140 @@ mod tests {
         assert!(loose.converged);
         assert!(loose.iterations <= exact.iterations);
         assert_eq!(loose.iterations, 1, "huge tol stops after one iteration");
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let (data, init_c) = blobs_and_init();
+        let dir = std::env::temp_dir().join(format!(
+            "covermeans_driver_ckpt_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        for alg in [
+            Algorithm::Standard,
+            Algorithm::Hamerly,
+            Algorithm::Elkan,
+            Algorithm::CoverMeans,
+            Algorithm::DualTree,
+            Algorithm::Hybrid,
+        ] {
+            let params = KMeansParams { algorithm: alg, ..KMeansParams::default() };
+            let full = run_exact(&data, &init_c, &params, &mut Workspace::new());
+            assert!(full.iterations > 2, "{} converged too fast", alg.name());
+            let fp = crate::kmeans::checkpoint::config_fingerprint(
+                &params,
+                &data,
+                init_c.rows(),
+            );
+            let path = dir.join(format!("{}.kmc", alg.name()));
+            let cfg = CheckpointConfig { path: path.clone(), every: 1, secs: 0 };
+            // Interrupted run: two iterations, then the fit is dropped —
+            // only the on-disk snapshot survives.
+            let (driver, bd, bt) =
+                new_driver(&data, init_c.rows(), &params, &mut Workspace::new());
+            let mut fit = Fit::from_driver(&data, driver, &init_c, params.max_iter, 0.0)
+                .with_build_cost(bd, bt)
+                .with_checkpoints(cfg, fp, 9);
+            fit.step().unwrap();
+            fit.step().unwrap();
+            assert!(fit.checkpoint_error().is_none());
+            drop(fit);
+            // Resume from disk and run to completion.
+            let (snap, gen) = KMeansCheckpoint::load_any(&path).unwrap();
+            assert_eq!(gen, crate::kmeans::checkpoint::Generation::Current);
+            snap.validate(&params, &data, init_c.rows()).unwrap();
+            assert_eq!(snap.iter, 2, "{}", alg.name());
+            let (driver, bd, bt) =
+                new_driver(&data, init_c.rows(), &params, &mut Workspace::new());
+            let mut fit = Fit::from_driver(&data, driver, &init_c, params.max_iter, 0.0)
+                .with_build_cost(bd, bt);
+            fit.restore(&snap).unwrap();
+            while fit.step().is_some() {}
+            let resumed = fit.finish();
+            assert_eq!(resumed.labels, full.labels, "{}", alg.name());
+            assert_eq!(resumed.iterations, full.iterations, "{}", alg.name());
+            assert_eq!(resumed.distances, full.distances, "{}", alg.name());
+            assert_eq!(resumed.converged, full.converged, "{}", alg.name());
+            let bits = |m: &Matrix| {
+                m.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(bits(&resumed.centers), bits(&full.centers), "{}", alg.name());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_wrong_algorithm_and_shape() {
+        let (data, init_c) = blobs_and_init();
+        let params = KMeansParams::default();
+        let fp = crate::kmeans::checkpoint::config_fingerprint(
+            &params,
+            &data,
+            init_c.rows(),
+        );
+        let dir = std::env::temp_dir().join(format!(
+            "covermeans_driver_ckpt_neg_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("neg.kmc");
+        let (driver, bd, bt) =
+            new_driver(&data, init_c.rows(), &params, &mut Workspace::new());
+        let mut fit = Fit::from_driver(&data, driver, &init_c, params.max_iter, 0.0)
+            .with_build_cost(bd, bt)
+            .with_checkpoints(
+                CheckpointConfig { path: path.clone(), every: 1, secs: 0 },
+                fp,
+                0,
+            );
+        fit.step().unwrap();
+        drop(fit);
+        let (snap, _) = KMeansCheckpoint::load_any(&path).unwrap();
+        // Wrong algorithm: the driver refuses.
+        let hp = KMeansParams::with_algorithm(Algorithm::Hamerly);
+        let (driver, _, _) =
+            new_driver(&data, init_c.rows(), &hp, &mut Workspace::new());
+        let mut fit = Fit::from_driver(&data, driver, &init_c, hp.max_iter, 0.0);
+        let err = fit.restore(&snap).unwrap_err();
+        assert!(format!("{err:#}").contains("this fit drives"), "{err:#}");
+        // Fingerprint validation also rejects the cross-algorithm resume.
+        assert!(snap.validate(&hp, &data, init_c.rows()).is_err());
+        // Restore after stepping is refused.
+        let (driver, _, _) =
+            new_driver(&data, init_c.rows(), &params, &mut Workspace::new());
+        let mut fit = Fit::from_driver(&data, driver, &init_c, params.max_iter, 0.0);
+        fit.step().unwrap();
+        assert!(fit.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn checkpoint_write_failure_is_sticky_and_stops_the_run() {
+        let (data, init_c) = blobs_and_init();
+        let params = KMeansParams::default();
+        let fp = crate::kmeans::checkpoint::config_fingerprint(
+            &params,
+            &data,
+            init_c.rows(),
+        );
+        // A directory that does not exist: every write fails.
+        let path = std::env::temp_dir()
+            .join(format!("covermeans_no_such_dir_{}", std::process::id()))
+            .join("nested")
+            .join("x.kmc");
+        let (driver, bd, bt) =
+            new_driver(&data, init_c.rows(), &params, &mut Workspace::new());
+        let mut fit = Fit::from_driver(&data, driver, &init_c, params.max_iter, 0.0)
+            .with_build_cost(bd, bt)
+            .with_checkpoints(
+                CheckpointConfig { path, every: 1, secs: 0 },
+                fp,
+                0,
+            );
+        let info = fit.step().unwrap();
+        assert!(info.done, "failed write must end the run at this boundary");
+        assert!(fit.step().is_none());
+        let err = fit.take_checkpoint_error().expect("sticky error");
+        assert!(format!("{err:#}").contains("checkpoint"), "{err:#}");
     }
 
     #[test]

@@ -83,7 +83,7 @@ use std::sync::Arc;
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{CentroidAccum, InterCenter};
-use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
 use crate::parallel::{Parallelism, ScatterSlice};
@@ -666,6 +666,18 @@ impl KMeansDriver for DualDriver<'_> {
 
     fn labels(&self) -> &[u32] {
         &self.labels
+    }
+
+    fn save_state(&self) -> Option<DriverState> {
+        // The center-tree cache is rebuilt on demand at zero counted
+        // distances (from the InterCenter matrix), so labels are the
+        // whole cross-iteration state.
+        Some(DriverState::new(self.labels.clone()))
+    }
+
+    fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
+        self.labels = state.labels_checked(self.data.rows())?.to_vec();
+        Ok(())
     }
 
     fn finish(self: Box<Self>) -> Vec<u32> {

@@ -16,7 +16,7 @@ use std::sync::OnceLock;
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{accumulate_in_order, nearest_two, CentroidAccum, InterCenter};
-use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::hamerly::update_bounds;
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
@@ -178,6 +178,22 @@ impl KMeansDriver for ExponionDriver<'_> {
 
     fn labels(&self) -> &[u32] {
         &self.labels
+    }
+
+    fn save_state(&self) -> Option<DriverState> {
+        Some(
+            DriverState::new(self.labels.clone())
+                .with_f64(self.upper.clone())
+                .with_f64(self.lower.clone()),
+        )
+    }
+
+    fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
+        let n = self.data.rows();
+        self.labels = state.labels_checked(n)?.to_vec();
+        self.upper = state.f64_slot(0, n, "upper bounds")?.to_vec();
+        self.lower = state.f64_slot(1, n, "lower bounds")?.to_vec();
+        Ok(())
     }
 
     fn finish(self: Box<Self>) -> Vec<u32> {

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
-use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::shallot::ShallotState;
 use crate::kmeans::{cover, hamerly, shallot, Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
@@ -123,6 +123,15 @@ impl KMeansDriver for HybridDriver<'_> {
 
     fn labels(&self) -> &[u32] {
         &self.state.labels
+    }
+
+    fn save_state(&self) -> Option<DriverState> {
+        Some(self.state.to_driver_state())
+    }
+
+    fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
+        self.state = ShallotState::from_driver_state(state, self.data.rows())?;
+        Ok(())
     }
 
     fn finish(self: Box<Self>) -> Vec<u32> {

@@ -22,7 +22,7 @@ use std::time::Duration;
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::CentroidAccum;
-use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::kdfilter::{self, PruneRule};
 use crate::kmeans::{Algorithm, KMeansParams, Workspace};
 use crate::metrics::{DistCounter, RunResult};
@@ -149,6 +149,15 @@ impl KMeansDriver for KanungoDriver<'_> {
 
     fn labels(&self) -> &[u32] {
         &self.labels
+    }
+
+    fn save_state(&self) -> Option<DriverState> {
+        Some(DriverState::new(self.labels.clone()))
+    }
+
+    fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
+        self.labels = state.labels_checked(self.data.rows())?.to_vec();
+        Ok(())
     }
 
     fn finish(self: Box<Self>) -> Vec<u32> {

@@ -52,6 +52,7 @@
 
 pub mod bounds;
 pub mod builder;
+pub mod checkpoint;
 pub mod cover;
 pub mod driver;
 pub mod dualtree;
@@ -77,7 +78,8 @@ use crate::parallel::Parallelism;
 use crate::tree::{CoverTree, CoverTreeParams, KdTree, KdTreeParams};
 
 pub use builder::{AlgorithmSpec, KMeans, KMeansError};
-pub use driver::{Fit, KMeansDriver, Observer, Signal, StepInfo, StepView};
+pub use checkpoint::{CheckpointConfig, Generation, KMeansCheckpoint};
+pub use driver::{DriverState, Fit, KMeansDriver, Observer, Signal, StepInfo, StepView};
 pub use minibatch::MiniBatchParams;
 pub use model::{
     KMeansModel, PredictMode, PredictOptions, PredictPrecision, Prediction,
@@ -227,6 +229,14 @@ pub struct KMeansParams {
     /// Placement only — results are byte-identical either way; see
     /// [`crate::parallel::pin_current_thread`].
     pub pin_workers: bool,
+    /// Write a crash-safe checkpoint every N iterations (config key
+    /// `checkpoint_every`; 0 = no periodic trigger). Requires a
+    /// checkpoint path (config key `checkpoint_path`, routed separately —
+    /// this struct stays `Copy`).
+    pub checkpoint_every: usize,
+    /// Also checkpoint when this many seconds elapsed since the last
+    /// snapshot (config key `checkpoint_secs`; 0 = no time trigger).
+    pub checkpoint_secs: u64,
 }
 
 impl Default for KMeansParams {
@@ -241,6 +251,8 @@ impl Default for KMeansParams {
             minibatch: MiniBatchParams::default(),
             threads: 1,
             pin_workers: false,
+            checkpoint_every: 0,
+            checkpoint_secs: 0,
         }
     }
 }

@@ -797,9 +797,11 @@ impl KMeansModel {
         })
     }
 
-    /// Write the `.kmm` format to `path`.
+    /// Write the `.kmm` format to `path` — atomically (temp + fsync +
+    /// rename, previous generation kept as `.prev`), so a crash or a
+    /// concurrent reader never sees a half-written model.
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_bytes())
+        crate::data::io::atomic_write(path, &self.to_bytes())
             .with_context(|| format!("write model {path:?}"))
     }
 
@@ -848,7 +850,8 @@ impl KMeansModel {
             s.push_str(&format!("    [{}]{comma}\n", row.join(", ")));
         }
         s.push_str("  ]\n}\n");
-        std::fs::write(path, s).with_context(|| format!("write model json {path:?}"))
+        crate::data::io::atomic_write(path, s.as_bytes())
+            .with_context(|| format!("write model json {path:?}"))
     }
 }
 

@@ -7,7 +7,7 @@
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum, InterCenter};
-use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
 use crate::parallel::{Parallelism, SharedSlices};
@@ -128,6 +128,15 @@ impl KMeansDriver for PhillipsDriver<'_> {
 
     fn labels(&self) -> &[u32] {
         &self.labels
+    }
+
+    fn save_state(&self) -> Option<DriverState> {
+        Some(DriverState::new(self.labels.clone()))
+    }
+
+    fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
+        self.labels = state.labels_checked(self.data.rows())?.to_vec();
+        Ok(())
     }
 
     fn finish(self: Box<Self>) -> Vec<u32> {

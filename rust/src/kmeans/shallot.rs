@@ -18,7 +18,7 @@ use std::sync::OnceLock;
 
 use crate::data::Matrix;
 use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum, InterCenter};
-use crate::kmeans::driver::{Fit, KMeansDriver};
+use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::hamerly::update_bounds;
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
@@ -50,6 +50,29 @@ impl ShallotState {
     /// overwritten by the first cover pass).
     pub fn unassigned(n: usize) -> ShallotState {
         ShallotState { labels: vec![u32::MAX; n], ..ShallotState::zeroed(n) }
+    }
+
+    /// Checkpoint snapshot (slot order: upper, lower, second). Shared by
+    /// the Shallot and Hybrid drivers.
+    pub(crate) fn to_driver_state(&self) -> DriverState {
+        DriverState::new(self.labels.clone())
+            .with_f64(self.upper.clone())
+            .with_f64(self.lower.clone())
+            .with_u32(self.second.clone())
+    }
+
+    /// Rebuild from a [`ShallotState::to_driver_state`] snapshot,
+    /// validating every vector against the point count.
+    pub(crate) fn from_driver_state(
+        state: &DriverState,
+        n: usize,
+    ) -> anyhow::Result<ShallotState> {
+        Ok(ShallotState {
+            labels: state.labels_checked(n)?.to_vec(),
+            second: state.u32_slot(0, n, "second-nearest indices")?.to_vec(),
+            upper: state.f64_slot(0, n, "upper bounds")?.to_vec(),
+            lower: state.f64_slot(1, n, "lower bounds")?.to_vec(),
+        })
     }
 }
 
@@ -208,6 +231,15 @@ impl KMeansDriver for ShallotDriver<'_> {
 
     fn labels(&self) -> &[u32] {
         &self.state.labels
+    }
+
+    fn save_state(&self) -> Option<DriverState> {
+        Some(self.state.to_driver_state())
+    }
+
+    fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
+        self.state = ShallotState::from_driver_state(state, self.data.rows())?;
+        Ok(())
     }
 
     fn finish(self: Box<Self>) -> Vec<u32> {

@@ -71,5 +71,6 @@ pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod serve;
+pub mod signals;
 pub mod testutil;
 pub mod tree;

@@ -17,9 +17,12 @@ use anyhow::{bail, Context, Result};
 
 use covermeans::config::RunConfig;
 use covermeans::coordinator::{report, run_experiment, sweep, Experiment};
-use covermeans::data::{io, registry};
-use covermeans::kmeans::{self, Algorithm, KMeansModel, Workspace};
-use covermeans::metrics::DistCounter;
+use covermeans::data::{io, registry, Matrix};
+use covermeans::kmeans::{
+    self, Algorithm, AlgorithmSpec, CheckpointConfig, KMeans, KMeansCheckpoint,
+    KMeansModel, Workspace,
+};
+use covermeans::metrics::{DistCounter, RunResult};
 use covermeans::parallel::Parallelism;
 
 const HELP: &str = "\
@@ -33,6 +36,11 @@ COMMANDS:
              --dataset NAME --k K --algorithm NAME --scale S --seed N
              --backend native|xla   (xla: Standard algorithm only)
              --model_out FILE.kmm   save the fitted model for serving
+             --checkpoint_path FILE.kmc  crash-safe snapshots (atomic,
+             previous generation kept) [--checkpoint_every N]
+             [--checkpoint_secs S]; --resume 1 continues from the newest
+             valid generation, bit-identical to an uninterrupted run.
+             SIGINT/SIGTERM write a snapshot then exit with code 130.
   predict    batch nearest-center assignment from a saved model
              --model FILE.kmm --input POINTS.csv|.fmat [--out LABELS.csv]
              [--predict_mode auto|tree|scan] [--predict_auto_k K]
@@ -58,9 +66,10 @@ CONFIG KEYS (also accepted in --config files as `key = value`; the full
 table lives in docs/GUIDE.md and the config module rustdoc):
   dataset scale data_seed k restarts seed threads fit_threads out_dir
   max_iter tol switch_at scale_factor min_node_size kd_leaf_size
-  algorithms mb_batch mb_tol mb_seed model_out predict_mode
-  predict_auto_k predict_precision pin_workers serve_addr max_batch
-  batch_wait_us queue_depth
+  algorithms mb_batch mb_tol mb_seed model_out checkpoint_path
+  checkpoint_every checkpoint_secs predict_mode predict_auto_k
+  predict_precision pin_workers serve_addr max_batch batch_wait_us
+  queue_depth
 
 KERNELS:
   Distance arithmetic dispatches once at startup to the widest SIMD path
@@ -163,8 +172,16 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn cmd_run(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let extras = parse_overrides(args, &mut cfg)?;
-    reject_unknown(&extras, &["backend"])?;
+    reject_unknown(&extras, &["backend", "resume"])?;
     let backend = extra(&extras, "backend").unwrap_or("native");
+    let resume = match extra(&extras, "resume") {
+        None | Some("0") | Some("false") => false,
+        Some("1") | Some("true") => true,
+        Some(other) => bail!("--resume takes 1/true or 0/false, got {other:?}"),
+    };
+    if resume && cfg.checkpoint_path.is_empty() {
+        bail!("--resume needs --checkpoint_path (the snapshot to continue from)");
+    }
     let alg = cfg.algorithms[0];
 
     eprintln!("# config\n{}\n", cfg.dump());
@@ -178,18 +195,25 @@ fn cmd_run(args: &[String]) -> Result<()> {
         cfg.scale
     );
 
-    let mut init_counter = DistCounter::new();
-    let init = kmeans::init::kmeans_plus_plus(
-        &data,
-        cfg.k.min(data.rows()),
-        cfg.seed,
-        &mut init_counter,
-    );
-
     let params = kmeans::KMeansParams { algorithm: alg, ..cfg.params };
     let result = match backend {
-        "native" => kmeans::run(&data, &init, &params, &mut Workspace::new()),
-        "xla" => run_xla(&data, &init, &params, alg)?,
+        "native" => run_native(&data, &cfg, &params, alg, resume)?,
+        "xla" => {
+            if !cfg.checkpoint_path.is_empty() {
+                bail!(
+                    "checkpointing drives the native stepwise fit; drop \
+                     --backend xla or checkpoint_path"
+                );
+            }
+            let mut init_counter = DistCounter::new();
+            let init = kmeans::init::kmeans_plus_plus(
+                &data,
+                cfg.k.min(data.rows()),
+                cfg.seed,
+                &mut init_counter,
+            );
+            run_xla(&data, &init, &params, alg)?
+        }
         other => bail!("unknown backend {other:?}"),
     };
 
@@ -214,6 +238,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
         result.build_time.as_secs_f64()
     );
     println!("sse         : {:.6e}", result.sse(&data));
+    if !cfg.checkpoint_path.is_empty() {
+        println!("checkpoint  : {} (final snapshot)", cfg.checkpoint_path);
+    }
     if !cfg.model_out.is_empty() {
         let model = KMeansModel::from_run(&data, &result, alg, cfg.seed);
         let path = Path::new(&cfg.model_out);
@@ -226,6 +253,102 @@ fn cmd_run(args: &[String]) -> Result<()> {
         println!("model       : saved to {} ({} bytes)", path.display(), model.to_bytes().len());
     }
     Ok(())
+}
+
+/// The native `run` path, driven stepwise so checkpoint triggers,
+/// SIGINT/SIGTERM checkpoint-then-exit, and `--resume` all hang off real
+/// iteration boundaries. MiniBatch (no exact boundary) keeps the one-shot
+/// path and rejects checkpointing.
+fn run_native(
+    data: &Matrix,
+    cfg: &RunConfig,
+    params: &kmeans::KMeansParams,
+    alg: Algorithm,
+    resume: bool,
+) -> Result<RunResult> {
+    let k = cfg.k.min(data.rows());
+    if alg == Algorithm::MiniBatch {
+        if !cfg.checkpoint_path.is_empty() {
+            bail!(
+                "minibatch has no exact iteration boundary to checkpoint; \
+                 drop checkpoint_path or pick an exact algorithm"
+            );
+        }
+        let mut init_counter = DistCounter::new();
+        let init =
+            kmeans::init::kmeans_plus_plus(data, k, cfg.seed, &mut init_counter);
+        return Ok(kmeans::run(data, &init, params, &mut Workspace::new()));
+    }
+
+    let mut builder = KMeans::new(k)
+        .algorithm(AlgorithmSpec::from_params(alg, params))
+        .max_iter(params.max_iter)
+        .tol(params.tol)
+        .seed(cfg.seed)
+        .threads(params.threads)
+        .pin_workers(params.pin_workers);
+
+    let checkpointing = !cfg.checkpoint_path.is_empty();
+    let ckpt_path = Path::new(&cfg.checkpoint_path).to_path_buf();
+    let snap = if resume {
+        let (snap, generation) = KMeansCheckpoint::load_any(&ckpt_path)?;
+        snap.validate(&builder.params(), data, k)?;
+        eprintln!(
+            "resuming    : {} at iteration {} ({} snapshot, {} distances so far)",
+            snap.algorithm.name(),
+            snap.iter,
+            generation,
+            snap.distances
+        );
+        Some(snap)
+    } else {
+        None
+    };
+    if let Some(s) = &snap {
+        // Skip the k-means++ pass entirely: restore() overwrites the
+        // centers anyway, so seed the fit straight from the snapshot.
+        builder = builder.warm_start(s.centers.clone());
+    }
+    if checkpointing {
+        if let Some(parent) = ckpt_path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        builder = builder.checkpoint(CheckpointConfig {
+            path: ckpt_path,
+            every: params.checkpoint_every,
+            secs: params.checkpoint_secs,
+        });
+        covermeans::signals::install();
+    }
+
+    let mut ws = Workspace::new();
+    let mut fit = builder
+        .fit_step_with(data, &mut ws)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(s) = &snap {
+        fit.restore(s)?;
+    }
+    while !fit.is_done() {
+        if checkpointing && covermeans::signals::take_shutdown() {
+            fit.checkpoint_now()?;
+            eprintln!(
+                "interrupted : snapshot written at iteration {} to {}; rerun \
+                 with --resume 1 to continue",
+                fit.iterations(),
+                cfg.checkpoint_path
+            );
+            std::process::exit(130);
+        }
+        if fit.step().is_none() {
+            break;
+        }
+    }
+    if let Some(e) = fit.take_checkpoint_error() {
+        return Err(e.context("checkpoint write failed; run stopped"));
+    }
+    Ok(fit.finish())
 }
 
 /// The serving half of the train-once/serve-many loop: load a `.kmm`
@@ -312,7 +435,7 @@ fn cmd_predict(args: &[String]) -> Result<()> {
         for (l, d) in p.labels.iter().zip(&p.distances) {
             rows.push_str(&format!("{l},{d}\n"));
         }
-        std::fs::write(Path::new(out), rows)?;
+        io::atomic_write(Path::new(out), rows.as_bytes())?;
         eprintln!("wrote {out}");
     }
     Ok(())
@@ -414,6 +537,11 @@ fn experiment_from_cfg(cfg: &RunConfig, mut exp: Experiment) -> Experiment {
     exp.threads = cfg.threads;
     exp.params = cfg.params;
     exp.data_seed = cfg.data_seed;
+    // Interrupted sweeps resume: completed cells are recorded under
+    // out_dir and skipped when the same experiment is rerun (the
+    // coordinator removes the manifest once every cell is done).
+    exp.manifest_path =
+        Some(Path::new(&cfg.out_dir).join(format!("{}.manifest", exp.name)));
     exp
 }
 
@@ -619,7 +747,7 @@ fn write_csv(cfg: &RunConfig, name: &str, rows: &[String]) -> Result<()> {
         covermeans::coordinator::thread_split(cfg.threads, cfg.params.threads);
     let mut all = report::provenance_rows_for(cell_threads, fit_threads);
     all.extend_from_slice(rows);
-    std::fs::write(&path, all.join("\n") + "\n")?;
+    io::atomic_write(&path, (all.join("\n") + "\n").as_bytes())?;
     eprintln!("wrote {}", path.display());
     Ok(())
 }

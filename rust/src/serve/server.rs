@@ -156,28 +156,48 @@ impl Shared {
     }
 
     /// Re-read `model_path`; swap only if the bytes parse and verify.
+    /// When the primary file is rejected, fall back to the `.prev`
+    /// generation retained by the atomic model writer
+    /// ([`crate::data::io::atomic_write`]) — checkpoint-style: the daemon
+    /// serves a verified generation or keeps the in-memory one, never a
+    /// torn file.
     fn reload(&self) -> Result<u64> {
-        let attempt = || -> Result<Arc<KMeansModel>> {
-            let bytes = std::fs::read(&self.cfg.model_path).with_context(|| {
-                format!("read model {:?}", self.cfg.model_path)
-            })?;
+        let attempt = |path: &std::path::Path| -> Result<Arc<KMeansModel>> {
+            let bytes = std::fs::read(path)
+                .with_context(|| format!("read model {path:?}"))?;
             let model = KMeansModel::from_bytes(&bytes)?;
             Ok(Arc::new(model))
         };
-        match attempt() {
-            Ok(model) => {
-                let prep = model.prewarm_opts(&self.cfg.predict_options());
-                ServeStats::add(&self.stats.prep_evals, prep);
-                let sum = model.checksum();
-                *self.model.write().unwrap() = model;
-                ServeStats::bump(&self.stats.reload_ok);
-                Ok(sum)
+        let (model, fallback) = match attempt(&self.cfg.model_path) {
+            Ok(m) => (m, false),
+            Err(primary_err) => {
+                let prev =
+                    crate::data::io::sibling_path(&self.cfg.model_path, ".prev");
+                match attempt(&prev) {
+                    Ok(m) => {
+                        eprintln!(
+                            "serve: reload candidate rejected ({primary_err:#}); \
+                             serving retained generation {prev:?}"
+                        );
+                        (m, true)
+                    }
+                    Err(_) => {
+                        ServeStats::bump(&self.stats.reload_fail);
+                        return Err(primary_err);
+                    }
+                }
             }
-            Err(e) => {
-                ServeStats::bump(&self.stats.reload_fail);
-                Err(e)
-            }
-        }
+        };
+        let prep = model.prewarm_opts(&self.cfg.predict_options());
+        ServeStats::add(&self.stats.prep_evals, prep);
+        let sum = model.checksum();
+        *self.model.write().unwrap() = model;
+        ServeStats::bump(if fallback {
+            &self.stats.reload_fallback
+        } else {
+            &self.stats.reload_ok
+        });
+        Ok(sum)
     }
 }
 
@@ -486,9 +506,14 @@ fn handle_connection(shared: &Arc<Shared>, stream: TcpStream) {
 }
 
 /// Read one line, riding out read timeouts while the daemon is alive.
-/// Returns `None` on EOF, hard error, or shutdown.
+/// An idle connection may wait between requests indefinitely, but once a
+/// line has started arriving the rest must land within
+/// [`PAYLOAD_DEADLINE`] — a client stalled mid-request cannot pin this
+/// handler thread (and with it the graceful-shutdown drain) forever.
+/// Returns `None` on EOF, hard error, stall, or shutdown.
 fn read_line(shared: &Shared, reader: &mut BufReader<TcpStream>) -> Option<String> {
     let mut buf = String::new();
+    let mut started: Option<Instant> = None;
     loop {
         match reader.read_line(&mut buf) {
             Ok(0) => return None,
@@ -504,6 +529,14 @@ fn read_line(shared: &Shared, reader: &mut BufReader<TcpStream>) -> Option<Strin
             {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return None;
+                }
+                // read_line appends whatever arrived before the timeout,
+                // so a non-empty buffer means a request is in flight.
+                if !buf.is_empty() {
+                    let t0 = *started.get_or_insert_with(Instant::now);
+                    if t0.elapsed() > PAYLOAD_DEADLINE {
+                        return None;
+                    }
                 }
             }
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
@@ -739,60 +772,7 @@ fn run_batch(shared: &Arc<Shared>, par: &Parallelism, jobs: Vec<Job>) {
 
 // ----- signals ----------------------------------------------------------
 
-/// SIGHUP → reload, SIGINT/SIGTERM → shutdown, via process-global atomic
-/// flags the accept loop polls. Raw `signal(2)` FFI keeps the crate
-/// dependency-free; handlers only store to atomics (async-signal-safe).
-#[cfg(unix)]
-pub mod signals {
-    use std::sync::atomic::{AtomicBool, Ordering};
-
-    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
-    static RELOAD: AtomicBool = AtomicBool::new(false);
-
-    const SIGHUP: i32 = 1;
-    const SIGINT: i32 = 2;
-    const SIGTERM: i32 = 15;
-
-    extern "C" {
-        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
-    }
-
-    extern "C" fn on_shutdown(_sig: i32) {
-        SHUTDOWN.store(true, Ordering::SeqCst);
-    }
-
-    extern "C" fn on_reload(_sig: i32) {
-        RELOAD.store(true, Ordering::SeqCst);
-    }
-
-    /// Register the handlers (idempotent; CLI daemon only).
-    pub fn install() {
-        unsafe {
-            signal(SIGHUP, on_reload);
-            signal(SIGINT, on_shutdown);
-            signal(SIGTERM, on_shutdown);
-        }
-    }
-
-    pub fn take_shutdown() -> bool {
-        SHUTDOWN.swap(false, Ordering::SeqCst)
-    }
-
-    pub fn take_reload() -> bool {
-        RELOAD.swap(false, Ordering::SeqCst)
-    }
-}
-
-#[cfg(not(unix))]
-pub mod signals {
-    /// No-op off unix: the `RELOAD`/`SHUTDOWN` verbs still work.
-    pub fn install() {}
-
-    pub fn take_shutdown() -> bool {
-        false
-    }
-
-    pub fn take_reload() -> bool {
-        false
-    }
-}
+/// SIGHUP → reload, SIGINT/SIGTERM → shutdown, via the crate-global
+/// atomic flags the accept loop polls (shared with `covermeans run`'s
+/// checkpoint-then-exit path).
+use crate::signals;

@@ -23,6 +23,10 @@ pub struct ServeStats {
     pub reload_ok: AtomicU64,
     /// Hot-reload attempts that failed (old model kept serving).
     pub reload_fail: AtomicU64,
+    /// Hot-reloads where the primary `.kmm` was rejected and the `.prev`
+    /// generation retained by the atomic model writer was served instead
+    /// (checkpoint-style generation fallback).
+    pub reload_fallback: AtomicU64,
     /// Point-center distance evaluations spent answering queries.
     pub query_evals: AtomicU64,
     /// Distance evaluations spent building serving indexes (initial
@@ -59,7 +63,8 @@ impl ServeStats {
             concat!(
                 "{{\"requests\":{},\"rows\":{},\"batches\":{},",
                 "\"queue_full_rejects\":{},\"reload_ok\":{},",
-                "\"reload_fail\":{},\"query_evals\":{},\"prep_evals\":{},",
+                "\"reload_fail\":{},\"reload_fallback\":{},",
+                "\"query_evals\":{},\"prep_evals\":{},",
                 "\"f32_fallbacks\":{},\"kernel\":\"{}\"}}"
             ),
             Self::get(&self.requests),
@@ -68,6 +73,7 @@ impl ServeStats {
             Self::get(&self.queue_full_rejects),
             Self::get(&self.reload_ok),
             Self::get(&self.reload_fail),
+            Self::get(&self.reload_fallback),
             Self::get(&self.query_evals),
             Self::get(&self.prep_evals),
             Self::get(&self.f32_fallbacks),
@@ -101,6 +107,7 @@ mod tests {
         ServeStats::bump(&s.queue_full_rejects);
         ServeStats::add(&s.reload_ok, 2);
         ServeStats::add(&s.reload_fail, 3);
+        ServeStats::add(&s.reload_fallback, 4);
         ServeStats::add(&s.query_evals, 41);
         ServeStats::add(&s.prep_evals, 13);
         ServeStats::add(&s.f32_fallbacks, 5);
@@ -111,6 +118,7 @@ mod tests {
         assert_eq!(counter(&snap, "queue_full_rejects"), Some(1));
         assert_eq!(counter(&snap, "reload_ok"), Some(2));
         assert_eq!(counter(&snap, "reload_fail"), Some(3));
+        assert_eq!(counter(&snap, "reload_fallback"), Some(4));
         assert_eq!(counter(&snap, "query_evals"), Some(41));
         assert_eq!(counter(&snap, "prep_evals"), Some(13));
         assert_eq!(counter(&snap, "f32_fallbacks"), Some(5));

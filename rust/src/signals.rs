@@ -1,0 +1,70 @@
+//! Process-global signal flags shared by the long-running CLI verbs.
+//!
+//! `covermeans serve` polls these from its accept loop (SIGHUP → reload,
+//! SIGINT/SIGTERM → graceful drain); `covermeans run` polls
+//! [`take_shutdown`] at iteration boundaries to checkpoint-then-exit
+//! instead of dying mid-fit. Raw `signal(2)` FFI keeps the crate
+//! dependency-free; handlers only store to atomics
+//! (async-signal-safe). Handlers are process-global, so in-process tests
+//! must never call [`install`] — only the CLI does.
+
+#[cfg(unix)]
+mod imp {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+    static RELOAD: AtomicBool = AtomicBool::new(false);
+
+    const SIGHUP: i32 = 1;
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+
+    extern "C" fn on_shutdown(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" fn on_reload(_sig: i32) {
+        RELOAD.store(true, Ordering::SeqCst);
+    }
+
+    /// Register the handlers (idempotent; CLI only).
+    pub fn install() {
+        unsafe {
+            signal(SIGHUP, on_reload);
+            signal(SIGINT, on_shutdown);
+            signal(SIGTERM, on_shutdown);
+        }
+    }
+
+    /// Consume a pending shutdown request (SIGINT/SIGTERM since the last
+    /// call).
+    pub fn take_shutdown() -> bool {
+        SHUTDOWN.swap(false, Ordering::SeqCst)
+    }
+
+    /// Consume a pending reload request (SIGHUP since the last call).
+    pub fn take_reload() -> bool {
+        RELOAD.swap(false, Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    /// No-op off unix: the serve `RELOAD`/`SHUTDOWN` verbs still work,
+    /// and `run` simply cannot be interrupted cleanly.
+    pub fn install() {}
+
+    pub fn take_shutdown() -> bool {
+        false
+    }
+
+    pub fn take_reload() -> bool {
+        false
+    }
+}
+
+pub use imp::{install, take_reload, take_shutdown};

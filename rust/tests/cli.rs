@@ -76,6 +76,57 @@ fn invalid_config_values_fail() {
 }
 
 #[test]
+fn bad_resume_flags_fail() {
+    // --resume wants a boolean, not free text.
+    assert_fails(&["run", "--resume", "maybe"], &["--resume", "maybe"]);
+    // Resuming without a snapshot path to resume from is an error, not a
+    // silent cold start.
+    assert_fails(&["run", "--resume", "1"], &["--resume", "checkpoint_path"]);
+    // Resuming from a checkpoint that does not exist (in any generation)
+    // names the path.
+    assert_fails(
+        &[
+            "run",
+            "--dataset",
+            "blobs:200:4:4",
+            "--k",
+            "4",
+            "--checkpoint_path",
+            "/nonexistent/fit.kmc",
+            "--resume",
+            "1",
+        ],
+        &["fit.kmc"],
+    );
+    // The xla backend has no stepwise loop to hang checkpoints off.
+    assert_fails(
+        &[
+            "run",
+            "--backend",
+            "xla",
+            "--checkpoint_path",
+            "/tmp/x.kmc",
+        ],
+        &["native"],
+    );
+    // MiniBatch has no exact iteration boundary to snapshot.
+    assert_fails(
+        &[
+            "run",
+            "--dataset",
+            "blobs:200:4:4",
+            "--k",
+            "4",
+            "--algorithm",
+            "minibatch",
+            "--checkpoint_path",
+            "/tmp/x.kmc",
+        ],
+        &["minibatch", "checkpoint"],
+    );
+}
+
+#[test]
 fn missing_required_flags_fail() {
     assert_fails(&["predict"], &["--model"]);
     assert_fails(&["serve"], &["--model"]);

@@ -1,0 +1,425 @@
+//! Crash/resume fault-injection e2e.
+//!
+//! Spawns the real `covermeans` binary, kills it mid-fit — with a
+//! deterministic abort (`COVERMEANS_CRASH_AFTER_ITER`), a true `kill -9`,
+//! and SIGINT — and asserts the two contracts of the checkpoint
+//! subsystem:
+//!
+//! 1. **Resume ≡ uninterrupted**: a crashed-then-resumed fit produces a
+//!    bit-identical `.kmm` model and identical iteration/distance/SSE
+//!    accounting to a run that was never interrupted, across algorithms
+//!    and thread counts.
+//! 2. **No torn state**: no injected fault — including a torn checkpoint
+//!    write (`COVERMEANS_CRASH_TORN_WRITE`) — ever leaves the checkpoint
+//!    path without a loadable generation.
+//!
+//! All datasets are `blobs:…` (synthesized in-process, no disk cache), so
+//! the torn-write injection can only fire at checkpoint/model writes.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output, Stdio};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_covermeans");
+
+/// Small fit used for the deterministic-abort matrix: big enough to take
+/// several Lloyd iterations, small enough to keep an 8-cell matrix fast.
+const SMALL: &str = "blobs:600:4:8";
+/// Larger fit for the asynchronous kill/signal tests: enough work per
+/// iteration that a poll-then-kill lands mid-run on any machine.
+const BIG: &str = "blobs:8000:8:16";
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "covermeans_crash_resume_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn covermeans(args: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut c = Command::new(BIN);
+    c.args(args);
+    for (k, v) in envs {
+        c.env(k, v);
+    }
+    c.output().expect("spawn covermeans")
+}
+
+/// Base `run` arguments for one fit configuration (no checkpoint flags).
+fn fit_args(dataset: &str, k: &str, alg: &str, threads: &str) -> Vec<String> {
+    ["run", "--dataset", dataset, "--k", k, "--seed", "5",
+     "--algorithm", alg, "--fit_threads", threads]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn run_with(base: &[String], extra: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut args: Vec<&str> = base.iter().map(|s| s.as_str()).collect();
+    args.extend_from_slice(extra);
+    covermeans(&args, envs)
+}
+
+fn stdout_line<'a>(out: &'a str, prefix: &str) -> &'a str {
+    out.lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no {prefix:?} line in stdout:\n{out}"))
+}
+
+/// The result lines whose equality certifies "resume ≡ uninterrupted"
+/// beyond the byte-compare of the saved model.
+const RESULT_LINES: [&str; 3] = ["iterations  :", "distances   :", "sse         :"];
+
+fn assert_same_result(tag: &str, ref_out: &str, res_out: &str) {
+    for prefix in RESULT_LINES {
+        assert_eq!(
+            stdout_line(ref_out, prefix),
+            stdout_line(res_out, prefix),
+            "{tag}: resumed run diverged on the {prefix:?} line"
+        );
+    }
+}
+
+fn assert_same_model(tag: &str, a: &Path, b: &Path) {
+    let wa = std::fs::read(a).unwrap_or_else(|e| panic!("{tag}: read {a:?}: {e}"));
+    let wb = std::fs::read(b).unwrap_or_else(|e| panic!("{tag}: read {b:?}: {e}"));
+    assert!(!wa.is_empty(), "{tag}: empty reference model");
+    assert_eq!(wa, wb, "{tag}: resumed model is not bit-identical to the reference");
+}
+
+/// Deterministic crash + resume across the acceptance matrix: Lloyd,
+/// Hamerly, CoverMeans, and DualTree, each at 1 and 4 fit threads.
+#[test]
+fn crash_and_resume_is_bit_identical_across_algorithms_and_threads() {
+    let dir = tmpdir("matrix");
+    for alg in ["standard", "hamerly", "cover", "dualtree"] {
+        for threads in ["1", "4"] {
+            let tag = format!("{alg}@{threads}t");
+            let base = fit_args(SMALL, "8", alg, threads);
+            let ref_model = dir.join(format!("ref_{alg}_{threads}.kmm"));
+            let res_model = dir.join(format!("res_{alg}_{threads}.kmm"));
+            let ck = dir.join(format!("{alg}_{threads}.kmc"));
+
+            // Uninterrupted reference: no checkpointing involved at all.
+            let r = run_with(&base, &["--model_out", ref_model.to_str().unwrap()], &[]);
+            assert!(
+                r.status.success(),
+                "{tag}: reference run failed:\n{}",
+                String::from_utf8_lossy(&r.stderr)
+            );
+            let ref_out = String::from_utf8_lossy(&r.stdout).into_owned();
+
+            // Same fit with per-iteration snapshots, aborted mid-run.
+            let c = run_with(
+                &base,
+                &["--checkpoint_path", ck.to_str().unwrap(), "--checkpoint_every", "1"],
+                &[("COVERMEANS_CRASH_AFTER_ITER", "2")],
+            );
+            assert!(!c.status.success(), "{tag}: injected crash did not kill the run");
+            assert!(
+                String::from_utf8_lossy(&c.stderr).contains("simulated crash"),
+                "{tag}: abort fired without the fault-injection banner"
+            );
+            assert!(ck.exists(), "{tag}: no snapshot on disk after the crash");
+
+            // Resume and run to completion.
+            let r2 = run_with(
+                &base,
+                &["--checkpoint_path", ck.to_str().unwrap(), "--resume", "1",
+                  "--model_out", res_model.to_str().unwrap()],
+                &[],
+            );
+            let stderr = String::from_utf8_lossy(&r2.stderr);
+            assert!(r2.status.success(), "{tag}: resume failed:\n{stderr}");
+            assert!(
+                stderr.contains("resuming"),
+                "{tag}: resume did not adopt the snapshot:\n{stderr}"
+            );
+            assert_same_result(&tag, &ref_out, &String::from_utf8_lossy(&r2.stdout));
+            assert_same_model(&tag, &ref_model, &res_model);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A snapshot taken at one thread count resumes at another with the same
+/// bytes: the fingerprint deliberately excludes the thread topology
+/// because intra-fit parallelism is exactness-preserving.
+#[test]
+fn resume_at_a_different_thread_count_stays_bit_identical() {
+    let dir = tmpdir("xthread");
+    let ref_model = dir.join("ref.kmm");
+    let res_model = dir.join("res.kmm");
+    let ck = dir.join("x.kmc");
+
+    let r = run_with(
+        &fit_args(SMALL, "8", "hamerly", "1"),
+        &["--model_out", ref_model.to_str().unwrap()],
+        &[],
+    );
+    assert!(r.status.success());
+    let ref_out = String::from_utf8_lossy(&r.stdout).into_owned();
+
+    let c = run_with(
+        &fit_args(SMALL, "8", "hamerly", "1"),
+        &["--checkpoint_path", ck.to_str().unwrap(), "--checkpoint_every", "1"],
+        &[("COVERMEANS_CRASH_AFTER_ITER", "2")],
+    );
+    assert!(!c.status.success());
+
+    let r2 = run_with(
+        &fit_args(SMALL, "8", "hamerly", "4"),
+        &["--checkpoint_path", ck.to_str().unwrap(), "--resume", "1",
+          "--model_out", res_model.to_str().unwrap()],
+        &[],
+    );
+    assert!(
+        r2.status.success(),
+        "cross-thread resume failed:\n{}",
+        String::from_utf8_lossy(&r2.stderr)
+    );
+    let res_out = String::from_utf8_lossy(&r2.stdout).into_owned();
+    for prefix in ["iterations  :", "sse         :"] {
+        assert_eq!(stdout_line(&ref_out, prefix), stdout_line(&res_out, prefix));
+    }
+    assert_same_model("xthread", &ref_model, &res_model);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// True `kill -9`: SIGKILL the child as soon as its first snapshot lands,
+/// then resume. SIGKILL cannot be caught, so the kill may land anywhere —
+/// including inside a later atomic write — and the resumed fit must still
+/// find a loadable generation and reproduce the uninterrupted result.
+#[test]
+fn sigkill_mid_run_resumes_bit_identically() {
+    let dir = tmpdir("sigkill");
+    let ref_model = dir.join("ref.kmm");
+    let res_model = dir.join("res.kmm");
+    let ck = dir.join("kill.kmc");
+    let base = fit_args(BIG, "32", "hamerly", "2");
+
+    let r = run_with(&base, &["--model_out", ref_model.to_str().unwrap()], &[]);
+    assert!(r.status.success());
+    let ref_out = String::from_utf8_lossy(&r.stdout).into_owned();
+
+    let mut child = Command::new(BIN)
+        .args(base.iter().map(|s| s.as_str()))
+        .args(["--checkpoint_path", ck.to_str().unwrap(), "--checkpoint_every", "1"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn covermeans");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        // `ck` only exists after a complete rename, so by the time we pull
+        // the trigger at least one full generation is on disk.
+        if ck.exists() {
+            let _ = child.kill(); // SIGKILL
+            break;
+        }
+        if child.try_wait().expect("try_wait").is_some() {
+            break; // finished before we saw a snapshot; final snapshot exists
+        }
+        assert!(Instant::now() < deadline, "no snapshot appeared within 60s");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let _ = child.wait();
+
+    let r2 = run_with(
+        &base,
+        &["--checkpoint_path", ck.to_str().unwrap(), "--resume", "1",
+          "--model_out", res_model.to_str().unwrap()],
+        &[],
+    );
+    assert!(
+        r2.status.success(),
+        "resume after SIGKILL failed (torn state left behind?):\n{}",
+        String::from_utf8_lossy(&r2.stderr)
+    );
+    assert_same_result("sigkill", &ref_out, &String::from_utf8_lossy(&r2.stdout));
+    assert_same_model("sigkill", &ref_model, &res_model);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// SIGINT on a checkpointed run writes a final snapshot and exits 130;
+/// `--resume 1` then completes the fit bit-identically. If the fit
+/// finishes before the signal lands (fast machine), the child exits 0 and
+/// the snapshot is the final one — resume still reproduces the reference.
+#[test]
+fn sigint_checkpoints_then_exits_130_and_resumes() {
+    let dir = tmpdir("sigint");
+    let ref_model = dir.join("ref.kmm");
+    let res_model = dir.join("res.kmm");
+    let ck = dir.join("int.kmc");
+    let base = fit_args(BIG, "32", "standard", "2");
+
+    let r = run_with(&base, &["--model_out", ref_model.to_str().unwrap()], &[]);
+    assert!(r.status.success());
+    let ref_out = String::from_utf8_lossy(&r.stdout).into_owned();
+
+    let mut child = Command::new(BIN)
+        .args(base.iter().map(|s| s.as_str()))
+        .args(["--checkpoint_path", ck.to_str().unwrap(), "--checkpoint_every", "1"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn covermeans");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut finished_first = false;
+    loop {
+        if ck.exists() {
+            // `kill` is a shell builtin everywhere; std has no SIGINT sender.
+            let st = Command::new("sh")
+                .args(["-c", &format!("kill -INT {}", child.id())])
+                .status()
+                .expect("spawn sh");
+            assert!(st.success(), "could not deliver SIGINT");
+            break;
+        }
+        if child.try_wait().expect("try_wait").is_some() {
+            finished_first = true;
+            break;
+        }
+        assert!(Instant::now() < deadline, "no snapshot appeared within 60s");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let out = child.wait_with_output().expect("wait");
+    if !finished_first && !out.status.success() {
+        // The interesting branch: the signal landed mid-fit.
+        assert_eq!(
+            out.status.code(),
+            Some(130),
+            "SIGINT on a checkpointed run must exit 130, got {:?}",
+            out.status
+        );
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains("interrupted"),
+            "no interruption notice on stderr:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+
+    let r2 = run_with(
+        &base,
+        &["--checkpoint_path", ck.to_str().unwrap(), "--resume", "1",
+          "--model_out", res_model.to_str().unwrap()],
+        &[],
+    );
+    assert!(
+        r2.status.success(),
+        "resume after SIGINT failed:\n{}",
+        String::from_utf8_lossy(&r2.stderr)
+    );
+    assert_same_result("sigint", &ref_out, &String::from_utf8_lossy(&r2.stdout));
+    assert_same_model("sigint", &ref_model, &res_model);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Torn-write injection: the writer corrupts its own temp file (truncate
+/// or bitflip) and aborts *before* the rename, so the previously valid
+/// generation must survive untouched and a clean resume must still match
+/// the uninterrupted run.
+#[test]
+fn torn_write_injection_never_leaves_an_unloadable_state() {
+    let dir = tmpdir("torn");
+    for mode in ["truncate", "bitflip"] {
+        let tag = format!("torn-{mode}");
+        let base = fit_args(SMALL, "8", "cover", "1");
+        let ref_model = dir.join(format!("ref_{mode}.kmm"));
+        let res_model = dir.join(format!("res_{mode}.kmm"));
+        let ck = dir.join(format!("{mode}.kmc"));
+
+        let r = run_with(&base, &["--model_out", ref_model.to_str().unwrap()], &[]);
+        assert!(r.status.success(), "{tag}: reference run failed");
+        let ref_out = String::from_utf8_lossy(&r.stdout).into_owned();
+
+        // Leave a valid snapshot on disk via a deterministic crash. Crash
+        // at iteration 1 so the snapshot can never be a converged run:
+        // the resumed fit must step, and the armed torn write must fire.
+        let c = run_with(
+            &base,
+            &["--checkpoint_path", ck.to_str().unwrap(), "--checkpoint_every", "1"],
+            &[("COVERMEANS_CRASH_AFTER_ITER", "1")],
+        );
+        assert!(!c.status.success(), "{tag}: injected crash did not kill the run");
+        assert!(ck.exists(), "{tag}: no snapshot after the crash");
+        let good = std::fs::read(&ck).unwrap();
+
+        // Resume with the torn-write fault armed: the first checkpoint of
+        // the resumed run corrupts its temp file and aborts pre-rename.
+        let t = run_with(
+            &base,
+            &["--checkpoint_path", ck.to_str().unwrap(), "--resume", "1"],
+            &[("COVERMEANS_CRASH_TORN_WRITE", mode)],
+        );
+        assert!(!t.status.success(), "{tag}: torn write did not abort the run");
+        assert!(
+            String::from_utf8_lossy(&t.stderr).contains("torn write"),
+            "{tag}: abort fired without the torn-write banner:\n{}",
+            String::from_utf8_lossy(&t.stderr)
+        );
+        // The good generation was never replaced by the torn temp.
+        assert_eq!(
+            std::fs::read(&ck).unwrap(),
+            good,
+            "{tag}: torn write clobbered the current generation"
+        );
+
+        // A clean resume rides over the corrupt leftover temp and still
+        // reproduces the uninterrupted result.
+        let r2 = run_with(
+            &base,
+            &["--checkpoint_path", ck.to_str().unwrap(), "--resume", "1",
+              "--model_out", res_model.to_str().unwrap()],
+            &[],
+        );
+        let stderr = String::from_utf8_lossy(&r2.stderr);
+        assert!(r2.status.success(), "{tag}: clean resume failed:\n{stderr}");
+        assert!(stderr.contains("resuming"), "{tag}: no resume banner:\n{stderr}");
+        assert_same_result(&tag, &ref_out, &String::from_utf8_lossy(&r2.stdout));
+        assert_same_model(&tag, &ref_model, &res_model);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resuming under a different configuration is refused with a fingerprint
+/// mismatch — a snapshot can only continue the exact fit that wrote it.
+#[test]
+fn resume_rejects_a_mismatched_configuration() {
+    let dir = tmpdir("fingerprint");
+    let ck = dir.join("fp.kmc");
+
+    let c = run_with(
+        &fit_args(SMALL, "8", "hamerly", "1"),
+        &["--checkpoint_path", ck.to_str().unwrap(), "--checkpoint_every", "1"],
+        &[("COVERMEANS_CRASH_AFTER_ITER", "2")],
+    );
+    assert!(!c.status.success());
+    assert!(ck.exists());
+
+    // Wrong algorithm and wrong k must both be refused.
+    for (what, base) in [
+        ("algorithm", fit_args(SMALL, "8", "cover", "1")),
+        ("k", fit_args(SMALL, "9", "hamerly", "1")),
+    ] {
+        let r = run_with(
+            &base,
+            &["--checkpoint_path", ck.to_str().unwrap(), "--resume", "1"],
+            &[],
+        );
+        assert!(!r.status.success(), "resume with a different {what} succeeded");
+        let stderr = String::from_utf8_lossy(&r.stderr);
+        assert!(
+            stderr.contains("fingerprint mismatch"),
+            "resume with a different {what} failed for the wrong reason:\n{stderr}"
+        );
+        assert_eq!(
+            stderr.matches("error: ").count(),
+            1,
+            "CLI error contract: exactly one error line, got:\n{stderr}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -337,9 +337,21 @@ fn hot_reload_swaps_only_on_valid_parse() {
     }
     assert_eq!(reply.model, hex_b);
 
+    // Checkpoint-style generation fallback: save again so `.prev` holds a
+    // good generation, then corrupt the primary in place. The reload
+    // serves the retained generation instead of failing.
+    model_b.save(&path).unwrap();
+    std::fs::write(&path, &good_a[..good_a.len() / 3]).unwrap();
+    let tag = c.reload().unwrap();
+    assert_eq!(tag, hex_b, "fallback must serve the retained generation");
+    let reply = c.predict_json(&q).unwrap();
+    assert_eq!(reply.labels, offline_b.labels);
+    assert_eq!(reply.model, hex_b);
+
     let snap = c.stats_json().unwrap();
     assert_eq!(counter(&snap, "reload_fail"), Some(injections.len() as u64));
     assert_eq!(counter(&snap, "reload_ok"), Some(1));
+    assert_eq!(counter(&snap, "reload_fallback"), Some(1));
     c.quit().unwrap();
     server.shutdown().unwrap();
     std::fs::remove_dir_all(&dir).ok();
