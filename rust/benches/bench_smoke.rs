@@ -36,6 +36,12 @@
 //!     final-only vs every 10th iteration vs every iteration on the same
 //!     fixed-seed fit), gates that checkpointing never perturbs the fit
 //!     (deterministic, always enforced), and emits `BENCH_9.json`;
+//!   * measures the out-of-core source layer (the same fixed-seed Lloyd
+//!     fit over the in-RAM, mmap, and chunk-streamed backends at 1 and 4
+//!     threads, with the streamed run's resident budget capped below the
+//!     dataset size, plus k-means|| vs k-means++ seeding cost at large
+//!     n), gates byte-identity across backends and thread counts
+//!     (deterministic, always enforced), and emits `BENCH_10.json`;
 //!   * emits `BENCH_4.json` (all of the above plus the per-algorithm
 //!     table);
 //!   * gates against the checked-in ceilings in `ci/bench_baseline.json`
@@ -59,7 +65,7 @@
 use std::time::{Duration, Instant};
 
 use covermeans::benchutil::{bench_repeats, bench_scale, fmt_duration, measure, median};
-use covermeans::data::{synth, Matrix};
+use covermeans::data::{synth, write_dmat, DataSource, Matrix, SourceBackend};
 use covermeans::kernels::{self, scalar as scalar_kernels};
 use covermeans::kmeans::{
     init, Algorithm, CheckpointConfig, KMeans, PredictMode, PredictOptions,
@@ -330,6 +336,74 @@ fn write_ckpt_json(
         ));
     }
     s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("[json] failed to write {path}: {e}"),
+    }
+}
+
+/// One (backend, threads) cell of the out-of-core fit measurement.
+struct OocRow {
+    backend: &'static str,
+    threads: usize,
+    ms: f64,
+    rows_per_s: f64,
+}
+
+/// Shape of the out-of-core fixture (dataset dims plus streaming knobs).
+struct OocSetup {
+    n: usize,
+    d: usize,
+    k: usize,
+    chunk_rows: usize,
+    resident_mb: usize,
+}
+
+/// The seeding head-to-head at large n: wall time and counted distances
+/// for triangle-pruned k-means++ vs k-means||.
+struct OocInit {
+    pp_ms: f64,
+    pp_dists: u64,
+    par_ms: f64,
+    par_dists: u64,
+}
+
+/// Emit `BENCH_10.json`: the out-of-core source layer — wall time and
+/// rows/s of the same fixed-seed Lloyd fit over the in-RAM, mmap, and
+/// chunk-streamed backends at 1 and 4 threads, plus the k-means|| vs
+/// k-means++ seeding cost at large n.
+fn write_ooc_json(
+    path: &str,
+    scale: f64,
+    setup: &OocSetup,
+    fits: &[OocRow],
+    init: &OocInit,
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"bench-smoke-ooc-v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str(&format!("  \"rows\": {},\n", setup.n));
+    s.push_str(&format!("  \"cols\": {},\n", setup.d));
+    s.push_str(&format!("  \"k\": {},\n", setup.k));
+    s.push_str(&format!("  \"chunk_rows\": {},\n", setup.chunk_rows));
+    s.push_str(&format!("  \"resident_mb\": {},\n", setup.resident_mb));
+    s.push_str("  \"fits\": [\n");
+    for (i, r) in fits.iter().enumerate() {
+        let comma = if i + 1 < fits.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"threads\": {}, \"ms\": {:.3}, \
+             \"rows_per_s\": {:.0}}}{comma}\n",
+            r.backend, r.threads, r.ms, r.rows_per_s,
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"init\": {{\"plusplus_ms\": {:.3}, \"plusplus_distances\": {}, \
+         \"parallel_ms\": {:.3}, \"parallel_distances\": {}}}\n",
+        init.pp_ms, init.pp_dists, init.par_ms, init.par_dists,
+    ));
+    s.push_str("}\n");
     match std::fs::write(path, s) {
         Ok(()) => println!("[json] wrote {path}"),
         Err(e) => eprintln!("[json] failed to write {path}: {e}"),
@@ -1182,6 +1256,148 @@ fn main() {
         base_ms,
         snapshot_bytes,
         &ckpt_rows,
+    );
+
+    // --- out-of-core source layer (BENCH_10.json): the same fixed-seed
+    // Lloyd fit over the in-RAM, mmap, and chunk-streamed backends at 1
+    // and 4 threads — wall time and rows/s — plus k-means|| vs k-means++
+    // seeding cost at the same large n. The chunked cells hold a resident
+    // budget below the dataset size, so they genuinely stream from disk.
+    // Byte-identity of labels, centers, iteration count, and counted
+    // distances across backends and thread counts is the source-layer
+    // contract: a deterministic gate, always enforced.
+    let ooc_path = std::env::temp_dir().join(format!(
+        "covermeans_bench_ooc_{}.dmat",
+        std::process::id()
+    ));
+    write_dmat(&ooc_path, &big).expect("write bench .dmat");
+    let ooc_chunk = 1024usize;
+    let ooc_resident_mb = 1usize;
+    let ooc_budget_bytes = ooc_resident_mb << 20;
+    assert!(
+        big.rows() * big.cols() * 8 > ooc_budget_bytes,
+        "out-of-core fixture must exceed its resident budget"
+    );
+    let ooc_iters = 3usize;
+    let ooc_fit = |source: &DataSource, threads: usize| -> (f64, RunResult) {
+        let mut last: Option<RunResult> = None;
+        let times = measure(repeats, || {
+            let r = KMeans::new(big_init.rows())
+                .algorithm(Algorithm::Standard)
+                .threads(threads)
+                .max_iter(ooc_iters)
+                .warm_start(big_init.clone())
+                .fit_source(source)
+                .expect("valid out-of-core bench configuration");
+            last = Some(r);
+        });
+        (
+            times[0].as_secs_f64() * 1e3,
+            last.expect("at least one measured run"),
+        )
+    };
+    let ooc_sources = [
+        ("ram", DataSource::from(big.clone())),
+        (
+            "mmap",
+            DataSource::open(&ooc_path, SourceBackend::Mmap, ooc_chunk, 0)
+                .expect("mmap-open bench .dmat"),
+        ),
+        (
+            "chunked",
+            DataSource::open(&ooc_path, SourceBackend::Chunked, ooc_chunk, ooc_resident_mb)
+                .expect("chunk-open bench .dmat"),
+        ),
+    ];
+    let mut ooc_rows: Vec<OocRow> = Vec::new();
+    let mut ooc_want = None;
+    for &(backend, ref source) in &ooc_sources {
+        for threads in [1usize, 4] {
+            let (ms, r) = ooc_fit(source, threads);
+            let rows_per_s = (big.rows() * r.iterations) as f64 * 1e3 / ms.max(1e-9);
+            let sig = (
+                r.labels,
+                r.centers
+                    .as_slice()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect::<Vec<_>>(),
+                r.iterations,
+                r.distances,
+            );
+            match &ooc_want {
+                None => ooc_want = Some(sig),
+                Some(want) => {
+                    if sig != *want {
+                        failures.push(format!(
+                            "out-of-core fixture: {backend} at {threads} threads \
+                             diverged from the in-RAM single-thread fit"
+                        ));
+                    }
+                }
+            }
+            println!(
+                "ooc {backend:<7} t{threads} (n={n_speed}, k=64, {ooc_iters} iters): \
+                 {ms:>8.2}ms | {rows_per_s:>10.0} rows/s"
+            );
+            ooc_rows.push(OocRow { backend, threads, ms, rows_per_s });
+        }
+    }
+
+    // Seeding head-to-head (k=64, 4 threads, both triangle-pruned).
+    // k-means|| must additionally be backend-invariant: seeding over the
+    // chunk-streamed file is bit-identical to the resident matrix.
+    let mut ooc_init_ms = [0.0f64; 2];
+    let mut ooc_init_out: Vec<(Matrix, u64)> = Vec::new();
+    for (slot, parallel) in [false, true].into_iter().enumerate() {
+        let mut last: Option<(Matrix, u64)> = None;
+        let times = measure(repeats, || {
+            let mut dc = DistCounter::new();
+            let c = if parallel {
+                init::init_kmeanspar_par(&big, 64, 3, 5, 2.0, &mut dc, &par4)
+            } else {
+                init::kmeans_plus_plus_par(&big, 64, 3, &mut dc, &par4)
+            };
+            last = Some((c, dc.count()));
+        });
+        ooc_init_ms[slot] = times[0].as_secs_f64() * 1e3;
+        ooc_init_out.push(last.expect("at least one measured run"));
+    }
+    {
+        let mut dc = DistCounter::new();
+        let streamed =
+            init::init_kmeanspar_src(ooc_sources[2].1.view(), 64, 3, 5, 2.0, &mut dc, &par4);
+        if (streamed, dc.count()) != ooc_init_out[1] {
+            failures.push(
+                "k-means|| seeding over the chunk-streamed file diverged from \
+                 the resident matrix"
+                    .to_string(),
+            );
+        }
+    }
+    println!(
+        "ooc seeding (n={n_speed}, k=64, t4): k-means++ {:.2}ms ({} dists) | \
+         k-means|| {:.2}ms ({} dists)",
+        ooc_init_ms[0], ooc_init_out[0].1, ooc_init_ms[1], ooc_init_out[1].1,
+    );
+    std::fs::remove_file(&ooc_path).ok();
+    write_ooc_json(
+        "BENCH_10.json",
+        scale,
+        &OocSetup {
+            n: big.rows(),
+            d: big.cols(),
+            k: big_init.rows(),
+            chunk_rows: ooc_chunk,
+            resident_mb: ooc_resident_mb,
+        },
+        &ooc_rows,
+        &OocInit {
+            pp_ms: ooc_init_ms[0],
+            pp_dists: ooc_init_out[0].1,
+            par_ms: ooc_init_ms[1],
+            par_dists: ooc_init_out[1].1,
+        },
     );
 
     // --- emit the artifact.

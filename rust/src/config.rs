@@ -13,6 +13,13 @@
 //! | key | default | meaning |
 //! |-----|---------|---------|
 //! | `dataset` | `aloi64` | Registry name (`covermeans datasets`) or `blobs:<n>:<d>:<k>`. |
+//! | `data_file` | *(empty)* | `covermeans run`: fit a `.dmat` file (written by `covermeans pack`) instead of a registry dataset; opened under `data_backend`. |
+//! | `data_backend` | `ram` | How `data_file` is opened: `ram` (read fully resident), `mmap` (demand-paged), or `chunked` (bounded-memory streaming reads). Results are byte-identical across backends. |
+//! | `data_chunk_rows` | `4096` | `data_backend = chunked`: rows per streamed read. Any value reproduces the in-RAM results byte for byte. |
+//! | `data_resident_mb` | `0` | `data_backend = chunked`: cap (MiB) on resident chunk memory; 0 = one chunk's worth. Throttles concurrent readers without changing any result. |
+//! | `init` | `auto` | Seeding: `kmeans++`, `kmeans\|\|`, or `auto` (k-means++ for resident data, k-means\|\| for file-backed sources). |
+//! | `init_rounds` | `5` | k-means\|\|: oversampling rounds. |
+//! | `init_oversample` | `2` | k-means\|\|: per-round expected sample size as a multiple of `k`. |
 //! | `scale` | `0.05` | Dataset size relative to the paper's (1.0 = full size). |
 //! | `data_seed` | `1` | Seed for the synthetic dataset generators. |
 //! | `k` | `100` | Number of clusters. |
@@ -49,8 +56,10 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::data::source::{SourceBackend, DEFAULT_CHUNK_ROWS};
 use crate::kmeans::{
-    Algorithm, KMeansParams, PredictMode, PredictPrecision, DEFAULT_PREDICT_AUTO_K,
+    Algorithm, InitKind, KMeansParams, PredictMode, PredictPrecision,
+    DEFAULT_PREDICT_AUTO_K,
 };
 use crate::tree::{CoverTreeParams, KdTreeParams};
 
@@ -63,6 +72,23 @@ pub struct RunConfig {
     pub scale: f64,
     /// Dataset generation seed.
     pub data_seed: u64,
+    /// `covermeans run`: fit a `.dmat` file instead of a registry dataset
+    /// (empty = use `dataset`). Written by `covermeans pack`.
+    pub data_file: String,
+    /// How `data_file` is opened: resident, mmapped, or chunk-streamed.
+    /// Byte-identical results on every backend.
+    pub data_backend: SourceBackend,
+    /// `data_backend = chunked`: rows per streamed read.
+    pub data_chunk_rows: usize,
+    /// `data_backend = chunked`: resident-chunk budget in MiB (0 = one
+    /// chunk's worth).
+    pub data_resident_mb: usize,
+    /// Seeding strategy (`auto` resolves by source backend).
+    pub init: InitKind,
+    /// k-means||: oversampling rounds.
+    pub init_rounds: usize,
+    /// k-means||: per-round expected sample size as a multiple of `k`.
+    pub init_oversample: f64,
     /// Number of clusters.
     pub k: usize,
     /// Number of k-means++ restarts (the paper uses 10).
@@ -113,6 +139,13 @@ impl Default for RunConfig {
             dataset: "aloi64".to_string(),
             scale: 0.05,
             data_seed: 1,
+            data_file: String::new(),
+            data_backend: SourceBackend::Ram,
+            data_chunk_rows: DEFAULT_CHUNK_ROWS,
+            data_resident_mb: 0,
+            init: InitKind::Auto,
+            init_rounds: 5,
+            init_oversample: 2.0,
             k: 100,
             restarts: 10,
             seed: 1000,
@@ -148,6 +181,13 @@ impl RunConfig {
         "dataset",
         "scale",
         "data_seed",
+        "data_file",
+        "data_backend",
+        "data_chunk_rows",
+        "data_resident_mb",
+        "init",
+        "init_rounds",
+        "init_oversample",
         "k",
         "restarts",
         "seed",
@@ -191,6 +231,41 @@ impl RunConfig {
                 self.scale = s;
             }
             "data_seed" => self.data_seed = v.parse().context("data_seed")?,
+            "data_file" => self.data_file = v.to_string(),
+            "data_backend" => {
+                self.data_backend = SourceBackend::parse(v).with_context(|| {
+                    format!("data_backend {v:?} (expected ram, mmap or chunked)")
+                })?
+            }
+            "data_chunk_rows" => {
+                let r: usize = v.parse().context("data_chunk_rows")?;
+                if r == 0 {
+                    bail!("data_chunk_rows must be at least 1");
+                }
+                self.data_chunk_rows = r;
+            }
+            "data_resident_mb" => {
+                self.data_resident_mb = v.parse().context("data_resident_mb")?
+            }
+            "init" => {
+                self.init = InitKind::parse(v).with_context(|| {
+                    format!("init {v:?} (expected auto, kmeans++ or kmeans||)")
+                })?
+            }
+            "init_rounds" => {
+                let r: usize = v.parse().context("init_rounds")?;
+                if r == 0 {
+                    bail!("init_rounds must be at least 1");
+                }
+                self.init_rounds = r;
+            }
+            "init_oversample" => {
+                let o: f64 = v.parse().context("init_oversample")?;
+                if !(o.is_finite() && o > 0.0) {
+                    bail!("init_oversample must be a positive number, got {v:?}");
+                }
+                self.init_oversample = o;
+            }
             "k" => {
                 let k: usize = v.parse().context("k")?;
                 if k == 0 {
@@ -320,6 +395,13 @@ impl RunConfig {
         m.insert("dataset", self.dataset.clone());
         m.insert("scale", self.scale.to_string());
         m.insert("data_seed", self.data_seed.to_string());
+        m.insert("data_file", self.data_file.clone());
+        m.insert("data_backend", self.data_backend.name().to_string());
+        m.insert("data_chunk_rows", self.data_chunk_rows.to_string());
+        m.insert("data_resident_mb", self.data_resident_mb.to_string());
+        m.insert("init", self.init.name().to_string());
+        m.insert("init_rounds", self.init_rounds.to_string());
+        m.insert("init_oversample", self.init_oversample.to_string());
         m.insert("k", self.k.to_string());
         m.insert("restarts", self.restarts.to_string());
         m.insert("seed", self.seed.to_string());
@@ -526,6 +608,47 @@ mod tests {
         assert!(dump.contains("checkpoint_secs = 30"));
         assert!(c.set("checkpoint_every", "many").is_err());
         assert!(c.set("checkpoint_secs", "-5").is_err());
+    }
+
+    #[test]
+    fn data_source_and_init_keys_roundtrip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.data_file, "");
+        assert_eq!(c.data_backend, SourceBackend::Ram);
+        assert_eq!(c.data_chunk_rows, DEFAULT_CHUNK_ROWS);
+        assert_eq!(c.data_resident_mb, 0);
+        assert_eq!(c.init, InitKind::Auto);
+        assert_eq!(c.init_rounds, 5);
+        assert!((c.init_oversample - 2.0).abs() < 1e-12);
+        c.set("data_file", "big.dmat").unwrap();
+        c.set("data_backend", "chunked").unwrap();
+        c.set("data_chunk_rows", "512").unwrap();
+        c.set("data_resident_mb", "64").unwrap();
+        c.set("init", "kmeans||").unwrap();
+        c.set("init_rounds", "8").unwrap();
+        c.set("init_oversample", "3.5").unwrap();
+        assert_eq!(c.data_file, "big.dmat");
+        assert_eq!(c.data_backend, SourceBackend::Chunked);
+        assert_eq!(c.data_chunk_rows, 512);
+        assert_eq!(c.data_resident_mb, 64);
+        assert_eq!(c.init, InitKind::Parallel);
+        assert_eq!(c.init_rounds, 8);
+        assert!((c.init_oversample - 3.5).abs() < 1e-12);
+        let dump = c.dump();
+        assert!(dump.contains("data_file = big.dmat"));
+        assert!(dump.contains("data_backend = chunked"));
+        assert!(dump.contains("data_chunk_rows = 512"));
+        assert!(dump.contains("data_resident_mb = 64"));
+        assert!(dump.contains("init = kmeans||"));
+        assert!(dump.contains("init_rounds = 8"));
+        assert!(dump.contains("init_oversample = 3.5"));
+        // Bad values fail with diagnosable errors.
+        assert!(c.set("data_backend", "floppy").is_err());
+        assert!(c.set("data_chunk_rows", "0").is_err());
+        assert!(c.set("init", "psychic").is_err());
+        assert!(c.set("init_rounds", "0").is_err());
+        assert!(c.set("init_oversample", "-1").is_err());
+        assert!(c.set("init_oversample", "nan").is_err());
     }
 
     #[test]

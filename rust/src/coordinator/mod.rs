@@ -33,7 +33,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::data::{registry, Matrix};
+use crate::data::{registry, DataSource, Matrix, SourceBackend};
 use crate::kmeans::{
     self, Algorithm, AlgorithmSpec, KMeans, KMeansModel, KMeansParams, Workspace,
 };
@@ -330,15 +330,52 @@ fn write_manifest(
     crate::data::io::atomic_write(path, render_manifest(fingerprint, res).as_bytes())
 }
 
+/// Open one experiment dataset. Names prefixed `dmat:` open the packed
+/// file behind them (`covermeans pack` writes these) as a chunk-streamed
+/// out-of-core source; every other name is generated resident through the
+/// registry, exactly as before.
+fn load_source(name: &str, scale: f64, data_seed: u64) -> Result<DataSource> {
+    if let Some(path) = name.strip_prefix("dmat:") {
+        return DataSource::open(
+            std::path::Path::new(path),
+            SourceBackend::Chunked,
+            crate::data::source::DEFAULT_CHUNK_ROWS,
+            0,
+        )
+        .with_context(|| format!("dataset {name:?}"));
+    }
+    let m = registry::load(name, scale, data_seed)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    Ok(DataSource::from(m))
+}
+
 /// Run every `(dataset, algorithm)` cell of the experiment on a thread
 /// pool. `keep_logs` retains per-iteration series (Fig. 1).
 pub fn run_experiment(exp: &Experiment, keep_logs: bool) -> Result<ExperimentResult> {
-    // Generate all datasets up front (deterministic, shared read-only).
-    let mut datasets: BTreeMap<String, Arc<Matrix>> = BTreeMap::new();
+    // Open all datasets up front (deterministic, shared read-only).
+    // Streamed (`dmat:`) sources are validated against the cell grid here
+    // so an impossible sweep fails with one clear message instead of a
+    // mid-sweep panic from a worker thread.
+    let mut datasets: BTreeMap<String, Arc<DataSource>> = BTreeMap::new();
     for name in &exp.datasets {
-        let m = registry::load(name, exp.scale, exp.data_seed)
-            .with_context(|| format!("unknown dataset {name:?}"))?;
-        datasets.insert(name.clone(), Arc::new(m));
+        let src = load_source(name, exp.scale, exp.data_seed)?;
+        if src.view().as_matrix().is_none() {
+            if let Some(alg) = exp.algorithms.iter().find(|a| !a.streams()) {
+                anyhow::bail!(
+                    "dataset {name:?} is streamed, but {} needs a resident \
+                     data source; drop the algorithm from the experiment or \
+                     load the data resident (a non-dmat dataset name)",
+                    alg.name()
+                );
+            }
+            if exp.warm_restarts {
+                anyhow::bail!(
+                    "warm_restarts extends centers over a resident matrix \
+                     and cannot run on streamed dataset {name:?}"
+                );
+            }
+        }
+        datasets.insert(name.clone(), Arc::new(src));
     }
 
     // Interrupted-sweep resume: adopt cells a previous invocation of the
@@ -428,9 +465,10 @@ fn run_cell(
     exp: &Experiment,
     dataset: &str,
     alg: Algorithm,
-    data: &Matrix,
+    data: &DataSource,
     keep_logs: bool,
 ) -> CellResult {
+    let src = data.view();
     let mut out = CellResult::default();
     let mut ws = Workspace::new();
     // One persistent worker pool per cell, shared by every fit, tree
@@ -446,7 +484,7 @@ fn run_cell(
     let mut best: Option<(f64, KMeansModel)> = None;
 
     for &k in &exp.ks {
-        let k = k.min(data.rows());
+        let k = k.min(src.rows());
         for restart in 0..exp.restarts {
             if !exp.amortize_tree {
                 // Fresh tree per run (Tables 2-3 charge construction per
@@ -457,21 +495,35 @@ fn run_cell(
             // generates each seed once, outside the per-algorithm cost).
             let mut init_counter = DistCounter::new();
             let seed = init_seed(dataset, k, restart);
-            let init = match &prev_centers[restart] {
-                Some(prev) if exp.warm_restarts && prev.rows() <= k => {
-                    kmeans::init::extend_centers_par(
-                        data,
-                        prev,
+            let init = match src.as_matrix() {
+                Some(m) => match &prev_centers[restart] {
+                    Some(prev) if exp.warm_restarts && prev.rows() <= k => {
+                        kmeans::init::extend_centers_par(
+                            m,
+                            prev,
+                            k,
+                            seed,
+                            &mut init_counter,
+                            &fit_par,
+                        )
+                    }
+                    _ => kmeans::init::kmeans_plus_plus_par(
+                        m,
                         k,
                         seed,
                         &mut init_counter,
                         &fit_par,
-                    )
-                }
-                _ => kmeans::init::kmeans_plus_plus_par(
-                    data,
+                    ),
+                },
+                // Streamed cells seed with k-means|| — a bounded number of
+                // full passes instead of k sequential ones (rounds and
+                // oversampling match the builder's defaults).
+                None => kmeans::init::init_kmeanspar_src(
+                    src,
                     k,
                     seed,
+                    5,
+                    2.0,
                     &mut init_counter,
                     &fit_par,
                 ),
@@ -482,19 +534,21 @@ fn run_cell(
                 .tol(exp.params.tol)
                 .threads(exp.params.threads)
                 .warm_start(init);
-            // fit_with routes MiniBatch to its own runner and drives the
-            // exact algorithms through the stepwise fit_step_with loop.
-            let r = builder.fit_with(data, &mut ws).expect("validated shapes");
+            // fit_source_with routes MiniBatch to its own runner and drives
+            // the exact algorithms through the stepwise fit_step_src loop.
+            // Streamed input was validated against the algorithm list up
+            // front, so the only failure mode left is a shape bug.
+            let r = builder.fit_source_with(data, &mut ws).expect("validated shapes");
             if exp.warm_restarts {
                 prev_centers[restart] = Some(r.centers.clone());
             }
-            let sse = r.sse(data);
+            let sse = crate::metrics::sse_src(src, &r.labels, &r.centers);
             let improves = match &best {
                 Some((b, _)) => sse < *b,
                 None => true,
             };
             if exp.model_dir.is_some() && improves {
-                best = Some((sse, KMeansModel::from_run(data, &r, alg, seed)));
+                best = Some((sse, KMeansModel::from_run_src(src, &r, alg, seed)));
             }
             out.distances += r.distances;
             out.build_dist += r.build_dist;
@@ -515,7 +569,10 @@ fn run_cell(
         }
     }
     if let (Some(dir), Some((_, model))) = (&exp.model_dir, &best) {
-        let path = dir.join(format!("{dataset}_{}.kmm", alg.name()));
+        // `dmat:` dataset names carry a file path; flatten separators so
+        // the model lands inside `dir` instead of a phantom subtree.
+        let stem = dataset.replace(['/', '\\'], "_");
+        let path = dir.join(format!("{stem}_{}.kmm", alg.name()));
         // A failed save must not poison the sweep results; report and
         // carry on (the CSV/Table outputs are the primary artifact).
         if let Err(e) = std::fs::create_dir_all(dir)
@@ -691,6 +748,49 @@ mod tests {
             );
             std::fs::remove_file(&path).ok();
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streamed_dmat_cells_run_and_reject_tree_algorithms() {
+        let dir = std::env::temp_dir()
+            .join(format!("covermeans_coord_dmat_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blobs.dmat");
+        let data = registry::load("blobs:200:3:4", 1.0, 1).unwrap();
+        crate::data::write_dmat(&path, &data).unwrap();
+        let name = format!("dmat:{}", path.display());
+
+        // Streamed cells must be thread-invariant: the coordinator's
+        // determinism contract does not stop at resident sources.
+        let mut exp = tiny_experiment();
+        exp.datasets = vec![name.clone()];
+        exp.algorithms = vec![Algorithm::Standard];
+        let res_seq = run_experiment(&exp, false).unwrap();
+        let mut exp_par = exp.clone();
+        exp_par.threads = 4;
+        exp_par.params.threads = 4;
+        let res_par = run_experiment(&exp_par, false).unwrap();
+        let a = res_seq.cell(&name, Algorithm::Standard).unwrap();
+        let b = res_par.cell(&name, Algorithm::Standard).unwrap();
+        assert_eq!(a.distances, b.distances);
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.distances, y.distances);
+            assert_eq!(x.sse.to_bits(), y.sse.to_bits());
+        }
+
+        // Tree algorithms need a resident source: one clear error before
+        // any cell runs, naming the offending algorithm.
+        let mut bad = exp.clone();
+        bad.algorithms = vec![Algorithm::CoverMeans];
+        let err = run_experiment(&bad, false).unwrap_err().to_string();
+        assert!(err.contains("streamed"), "unhelpful error: {err}");
+        assert!(
+            err.contains(Algorithm::CoverMeans.name()),
+            "unhelpful error: {err}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

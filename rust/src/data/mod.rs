@@ -3,6 +3,8 @@
 pub mod io;
 pub mod matrix;
 pub mod registry;
+pub mod source;
 pub mod synth;
 
 pub use matrix::{dist, sqdist, Matrix};
+pub use source::{read_dmat, write_dmat, DataSource, SourceBackend, SourceView};

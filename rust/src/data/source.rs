@@ -1,0 +1,837 @@
+//! Out-of-core data sources: one point set, three residency strategies.
+//!
+//! A [`DataSource`] owns a dataset in one of three backends and hands out
+//! cheap [`SourceView`] handles that the streaming-capable drivers
+//! (Lloyd, Elkan, Hamerly, MiniBatch) and the seeding passes iterate:
+//!
+//! * **`InRam`** — the existing [`Matrix`]; `visit` hands back slices of
+//!   the resident buffer. The only backend the tree-based drivers accept
+//!   (they build spatial indexes over the whole point set).
+//! * **`Mmap`** — a read-only memory map of a `.dmat` file. The kernel
+//!   pages rows in and out on demand, so the fit's address space covers
+//!   the file without the process owning the bytes.
+//! * **`Chunked`** — an explicit streaming reader with a bounded
+//!   resident-chunk budget (`data_chunk_rows` / `data_resident_mb`
+//!   config keys): workers block until the bytes they want to read fit
+//!   under the budget, so peak resident data memory stays capped no
+//!   matter how many threads scan at once.
+//!
+//! The contract that makes the backends interchangeable is the same
+//! byte-identity contract the parallel layer honors: every backend
+//! serves the **exact f64 bit patterns** of the same point set, and the
+//! per-point iteration order inside a worker's chunk range is ascending
+//! row index regardless of how `visit` blocks the range. Labels,
+//! centers, iteration counts and counted distances of a fit are
+//! therefore identical across backends (`rust/tests/
+//! streaming_equivalence.rs`).
+//!
+//! The on-disk `.dmat` format is a 64-byte header — magic, `rows` /
+//! `cols` as `u64`, reserved zeros, and an FNV-1a checksum over the
+//! first 56 bytes — followed by exactly `rows * cols` little-endian f64
+//! values. The 64-byte header keeps the payload 8-byte aligned under
+//! `mmap` (the mapping base is page-aligned). The header is checksummed
+//! and the total file length is enforced exactly, so truncation,
+//! bit-flips in the header, and trailing garbage all fail loudly at
+//! open time; the payload itself is *not* checksummed — it may be far
+//! larger than RAM, which is the point of this module.
+
+use std::fs::File;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::io::{atomic_write, fnv1a};
+use crate::data::matrix::Matrix;
+
+/// `.dmat` magic: 8 bytes so the header stays trivially 8-aligned.
+const DMAT_MAGIC: &[u8; 8] = b"CMDMAT1\0";
+/// Fixed header length; the payload starts here, 8-byte aligned.
+pub const DMAT_HEADER_LEN: usize = 64;
+
+/// Default streaming chunk granularity (`data_chunk_rows` config key).
+pub const DEFAULT_CHUNK_ROWS: usize = 4096;
+
+// ----- .dmat header ------------------------------------------------------
+
+/// Parse and validate a `.dmat` header (the first [`DMAT_HEADER_LEN`]
+/// bytes of the file). Returns `(rows, cols)`. Every corruption mode is
+/// diagnosed: short input, bad magic, a flipped header bit (checksum),
+/// zero or overflowing dimensions.
+pub fn parse_dmat_header(buf: &[u8]) -> Result<(usize, usize)> {
+    if buf.len() < DMAT_HEADER_LEN {
+        bail!(
+            "truncated .dmat header: {} bytes, need {DMAT_HEADER_LEN}",
+            buf.len()
+        );
+    }
+    let header = &buf[..DMAT_HEADER_LEN];
+    if &header[..8] != DMAT_MAGIC {
+        bail!("not a covermeans .dmat file: bad magic {:?}", &header[..8]);
+    }
+    let stored = u64::from_le_bytes(header[56..64].try_into().unwrap());
+    let actual = fnv1a(&header[..56]);
+    if stored != actual {
+        bail!(
+            "corrupt .dmat header: checksum mismatch (stored {stored:#018x}, \
+             computed {actual:#018x})"
+        );
+    }
+    let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    if rows == 0 || cols == 0 {
+        bail!("corrupt .dmat header: rows={rows}, cols={cols}");
+    }
+    rows.checked_mul(cols)
+        .and_then(|e| e.checked_mul(8))
+        .context(".dmat dimensions overflow")?;
+    Ok((rows, cols))
+}
+
+/// The exact byte length a well-formed `.dmat` with these dimensions has.
+fn dmat_file_len(rows: usize, cols: usize) -> u64 {
+    DMAT_HEADER_LEN as u64 + (rows * cols * 8) as u64
+}
+
+/// Open a `.dmat` file and validate its header *and* exact length —
+/// a truncated payload or trailing garbage is rejected here, before any
+/// fit starts consuming rows.
+fn open_dmat(path: &Path) -> Result<(File, usize, usize)> {
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let flen = file
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    if flen < DMAT_HEADER_LEN as u64 {
+        bail!("truncated .dmat file {path:?}: {flen} bytes, the header alone is {DMAT_HEADER_LEN}");
+    }
+    let mut header = [0u8; DMAT_HEADER_LEN];
+    read_exact_at(&file, &mut header, 0)
+        .with_context(|| format!("read {path:?} header"))?;
+    let (rows, cols) =
+        parse_dmat_header(&header).with_context(|| format!("parse {path:?}"))?;
+    let want = dmat_file_len(rows, cols);
+    if flen < want {
+        bail!(
+            "truncated .dmat payload in {path:?}: file is {flen} bytes, \
+             header promises {want} ({rows} x {cols} f64)"
+        );
+    }
+    if flen > want {
+        bail!(
+            "trailing bytes after the .dmat payload in {path:?}: file is \
+             {flen} bytes, header promises {want} ({} extra)",
+            flen - want
+        );
+    }
+    Ok((file, rows, cols))
+}
+
+/// Serialize a matrix to the `.dmat` byte format (header + payload).
+pub fn dmat_bytes(m: &Matrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(DMAT_HEADER_LEN + m.rows() * m.cols() * 8);
+    out.extend_from_slice(DMAT_MAGIC);
+    out.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+    out.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+    out.resize(56, 0);
+    let sum = fnv1a(&out[..56]);
+    out.extend_from_slice(&sum.to_le_bytes());
+    for &v in m.as_slice() {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Write a matrix as a `.dmat` file, atomically (see
+/// [`crate::data::io::atomic_write`]). Round-trips bit-identically,
+/// including NaN and -0.0 payloads.
+pub fn write_dmat(path: &Path, m: &Matrix) -> Result<()> {
+    if m.rows() == 0 || m.cols() == 0 {
+        bail!("refusing to write an empty .dmat ({} x {})", m.rows(), m.cols());
+    }
+    atomic_write(path, &dmat_bytes(m)).with_context(|| format!("write {path:?}"))
+}
+
+/// Read a `.dmat` file fully into RAM (the `ram` backend of
+/// [`DataSource::open`]).
+pub fn read_dmat(path: &Path) -> Result<Matrix> {
+    let (file, rows, cols) = open_dmat(path)?;
+    let mut data = vec![0f64; rows * cols];
+    read_f64_at(&file, &mut data, DMAT_HEADER_LEN as u64)
+        .with_context(|| format!("read {path:?} payload"))?;
+    Ok(Matrix::from_vec(data, rows, cols))
+}
+
+// ----- positioned reads --------------------------------------------------
+
+/// Positioned read: thread-safe on unix (`pread`), serialized through a
+/// process-wide seek lock elsewhere.
+fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, off)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        static SEEK_LOCK: Mutex<()> = Mutex::new(());
+        let _g = SEEK_LOCK.lock().unwrap();
+        let mut f = file.try_clone()?;
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(buf)
+    }
+}
+
+/// Positioned read of little-endian f64s straight into an f64 buffer.
+/// The bytes are read in place and byte-swapped only on big-endian
+/// hosts, so the little-endian fast path is a single read.
+fn read_f64_at(file: &File, out: &mut [f64], off: u64) -> std::io::Result<()> {
+    {
+        // An f64 slice is always validly viewable as bytes (no invalid
+        // bit patterns, alignment 8 >= 1).
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 8)
+        };
+        read_exact_at(file, bytes, off)?;
+    }
+    #[cfg(target_endian = "big")]
+    for v in out.iter_mut() {
+        *v = f64::from_bits(v.to_bits().swap_bytes());
+    }
+    Ok(())
+}
+
+// ----- mmap backend ------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+}
+
+/// Owner of a read-only file mapping; unmaps on drop.
+#[cfg(unix)]
+struct MapHandle {
+    ptr: *mut std::os::raw::c_void,
+    len: usize,
+}
+
+// The mapping is read-only and never remapped after construction, so
+// sharing the raw pointer across threads is sound.
+#[cfg(unix)]
+unsafe impl Send for MapHandle {}
+#[cfg(unix)]
+unsafe impl Sync for MapHandle {}
+
+#[cfg(unix)]
+impl Drop for MapHandle {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+/// A `.dmat` file served through a read-only memory map: the payload is
+/// addressable as one `&[f64]` without the process owning the bytes.
+/// On non-unix hosts this falls back to reading the file into the heap
+/// (same bits, no paging benefit).
+pub struct MmapSource {
+    rows: usize,
+    cols: usize,
+    #[cfg(unix)]
+    map: MapHandle,
+    #[cfg(not(unix))]
+    buf: Vec<f64>,
+}
+
+impl MmapSource {
+    pub fn open(path: &Path) -> Result<MmapSource> {
+        let (file, rows, cols) = open_dmat(path)?;
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let len = dmat_file_len(rows, cols) as usize;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                bail!(
+                    "mmap {path:?} ({len} bytes) failed: {}",
+                    std::io::Error::last_os_error()
+                );
+            }
+            // The base is page-aligned and the header is 64 bytes, so
+            // the payload view below is 8-byte aligned.
+            assert_eq!(
+                (ptr as usize + DMAT_HEADER_LEN) % std::mem::align_of::<f64>(),
+                0,
+                "mmap base must leave the payload f64-aligned"
+            );
+            Ok(MmapSource { rows, cols, map: MapHandle { ptr, len } })
+        }
+        #[cfg(not(unix))]
+        {
+            let mut buf = vec![0f64; rows * cols];
+            read_f64_at(&file, &mut buf, DMAT_HEADER_LEN as u64)
+                .with_context(|| format!("read {path:?} payload"))?;
+            Ok(MmapSource { rows, cols, buf })
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The full payload as one flat row-major slice.
+    ///
+    /// Endianness note: the mapped bytes are little-endian by format.
+    /// On a big-endian host the mapped view would be wrong, so the
+    /// constructor path is the heap fallback there (`#[cfg]` above is
+    /// unix vs not; unix big-endian hosts are out of scope for this
+    /// reproduction and would fail the roundtrip tests immediately).
+    pub fn data(&self) -> &[f64] {
+        #[cfg(unix)]
+        unsafe {
+            let base = (self.map.ptr as *const u8).add(DMAT_HEADER_LEN);
+            std::slice::from_raw_parts(base as *const f64, self.rows * self.cols)
+        }
+        #[cfg(not(unix))]
+        {
+            &self.buf
+        }
+    }
+}
+
+// ----- chunked backend ---------------------------------------------------
+
+/// Resident-byte accounting shared by every thread scanning a
+/// [`ChunkedSource`].
+struct ResidentGauge {
+    resident: usize,
+    peak: usize,
+}
+
+/// A `.dmat` file read in bounded chunks: `visit` materializes at most
+/// `chunk_rows` rows at a time per caller, and the total bytes resident
+/// across *all* concurrent callers is capped by the budget — a thread
+/// whose read would overflow it blocks until another thread releases
+/// its chunk. The effective chunk size is clamped so a single chunk
+/// always fits the budget (no self-deadlock), and a thread holding
+/// nothing is always allowed to proceed (no collective deadlock).
+pub struct ChunkedSource {
+    file: File,
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    chunk_rows: usize,
+    /// 0 = unlimited (chunking still applies, the gate never blocks).
+    budget_bytes: usize,
+    gate: Mutex<ResidentGauge>,
+    cv: Condvar,
+}
+
+impl ChunkedSource {
+    /// `chunk_rows` 0 falls back to [`DEFAULT_CHUNK_ROWS`];
+    /// `resident_mb` 0 means no budget.
+    pub fn open(path: &Path, chunk_rows: usize, resident_mb: usize) -> Result<ChunkedSource> {
+        let (file, rows, cols) = open_dmat(path)?;
+        let row_bytes = cols * 8;
+        let budget_bytes = resident_mb.saturating_mul(1 << 20);
+        let mut eff = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
+        if budget_bytes > 0 {
+            eff = eff.min((budget_bytes / row_bytes).max(1));
+        }
+        Ok(ChunkedSource {
+            file,
+            path: path.to_path_buf(),
+            rows,
+            cols,
+            chunk_rows: eff,
+            budget_bytes,
+            gate: Mutex::new(ResidentGauge { resident: 0, peak: 0 }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The clamped per-visit chunk granularity actually in effect.
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// High-water mark of concurrently resident chunk bytes so far.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.gate.lock().unwrap().peak
+    }
+
+    fn acquire(&self, bytes: usize) {
+        let mut g = self.gate.lock().unwrap();
+        if self.budget_bytes > 0 {
+            // A caller holding nothing always proceeds, so the clamp on
+            // chunk_rows plus this wait condition cannot deadlock.
+            while g.resident > 0 && g.resident + bytes > self.budget_bytes {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+        g.resident += bytes;
+        g.peak = g.peak.max(g.resident);
+    }
+
+    fn release(&self, bytes: usize) {
+        let mut g = self.gate.lock().unwrap();
+        g.resident -= bytes;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Read rows `[start, end)` into a fresh buffer under the budget.
+    fn read_block(&self, start: usize, end: usize) -> Vec<f64> {
+        let mut block = vec![0f64; (end - start) * self.cols];
+        let off = DMAT_HEADER_LEN as u64 + (start * self.cols * 8) as u64;
+        if let Err(e) = read_f64_at(&self.file, &mut block, off) {
+            // Reads were validated at open; a failure here is the
+            // environment yanking the file mid-fit — no sane resume.
+            panic!("read rows {start}..{end} of {:?}: {e}", self.path);
+        }
+        block
+    }
+}
+
+// ----- the source and its view ------------------------------------------
+
+/// Streaming backend selector (`data_backend` config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceBackend {
+    Ram,
+    Mmap,
+    Chunked,
+}
+
+impl SourceBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SourceBackend::Ram => "ram",
+            SourceBackend::Mmap => "mmap",
+            SourceBackend::Chunked => "chunked",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SourceBackend> {
+        Ok(match s {
+            "ram" | "in-ram" | "inram" => SourceBackend::Ram,
+            "mmap" => SourceBackend::Mmap,
+            "chunked" | "stream" | "streamed" => SourceBackend::Chunked,
+            other => bail!(
+                "unknown data backend {other:?} (expected ram, mmap, or chunked)"
+            ),
+        })
+    }
+}
+
+/// One dataset behind one of the three residency strategies. Fits
+/// borrow it through [`DataSource::view`].
+pub enum DataSource {
+    InRam(Matrix),
+    Mmap(MmapSource),
+    Chunked(ChunkedSource),
+}
+
+impl DataSource {
+    /// Open a `.dmat` file under the chosen backend. `chunk_rows` and
+    /// `resident_mb` only apply to [`SourceBackend::Chunked`].
+    pub fn open(
+        path: &Path,
+        backend: SourceBackend,
+        chunk_rows: usize,
+        resident_mb: usize,
+    ) -> Result<DataSource> {
+        Ok(match backend {
+            SourceBackend::Ram => DataSource::InRam(read_dmat(path)?),
+            SourceBackend::Mmap => DataSource::Mmap(MmapSource::open(path)?),
+            SourceBackend::Chunked => {
+                DataSource::Chunked(ChunkedSource::open(path, chunk_rows, resident_mb)?)
+            }
+        })
+    }
+
+    pub fn view(&self) -> SourceView<'_> {
+        match self {
+            DataSource::InRam(m) => SourceView::Ram(m),
+            DataSource::Mmap(m) => SourceView::Mmap(m),
+            DataSource::Chunked(c) => SourceView::Chunked(c),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.view().rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.view().cols()
+    }
+}
+
+impl From<Matrix> for DataSource {
+    fn from(m: Matrix) -> DataSource {
+        DataSource::InRam(m)
+    }
+}
+
+/// A borrowed, `Copy` handle on a [`DataSource`] — what the drivers and
+/// seeding passes actually iterate. Cloning it into per-worker closures
+/// is free; the chunked backend's budget gate lives behind the shared
+/// reference.
+#[derive(Clone, Copy)]
+pub enum SourceView<'a> {
+    Ram(&'a Matrix),
+    Mmap(&'a MmapSource),
+    Chunked(&'a ChunkedSource),
+}
+
+impl<'a> From<&'a Matrix> for SourceView<'a> {
+    fn from(m: &'a Matrix) -> SourceView<'a> {
+        SourceView::Ram(m)
+    }
+}
+
+impl<'a> SourceView<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            SourceView::Ram(m) => m.rows(),
+            SourceView::Mmap(m) => m.rows(),
+            SourceView::Chunked(c) => c.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SourceView::Ram(m) => m.cols(),
+            SourceView::Mmap(m) => m.cols(),
+            SourceView::Chunked(c) => c.cols(),
+        }
+    }
+
+    pub fn backend(&self) -> SourceBackend {
+        match self {
+            SourceView::Ram(_) => SourceBackend::Ram,
+            SourceView::Mmap(_) => SourceBackend::Mmap,
+            SourceView::Chunked(_) => SourceBackend::Chunked,
+        }
+    }
+
+    /// The resident matrix, if this backend has one. The tree-based
+    /// drivers require it (they index the whole point set); `mmap`
+    /// deliberately returns `None` — the workspace tree caches key on
+    /// the matrix allocation, which a mapping is not.
+    pub fn as_matrix(&self) -> Option<&'a Matrix> {
+        match self {
+            SourceView::Ram(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Walk rows `range` in ascending order, handing `f` row-major
+    /// blocks as `(first_row_index, values)`. Resident backends hand
+    /// the whole range as one block; the chunked backend splits it at
+    /// its chunk granularity under the resident-byte budget. Block
+    /// boundaries carry no semantic weight — callers must produce
+    /// identical results for any blocking of the same range (that is
+    /// the backend byte-identity contract).
+    pub fn visit<F: FnMut(usize, &[f64])>(&self, range: Range<usize>, mut f: F) {
+        match self {
+            SourceView::Ram(m) => {
+                if !range.is_empty() {
+                    let c = m.cols();
+                    f(range.start, &m.as_slice()[range.start * c..range.end * c]);
+                }
+            }
+            SourceView::Mmap(m) => {
+                if !range.is_empty() {
+                    let c = m.cols();
+                    f(range.start, &m.data()[range.start * c..range.end * c]);
+                }
+            }
+            SourceView::Chunked(c) => {
+                let mut start = range.start;
+                while start < range.end {
+                    let end = (start + c.chunk_rows).min(range.end);
+                    let bytes = (end - start) * c.cols * 8;
+                    c.acquire(bytes);
+                    let block = c.read_block(start, end);
+                    f(start, &block);
+                    drop(block);
+                    c.release(bytes);
+                    start = end;
+                }
+            }
+        }
+    }
+
+    /// Gather arbitrary rows into a fresh resident matrix (mini-batch
+    /// draws, seeding candidates). The gathered rows are the caller's
+    /// working set — like the centers, they are not charged against the
+    /// chunked budget.
+    pub fn read_rows(&self, idx: &[usize]) -> Matrix {
+        let cols = self.cols();
+        let mut out = Vec::with_capacity(idx.len() * cols);
+        match self {
+            SourceView::Ram(m) => {
+                for &i in idx {
+                    out.extend_from_slice(m.row(i));
+                }
+            }
+            SourceView::Mmap(m) => {
+                let d = m.data();
+                for &i in idx {
+                    out.extend_from_slice(&d[i * cols..(i + 1) * cols]);
+                }
+            }
+            SourceView::Chunked(c) => {
+                let mut row = vec![0f64; cols];
+                for &i in idx {
+                    assert!(i < c.rows, "row {i} out of range ({} rows)", c.rows);
+                    let off = DMAT_HEADER_LEN as u64 + (i * cols * 8) as u64;
+                    if let Err(e) = read_f64_at(&c.file, &mut row, off) {
+                        panic!("read row {i} of {:?}: {e}", c.path);
+                    }
+                    out.extend_from_slice(&row);
+                }
+            }
+        }
+        Matrix::from_vec(out, idx.len(), cols)
+    }
+
+    /// One element of the flat row-major payload — the sampled-content
+    /// accessor the checkpoint fingerprint uses. All backends return
+    /// the same bits for the same index, so fingerprints (and therefore
+    /// `.kmc` snapshots) are interchangeable across backends.
+    pub fn flat_element(&self, i: usize) -> f64 {
+        match self {
+            SourceView::Ram(m) => m.as_slice()[i],
+            SourceView::Mmap(m) => m.data()[i],
+            SourceView::Chunked(c) => {
+                let mut one = [0f64; 1];
+                let off = DMAT_HEADER_LEN as u64 + (i * 8) as u64;
+                if let Err(e) = read_f64_at(&c.file, &mut one, off) {
+                    panic!("read element {i} of {:?}: {e}", c.path);
+                }
+                one[0]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "covermeans_source_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> Matrix {
+        let mut m = synth::gaussian_blobs(37, 3, 4, 0.5, 77);
+        // Exercise the bit-exactness corners explicitly.
+        m.set(0, 0, -0.0);
+        m.set(1, 1, f64::NAN);
+        m
+    }
+
+    fn bits(s: &[f64]) -> Vec<u64> {
+        s.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn dmat_roundtrips_bit_identically() {
+        let m = sample();
+        let p = tmpdir().join("rt.dmat");
+        write_dmat(&p, &m).unwrap();
+        let back = read_dmat(&p).unwrap();
+        assert_eq!((back.rows(), back.cols()), (m.rows(), m.cols()));
+        assert_eq!(bits(back.as_slice()), bits(m.as_slice()));
+    }
+
+    #[test]
+    fn every_backend_serves_the_same_bits() {
+        let m = sample();
+        let p = tmpdir().join("backends.dmat");
+        write_dmat(&p, &m).unwrap();
+        let want = bits(m.as_slice());
+        for backend in [SourceBackend::Ram, SourceBackend::Mmap, SourceBackend::Chunked] {
+            let src = DataSource::open(&p, backend, 5, 1).unwrap();
+            let v = src.view();
+            assert_eq!((v.rows(), v.cols()), (m.rows(), m.cols()));
+            let mut got = vec![0u64; want.len()];
+            v.visit(0..v.rows(), |start, block| {
+                let at = start * v.cols();
+                for (i, x) in block.iter().enumerate() {
+                    got[at + i] = x.to_bits();
+                }
+            });
+            assert_eq!(got, want, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn chunked_visit_blocks_cover_any_range_once() {
+        let m = sample();
+        let p = tmpdir().join("blocks.dmat");
+        write_dmat(&p, &m).unwrap();
+        for chunk in [1usize, 3, 7, m.rows(), m.rows() * 2] {
+            let src = ChunkedSource::open(&p, chunk, 0).unwrap();
+            let v = SourceView::Chunked(&src);
+            for range in [0..m.rows(), 5..m.rows() - 3, 11..12, 4..4] {
+                let mut seen = Vec::new();
+                v.visit(range.clone(), |start, block| {
+                    assert_eq!(block.len() % m.cols(), 0);
+                    for r in 0..block.len() / m.cols() {
+                        seen.push(start + r);
+                        assert_eq!(
+                            bits(&block[r * m.cols()..(r + 1) * m.cols()]),
+                            bits(m.row(start + r)),
+                        );
+                    }
+                });
+                assert_eq!(seen, range.collect::<Vec<_>>(), "chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_budget_caps_peak_and_clamps_chunk() {
+        let m = synth::gaussian_blobs(64, 8, 2, 0.5, 3);
+        let p = tmpdir().join("budget.dmat");
+        write_dmat(&p, &m).unwrap();
+        // 1 MiB budget, absurd chunk request: the chunk clamps to what
+        // fits (here the budget exceeds a row, so the clamp is the
+        // budget in rows).
+        let src = ChunkedSource::open(&p, usize::MAX, 1).unwrap();
+        assert_eq!(src.chunk_rows(), (1 << 20) / (8 * 8));
+        let v = SourceView::Chunked(&src);
+        v.visit(0..m.rows(), |_, _| {});
+        assert!(src.peak_resident_bytes() <= 1 << 20);
+        assert!(src.peak_resident_bytes() > 0);
+        // Concurrent scans stay under the budget too.
+        let tiny = ChunkedSource::open(&p, 4, 1).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    SourceView::Chunked(&tiny).visit(0..m.rows(), |_, block| {
+                        std::hint::black_box(block.len());
+                    });
+                });
+            }
+        });
+        assert!(tiny.peak_resident_bytes() <= 1 << 20);
+    }
+
+    #[test]
+    fn read_rows_gathers_exact_bits() {
+        let m = sample();
+        let p = tmpdir().join("gather.dmat");
+        write_dmat(&p, &m).unwrap();
+        let idx = [0usize, 36, 5, 5, 17];
+        let want = m.select_rows(&idx);
+        for backend in [SourceBackend::Ram, SourceBackend::Mmap, SourceBackend::Chunked] {
+            let src = DataSource::open(&p, backend, 3, 0).unwrap();
+            let got = src.view().read_rows(&idx);
+            assert_eq!(bits(got.as_slice()), bits(want.as_slice()), "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn flat_element_matches_across_backends() {
+        let m = sample();
+        let p = tmpdir().join("flat.dmat");
+        write_dmat(&p, &m).unwrap();
+        let flat = m.as_slice();
+        for backend in [SourceBackend::Ram, SourceBackend::Mmap, SourceBackend::Chunked] {
+            let src = DataSource::open(&p, backend, 3, 0).unwrap();
+            let v = src.view();
+            for i in [0usize, 1, flat.len() / 2, flat.len() - 1] {
+                assert_eq!(v.flat_element(i).to_bits(), flat[i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn header_corruption_is_diagnosed() {
+        let m = sample();
+        let p = tmpdir().join("corrupt.dmat");
+        write_dmat(&p, &m).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        let reopen = |bytes: &[u8]| {
+            let q = tmpdir().join("corrupt_case.dmat");
+            std::fs::write(&q, bytes).unwrap();
+            read_dmat(&q)
+        };
+        // Shared fault battery: only the header is checksummed; the
+        // payload is guarded by the exact-length contract, so the checked
+        // prefix is the header alone.
+        crate::testutil::corruption::assert_rejects_faults(
+            ".dmat",
+            &good,
+            DMAT_HEADER_LEN,
+            reopen,
+        );
+        // Format-specific faults the battery cannot know about follow.
+        // Payload truncation and trailing payload bytes are length
+        // violations, not checksum failures.
+        for cut in [DMAT_HEADER_LEN - 1, DMAT_HEADER_LEN + 9, good.len() - 1] {
+            let msg = format!("{:#}", reopen(&good[..cut]).unwrap_err());
+            assert!(msg.contains("truncated"), "cut {cut}: {msg}");
+        }
+        let mut bad = good.clone();
+        bad.extend_from_slice(&[0u8; 16]);
+        let msg = format!("{:#}", reopen(&bad).unwrap_err());
+        assert!(msg.contains("trailing bytes"), "{msg}");
+        // Zero dims (rewrite header checksum so only the dims are bad).
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&0u64.to_le_bytes());
+        let sum = fnv1a(&bad[..56]);
+        bad[56..64].copy_from_slice(&sum.to_le_bytes());
+        let msg = format!("{:#}", reopen(&bad[..DMAT_HEADER_LEN]).unwrap_err());
+        assert!(msg.contains("rows=0"), "{msg}");
+    }
+}

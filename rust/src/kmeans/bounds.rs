@@ -283,9 +283,24 @@ pub(crate) fn accumulate_in_order(
     labels: &[u32],
     acc: &mut CentroidAccum,
 ) {
-    for (i, &l) in labels.iter().enumerate() {
-        acc.add_point(l as usize, data.row(i));
-    }
+    accumulate_in_order_src(data.into(), labels, acc);
+}
+
+/// Source-generic [`accumulate_in_order`]: one sequential ascending-index
+/// pass over any backend. The chunked backend streams the pass in blocks,
+/// but the per-point add order is the canonical order either way, so the
+/// sums are bit-identical across backends (and to the in-RAM path).
+pub(crate) fn accumulate_in_order_src(
+    src: crate::data::SourceView<'_>,
+    labels: &[u32],
+    acc: &mut CentroidAccum,
+) {
+    let cols = src.cols();
+    src.visit(0..labels.len(), |start, block| {
+        for (off, p) in block.chunks_exact(cols).enumerate() {
+            acc.add_point(labels[start + off] as usize, p);
+        }
+    });
 }
 
 /// Dense nearest + second-nearest scan of a point against all centers,

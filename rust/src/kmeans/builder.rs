@@ -31,7 +31,7 @@
 
 use std::fmt;
 
-use crate::data::Matrix;
+use crate::data::{DataSource, Matrix, SourceView};
 use crate::kmeans::checkpoint::{self, CheckpointConfig};
 use crate::kmeans::driver::{Fit, Observer, Signal, StepView};
 use crate::kmeans::minibatch::MiniBatchParams;
@@ -131,6 +131,42 @@ impl From<Algorithm> for AlgorithmSpec {
     }
 }
 
+/// Seeding strategy for the initial centers (config key `init`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum InitKind {
+    /// Resolve by data source: k-means++ for resident (in-RAM) data,
+    /// k-means|| for file-backed (mmap/chunked) sources, where the
+    /// handful of sequential full passes of `||` beat the k dependent
+    /// passes of `++`.
+    #[default]
+    Auto,
+    /// Classic k-means++ (triangle-pruned; [`init::kmeans_plus_plus`]).
+    PlusPlus,
+    /// k-means|| oversampling + weighted recluster
+    /// ([`init::init_kmeanspar`]); rounds and oversampling factor come
+    /// from [`KMeans::init_rounds`] / [`KMeans::init_oversample`].
+    Parallel,
+}
+
+impl InitKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitKind::Auto => "auto",
+            InitKind::PlusPlus => "kmeans++",
+            InitKind::Parallel => "kmeans||",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<InitKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(InitKind::Auto),
+            "kmeans++" | "plusplus" | "++" => Some(InitKind::PlusPlus),
+            "kmeans||" | "parallel" | "||" => Some(InitKind::Parallel),
+            _ => None,
+        }
+    }
+}
+
 /// Validation failures of a [`KMeans`] configuration, surfaced as values
 /// instead of the panics of the legacy `kmeans::run` asserts.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -149,6 +185,10 @@ pub enum KMeansError {
     /// A checkpoint write failed mid-fit; the run stopped at that
     /// iteration boundary instead of continuing uncheckpointed.
     Checkpoint(String),
+    /// A non-resident (mmap/chunked) data source routed to an algorithm
+    /// that needs the whole matrix resident (the tree variants build a
+    /// spatial index over every point up front).
+    StreamedUnsupported { algorithm: Algorithm, backend: &'static str },
 }
 
 impl fmt::Display for KMeansError {
@@ -170,6 +210,13 @@ impl fmt::Display for KMeansError {
             KMeansError::Checkpoint(e) => {
                 write!(f, "checkpoint write failed: {e}")
             }
+            KMeansError::StreamedUnsupported { algorithm, backend } => write!(
+                f,
+                "{} cannot fit a streamed data source (backend: {backend}); \
+                 load the data resident (data_backend=ram) or pick a \
+                 streaming-capable algorithm (standard, elkan, hamerly, minibatch)",
+                algorithm.name()
+            ),
         }
     }
 }
@@ -184,6 +231,9 @@ pub struct KMeans {
     max_iter: usize,
     tol: f64,
     seed: u64,
+    init: InitKind,
+    init_rounds: usize,
+    init_oversample: f64,
     threads: usize,
     pin_workers: bool,
     warm: Option<Matrix>,
@@ -203,6 +253,9 @@ impl KMeans {
             max_iter: d.max_iter,
             tol: d.tol,
             seed: 0,
+            init: InitKind::Auto,
+            init_rounds: 5,
+            init_oversample: 2.0,
             threads: d.threads,
             pin_workers: d.pin_workers,
             warm: None,
@@ -234,6 +287,31 @@ impl KMeans {
     /// Seed for the k-means++ initialization (ignored under warm start).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Seeding strategy (config key `init`; default [`InitKind::Auto`]:
+    /// k-means++ for resident data, k-means|| for file-backed sources).
+    /// Both strategies are source-generic and deterministic, so pinning
+    /// one explicitly makes in-RAM and streamed fits byte-identical.
+    /// Ignored under warm start.
+    pub fn init(mut self, init: InitKind) -> Self {
+        self.init = init;
+        self
+    }
+
+    /// k-means|| sampling rounds (config key `init_rounds`; default 5).
+    /// Consumed only when the resolved init is [`InitKind::Parallel`].
+    pub fn init_rounds(mut self, rounds: usize) -> Self {
+        self.init_rounds = rounds;
+        self
+    }
+
+    /// k-means|| oversampling factor: each round samples points with
+    /// expectation `oversample * k` (config key `init_oversample`;
+    /// default 2.0). Consumed only under [`InitKind::Parallel`].
+    pub fn init_oversample(mut self, oversample: f64) -> Self {
+        self.init_oversample = oversample;
         self
     }
 
@@ -307,23 +385,24 @@ impl KMeans {
         p
     }
 
-    /// Validate against `data` and produce the initial centers (seeding
-    /// shards over `par`; byte-identical at every thread count).
+    /// Validate against the data source and produce the initial centers
+    /// (seeding shards over `par`; byte-identical at every thread count
+    /// and on every source backend).
     fn make_init(
         &mut self,
-        data: &Matrix,
+        src: SourceView<'_>,
         par: &crate::parallel::Parallelism,
     ) -> Result<Matrix, KMeansError> {
         if self.k == 0 {
             return Err(KMeansError::ZeroK);
         }
-        if self.k > data.rows() {
-            return Err(KMeansError::KExceedsN { k: self.k, n: data.rows() });
+        if self.k > src.rows() {
+            return Err(KMeansError::KExceedsN { k: self.k, n: src.rows() });
         }
         if let Some(warm) = self.warm.take() {
-            if warm.cols() != data.cols() {
+            if warm.cols() != src.cols() {
                 return Err(KMeansError::DimMismatch {
-                    expected: data.cols(),
+                    expected: src.cols(),
                     got: warm.cols(),
                 });
             }
@@ -335,16 +414,29 @@ impl KMeans {
             }
             return Ok(warm);
         }
+        let parallel = match self.init {
+            InitKind::PlusPlus => false,
+            InitKind::Parallel => true,
+            // Auto: `++` makes k+1 passes over the data — fine resident,
+            // painful from a file; `||` needs ~init_rounds passes.
+            InitKind::Auto => src.as_matrix().is_none(),
+        };
         // Init distances stay outside the run counters (paper protocol:
         // identical seeds are generated once, not charged per algorithm).
         let mut counter = DistCounter::new();
-        Ok(init::kmeans_plus_plus_par(
-            data,
-            self.k,
-            self.seed,
-            &mut counter,
-            par,
-        ))
+        Ok(if parallel {
+            init::init_kmeanspar_src(
+                src,
+                self.k,
+                self.seed,
+                self.init_rounds,
+                self.init_oversample,
+                &mut counter,
+                par,
+            )
+        } else {
+            init::kmeans_plus_plus_src(src, self.k, self.seed, &mut counter, par)
+        })
     }
 
     /// Fit to completion with a fresh workspace.
@@ -355,7 +447,36 @@ impl KMeans {
 
     /// Fit to completion, reusing `ws`'s cached spatial indexes (the
     /// Table 4 amortization protocol).
-    pub fn fit_with(mut self, data: &Matrix, ws: &mut Workspace) -> Result<RunResult, KMeansError> {
+    pub fn fit_with(self, data: &Matrix, ws: &mut Workspace) -> Result<RunResult, KMeansError> {
+        self.fit_src_with(data.into(), ws)
+    }
+
+    /// Fit to completion over any [`DataSource`] backend with a fresh
+    /// workspace — the out-of-core entry point. For every backend, chunk
+    /// size, and thread count the result is byte-identical to the in-RAM
+    /// fit of the same data (given the same resolved init; see
+    /// [`KMeans::init`]). Streamed sources are accepted only by the
+    /// streaming-capable algorithms ([`Algorithm::streams`]); the tree
+    /// variants return [`KMeansError::StreamedUnsupported`].
+    pub fn fit_source(self, source: &DataSource) -> Result<RunResult, KMeansError> {
+        let mut ws = Workspace::new();
+        self.fit_source_with(source, &mut ws)
+    }
+
+    /// [`KMeans::fit_source`] against a caller-owned workspace.
+    pub fn fit_source_with(
+        self,
+        source: &DataSource,
+        ws: &mut Workspace,
+    ) -> Result<RunResult, KMeansError> {
+        self.fit_src_with(source.view(), ws)
+    }
+
+    fn fit_src_with(
+        mut self,
+        src: SourceView<'_>,
+        ws: &mut Workspace,
+    ) -> Result<RunResult, KMeansError> {
         if let AlgorithmSpec::MiniBatch { .. } = self.spec {
             if self.observer.is_some() || self.checkpoint.is_some() {
                 // Mini-batch moves centers online inside its batch loop;
@@ -365,16 +486,16 @@ impl KMeans {
             }
             let params = self.params();
             let par = ws.parallelism_opts(params.threads, params.pin_workers);
-            let init_c = self.make_init(data, &par)?;
-            return Ok(minibatch::run_par(
-                data,
+            let init_c = self.make_init(src, &par)?;
+            return Ok(minibatch::run_par_src(
+                src,
                 &init_c,
                 &params,
                 &params.minibatch,
                 &par,
             ));
         }
-        let mut fit = self.fit_step_with(data, ws)?;
+        let mut fit = self.fit_step_src(src, ws)?;
         while fit.step().is_some() {}
         if let Some(e) = fit.take_checkpoint_error() {
             return Err(KMeansError::Checkpoint(format!("{e:#}")));
@@ -419,6 +540,27 @@ impl KMeans {
         Ok(KMeansModel::from_run(data, &run, algorithm, seed))
     }
 
+    /// [`KMeans::fit_model`] over any [`DataSource`] backend. The model
+    /// statistics are computed in one sequential canonical-order pass, so
+    /// the persisted `.kmm` bytes are identical across backends.
+    pub fn fit_model_src(self, source: &DataSource) -> Result<KMeansModel, KMeansError> {
+        let mut ws = Workspace::new();
+        self.fit_model_src_with(source, &mut ws)
+    }
+
+    /// [`KMeans::fit_model_src`] against a caller-owned workspace.
+    pub fn fit_model_src_with(
+        self,
+        source: &DataSource,
+        ws: &mut Workspace,
+    ) -> Result<KMeansModel, KMeansError> {
+        let algorithm = self.spec.kind();
+        let seed = self.seed;
+        let src = source.view();
+        let run = self.fit_src_with(src, ws)?;
+        Ok(KMeansModel::from_run_src(src, &run, algorithm, seed))
+    }
+
     /// Begin a stepwise fit with a fresh workspace: returns a [`Fit`]
     /// whose `step()` exposes every iteration boundary.
     pub fn fit_step(self, data: &Matrix) -> Result<Fit<'_>, KMeansError> {
@@ -430,23 +572,45 @@ impl KMeans {
     /// handle borrows only `data`; the spatial index is shared out of the
     /// workspace cache, so `ws` is free for the next run immediately.
     pub fn fit_step_with<'a>(
-        mut self,
+        self,
         data: &'a Matrix,
+        ws: &mut Workspace,
+    ) -> Result<Fit<'a>, KMeansError> {
+        self.fit_step_src(data.into(), ws)
+    }
+
+    /// Begin a stepwise fit over any source backend (the checkpointed
+    /// out-of-core path: [`Fit::checkpoint_now`] and [`Fit::restore`]
+    /// work unchanged, and the config fingerprint samples the source so a
+    /// resume can cross backends). Streamed (non-RAM) sources are
+    /// accepted only by streaming-capable algorithms; the tree variants
+    /// return [`KMeansError::StreamedUnsupported`] before any driver
+    /// state is built.
+    pub fn fit_step_src<'a>(
+        mut self,
+        src: SourceView<'a>,
         ws: &mut Workspace,
     ) -> Result<Fit<'a>, KMeansError> {
         if let AlgorithmSpec::MiniBatch { .. } = self.spec {
             return Err(KMeansError::NotStepwise(Algorithm::MiniBatch));
         }
+        let algorithm = self.spec.kind();
+        if src.as_matrix().is_none() && !algorithm.streams() {
+            return Err(KMeansError::StreamedUnsupported {
+                algorithm,
+                backend: src.backend().name(),
+            });
+        }
         let params = self.params();
         let par = ws.parallelism_opts(params.threads, params.pin_workers);
-        let init_c = self.make_init(data, &par)?;
+        let init_c = self.make_init(src, &par)?;
         let (drv, build_dist, build_time) =
-            driver::new_driver(data, init_c.rows(), &params, ws);
-        let mut fit = Fit::from_driver(data, drv, &init_c, params.max_iter, params.tol)
+            driver::new_driver_src(src, init_c.rows(), &params, ws);
+        let mut fit = Fit::from_driver_src(src, drv, &init_c, params.max_iter, params.tol)
             .with_build_cost(build_dist, build_time)
             .with_observer(self.observer.take());
         if let Some(cfg) = self.checkpoint.take() {
-            let fp = checkpoint::config_fingerprint(&params, data, init_c.rows());
+            let fp = checkpoint::config_fingerprint_src(&params, src, init_c.rows());
             fit = fit.with_checkpoints(cfg, fp, self.seed);
         }
         Ok(fit)
@@ -585,6 +749,117 @@ mod tests {
             .fit(&data)
             .unwrap_err();
         assert!(matches!(err, KMeansError::Checkpoint(_)), "{err}");
+    }
+
+    #[test]
+    fn init_kind_parses_and_roundtrips() {
+        assert_eq!(InitKind::parse("auto"), Some(InitKind::Auto));
+        assert_eq!(InitKind::parse("KMEANS++"), Some(InitKind::PlusPlus));
+        assert_eq!(InitKind::parse("plusplus"), Some(InitKind::PlusPlus));
+        assert_eq!(InitKind::parse("kmeans||"), Some(InitKind::Parallel));
+        assert_eq!(InitKind::parse("parallel"), Some(InitKind::Parallel));
+        assert!(InitKind::parse("bogus").is_none());
+        for k in [InitKind::Auto, InitKind::PlusPlus, InitKind::Parallel] {
+            assert_eq!(InitKind::parse(k.name()), Some(k), "{}", k.name());
+        }
+        assert_eq!(InitKind::default(), InitKind::Auto);
+    }
+
+    #[test]
+    fn streamed_source_rejects_tree_algorithms_and_streams_the_rest() {
+        let data = synth::gaussian_blobs(120, 3, 3, 0.5, 11);
+        let dir = std::env::temp_dir()
+            .join(format!("covermeans_builder_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blobs.dmat");
+        crate::data::write_dmat(&path, &data).unwrap();
+        let src =
+            DataSource::open(&path, crate::data::SourceBackend::Chunked, 16, 0).unwrap();
+
+        // Tree variants must reject streamed input with a diagnosable
+        // error, not panic inside the driver factory.
+        for alg in [
+            Algorithm::CoverMeans,
+            Algorithm::Hybrid,
+            Algorithm::Kanungo,
+            Algorithm::PellegMoore,
+            Algorithm::DualTree,
+            Algorithm::Exponion,
+        ] {
+            let err = KMeans::new(3).algorithm(alg).fit_source(&src).unwrap_err();
+            assert_eq!(
+                err,
+                KMeansError::StreamedUnsupported { algorithm: alg, backend: "chunked" },
+                "{}",
+                alg.name()
+            );
+            assert!(err.to_string().contains("streamed"), "{err}");
+        }
+
+        // Streaming-capable algorithms accept the same source and match
+        // the in-RAM fit bit for bit (init pinned: Auto resolves to ++
+        // resident and || streamed, so defaults would legitimately
+        // differ).
+        for alg in [Algorithm::Standard, Algorithm::Hamerly, Algorithm::MiniBatch] {
+            assert!(alg.streams());
+            let streamed = KMeans::new(3)
+                .algorithm(alg)
+                .init(InitKind::Parallel)
+                .seed(5)
+                .fit_source(&src)
+                .unwrap();
+            let resident = KMeans::new(3)
+                .algorithm(alg)
+                .init(InitKind::Parallel)
+                .seed(5)
+                .fit(&data)
+                .unwrap();
+            assert_eq!(streamed.labels, resident.labels, "{}", alg.name());
+            assert_eq!(streamed.iterations, resident.iterations, "{}", alg.name());
+            assert_eq!(streamed.distances, resident.distances, "{}", alg.name());
+            for (a, b) in streamed
+                .centers
+                .as_slice()
+                .iter()
+                .zip(resident.centers.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", alg.name());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_init_resolves_by_source_backend() {
+        let data = synth::gaussian_blobs(150, 2, 3, 0.5, 12);
+        let dir = std::env::temp_dir()
+            .join(format!("covermeans_builder_auto_init_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blobs.dmat");
+        crate::data::write_dmat(&path, &data).unwrap();
+        let src =
+            DataSource::open(&path, crate::data::SourceBackend::Chunked, 32, 0).unwrap();
+
+        // Streamed + Auto must equal streamed + explicit k-means||...
+        let auto = KMeans::new(4).seed(3).fit_source(&src).unwrap();
+        let par = KMeans::new(4)
+            .seed(3)
+            .init(InitKind::Parallel)
+            .fit_source(&src)
+            .unwrap();
+        assert_eq!(auto.labels, par.labels);
+        assert_eq!(auto.distances, par.distances);
+
+        // ...and resident + Auto must equal resident + explicit k-means++.
+        let auto_r = KMeans::new(4).seed(3).fit(&data).unwrap();
+        let pp = KMeans::new(4)
+            .seed(3)
+            .init(InitKind::PlusPlus)
+            .fit(&data)
+            .unwrap();
+        assert_eq!(auto_r.labels, pp.labels);
+        assert_eq!(auto_r.distances, pp.distances);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -109,10 +109,22 @@ impl fmt::Display for Generation {
 /// checkpointable), and the checkpoint triggers themselves (when to
 /// snapshot does not change what is computed).
 pub fn config_fingerprint(params: &KMeansParams, data: &Matrix, k: usize) -> u64 {
+    config_fingerprint_src(params, data.into(), k)
+}
+
+/// [`config_fingerprint`] over any data source backend. The sampling
+/// indices depend only on the flat element count, so a dataset served
+/// in-RAM, mmapped, or chunk-streamed yields the *same* fingerprint —
+/// a fit checkpointed from one backend resumes from any other.
+pub fn config_fingerprint_src(
+    params: &KMeansParams,
+    src: crate::data::SourceView<'_>,
+    k: usize,
+) -> u64 {
     let mut buf = Vec::with_capacity(96 + 1024 * 8);
     buf.extend_from_slice(params.algorithm.name().as_bytes());
-    bin::put_u64(&mut buf, data.rows() as u64);
-    bin::put_u64(&mut buf, data.cols() as u64);
+    bin::put_u64(&mut buf, src.rows() as u64);
+    bin::put_u64(&mut buf, src.cols() as u64);
     bin::put_u64(&mut buf, k as u64);
     bin::put_u64(&mut buf, params.max_iter as u64);
     bin::put_f64(&mut buf, params.tol);
@@ -124,10 +136,12 @@ pub fn config_fingerprint(params: &KMeansParams, data: &Matrix, k: usize) -> u64
     // Sampled data content, the workspace cache's DataKey idiom: up to
     // 1024 evenly-spaced elements' exact bit patterns. Catches "same
     // shape, different dataset" without an O(nd) pass per snapshot.
-    let s = data.as_slice();
-    let step = (s.len() / 1024).max(1);
-    for &v in s.iter().step_by(step) {
-        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    let len = src.rows() * src.cols();
+    let step = (len / 1024).max(1);
+    let mut i = 0;
+    while i < len {
+        buf.extend_from_slice(&src.flat_element(i).to_bits().to_le_bytes());
+        i += step;
     }
     fnv1a(&buf)
 }
@@ -425,7 +439,19 @@ impl KMeansCheckpoint {
         data: &Matrix,
         k: usize,
     ) -> Result<()> {
-        let want = config_fingerprint(params, data, k);
+        self.validate_src(params, data.into(), k)
+    }
+
+    /// [`KMeansCheckpoint::validate`] over any data source backend — the
+    /// fingerprint is backend-invariant, so a snapshot written from an
+    /// in-RAM fit validates against the same dataset streamed from disk.
+    pub fn validate_src(
+        &self,
+        params: &KMeansParams,
+        src: crate::data::SourceView<'_>,
+        k: usize,
+    ) -> Result<()> {
+        let want = config_fingerprint_src(params, src, k);
         if self.fingerprint != want {
             bail!(
                 "checkpoint fingerprint mismatch (checkpoint {:#018x}, this \
@@ -527,28 +553,14 @@ mod tests {
     #[test]
     fn corruption_is_diagnosed_never_panics() {
         let buf = sample().to_bytes();
-        // Truncations at structural boundaries and arbitrary cuts.
-        for cut in [0, 2, 6, 30, buf.len() / 2, buf.len() - 4, buf.len() - 1] {
-            let err = KMeansCheckpoint::from_bytes(&buf[..cut]).unwrap_err();
-            assert!(!format!("{err:#}").is_empty(), "cut at {cut}");
-        }
-        // Single-bit flips must fail the checksum.
-        for at in [4, 20, buf.len() / 2, buf.len() - 12] {
-            let mut bad = buf.clone();
-            bad[at] ^= 0x01;
-            let err = KMeansCheckpoint::from_bytes(&bad).unwrap_err();
-            let msg = format!("{err:#}");
-            assert!(
-                msg.contains("checksum") || msg.contains("magic"),
-                "flip at {at}: {msg}"
-            );
-        }
-        // Trailing garbage invalidates the checksum (it moves).
-        let mut bad = buf.clone();
-        bad.extend_from_slice(b"junk");
-        assert!(KMeansCheckpoint::from_bytes(&bad).is_err());
-        // Not a checkpoint at all.
-        assert!(KMeansCheckpoint::from_bytes(b"FMAT1\n2 2\n....").is_err());
+        // The whole container is checksummed, so every fault in the
+        // shared battery must land on the checksum or the magic.
+        crate::testutil::corruption::assert_rejects_faults(
+            ".kmc checkpoint",
+            &buf,
+            buf.len(),
+            KMeansCheckpoint::from_bytes,
+        );
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::data::Matrix;
+use crate::data::{Matrix, SourceView};
 use crate::kmeans::bounds::CentroidAccum;
 use crate::kmeans::checkpoint::{CheckpointConfig, KMeansCheckpoint};
 use crate::kmeans::{
@@ -247,7 +247,7 @@ fn maybe_crash_after_iter(iter: usize) {
 /// [`Fit::from_driver`] for a custom [`KMeansDriver`]), then either call
 /// [`Fit::step`] yourself or [`Fit::run`] to completion.
 pub struct Fit<'a> {
-    data: &'a Matrix,
+    src: SourceView<'a>,
     driver: Box<dyn KMeansDriver + 'a>,
     centers: Matrix,
     acc: CentroidAccum,
@@ -276,9 +276,22 @@ impl<'a> Fit<'a> {
         max_iter: usize,
         tol: f64,
     ) -> Fit<'a> {
+        Fit::from_driver_src(data.into(), driver, init, max_iter, tol)
+    }
+
+    /// [`Fit::from_driver`] over any data source backend. The loop itself
+    /// touches the data only for checkpoint metadata and SSE evaluation;
+    /// whether iterations stream is the driver's business.
+    pub(crate) fn from_driver_src(
+        src: SourceView<'a>,
+        driver: Box<dyn KMeansDriver + 'a>,
+        init: &Matrix,
+        max_iter: usize,
+        tol: f64,
+    ) -> Fit<'a> {
         let k = init.rows();
         Fit {
-            data,
+            src,
             driver,
             centers: init.clone(),
             acc: CentroidAccum::new(k, init.cols()),
@@ -427,7 +440,7 @@ impl<'a> Fit<'a> {
             algorithm: self.driver.algorithm(),
             k: self.centers.rows(),
             dim: self.centers.cols(),
-            n: self.data.rows(),
+            n: self.src.rows(),
             seed: ck.seed,
             iter: self.iter as u64,
             converged: self.converged,
@@ -474,8 +487,8 @@ impl<'a> Fit<'a> {
                 self.driver.algorithm().name()
             );
         }
-        if snap.n != self.data.rows()
-            || snap.dim != self.data.cols()
+        if snap.n != self.src.rows()
+            || snap.dim != self.src.cols()
             || snap.k != self.centers.rows()
         {
             bail!(
@@ -484,8 +497,8 @@ impl<'a> Fit<'a> {
                 snap.n,
                 snap.dim,
                 snap.k,
-                self.data.rows(),
-                self.data.cols(),
+                self.src.rows(),
+                self.src.cols(),
                 self.centers.rows()
             );
         }
@@ -571,7 +584,7 @@ impl<'a> Fit<'a> {
         if self.iter == 0 {
             return f64::INFINITY;
         }
-        crate::metrics::sse(self.data, self.driver.labels(), &self.centers)
+        crate::metrics::sse_src(self.src, self.driver.labels(), &self.centers)
     }
 }
 
@@ -653,6 +666,40 @@ pub(crate) fn new_driver<'a>(
         Algorithm::MiniBatch => {
             unreachable!("mini-batch is approximate; it does not use the exact driver loop")
         }
+    }
+}
+
+/// [`new_driver`] over any data source backend. In-RAM sources delegate to
+/// [`new_driver`] (all algorithms, workspace tree caching intact); streamed
+/// sources construct the streaming-capable drivers directly. The builder
+/// rejects streamed input for non-streaming algorithms with a typed error
+/// *before* reaching this point, so the panic here is a programming-error
+/// backstop, not a user-facing diagnostic.
+pub(crate) fn new_driver_src<'a>(
+    src: SourceView<'a>,
+    k: usize,
+    params: &KMeansParams,
+    ws: &mut Workspace,
+) -> (Box<dyn KMeansDriver + 'a>, u64, Duration) {
+    if let Some(data) = src.as_matrix() {
+        return new_driver(data, k, params, ws);
+    }
+    let par = ws.parallelism_opts(params.threads, params.pin_workers);
+    match params.algorithm {
+        Algorithm::Standard => {
+            (Box::new(lloyd::LloydDriver::from_source(src, par)), 0, Duration::ZERO)
+        }
+        Algorithm::Elkan => {
+            (Box::new(elkan::ElkanDriver::from_source(src, k, par)), 0, Duration::ZERO)
+        }
+        Algorithm::Hamerly => {
+            (Box::new(hamerly::HamerlyDriver::from_source(src, par)), 0, Duration::ZERO)
+        }
+        other => panic!(
+            "{} requires a resident data source (the builder should have \
+             rejected streamed input)",
+            other.name()
+        ),
     }
 }
 

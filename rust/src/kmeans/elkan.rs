@@ -4,16 +4,18 @@
 //! but O(n·k) bound memory and per-iteration update cost — the overhead
 //! the paper's Fig. 1b/Table 3 shows dominating on low-d data.
 
-use crate::data::Matrix;
-use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum, InterCenter};
+use crate::data::{Matrix, SourceView};
+use crate::kmeans::bounds::{accumulate_in_order_src, CentroidAccum, InterCenter};
 use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
 use crate::parallel::{Parallelism, SharedSlices};
 
-/// Stored-bounds driver: `u` per point, `l` per (point, center).
+/// Stored-bounds driver: `u` per point, `l` per (point, center). Streams:
+/// the bounds stay resident (O(n·k) — streaming Elkan only pays off when
+/// d ≫ k), only the points themselves come through the source.
 pub(crate) struct ElkanDriver<'a> {
-    data: &'a Matrix,
+    src: SourceView<'a>,
     k: usize,
     labels: Vec<u32>,
     upper: Vec<f64>,
@@ -24,9 +26,17 @@ pub(crate) struct ElkanDriver<'a> {
 
 impl<'a> ElkanDriver<'a> {
     pub(crate) fn new(data: &'a Matrix, k: usize, par: Parallelism) -> ElkanDriver<'a> {
-        let n = data.rows();
+        ElkanDriver::from_source(data.into(), k, par)
+    }
+
+    pub(crate) fn from_source(
+        src: SourceView<'a>,
+        k: usize,
+        par: Parallelism,
+    ) -> ElkanDriver<'a> {
+        let n = src.rows();
         ElkanDriver {
-            data,
+            src,
             k,
             labels: vec![0u32; n],
             upper: vec![0.0f64; n],
@@ -34,7 +44,6 @@ impl<'a> ElkanDriver<'a> {
             par,
         }
     }
-
 }
 
 impl KMeansDriver for ElkanDriver<'_> {
@@ -50,8 +59,9 @@ impl KMeansDriver for ElkanDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let data = self.data;
-        let n = data.rows();
+        let src = self.src;
+        let n = src.rows();
+        let cols = src.cols();
         let k = self.k;
         {
             let labels_sh = SharedSlices::new(&mut self.labels);
@@ -62,29 +72,31 @@ impl KMeansDriver for ElkanDriver<'_> {
                 let upper = unsafe { upper_sh.range(r.clone()) };
                 let lower = unsafe { lower_sh.range(r.start * k..r.end * k) };
                 let mut dc = DistCounter::new();
-                for (j, i) in r.clone().enumerate() {
-                    let p = data.row(i);
-                    let lrow = &mut lower[j * k..(j + 1) * k];
-                    let mut best = 0u32;
-                    let mut best_d = f64::INFINITY;
-                    for c in 0..k {
-                        let dd = dc.d(p, centers.row(c));
-                        lrow[c] = dd;
-                        if dd < best_d {
-                            best_d = dd;
-                            best = c as u32;
+                src.visit(r.clone(), |start, block| {
+                    for (off, p) in block.chunks_exact(cols).enumerate() {
+                        let j = start + off - r.start;
+                        let lrow = &mut lower[j * k..(j + 1) * k];
+                        let mut best = 0u32;
+                        let mut best_d = f64::INFINITY;
+                        for c in 0..k {
+                            let dd = dc.d(p, centers.row(c));
+                            lrow[c] = dd;
+                            if dd < best_d {
+                                best_d = dd;
+                                best = c as u32;
+                            }
                         }
+                        labels[j] = best;
+                        upper[j] = best_d;
                     }
-                    labels[j] = best;
-                    upper[j] = best_d;
-                }
+                });
                 dc.count()
             });
             for count in counts {
                 dist.add_bulk(count);
             }
         }
-        accumulate_in_order(data, &self.labels, acc);
+        accumulate_in_order_src(src, &self.labels, acc);
         n
     }
 
@@ -95,8 +107,9 @@ impl KMeansDriver for ElkanDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let data = self.data;
-        let n = data.rows();
+        let src = self.src;
+        let n = src.rows();
+        let cols = src.cols();
         let k = self.k;
         let ic = InterCenter::compute_par(centers, dist, &self.par);
         let mut changed = 0usize;
@@ -111,45 +124,50 @@ impl KMeansDriver for ElkanDriver<'_> {
                 let lower = unsafe { lower_sh.range(r.start * k..r.end * k) };
                 let mut dc = DistCounter::new();
                 let mut changed = 0usize;
-                for (jj, i) in r.clone().enumerate() {
-                    let p = data.row(i);
-                    let mut a = labels[jj] as usize;
-                    // Global filter: u <= s(a) means no other center wins.
-                    if upper[jj] > ic.s[a] {
-                        let lrow = &mut lower[jj * k..(jj + 1) * k];
-                        let mut tight = false;
-                        for j in 0..k {
-                            if j == a {
-                                continue;
-                            }
-                            // Elkan's two per-center filters (Eqs. 4-5).
-                            if upper[jj] <= lrow[j] || upper[jj] <= 0.5 * ic.d(a, j) {
-                                continue;
-                            }
-                            if !tight {
-                                // Tighten the upper bound to the truth.
-                                upper[jj] = dc.d(p, centers.row(a));
-                                lrow[a] = upper[jj];
-                                tight = true;
+                src.visit(r.clone(), |start, block| {
+                    for (off, p) in block.chunks_exact(cols).enumerate() {
+                        let jj = start + off - r.start;
+                        let mut a = labels[jj] as usize;
+                        // Global filter: u <= s(a) means no other center
+                        // wins.
+                        if upper[jj] > ic.s[a] {
+                            let lrow = &mut lower[jj * k..(jj + 1) * k];
+                            let mut tight = false;
+                            for j in 0..k {
+                                if j == a {
+                                    continue;
+                                }
+                                // Elkan's two per-center filters (Eqs. 4-5).
                                 if upper[jj] <= lrow[j]
                                     || upper[jj] <= 0.5 * ic.d(a, j)
                                 {
                                     continue;
                                 }
-                            }
-                            let dj = dc.d(p, centers.row(j));
-                            lrow[j] = dj;
-                            if dj < upper[jj] {
-                                a = j;
-                                upper[jj] = dj;
+                                if !tight {
+                                    // Tighten the upper bound to the truth.
+                                    upper[jj] = dc.d(p, centers.row(a));
+                                    lrow[a] = upper[jj];
+                                    tight = true;
+                                    if upper[jj] <= lrow[j]
+                                        || upper[jj] <= 0.5 * ic.d(a, j)
+                                    {
+                                        continue;
+                                    }
+                                }
+                                let dj = dc.d(p, centers.row(j));
+                                lrow[j] = dj;
+                                if dj < upper[jj] {
+                                    a = j;
+                                    upper[jj] = dj;
+                                }
                             }
                         }
+                        if labels[jj] != a as u32 {
+                            labels[jj] = a as u32;
+                            changed += 1;
+                        }
                     }
-                    if labels[jj] != a as u32 {
-                        labels[jj] = a as u32;
-                        changed += 1;
-                    }
-                }
+                });
                 (changed, dc.count())
             });
             for (ch, count) in results {
@@ -157,7 +175,7 @@ impl KMeansDriver for ElkanDriver<'_> {
                 dist.add_bulk(count);
             }
         }
-        accumulate_in_order(data, &self.labels, acc);
+        accumulate_in_order_src(src, &self.labels, acc);
         changed
     }
 
@@ -178,7 +196,7 @@ impl KMeansDriver for ElkanDriver<'_> {
     }
 
     fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
-        let n = self.data.rows();
+        let n = self.src.rows();
         self.labels = state.labels_checked(n)?.to_vec();
         self.upper = state.f64_slot(0, n, "upper bounds")?.to_vec();
         self.lower = state

@@ -4,16 +4,20 @@
 //! forces full rescans of many points (the effect visible in the paper's
 //! Fig. 1a, where Hamerly computes the most distances of the bounds family).
 
-use crate::data::Matrix;
-use crate::kmeans::bounds::{accumulate_in_order, nearest_two, CentroidAccum, InterCenter};
+use crate::data::{Matrix, SourceView};
+use crate::kmeans::bounds::{
+    accumulate_in_order_src, nearest_two, CentroidAccum, InterCenter,
+};
 use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
 use crate::parallel::{Parallelism, SharedSlices};
 
-/// Merged-bounds driver: `(u, l)` per point.
+/// Merged-bounds driver: `(u, l)` per point. Streams: both passes visit
+/// each worker's chunk range through the data source; the bounds live in
+/// RAM (O(n), not O(n·d)), only the points themselves stream.
 pub(crate) struct HamerlyDriver<'a> {
-    data: &'a Matrix,
+    src: SourceView<'a>,
     labels: Vec<u32>,
     upper: Vec<f64>,
     lower: Vec<f64>,
@@ -22,16 +26,19 @@ pub(crate) struct HamerlyDriver<'a> {
 
 impl<'a> HamerlyDriver<'a> {
     pub(crate) fn new(data: &'a Matrix, par: Parallelism) -> HamerlyDriver<'a> {
-        let n = data.rows();
+        HamerlyDriver::from_source(data.into(), par)
+    }
+
+    pub(crate) fn from_source(src: SourceView<'a>, par: Parallelism) -> HamerlyDriver<'a> {
+        let n = src.rows();
         HamerlyDriver {
-            data,
+            src,
             labels: vec![0u32; n],
             upper: vec![0.0f64; n],
             lower: vec![0.0f64; n],
             par,
         }
     }
-
 }
 
 impl KMeansDriver for HamerlyDriver<'_> {
@@ -46,8 +53,9 @@ impl KMeansDriver for HamerlyDriver<'_> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let data = self.data;
-        let n = data.rows();
+        let src = self.src;
+        let n = src.rows();
+        let cols = src.cols();
         {
             let labels_sh = SharedSlices::new(&mut self.labels);
             let upper_sh = SharedSlices::new(&mut self.upper);
@@ -57,20 +65,22 @@ impl KMeansDriver for HamerlyDriver<'_> {
                 let upper = unsafe { upper_sh.range(r.clone()) };
                 let lower = unsafe { lower_sh.range(r.clone()) };
                 let mut dc = DistCounter::new();
-                for (j, i) in r.clone().enumerate() {
-                    let p = data.row(i);
-                    let (c1, d1, _c2, d2) = nearest_two(p, centers, &mut dc);
-                    labels[j] = c1;
-                    upper[j] = d1;
-                    lower[j] = d2;
-                }
+                src.visit(r.clone(), |start, block| {
+                    for (off, p) in block.chunks_exact(cols).enumerate() {
+                        let j = start + off - r.start;
+                        let (c1, d1, _c2, d2) = nearest_two(p, centers, &mut dc);
+                        labels[j] = c1;
+                        upper[j] = d1;
+                        lower[j] = d2;
+                    }
+                });
                 dc.count()
             });
             for count in counts {
                 dist.add_bulk(count);
             }
         }
-        accumulate_in_order(data, &self.labels, acc);
+        accumulate_in_order_src(src, &self.labels, acc);
         n
     }
 
@@ -82,8 +92,9 @@ impl KMeansDriver for HamerlyDriver<'_> {
         dist: &mut DistCounter,
     ) -> usize {
         let ic = InterCenter::compute_par(centers, dist, &self.par);
-        let data = self.data;
-        let n = data.rows();
+        let src = self.src;
+        let n = src.rows();
+        let cols = src.cols();
         let mut changed = 0usize;
         {
             let labels_sh = SharedSlices::new(&mut self.labels);
@@ -96,25 +107,27 @@ impl KMeansDriver for HamerlyDriver<'_> {
                 let lower = unsafe { lower_sh.range(r.clone()) };
                 let mut dc = DistCounter::new();
                 let mut changed = 0usize;
-                for (j, i) in r.clone().enumerate() {
-                    let p = data.row(i);
-                    let a = labels[j] as usize;
-                    let m = ic.s[a].max(lower[j]);
-                    if upper[j] > m {
-                        // Tighten u to the true distance and re-test.
-                        upper[j] = dc.d(p, centers.row(a));
+                src.visit(r.clone(), |start, block| {
+                    for (off, p) in block.chunks_exact(cols).enumerate() {
+                        let j = start + off - r.start;
+                        let a = labels[j] as usize;
+                        let m = ic.s[a].max(lower[j]);
                         if upper[j] > m {
-                            // Full rescan: recompute the two nearest.
-                            let (c1, d1, _c2, d2) = nearest_two(p, centers, &mut dc);
-                            if c1 != labels[j] {
-                                labels[j] = c1;
-                                changed += 1;
+                            // Tighten u to the true distance and re-test.
+                            upper[j] = dc.d(p, centers.row(a));
+                            if upper[j] > m {
+                                // Full rescan: recompute the two nearest.
+                                let (c1, d1, _c2, d2) = nearest_two(p, centers, &mut dc);
+                                if c1 != labels[j] {
+                                    labels[j] = c1;
+                                    changed += 1;
+                                }
+                                upper[j] = d1;
+                                lower[j] = d2;
                             }
-                            upper[j] = d1;
-                            lower[j] = d2;
                         }
                     }
-                }
+                });
                 (changed, dc.count())
             });
             for (ch, count) in results {
@@ -122,7 +135,7 @@ impl KMeansDriver for HamerlyDriver<'_> {
                 dist.add_bulk(count);
             }
         }
-        accumulate_in_order(data, &self.labels, acc);
+        accumulate_in_order_src(src, &self.labels, acc);
         changed
     }
 
@@ -143,7 +156,7 @@ impl KMeansDriver for HamerlyDriver<'_> {
     }
 
     fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
-        let n = self.data.rows();
+        let n = self.src.rows();
         self.labels = state.labels_checked(n)?.to_vec();
         self.upper = state.f64_slot(0, n, "upper bounds")?.to_vec();
         self.lower = state.f64_slot(1, n, "lower bounds")?.to_vec();

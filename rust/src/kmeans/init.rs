@@ -31,7 +31,7 @@
 //!   involved, so a skipped evaluation provably could not have changed
 //!   the stored (computed) `d2` value.
 
-use crate::data::Matrix;
+use crate::data::{Matrix, SourceView};
 use crate::metrics::DistCounter;
 use crate::parallel::{Parallelism, SharedSlices};
 use crate::rng::Rng;
@@ -71,13 +71,32 @@ pub fn kmeans_plus_plus_par(
     dist: &mut DistCounter,
     par: &Parallelism,
 ) -> Matrix {
-    assert!(k >= 1 && k <= data.rows(), "k={k} out of range");
-    let n = data.rows();
+    kmeans_plus_plus_src(data.into(), k, seed, dist, par)
+}
+
+/// [`kmeans_plus_plus_par`] over any data source backend. The chosen rows
+/// are gathered resident as they are drawn ([`SourceView::read_rows`] —
+/// exact bits), so the arithmetic, the RNG stream, and the counted
+/// distances match the in-RAM seeding bit for bit on every backend.
+pub fn kmeans_plus_plus_src(
+    src: SourceView<'_>,
+    k: usize,
+    seed: u64,
+    dist: &mut DistCounter,
+    par: &Parallelism,
+) -> Matrix {
+    assert!(k >= 1 && k <= src.rows(), "k={k} out of range");
+    let n = src.rows();
+    let cols = src.cols();
     let mut rng = Rng::derive(seed, "init/kmeans++");
     let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    // Resident copies of the chosen rows (k·d floats — the init working
+    // set stays small however large the streamed dataset is).
+    let mut cand_rows: Vec<Vec<f64>> = Vec::with_capacity(k);
 
     let first = rng.below(n);
     chosen.push(first);
+    cand_rows.push(src.read_rows(&[first]).as_slice().to_vec());
 
     // Squared distance to the nearest chosen center, updated
     // incrementally, plus that center's identity (which feeds the
@@ -85,13 +104,16 @@ pub fn kmeans_plus_plus_par(
     let mut d2 = vec![0.0f64; n];
     let mut near = vec![0u32; n];
     {
+        let first_row = &cand_rows[0];
         let d2_sh = SharedSlices::new(&mut d2);
         let tallies = par.map_chunks(n, |r| {
             let d2c = unsafe { d2_sh.range(r.clone()) };
             let mut dc = DistCounter::new();
-            for (j, i) in r.clone().enumerate() {
-                d2c[j] = dc.sq(data.row(i), data.row(first));
-            }
+            src.visit(r.clone(), |start, block| {
+                for (off, p) in block.chunks_exact(cols).enumerate() {
+                    d2c[start + off - r.start] = dc.sq(p, first_row);
+                }
+            });
             dc.count()
         });
         for t in tallies {
@@ -103,7 +125,7 @@ pub fn kmeans_plus_plus_par(
     // one — the O(k) pruning precomputation that saves O(n) point-side
     // evaluations per round.
     let mut cc2 = vec![0.0f64; k];
-    let slack = prune_slack(data.cols());
+    let slack = prune_slack(cols);
     while chosen.len() < k {
         let next = match rng.choose_weighted(&d2) {
             Some(i) => i,
@@ -111,44 +133,281 @@ pub fn kmeans_plus_plus_par(
             // fall back to an unchosen index to keep k centers.
             None => (0..n).find(|i| !chosen.contains(i)).unwrap_or(0),
         };
-        for (j, &c) in chosen.iter().enumerate() {
-            cc2[j] = dist.sq(data.row(c), data.row(next));
+        let next_row = src.read_rows(&[next]).as_slice().to_vec();
+        for (j, row) in cand_rows.iter().enumerate() {
+            cc2[j] = dist.sq(row, &next_row);
         }
         let new_id = chosen.len() as u32;
         chosen.push(next);
         {
             let cc2 = &cc2;
+            let next_row = &next_row;
             let d2_sh = SharedSlices::new(&mut d2);
             let near_sh = SharedSlices::new(&mut near);
             let tallies = par.map_chunks(n, |r| {
                 let d2c = unsafe { d2_sh.range(r.clone()) };
                 let nearc = unsafe { near_sh.range(r.clone()) };
                 let mut dc = DistCounter::new();
-                for (j, i) in r.clone().enumerate() {
-                    if d2c[j] <= 0.0 {
-                        continue;
+                src.visit(r.clone(), |start, block| {
+                    for (off, p) in block.chunks_exact(cols).enumerate() {
+                        let j = start + off - r.start;
+                        if d2c[j] <= 0.0 {
+                            continue;
+                        }
+                        // Triangle pruning (exact; see module docs): in
+                        // squares, d(c,q)² >= 4 d(x,c)² ⇔ d(c,q) >=
+                        // 2 d(x,c), with `slack` absorbing the rounding
+                        // of the computed squared distances.
+                        if cc2[nearc[j] as usize] >= 4.0 * d2c[j] * slack {
+                            continue;
+                        }
+                        let nd = dc.sq(p, next_row);
+                        if nd < d2c[j] {
+                            d2c[j] = nd;
+                            nearc[j] = new_id;
+                        }
                     }
-                    // Triangle pruning (exact; see module docs): in
-                    // squares, d(c,q)² >= 4 d(x,c)² ⇔ d(c,q) >= 2 d(x,c),
-                    // with `slack` absorbing the rounding of the computed
-                    // squared distances.
-                    if cc2[nearc[j] as usize] >= 4.0 * d2c[j] * slack {
-                        continue;
-                    }
-                    let nd = dc.sq(data.row(i), data.row(next));
-                    if nd < d2c[j] {
-                        d2c[j] = nd;
-                        nearc[j] = new_id;
-                    }
-                }
+                });
                 dc.count()
             });
             for t in tallies {
                 dist.add_bulk(t);
             }
         }
+        cand_rows.push(next_row);
     }
-    data.select_rows(&chosen)
+    src.read_rows(&chosen)
+}
+
+/// Counter-based uniform draw for the `k-means||` selection step: hash
+/// `(seed, round, point)` through splitmix64 into `[0, 1)`. Every point's
+/// Bernoulli decision is a pure function of those three values — no shared
+/// RNG stream to advance — so the selected oversample set is invariant to
+/// scan order, thread count, chunking, and source backend.
+fn bernoulli_u(sel_seed: u64, round: usize, point: usize) -> f64 {
+    let mut s = sel_seed
+        ^ (round as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (point as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    let z = crate::rng::splitmix64(&mut s);
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// `k-means||` seeding (Bahmani et al., "Scalable k-means++"): instead of
+/// k strictly sequential D² draws, run a few oversampling rounds that each
+/// select ~`oversample · k` candidates in one pass (point `j` joins with
+/// probability `min(1, l · d2[j] / φ)`), then recluster the small weighted
+/// candidate set down to `k` with weighted k-means++. One full pass per
+/// round instead of one per center — the natural seeder for streamed
+/// sources, where every pass over the data costs real I/O.
+///
+/// Deterministic contract: the centers are a function of `(data, k, seed,
+/// rounds, oversample)` only — identical at every thread count and on
+/// every source backend. The per-candidate `d2` updates reuse the
+/// triangle-pruned, sharded machinery of [`kmeans_plus_plus_par`];
+/// the per-point selection uses counter-based draws ([`bernoulli_u`]) so
+/// it never depends on scan order. Sequential convenience wrapper over
+/// [`init_kmeanspar_par`].
+pub fn init_kmeanspar(
+    data: &Matrix,
+    k: usize,
+    seed: u64,
+    rounds: usize,
+    oversample: f64,
+    dist: &mut DistCounter,
+) -> Matrix {
+    init_kmeanspar_par(data, k, seed, rounds, oversample, dist, &Parallelism::sequential())
+}
+
+/// [`init_kmeanspar`] over `par`'s thread budget.
+pub fn init_kmeanspar_par(
+    data: &Matrix,
+    k: usize,
+    seed: u64,
+    rounds: usize,
+    oversample: f64,
+    dist: &mut DistCounter,
+    par: &Parallelism,
+) -> Matrix {
+    init_kmeanspar_src(data.into(), k, seed, rounds, oversample, dist, par)
+}
+
+/// [`init_kmeanspar`] over any data source backend (the default init for
+/// streamed fits).
+pub fn init_kmeanspar_src(
+    src: SourceView<'_>,
+    k: usize,
+    seed: u64,
+    rounds: usize,
+    oversample: f64,
+    dist: &mut DistCounter,
+    par: &Parallelism,
+) -> Matrix {
+    assert!(k >= 1 && k <= src.rows(), "k={k} out of range");
+    assert!(oversample > 0.0, "oversample must be positive");
+    let n = src.rows();
+    let cols = src.cols();
+    let mut rng = Rng::derive(seed, "init/kmeans||");
+
+    let first = rng.below(n);
+    // The counter seed for the per-point Bernoulli draws, taken from the
+    // stream once up front so every later draw is order-independent.
+    let sel_seed = rng.next_u64();
+
+    let mut candidates: Vec<usize> = vec![first];
+    let mut cand_rows: Vec<Vec<f64>> =
+        vec![src.read_rows(&[first]).as_slice().to_vec()];
+
+    // Squared distance to the nearest candidate plus its identity, exactly
+    // as in k-means++ (the identity feeds both the triangle pruning and
+    // the final per-candidate weights).
+    let mut d2 = vec![0.0f64; n];
+    let mut near = vec![0u32; n];
+    {
+        let first_row = &cand_rows[0];
+        let d2_sh = SharedSlices::new(&mut d2);
+        let tallies = par.map_chunks(n, |r| {
+            let d2c = unsafe { d2_sh.range(r.clone()) };
+            let mut dc = DistCounter::new();
+            src.visit(r.clone(), |start, block| {
+                for (off, p) in block.chunks_exact(cols).enumerate() {
+                    d2c[start + off - r.start] = dc.sq(p, first_row);
+                }
+            });
+            dc.count()
+        });
+        for t in tallies {
+            dist.add_bulk(t);
+        }
+    }
+
+    let slack = prune_slack(cols);
+    let l = oversample * k as f64;
+    for round in 0..rounds {
+        // φ in canonical point order (bit-identical on every backend).
+        let phi: f64 = d2.iter().sum();
+        if !(phi > 0.0) {
+            break;
+        }
+        // Select this round's candidates: `u · φ < l · d2[j]` is the
+        // Bernoulli(min(1, l·d2/φ)) test without a division. Already
+        // chosen points have d2 = 0 and never re-enter.
+        let fresh: Vec<usize> = (0..n)
+            .filter(|&j| bernoulli_u(sel_seed, round, j) * phi < l * d2[j])
+            .collect();
+        if fresh.is_empty() {
+            continue;
+        }
+        let fresh_rows = src.read_rows(&fresh);
+        for (fi, &fj) in fresh.iter().enumerate() {
+            let new_row = fresh_rows.row(fi);
+            // Triangle-pruning precomputation vs every current candidate.
+            let mut cc2 = vec![0.0f64; cand_rows.len()];
+            for (j, row) in cand_rows.iter().enumerate() {
+                cc2[j] = dist.sq(row, new_row);
+            }
+            let new_id = candidates.len() as u32;
+            candidates.push(fj);
+            {
+                let cc2 = &cc2;
+                let d2_sh = SharedSlices::new(&mut d2);
+                let near_sh = SharedSlices::new(&mut near);
+                let tallies = par.map_chunks(n, |r| {
+                    let d2c = unsafe { d2_sh.range(r.clone()) };
+                    let nearc = unsafe { near_sh.range(r.clone()) };
+                    let mut dc = DistCounter::new();
+                    src.visit(r.clone(), |start, block| {
+                        for (off, p) in block.chunks_exact(cols).enumerate() {
+                            let j = start + off - r.start;
+                            if d2c[j] <= 0.0 {
+                                continue;
+                            }
+                            if cc2[nearc[j] as usize] >= 4.0 * d2c[j] * slack {
+                                continue;
+                            }
+                            let nd = dc.sq(p, new_row);
+                            if nd < d2c[j] {
+                                d2c[j] = nd;
+                                nearc[j] = new_id;
+                            }
+                        }
+                    });
+                    dc.count()
+                });
+                for t in tallies {
+                    dist.add_bulk(t);
+                }
+            }
+            cand_rows.push(new_row.to_vec());
+        }
+    }
+
+    // Per-candidate weights: how many points it is nearest to (a tally
+    // over the maintained `near`, no distance computations).
+    let mut weights = vec![0.0f64; cand_rows.len()];
+    for &c in near.iter() {
+        weights[c as usize] += 1.0;
+    }
+
+    weighted_recluster(src, &candidates, &cand_rows, &weights, k, &mut rng, dist)
+}
+
+/// The recluster step of `k-means||`: weighted k-means++ over the small
+/// resident candidate set (sequential, counted, unpruned — the set is
+/// ~`oversample · k · rounds` rows, so pruning would buy nothing). Fewer
+/// candidates than `k` pads with the first unchosen data rows, mirroring
+/// k-means++'s degenerate-data fallback.
+fn weighted_recluster(
+    src: SourceView<'_>,
+    candidates: &[usize],
+    cand_rows: &[Vec<f64>],
+    weights: &[f64],
+    k: usize,
+    rng: &mut Rng,
+    dist: &mut DistCounter,
+) -> Matrix {
+    let m = cand_rows.len();
+    if m <= k {
+        let mut rows: Vec<Vec<f64>> = cand_rows.to_vec();
+        let mut have: Vec<usize> = candidates.to_vec();
+        let n = src.rows();
+        let mut i = 0;
+        while rows.len() < k {
+            while i < n && have.contains(&i) {
+                i += 1;
+            }
+            let idx = if i < n { i } else { 0 };
+            rows.push(src.read_rows(&[idx]).as_slice().to_vec());
+            have.push(idx);
+            i += 1;
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        return Matrix::from_rows(&refs);
+    }
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    let first = rng.choose_weighted(weights).unwrap_or(0);
+    chosen.push(first);
+    let mut d2: Vec<f64> = (0..m)
+        .map(|i| dist.sq(&cand_rows[i], &cand_rows[first]))
+        .collect();
+    let mut wd2: Vec<f64> = (0..m).map(|i| weights[i] * d2[i]).collect();
+    while chosen.len() < k {
+        let next = match rng.choose_weighted(&wd2) {
+            Some(i) => i,
+            None => (0..m).find(|i| !chosen.contains(i)).unwrap_or(0),
+        };
+        chosen.push(next);
+        for i in 0..m {
+            if d2[i] > 0.0 {
+                let nd = dist.sq(&cand_rows[i], &cand_rows[next]);
+                if nd < d2[i] {
+                    d2[i] = nd;
+                }
+            }
+            wd2[i] = weights[i] * d2[i];
+        }
+    }
+    let refs: Vec<&[f64]> = chosen.iter().map(|&i| cand_rows[i].as_slice()).collect();
+    Matrix::from_rows(&refs)
 }
 
 /// Extend an existing center set to `k` rows — the warm-started sweep
@@ -441,5 +700,206 @@ mod tests {
         let data = synth::gaussian_blobs(50, 2, 2, 0.5, 4);
         let c = random_init(&data, 10, 9);
         assert_eq!(c.rows(), 10);
+    }
+
+    /// The textbook unpruned `k-means||` loop, mirroring the production
+    /// RNG and counter-draw streams exactly but evaluating every
+    /// point-candidate distance. The pruned implementation must reproduce
+    /// its centers bit for bit while counting no more distances.
+    fn naive_kmeanspar(
+        data: &Matrix,
+        k: usize,
+        seed: u64,
+        rounds: usize,
+        oversample: f64,
+    ) -> (Matrix, u64) {
+        let n = data.rows();
+        let mut rng = Rng::derive(seed, "init/kmeans||");
+        let mut dist = DistCounter::new();
+        let first = rng.below(n);
+        let sel_seed = rng.next_u64();
+        let mut candidates = vec![first];
+        let mut cand_rows: Vec<Vec<f64>> = vec![data.row(first).to_vec()];
+        let mut d2: Vec<f64> = (0..n)
+            .map(|i| dist.sq(data.row(i), data.row(first)))
+            .collect();
+        let mut near = vec![0u32; n];
+        let l = oversample * k as f64;
+        for round in 0..rounds {
+            let phi: f64 = d2.iter().sum();
+            if !(phi > 0.0) {
+                break;
+            }
+            let fresh: Vec<usize> = (0..n)
+                .filter(|&j| bernoulli_u(sel_seed, round, j) * phi < l * d2[j])
+                .collect();
+            for &fj in &fresh {
+                let new_row = data.row(fj).to_vec();
+                // Pay the same cc2 precomputation the pruned version pays
+                // (it is part of its counted work).
+                for row in cand_rows.iter() {
+                    dist.sq(row, &new_row);
+                }
+                let new_id = candidates.len() as u32;
+                candidates.push(fj);
+                for i in 0..n {
+                    if d2[i] > 0.0 {
+                        let nd = dist.sq(data.row(i), &new_row);
+                        if nd < d2[i] {
+                            d2[i] = nd;
+                            near[i] = new_id;
+                        }
+                    }
+                }
+                cand_rows.push(new_row);
+            }
+        }
+        let mut weights = vec![0.0f64; cand_rows.len()];
+        for &c in near.iter() {
+            weights[c as usize] += 1.0;
+        }
+        let centers = weighted_recluster(
+            data.into(),
+            &candidates,
+            &cand_rows,
+            &weights,
+            k,
+            &mut rng,
+            &mut dist,
+        );
+        (centers, dist.count())
+    }
+
+    #[test]
+    fn kpar_matches_naive_reference_and_prunes() {
+        for seed in [7u64, 42, 1000] {
+            let data = synth::gaussian_blobs(400, 3, 5, 0.1, seed);
+            let mut dc = DistCounter::new();
+            let pruned = init_kmeanspar(&data, 5, seed, 3, 2.0, &mut dc);
+            let (naive, naive_count) = naive_kmeanspar(&data, 5, seed, 3, 2.0);
+            assert_eq!(pruned, naive, "seed {seed}: pruning changed the centers");
+            assert!(
+                dc.count() <= naive_count,
+                "seed {seed}: pruned {} > naive {naive_count}",
+                dc.count()
+            );
+        }
+    }
+
+    #[test]
+    fn kpar_returns_k_centers_with_bounded_init_cost() {
+        let data = synth::gaussian_blobs(600, 4, 8, 0.3, 21);
+        let mut dc = DistCounter::new();
+        let c = init_kmeanspar(&data, 8, 13, 4, 2.0, &mut dc);
+        assert_eq!((c.rows(), c.cols()), (8, 4));
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_ne!(c.row(i), c.row(j), "duplicate center");
+            }
+        }
+        // Floor: the first full pass always costs n evaluations. Ceiling:
+        // the initial pass plus one (possibly pruned) pass per accepted
+        // candidate plus the resident recluster — generously bounded by
+        // (1 + candidates) passes with candidates <= a few * l * rounds.
+        let n = 600u64;
+        assert!(dc.count() >= n, "floor: {} < {n}", dc.count());
+        let max_candidates = 1 + 8 * (2 * 4) * 4; // 1 + k * 2l * rounds
+        let ceiling = n * (1 + max_candidates as u64) + 200_000;
+        assert!(dc.count() <= ceiling, "ceiling: {} > {ceiling}", dc.count());
+    }
+
+    #[test]
+    fn kpar_deterministic_across_threads_and_seeded() {
+        let data = synth::gaussian_blobs(500, 3, 6, 0.4, 23);
+        let mut d_seq = DistCounter::new();
+        let seq = init_kmeanspar(&data, 6, 5, 3, 2.0, &mut d_seq);
+        for threads in [2usize, 4] {
+            let par = Parallelism::new(threads);
+            let mut d_par = DistCounter::new();
+            let p = init_kmeanspar_par(&data, 6, 5, 3, 2.0, &mut d_par, &par);
+            assert_eq!(p, seq, "threads={threads}");
+            assert_eq!(d_par.count(), d_seq.count(), "threads={threads}");
+        }
+        let mut d_other = DistCounter::new();
+        let other = init_kmeanspar(&data, 6, 6, 3, 2.0, &mut d_other);
+        assert_ne!(other, seq, "seed must matter");
+    }
+
+    #[test]
+    fn kpar_identical_on_every_source_backend() {
+        let data = synth::gaussian_blobs(300, 3, 4, 0.5, 29);
+        let dir = std::env::temp_dir().join(format!(
+            "covermeans_init_src_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("init_backends.dmat");
+        crate::data::write_dmat(&path, &data).unwrap();
+        let mut d_ram = DistCounter::new();
+        let ram = init_kmeanspar(&data, 4, 11, 3, 2.0, &mut d_ram);
+        for (name, ds) in [
+            (
+                "mmap",
+                crate::data::DataSource::open(
+                    &path,
+                    crate::data::SourceBackend::Mmap,
+                    0,
+                    0,
+                )
+                .unwrap(),
+            ),
+            (
+                "chunked",
+                crate::data::DataSource::open(
+                    &path,
+                    crate::data::SourceBackend::Chunked,
+                    7,
+                    0,
+                )
+                .unwrap(),
+            ),
+        ] {
+            let mut d_src = DistCounter::new();
+            let c = init_kmeanspar_src(
+                ds.view(),
+                4,
+                11,
+                3,
+                2.0,
+                &mut d_src,
+                &Parallelism::sequential(),
+            );
+            assert_eq!(c, ram, "{name}: centers differ from in-RAM");
+            assert_eq!(d_src.count(), d_ram.count(), "{name}: counts differ");
+        }
+        let mut d_pp = DistCounter::new();
+        let pp_ram = kmeans_plus_plus(&data, 4, 11, &mut d_pp);
+        let ds = crate::data::DataSource::open(
+            &path,
+            crate::data::SourceBackend::Chunked,
+            1,
+            0,
+        )
+        .unwrap();
+        let mut d_pp_src = DistCounter::new();
+        let pp_src = kmeans_plus_plus_src(
+            ds.view(),
+            4,
+            11,
+            &mut d_pp_src,
+            &Parallelism::sequential(),
+        );
+        assert_eq!(pp_src, pp_ram, "k-means++ must also be backend-invariant");
+        assert_eq!(d_pp_src.count(), d_pp.count());
+    }
+
+    #[test]
+    fn kpar_handles_duplicates_fewer_distinct_than_k() {
+        let rows: Vec<Vec<f64>> = vec![vec![1.0, 1.0]; 10];
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let data = Matrix::from_rows(&refs);
+        let mut dist = DistCounter::new();
+        let c = init_kmeanspar(&data, 3, 1, 3, 2.0, &mut dist);
+        assert_eq!(c.rows(), 3); // padded from duplicate points
     }
 }

@@ -7,23 +7,31 @@
 //! runs the same assign step through the AOT-compiled Pallas kernel, lives
 //! in `crate::runtime::lloyd_xla` (behind the `xla` feature).
 
-use crate::data::Matrix;
-use crate::kmeans::bounds::{accumulate_in_order, CentroidAccum};
+use crate::data::{Matrix, SourceView};
+use crate::kmeans::bounds::{accumulate_in_order_src, CentroidAccum};
 use crate::kmeans::driver::{DriverState, Fit, KMeansDriver};
 use crate::kmeans::{Algorithm, KMeansParams};
 use crate::metrics::{DistCounter, RunResult};
 use crate::parallel::{Parallelism, SharedSlices};
 
-/// The dense full-scan driver: no state beyond the labels.
+/// The dense full-scan driver: no state beyond the labels. Streams: the
+/// scan visits each worker's chunk range through the data source, so any
+/// backend (in-RAM, mmap, chunked) drives it — with identical bits, since
+/// the per-point work and its ascending order don't depend on how the
+/// source blocks the range.
 pub(crate) struct LloydDriver<'a> {
-    data: &'a Matrix,
+    src: SourceView<'a>,
     labels: Vec<u32>,
     par: Parallelism,
 }
 
 impl<'a> LloydDriver<'a> {
     pub(crate) fn new(data: &'a Matrix, par: Parallelism) -> LloydDriver<'a> {
-        LloydDriver { data, labels: vec![u32::MAX; data.rows()], par }
+        LloydDriver::from_source(data.into(), par)
+    }
+
+    pub(crate) fn from_source(src: SourceView<'a>, par: Parallelism) -> LloydDriver<'a> {
+        LloydDriver { src, labels: vec![u32::MAX; src.rows()], par }
     }
 
     fn scan(
@@ -32,8 +40,9 @@ impl<'a> LloydDriver<'a> {
         acc: &mut CentroidAccum,
         dist: &mut DistCounter,
     ) -> usize {
-        let data = self.data;
-        let n = data.rows();
+        let src = self.src;
+        let n = src.rows();
+        let cols = src.cols();
         let k = centers.rows();
         let mut changed = 0usize;
         {
@@ -45,23 +54,26 @@ impl<'a> LloydDriver<'a> {
                 let labels = unsafe { labels_sh.range(r.clone()) };
                 let mut dc = DistCounter::new();
                 let mut changed = 0usize;
-                for (j, i) in r.clone().enumerate() {
-                    let p = data.row(i);
-                    // Nearest center, ties to the lowest index (strict <).
-                    let mut best = 0u32;
-                    let mut best_d = f64::INFINITY;
-                    for c in 0..k {
-                        let dd = dc.d(p, centers.row(c));
-                        if dd < best_d {
-                            best_d = dd;
-                            best = c as u32;
+                src.visit(r.clone(), |start, block| {
+                    for (off, p) in block.chunks_exact(cols).enumerate() {
+                        let j = start + off - r.start;
+                        // Nearest center, ties to the lowest index
+                        // (strict <).
+                        let mut best = 0u32;
+                        let mut best_d = f64::INFINITY;
+                        for c in 0..k {
+                            let dd = dc.d(p, centers.row(c));
+                            if dd < best_d {
+                                best_d = dd;
+                                best = c as u32;
+                            }
+                        }
+                        if labels[j] != best {
+                            labels[j] = best;
+                            changed += 1;
                         }
                     }
-                    if labels[j] != best {
-                        labels[j] = best;
-                        changed += 1;
-                    }
-                }
+                });
                 (changed, dc.count())
             });
             for (ch, count) in results {
@@ -71,7 +83,7 @@ impl<'a> LloydDriver<'a> {
         }
         // Center sums in canonical point order: bit-identical to the
         // sequential accumulation at every thread count.
-        accumulate_in_order(data, &self.labels, acc);
+        accumulate_in_order_src(src, &self.labels, acc);
         changed
     }
 }
@@ -109,7 +121,7 @@ impl KMeansDriver for LloydDriver<'_> {
     }
 
     fn load_state(&mut self, state: &DriverState) -> anyhow::Result<()> {
-        self.labels = state.labels_checked(self.data.rows())?.to_vec();
+        self.labels = state.labels_checked(self.src.rows())?.to_vec();
         Ok(())
     }
 

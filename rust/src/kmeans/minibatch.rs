@@ -20,7 +20,7 @@
 //! `threads = 1` (the sampling stream is seed-driven and drawn up front,
 //! so it never depends on scheduling).
 
-use crate::data::Matrix;
+use crate::data::{Matrix, SourceView};
 use crate::kmeans::KMeansParams;
 use crate::metrics::{DistCounter, IterationLog, RunResult, Stopwatch};
 use crate::parallel::{Parallelism, SharedSlices};
@@ -62,7 +62,23 @@ pub(crate) fn run_par(
     mb: &MiniBatchParams,
     par: &Parallelism,
 ) -> RunResult {
-    let n = data.rows();
+    run_par_src(data.into(), init, params, mb, par)
+}
+
+/// [`run_par`] over any data source backend. Each step gathers its batch
+/// rows into a small resident matrix ([`SourceView::read_rows`] — exact
+/// bits, random access without paging the whole file), so the per-sample
+/// arithmetic and RNG stream match the in-RAM runner exactly; the final
+/// full labeling streams through [`SourceView::visit`].
+pub(crate) fn run_par_src(
+    src: SourceView<'_>,
+    init: &Matrix,
+    params: &KMeansParams,
+    mb: &MiniBatchParams,
+    par: &Parallelism,
+) -> RunResult {
+    let n = src.rows();
+    let cols = src.cols();
     let k = init.rows();
     let sw = Stopwatch::start();
     let mut dist = DistCounter::new();
@@ -84,18 +100,20 @@ pub(crate) fn run_par(
         for s in batch_idx.iter_mut() {
             *s = rng.below(n);
         }
+        // Gather the batch rows resident (exact bits from any backend).
+        let batch_m = src.read_rows(&batch_idx);
         // Assignment phase: nearest center per sample (k counted
         // distances each) against the start-of-step snapshot, sharded
         // over batch positions.
         {
-            let idx = &batch_idx;
             let snapshot = &centers;
+            let batch_m = &batch_m;
             let best_sh = SharedSlices::new(&mut batch_best);
             let tallies = par.map_chunks(batch, |r| {
                 let best = unsafe { best_sh.range(r.clone()) };
                 let mut dc = DistCounter::new();
                 for (j, s) in r.clone().enumerate() {
-                    let p = data.row(idx[s]);
+                    let p = batch_m.row(s);
                     let mut b = 0u32;
                     let mut best_d = f64::INFINITY;
                     for c in 0..k {
@@ -116,9 +134,9 @@ pub(crate) fn run_par(
         // Update phase: online moves with decaying rate (Sculley's
         // update), replayed sequentially in batch order.
         let mut max_move_sq = 0.0f64;
-        for (pos, &s) in batch_idx.iter().enumerate() {
+        for pos in 0..batch {
             let best = batch_best[pos] as usize;
-            let p = data.row(s);
+            let p = batch_m.row(pos);
             counts[best] += 1.0;
             let eta = 1.0 / counts[best];
             let row = centers.row_mut(best);
@@ -146,19 +164,21 @@ pub(crate) fn run_par(
         let tallies = par.map_chunks(n, |r| {
             let l = unsafe { labels_sh.range(r.clone()) };
             let mut dc = DistCounter::new();
-            for (j, i) in r.clone().enumerate() {
-                let p = data.row(i);
-                let mut best = 0u32;
-                let mut best_d = f64::INFINITY;
-                for c in 0..k {
-                    let dd = dc.d(p, snapshot.row(c));
-                    if dd < best_d {
-                        best_d = dd;
-                        best = c as u32;
+            src.visit(r.clone(), |start, block| {
+                for (off, p) in block.chunks_exact(cols).enumerate() {
+                    let j = start + off - r.start;
+                    let mut best = 0u32;
+                    let mut best_d = f64::INFINITY;
+                    for c in 0..k {
+                        let dd = dc.d(p, snapshot.row(c));
+                        if dd < best_d {
+                            best_d = dd;
+                            best = c as u32;
+                        }
                     }
+                    l[j] = best;
                 }
-                l[j] = best;
-            }
+            });
             dc.count()
         });
         for t in tallies {

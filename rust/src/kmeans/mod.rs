@@ -77,7 +77,7 @@ use crate::metrics::RunResult;
 use crate::parallel::Parallelism;
 use crate::tree::{CoverTree, CoverTreeParams, KdTree, KdTreeParams};
 
-pub use builder::{AlgorithmSpec, KMeans, KMeansError};
+pub use builder::{AlgorithmSpec, InitKind, KMeans, KMeansError};
 pub use checkpoint::{CheckpointConfig, Generation, KMeansCheckpoint};
 pub use driver::{DriverState, Fit, KMeansDriver, Observer, Signal, StepInfo, StepView};
 pub use minibatch::MiniBatchParams;
@@ -177,6 +177,22 @@ impl Algorithm {
             "minibatch" | "mini-batch" => Some(Algorithm::MiniBatch),
             _ => None,
         }
+    }
+
+    /// Can the variant fit a non-resident (mmap/chunked) data source?
+    /// The per-point streaming drivers visit the data block by block;
+    /// the tree family (and the per-point variants that keep whole-matrix
+    /// random access) need the data resident to build or probe their
+    /// state, and the builder rejects streamed input for them with
+    /// [`KMeansError::StreamedUnsupported`].
+    pub fn streams(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::Standard
+                | Algorithm::Elkan
+                | Algorithm::Hamerly
+                | Algorithm::MiniBatch
+        )
     }
 
     /// Does this algorithm use a spatial index?

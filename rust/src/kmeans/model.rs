@@ -303,20 +303,36 @@ impl KMeansModel {
         algorithm: Algorithm,
         seed: u64,
     ) -> KMeansModel {
+        KMeansModel::from_run_src(data.into(), run, algorithm, seed)
+    }
+
+    /// [`KMeansModel::from_run`] over any data source backend. The
+    /// per-cluster statistics accumulate in one sequential canonical-order
+    /// pass, so the model — and its persisted `.kmm` bytes — is identical
+    /// whether the fit's data was in RAM, mmapped, or chunk-streamed.
+    pub fn from_run_src(
+        src: crate::data::SourceView<'_>,
+        run: &RunResult,
+        algorithm: Algorithm,
+        seed: u64,
+    ) -> KMeansModel {
         assert_eq!(
-            data.rows(),
+            src.rows(),
             run.labels.len(),
             "data/labels length mismatch: the run was not fit on this matrix"
         );
-        assert_eq!(data.cols(), run.centers.cols(), "data/centers dimension mismatch");
+        assert_eq!(src.cols(), run.centers.cols(), "data/centers dimension mismatch");
         let k = run.centers.rows();
+        let cols = src.cols();
         let mut counts = vec![0u64; k];
         let mut cluster_sse = vec![0.0f64; k];
-        for (i, &l) in run.labels.iter().enumerate() {
-            counts[l as usize] += 1;
-            cluster_sse[l as usize] +=
-                crate::kernels::sqdist(data.row(i), run.centers.row(l as usize));
-        }
+        src.visit(0..run.labels.len(), |start, block| {
+            for (off, p) in block.chunks_exact(cols).enumerate() {
+                let l = run.labels[start + off] as usize;
+                counts[l] += 1;
+                cluster_sse[l] += crate::kernels::sqdist(p, run.centers.row(l));
+            }
+        });
         KMeansModel {
             centers: run.centers.clone(),
             counts,
@@ -1073,27 +1089,14 @@ mod tests {
         let train = synth::gaussian_blobs(120, 2, 3, 0.5, 12);
         let model = fit_model(&train, 3, 13);
         let bytes = model.to_bytes();
-        // Bad magic.
-        let mut bad = bytes.clone();
-        bad[0] = b'X';
-        assert!(KMeansModel::from_bytes(&bad).is_err());
-        // Any single bit flip in the body trips the checksum.
-        let mut flipped = bytes.clone();
-        let mid = flipped.len() / 2;
-        flipped[mid] ^= 0x40;
-        let err = KMeansModel::from_bytes(&flipped).unwrap_err();
-        assert!(err.to_string().contains("checksum"), "{err}");
-        // Truncation at every prefix length fails (never panics).
-        for len in [0, 3, 4, 11, 20, bytes.len() - 9, bytes.len() - 1] {
-            assert!(
-                KMeansModel::from_bytes(&bytes[..len]).is_err(),
-                "prefix of {len} bytes must not parse"
-            );
-        }
-        // Trailing garbage fails too.
-        let mut long = bytes.clone();
-        long.extend_from_slice(&[0u8; 16]);
-        assert!(KMeansModel::from_bytes(&long).is_err());
+        // The whole container is checksummed, so every fault in the
+        // shared battery must land on the checksum or the magic.
+        crate::testutil::corruption::assert_rejects_faults(
+            ".kmm model",
+            &bytes,
+            bytes.len(),
+            KMeansModel::from_bytes,
+        );
     }
 
     fn model_from_centers(centers: Matrix) -> KMeansModel {

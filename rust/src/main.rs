@@ -2,6 +2,7 @@
 //!
 //! Subcommands (see `covermeans help`):
 //!   run       one clustering run (choice of algorithm and backend)
+//!   pack      write a dataset as a `.dmat` file for out-of-core fits
 //!   predict   batch nearest-center assignment from a saved model
 //!   serve     resident serving daemon (batched predict over TCP)
 //!   table     regenerate paper Table 2, 3 or 4
@@ -17,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use covermeans::config::RunConfig;
 use covermeans::coordinator::{report, run_experiment, sweep, Experiment};
-use covermeans::data::{io, registry, Matrix};
+use covermeans::data::{io, registry, write_dmat, DataSource};
 use covermeans::kmeans::{
     self, Algorithm, AlgorithmSpec, CheckpointConfig, KMeans, KMeansCheckpoint,
     KMeansModel, Workspace,
@@ -41,6 +42,16 @@ COMMANDS:
              [--checkpoint_secs S]; --resume 1 continues from the newest
              valid generation, bit-identical to an uninterrupted run.
              SIGINT/SIGTERM write a snapshot then exit with code 130.
+             --data_file FILE.dmat  fit a packed file instead of a
+             registry dataset; --data_backend ram|mmap|chunked picks the
+             residency strategy ([--data_chunk_rows N]
+             [--data_resident_mb M] bound chunked-streaming memory).
+             Streaming algorithms: standard, elkan, hamerly, minibatch.
+             Results are byte-identical on every backend. --init
+             auto|kmeans++|kmeans|| picks the seeding ([--init_rounds N]
+             [--init_oversample F]; auto = ++ resident, || streamed).
+  pack       write a dataset as a `.dmat` file for out-of-core runs
+             --dataset NAME --out FILE.dmat [--scale S] [--data_seed N]
   predict    batch nearest-center assignment from a saved model
              --model FILE.kmm --input POINTS.csv|.fmat [--out LABELS.csv]
              [--predict_mode auto|tree|scan] [--predict_auto_k K]
@@ -64,12 +75,13 @@ COMMANDS:
 
 CONFIG KEYS (also accepted in --config files as `key = value`; the full
 table lives in docs/GUIDE.md and the config module rustdoc):
-  dataset scale data_seed k restarts seed threads fit_threads out_dir
-  max_iter tol switch_at scale_factor min_node_size kd_leaf_size
-  algorithms mb_batch mb_tol mb_seed model_out checkpoint_path
-  checkpoint_every checkpoint_secs predict_mode predict_auto_k
-  predict_precision pin_workers serve_addr max_batch batch_wait_us
-  queue_depth
+  dataset scale data_seed data_file data_backend data_chunk_rows
+  data_resident_mb init init_rounds init_oversample k restarts seed
+  threads fit_threads out_dir max_iter tol switch_at scale_factor
+  min_node_size kd_leaf_size algorithms mb_batch mb_tol mb_seed
+  model_out checkpoint_path checkpoint_every checkpoint_secs
+  predict_mode predict_auto_k predict_precision pin_workers serve_addr
+  max_batch batch_wait_us queue_depth
 
 KERNELS:
   Distance arithmetic dispatches once at startup to the widest SIMD path
@@ -153,6 +165,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "pack" => cmd_pack(rest),
         "predict" => cmd_predict(rest),
         "serve" => cmd_serve(rest),
         "table" => cmd_table(rest),
@@ -185,19 +198,38 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let alg = cfg.algorithms[0];
 
     eprintln!("# config\n{}\n", cfg.dump());
-    let data = registry::load(&cfg.dataset, cfg.scale, cfg.data_seed)
-        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
-    eprintln!(
-        "dataset {} : n={} d={} (scale {})",
-        cfg.dataset,
-        data.rows(),
-        data.cols(),
-        cfg.scale
-    );
+    let source = if cfg.data_file.is_empty() {
+        let data = registry::load(&cfg.dataset, cfg.scale, cfg.data_seed)
+            .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+        eprintln!(
+            "dataset {} : n={} d={} (scale {})",
+            cfg.dataset,
+            data.rows(),
+            data.cols(),
+            cfg.scale
+        );
+        DataSource::from(data)
+    } else {
+        let source = DataSource::open(
+            Path::new(&cfg.data_file),
+            cfg.data_backend,
+            cfg.data_chunk_rows,
+            cfg.data_resident_mb,
+        )
+        .with_context(|| format!("open data_file {:?}", cfg.data_file))?;
+        eprintln!(
+            "dataset {} : n={} d={} ({} backend)",
+            cfg.data_file,
+            source.rows(),
+            source.cols(),
+            cfg.data_backend.name()
+        );
+        source
+    };
 
     let params = kmeans::KMeansParams { algorithm: alg, ..cfg.params };
     let result = match backend {
-        "native" => run_native(&data, &cfg, &params, alg, resume)?,
+        "native" => run_native(&source, &cfg, &params, alg, resume)?,
         "xla" => {
             if !cfg.checkpoint_path.is_empty() {
                 bail!(
@@ -205,14 +237,20 @@ fn cmd_run(args: &[String]) -> Result<()> {
                      --backend xla or checkpoint_path"
                 );
             }
+            let Some(data) = source.view().as_matrix() else {
+                bail!(
+                    "--backend xla needs resident data; use data_backend=ram \
+                     or the native backend"
+                );
+            };
             let mut init_counter = DistCounter::new();
             let init = kmeans::init::kmeans_plus_plus(
-                &data,
+                data,
                 cfg.k.min(data.rows()),
                 cfg.seed,
                 &mut init_counter,
             );
-            run_xla(&data, &init, &params, alg)?
+            run_xla(data, &init, &params, alg)?
         }
         other => bail!("unknown backend {other:?}"),
     };
@@ -237,12 +275,15 @@ fn cmd_run(args: &[String]) -> Result<()> {
         result.time.as_secs_f64(),
         result.build_time.as_secs_f64()
     );
-    println!("sse         : {:.6e}", result.sse(&data));
+    println!(
+        "sse         : {:.6e}",
+        covermeans::metrics::sse_src(source.view(), &result.labels, &result.centers)
+    );
     if !cfg.checkpoint_path.is_empty() {
         println!("checkpoint  : {} (final snapshot)", cfg.checkpoint_path);
     }
     if !cfg.model_out.is_empty() {
-        let model = KMeansModel::from_run(&data, &result, alg, cfg.seed);
+        let model = KMeansModel::from_run_src(source.view(), &result, alg, cfg.seed);
         let path = Path::new(&cfg.model_out);
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
@@ -255,18 +296,69 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Materialize a registry dataset as a `.dmat` file — the packed
+/// row-major f64 format the out-of-core backends (`--data_file` +
+/// `--data_backend mmap|chunked`) read. Exact bits: a fit over the packed
+/// file reproduces the in-RAM fit byte for byte.
+fn cmd_pack(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let extras = parse_overrides(args, &mut cfg)?;
+    reject_unknown(&extras, &["out"])?;
+    let out = extra(&extras, "out").context("pack needs --out <file.dmat>")?;
+    let data = registry::load(&cfg.dataset, cfg.scale, cfg.data_seed)
+        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+    let path = Path::new(out);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    write_dmat(path, &data)?;
+    let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "packed      : {} (n={} d={}, scale {}) -> {} ({} bytes)",
+        cfg.dataset,
+        data.rows(),
+        data.cols(),
+        cfg.scale,
+        path.display(),
+        bytes
+    );
+    Ok(())
+}
+
 /// The native `run` path, driven stepwise so checkpoint triggers,
 /// SIGINT/SIGTERM checkpoint-then-exit, and `--resume` all hang off real
-/// iteration boundaries. MiniBatch (no exact boundary) keeps the one-shot
-/// path and rejects checkpointing.
+/// iteration boundaries — over any data source backend (in-RAM, mmap, or
+/// chunk-streamed; bit-identical results on each). MiniBatch (no exact
+/// boundary) keeps the one-shot path and rejects checkpointing.
 fn run_native(
-    data: &Matrix,
+    source: &DataSource,
     cfg: &RunConfig,
     params: &kmeans::KMeansParams,
     alg: Algorithm,
     resume: bool,
 ) -> Result<RunResult> {
-    let k = cfg.k.min(data.rows());
+    let src = source.view();
+    let k = cfg.k.min(src.rows());
+    let builder = |warm: Option<&KMeansCheckpoint>| {
+        let mut b = KMeans::new(k)
+            .algorithm(AlgorithmSpec::from_params(alg, params))
+            .max_iter(params.max_iter)
+            .tol(params.tol)
+            .seed(cfg.seed)
+            .init(cfg.init)
+            .init_rounds(cfg.init_rounds)
+            .init_oversample(cfg.init_oversample)
+            .threads(params.threads)
+            .pin_workers(params.pin_workers);
+        if let Some(s) = warm {
+            // Skip the seeding pass entirely: restore() overwrites the
+            // centers anyway, so seed the fit straight from the snapshot.
+            b = b.warm_start(s.centers.clone());
+        }
+        b
+    };
     if alg == Algorithm::MiniBatch {
         if !cfg.checkpoint_path.is_empty() {
             bail!(
@@ -274,25 +366,16 @@ fn run_native(
                  drop checkpoint_path or pick an exact algorithm"
             );
         }
-        let mut init_counter = DistCounter::new();
-        let init =
-            kmeans::init::kmeans_plus_plus(data, k, cfg.seed, &mut init_counter);
-        return Ok(kmeans::run(data, &init, params, &mut Workspace::new()));
+        return builder(None)
+            .fit_source_with(source, &mut Workspace::new())
+            .map_err(|e| anyhow::anyhow!("{e}"));
     }
-
-    let mut builder = KMeans::new(k)
-        .algorithm(AlgorithmSpec::from_params(alg, params))
-        .max_iter(params.max_iter)
-        .tol(params.tol)
-        .seed(cfg.seed)
-        .threads(params.threads)
-        .pin_workers(params.pin_workers);
 
     let checkpointing = !cfg.checkpoint_path.is_empty();
     let ckpt_path = Path::new(&cfg.checkpoint_path).to_path_buf();
     let snap = if resume {
         let (snap, generation) = KMeansCheckpoint::load_any(&ckpt_path)?;
-        snap.validate(&builder.params(), data, k)?;
+        snap.validate_src(&builder(None).params(), src, k)?;
         eprintln!(
             "resuming    : {} at iteration {} ({} snapshot, {} distances so far)",
             snap.algorithm.name(),
@@ -304,18 +387,14 @@ fn run_native(
     } else {
         None
     };
-    if let Some(s) = &snap {
-        // Skip the k-means++ pass entirely: restore() overwrites the
-        // centers anyway, so seed the fit straight from the snapshot.
-        builder = builder.warm_start(s.centers.clone());
-    }
+    let mut b = builder(snap.as_ref());
     if checkpointing {
         if let Some(parent) = ckpt_path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        builder = builder.checkpoint(CheckpointConfig {
+        b = b.checkpoint(CheckpointConfig {
             path: ckpt_path,
             every: params.checkpoint_every,
             secs: params.checkpoint_secs,
@@ -324,8 +403,8 @@ fn run_native(
     }
 
     let mut ws = Workspace::new();
-    let mut fit = builder
-        .fit_step_with(data, &mut ws)
+    let mut fit = b
+        .fit_step_src(src, &mut ws)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     if let Some(s) = &snap {
         fit.restore(s)?;

@@ -124,10 +124,24 @@ impl Default for Stopwatch {
 /// behind `RunResult::sse` and the driver API's snapshot inertia
 /// (uncounted: evaluation work, not algorithm work).
 pub fn sse(data: &crate::data::Matrix, labels: &[u32], centers: &crate::data::Matrix) -> f64 {
+    sse_src(data.into(), labels, centers)
+}
+
+/// [`sse`] over any data source backend: one sequential canonical-order
+/// pass, so the result is bit-identical across in-RAM, mmap, and chunked
+/// sources.
+pub fn sse_src(
+    src: crate::data::SourceView<'_>,
+    labels: &[u32],
+    centers: &crate::data::Matrix,
+) -> f64 {
+    let cols = src.cols();
     let mut sse = 0.0;
-    for (i, &l) in labels.iter().enumerate() {
-        sse += kernels::sqdist(data.row(i), centers.row(l as usize));
-    }
+    src.visit(0..labels.len(), |start, block| {
+        for (off, p) in block.chunks_exact(cols).enumerate() {
+            sse += kernels::sqdist(p, centers.row(labels[start + off] as usize));
+        }
+    });
     sse
 }
 

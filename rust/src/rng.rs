@@ -13,8 +13,11 @@ pub struct Rng {
     gauss_spare: Option<f64>,
 }
 
+/// The seeding mixer, also used directly for counter-based draws (the
+/// `k-means||` selection step hashes `(seed, round, point)` through it so
+/// per-point Bernoulli decisions are independent of scan order).
 #[inline]
-fn splitmix64(state: &mut u64) -> u64 {
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);

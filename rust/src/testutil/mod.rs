@@ -53,6 +53,102 @@ pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
     lo + rng.below(hi - lo + 1)
 }
 
+/// Shared corruption fixtures for the checksummed binary container
+/// formats (`.kmm` models, `.kmc` checkpoints, `.dmat` data files). Every
+/// format-specific test used to hand-roll the same faults; this harness
+/// drives a parser through the canonical set once — truncation, single-bit
+/// flips, a clobbered magic, trailing garbage, and alien bytes — so a new
+/// format buys the whole battery with one call.
+pub mod corruption {
+    /// Run the canonical fault set against `parse` given the pristine
+    /// serialized `bytes`. `checked_len` is the checksummed prefix of the
+    /// container — `bytes.len()` when the checksum covers everything (as
+    /// in `.kmm`/`.kmc`), the header length when only the header is
+    /// self-validating (as in `.dmat`, whose payload is guarded by the
+    /// exact-length contract instead). Requirements enforced:
+    ///
+    /// - pristine bytes parse;
+    /// - every truncation fails (never panics);
+    /// - a clobbered magic byte fails naming the magic or the checksum;
+    /// - any single-bit flip inside `checked_len` fails naming the
+    ///   checksum (or the magic, when the flip lands in it);
+    /// - trailing garbage fails (the checksum moves or the length lies);
+    /// - bytes from another format entirely fail.
+    pub fn assert_rejects_faults<T, E: std::fmt::Display>(
+        format: &str,
+        bytes: &[u8],
+        checked_len: usize,
+        mut parse: impl FnMut(&[u8]) -> Result<T, E>,
+    ) {
+        assert!(
+            (16..=bytes.len()).contains(&checked_len),
+            "{format}: checked_len {checked_len} outside 16..={}",
+            bytes.len()
+        );
+        if let Err(e) = parse(bytes) {
+            panic!("{format}: pristine bytes must parse: {e:#}");
+        }
+        // Truncation at structural boundaries and arbitrary cuts.
+        let n = bytes.len();
+        for cut in [0, 2, 6, n / 4, n / 2, n.saturating_sub(9), n - 1] {
+            if cut >= n {
+                continue;
+            }
+            if parse(&bytes[..cut]).is_ok() {
+                panic!("{format}: prefix of {cut}/{n} bytes must not parse");
+            }
+        }
+        // A clobbered magic is named as such (or trips the checksum when
+        // the magic sits inside the checksummed region).
+        let mut bad = bytes.to_vec();
+        bad[0] ^= 0x11;
+        expect_integrity_error(format, "clobbered magic", parse(&bad));
+        // Single-bit flips inside the checksummed prefix: front, middle,
+        // the stored checksum itself, and just before it.
+        for (at, mask) in [
+            (4, 0x01u8),
+            (checked_len / 2, 0x40),
+            (checked_len - 1, 0x80),
+            (checked_len - 12, 0x01),
+        ] {
+            let mut bad = bytes.to_vec();
+            bad[at] ^= mask;
+            expect_integrity_error(
+                format,
+                &format!("bit flip at byte {at}"),
+                parse(&bad),
+            );
+        }
+        // Trailing garbage.
+        let mut long = bytes.to_vec();
+        long.extend_from_slice(&[0u8; 16]);
+        if parse(&long).is_ok() {
+            panic!("{format}: trailing garbage must not parse");
+        }
+        // Not this format at all.
+        if parse(b"FMAT1\n2 2\n....").is_ok() {
+            panic!("{format}: alien bytes must not parse");
+        }
+    }
+
+    fn expect_integrity_error<T, E: std::fmt::Display>(
+        format: &str,
+        fault: &str,
+        result: Result<T, E>,
+    ) {
+        match result {
+            Ok(_) => panic!("{format}: {fault} must not parse"),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("checksum") || msg.contains("magic"),
+                    "{format}: {fault} failed for the wrong reason: {msg}"
+                );
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

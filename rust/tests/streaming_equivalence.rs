@@ -1,0 +1,363 @@
+//! Streaming-equivalence suite: the out-of-core contract of the
+//! `DataSource` layer.
+//!
+//! For any source backend (in-RAM, mmap, chunk-streamed), any chunk size,
+//! and any thread count, a fit must be **byte-identical** to the in-RAM
+//! fit: same labels, same center bits, same iteration count, same counted
+//! distances, and a bit-identical `.kmm` model. The suite pins that
+//! contract three ways:
+//!
+//! 1. in-process, over an explicit backend × chunk × thread × algorithm
+//!    matrix and a randomized property sweep;
+//! 2. end-to-end, by spawning the real `covermeans` binary on a packed
+//!    `.dmat` with `data_resident_mb` capped below the dataset size — the
+//!    PR's acceptance criterion;
+//! 3. across a crash: a fit checkpointed under one backend resumes under
+//!    another and still reproduces the uninterrupted in-RAM run.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use covermeans::data::{synth, write_dmat, DataSource, SourceBackend};
+use covermeans::kmeans::{
+    Algorithm, AlgorithmSpec, InitKind, KMeans, KMeansModel, KMeansParams,
+};
+use covermeans::metrics::RunResult;
+use covermeans::testutil::{check, usize_in, Config};
+
+const BIN: &str = env!("CARGO_BIN_EXE_covermeans");
+
+/// The streaming-capable exact drivers plus MiniBatch: the matrix the
+/// tentpole promises byte-identity for.
+const ALGS: [Algorithm; 3] =
+    [Algorithm::Standard, Algorithm::Hamerly, Algorithm::MiniBatch];
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "covermeans_stream_eq_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One fit with the init pinned to k-means|| — the Auto default differs
+/// by backend (that is its job), so equivalence legs always pin it.
+fn fit(source: &DataSource, alg: Algorithm, k: usize, threads: usize) -> RunResult {
+    KMeans::new(k)
+        .algorithm(AlgorithmSpec::from_params(alg, &KMeansParams::default()))
+        .init(InitKind::Parallel)
+        .seed(9)
+        .threads(threads)
+        .fit_source(source)
+        .unwrap_or_else(|e| panic!("{} fit failed: {e}", alg.name()))
+}
+
+/// Everything the determinism contract covers, in comparable form: exact
+/// label assignment, raw center bits, iteration count, counted distances,
+/// and the serialized `.kmm` the run would persist.
+fn signature(
+    source: &DataSource,
+    r: &RunResult,
+    alg: Algorithm,
+) -> (Vec<u32>, Vec<u64>, usize, u64, Vec<u8>) {
+    let bits: Vec<u64> = r.centers.as_slice().iter().map(|v| v.to_bits()).collect();
+    let kmm = KMeansModel::from_run_src(source.view(), r, alg, 9).to_bytes();
+    (r.labels.clone(), bits, r.iterations, r.distances, kmm)
+}
+
+#[test]
+fn every_backend_chunking_and_thread_count_is_byte_identical() {
+    let dir = tmpdir("matrix");
+    // Odd row count on purpose: no chunk size divides it evenly.
+    let m = synth::gaussian_blobs(257, 3, 5, 0.7, 42);
+    let path = dir.join("data.dmat");
+    write_dmat(&path, &m).unwrap();
+    let k = 6;
+    let chunks = [1usize, 37, m.rows(), m.rows() * 3];
+
+    for alg in ALGS {
+        let ram = DataSource::from(m.clone());
+        let run = fit(&ram, alg, k, 1);
+        assert!(run.iterations > 0);
+        let want = signature(&ram, &run, alg);
+        for threads in [1usize, 4] {
+            let r = fit(&ram, alg, k, threads);
+            assert_eq!(
+                signature(&ram, &r, alg),
+                want,
+                "{}: in-RAM fit diverged at {threads} threads",
+                alg.name()
+            );
+            for backend in
+                [SourceBackend::Ram, SourceBackend::Mmap, SourceBackend::Chunked]
+            {
+                for chunk in chunks {
+                    let src = DataSource::open(&path, backend, chunk, 0).unwrap();
+                    let r = fit(&src, alg, k, threads);
+                    assert_eq!(
+                        signature(&src, &r, alg),
+                        want,
+                        "{}: {} backend, chunk {chunk}, {threads} threads \
+                         diverged from the in-RAM fit",
+                        alg.name(),
+                        backend.name()
+                    );
+                    if backend != SourceBackend::Chunked {
+                        // Chunk size only means something when streaming.
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn randomized_shapes_stream_identically() {
+    let dir = tmpdir("prop");
+    let mut case = 0u32;
+    check(Config { cases: 6, seed: 0x57AE_A30 }, "stream-identity", |rng| {
+        case += 1;
+        let n = usize_in(rng, 20, 200);
+        let d = usize_in(rng, 1, 5);
+        let k = usize_in(rng, 2, 7).min(n);
+        let chunk = usize_in(rng, 1, n + 7);
+        let threads = if rng.below(2) == 0 { 1 } else { 4 };
+        let m = synth::gaussian_blobs(n, d, k.min(4), 0.8, rng.next_u64());
+        let path = dir.join(format!("case_{case}.dmat"));
+        write_dmat(&path, &m).unwrap();
+        for alg in [Algorithm::Standard, Algorithm::Hamerly] {
+            let ram = DataSource::from(m.clone());
+            let want = {
+                let r = fit(&ram, alg, k, 1);
+                signature(&ram, &r, alg)
+            };
+            for backend in [SourceBackend::Mmap, SourceBackend::Chunked] {
+                let src = DataSource::open(&path, backend, chunk, 0).unwrap();
+                let r = fit(&src, alg, k, threads);
+                assert_eq!(
+                    signature(&src, &r, alg),
+                    want,
+                    "{}: n={n} d={d} k={k} chunk={chunk} threads={threads} \
+                     backend={}",
+                    alg.name(),
+                    backend.name()
+                );
+            }
+        }
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----- spawned-CLI legs ---------------------------------------------------
+
+fn covermeans(args: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut c = Command::new(BIN);
+    c.args(args);
+    for (k, v) in envs {
+        c.env(k, v);
+    }
+    c.output().expect("spawn covermeans")
+}
+
+fn stdout_line<'a>(out: &'a str, prefix: &str) -> &'a str {
+    out.lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no {prefix:?} line in stdout:\n{out}"))
+}
+
+/// The result lines whose equality certifies streamed ≡ resident beyond
+/// the byte-compare of the saved model.
+const RESULT_LINES: [&str; 3] = ["iterations  :", "distances   :", "sse         :"];
+
+fn assert_same_result(tag: &str, ref_out: &str, res_out: &str) {
+    for prefix in RESULT_LINES {
+        assert_eq!(
+            stdout_line(ref_out, prefix),
+            stdout_line(res_out, prefix),
+            "{tag}: streamed run diverged on the {prefix:?} line"
+        );
+    }
+}
+
+fn assert_same_model(tag: &str, a: &Path, b: &Path) {
+    let wa = std::fs::read(a).unwrap_or_else(|e| panic!("{tag}: read {a:?}: {e}"));
+    let wb = std::fs::read(b).unwrap_or_else(|e| panic!("{tag}: read {b:?}: {e}"));
+    assert!(!wa.is_empty(), "{tag}: empty reference model");
+    assert_eq!(wa, wb, "{tag}: streamed model is not bit-identical");
+}
+
+/// The PR's acceptance criterion: a spawned `covermeans run` over a
+/// chunk-streamed file with `data_resident_mb` capped below the dataset
+/// size produces a `.kmm` byte-identical to the in-RAM fit, at 1 and 4
+/// threads.
+#[test]
+fn cli_out_of_core_fit_is_bit_identical_to_resident() {
+    let dir = tmpdir("cli");
+    // 20000 rows x 8 cols x 8 bytes = 1.28 MB of payload, so a 1 MiB
+    // resident budget genuinely cannot hold the dataset.
+    const DATASET: &str = "blobs:20000:8:16";
+    let dmat = dir.join("big.dmat");
+    let p = covermeans(
+        &["pack", "--dataset", DATASET, "--out", dmat.to_str().unwrap()],
+        &[],
+    );
+    assert!(
+        p.status.success(),
+        "pack failed:\n{}",
+        String::from_utf8_lossy(&p.stderr)
+    );
+    let bytes = std::fs::metadata(&dmat).unwrap().len();
+    assert!(bytes > 1 << 20, "dataset must exceed the 1 MiB budget, got {bytes}");
+
+    for threads in ["1", "4"] {
+        let tag = format!("ooc@{threads}t");
+        let fit_flags = [
+            "--k", "16", "--seed", "5", "--algorithm", "standard",
+            "--max_iter", "6", "--init", "kmeans||", "--fit_threads", threads,
+        ];
+        let ref_model = dir.join(format!("ref_{threads}.kmm"));
+        let ooc_model = dir.join(format!("ooc_{threads}.kmm"));
+
+        let mut args = vec!["run", "--dataset", DATASET];
+        args.extend_from_slice(&fit_flags);
+        args.extend_from_slice(&["--model_out", ref_model.to_str().unwrap()]);
+        let r = covermeans(&args, &[]);
+        assert!(
+            r.status.success(),
+            "{tag}: resident run failed:\n{}",
+            String::from_utf8_lossy(&r.stderr)
+        );
+        let ref_out = String::from_utf8_lossy(&r.stdout).into_owned();
+
+        let mut args = vec![
+            "run", "--data_file", dmat.to_str().unwrap(),
+            "--data_backend", "chunked", "--data_chunk_rows", "511",
+            "--data_resident_mb", "1",
+        ];
+        args.extend_from_slice(&fit_flags);
+        args.extend_from_slice(&["--model_out", ooc_model.to_str().unwrap()]);
+        let o = covermeans(&args, &[]);
+        assert!(
+            o.status.success(),
+            "{tag}: streamed run failed:\n{}",
+            String::from_utf8_lossy(&o.stderr)
+        );
+        assert!(
+            String::from_utf8_lossy(&o.stderr).contains("chunked"),
+            "{tag}: streamed run did not announce its backend"
+        );
+        assert_same_result(&tag, &ref_out, &String::from_utf8_lossy(&o.stdout));
+        assert_same_model(&tag, &ref_model, &ooc_model);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Checkpoint/resume keeps working across backends: a fit crashed under
+/// the chunk-streamed backend resumes under mmap and still reproduces the
+/// uninterrupted in-RAM run bit for bit.
+#[test]
+fn resume_mid_fit_crosses_backends_bit_identically() {
+    let dir = tmpdir("resume");
+    const DATASET: &str = "blobs:600:4:8";
+    let dmat = dir.join("small.dmat");
+    let p = covermeans(
+        &["pack", "--dataset", DATASET, "--out", dmat.to_str().unwrap()],
+        &[],
+    );
+    assert!(p.status.success(), "pack failed");
+
+    let fit_flags = [
+        "--k", "8", "--seed", "5", "--algorithm", "hamerly",
+        "--init", "kmeans||", "--fit_threads", "2",
+    ];
+    let ref_model = dir.join("ref.kmm");
+    let res_model = dir.join("res.kmm");
+    let ck = dir.join("stream.kmc");
+
+    let mut args = vec!["run", "--dataset", DATASET];
+    args.extend_from_slice(&fit_flags);
+    args.extend_from_slice(&["--model_out", ref_model.to_str().unwrap()]);
+    let r = covermeans(&args, &[]);
+    assert!(
+        r.status.success(),
+        "reference run failed:\n{}",
+        String::from_utf8_lossy(&r.stderr)
+    );
+    let ref_out = String::from_utf8_lossy(&r.stdout).into_owned();
+    // The crash is injected after iteration 1, so the reference must have
+    // stepped further for the resume leg to mean anything.
+    let iters = stdout_line(&ref_out, "iterations  :");
+    assert!(
+        !iters.contains(": 1 "),
+        "fit converged too fast for a mid-fit crash: {iters}"
+    );
+
+    let mut args = vec![
+        "run", "--data_file", dmat.to_str().unwrap(),
+        "--data_backend", "chunked", "--data_chunk_rows", "23",
+    ];
+    args.extend_from_slice(&fit_flags);
+    args.extend_from_slice(&[
+        "--checkpoint_path", ck.to_str().unwrap(), "--checkpoint_every", "1",
+    ]);
+    let c = covermeans(&args, &[("COVERMEANS_CRASH_AFTER_ITER", "1")]);
+    assert!(!c.status.success(), "injected crash did not kill the run");
+    assert!(
+        String::from_utf8_lossy(&c.stderr).contains("simulated crash"),
+        "abort fired without the fault-injection banner:\n{}",
+        String::from_utf8_lossy(&c.stderr)
+    );
+    assert!(ck.exists(), "no snapshot on disk after the crash");
+
+    // Resume under a *different* backend.
+    let mut args = vec![
+        "run", "--data_file", dmat.to_str().unwrap(), "--data_backend", "mmap",
+    ];
+    args.extend_from_slice(&fit_flags);
+    args.extend_from_slice(&[
+        "--checkpoint_path", ck.to_str().unwrap(), "--resume", "1",
+        "--model_out", res_model.to_str().unwrap(),
+    ]);
+    let r2 = covermeans(&args, &[]);
+    let stderr = String::from_utf8_lossy(&r2.stderr);
+    assert!(r2.status.success(), "cross-backend resume failed:\n{stderr}");
+    assert!(stderr.contains("resuming"), "no resume banner:\n{stderr}");
+    assert_same_result("resume", &ref_out, &String::from_utf8_lossy(&r2.stdout));
+    assert_same_model("resume", &ref_model, &res_model);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tree-based algorithms need a resident source: the CLI refuses streamed
+/// input with exactly one diagnosable error line.
+#[test]
+fn streamed_cli_rejects_tree_algorithms_with_one_error_line() {
+    let dir = tmpdir("reject");
+    let dmat = dir.join("tiny.dmat");
+    let p = covermeans(
+        &["pack", "--dataset", "blobs:120:3:4", "--out", dmat.to_str().unwrap()],
+        &[],
+    );
+    assert!(p.status.success(), "pack failed");
+    let r = covermeans(
+        &[
+            "run", "--data_file", dmat.to_str().unwrap(),
+            "--data_backend", "chunked", "--k", "4", "--algorithm", "cover",
+        ],
+        &[],
+    );
+    assert!(!r.status.success(), "tree algorithm accepted streamed input");
+    let stderr = String::from_utf8_lossy(&r.stderr);
+    assert!(
+        stderr.contains("cannot fit a streamed data source"),
+        "unhelpful refusal:\n{stderr}"
+    );
+    assert_eq!(
+        stderr.matches("error: ").count(),
+        1,
+        "CLI error contract: exactly one error line, got:\n{stderr}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
